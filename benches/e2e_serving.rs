@@ -1,0 +1,94 @@
+//! End-to-end serving benchmark: the full three-layer stack under load —
+//! compiled embedder + vector DB + threshold routing + compiled Big/Small
+//! decoders — measuring latency and throughput per pathway and the live
+//! cost ratio. This is the paper's system running for real, not an
+//! analytic model.
+//!
+//! `cargo bench --bench e2e_serving [-- --requests 48 --max-new 16]`
+
+use tweakllm::bench::{bench_args, load_runtime, Table};
+use tweakllm::config::Config;
+use tweakllm::coordinator::{Pathway, Router};
+use tweakllm::datasets::{ChatTrace, TraceProfile};
+use tweakllm::util::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let n_requests = args.usize("requests", 48)?;
+    let max_new = args.usize("max-new", 16)?;
+    let threshold = args.f64("threshold", 0.7)? as f32;
+
+    eprintln!("[e2e] loading artifacts (all models)...");
+    let rt = load_runtime()?;
+    let mut cfg = Config::paper();
+    cfg.similarity_threshold = threshold;
+    cfg.big_llm.max_new_tokens = max_new;
+    cfg.small_llm.max_new_tokens = max_new;
+    cfg.exact_match_fast_path = true;
+    let mut router = Router::from_runtime(&rt, cfg)?;
+
+    let trace = ChatTrace::generate(TraceProfile::lmsys(), n_requests, 20250923);
+    eprintln!("[e2e] serving {} requests (max_new={})...", n_requests, max_new);
+
+    let mut lat_by_path: std::collections::HashMap<&'static str, Vec<f64>> =
+        Default::default();
+    let t_all = std::time::Instant::now();
+    for q in &trace.queries {
+        let r = router.handle(&q.text)?;
+        let path = match r.pathway {
+            Pathway::ExactHit => "exact_hit",
+            Pathway::TweakHit => "tweak_hit",
+            Pathway::Miss => "miss",
+        };
+        lat_by_path.entry(path).or_default().push(r.total_micros as f64 / 1000.0);
+    }
+    let wall = t_all.elapsed();
+
+    let mut table = Table::new(
+        "E2E serving — per-pathway latency (ms)",
+        &["pathway", "n", "mean", "p50", "p99"],
+    );
+    for path in ["exact_hit", "tweak_hit", "miss"] {
+        if let Some(samples) = lat_by_path.get(path) {
+            let s = Summary::of(samples);
+            table.push(vec![
+                path.to_string(),
+                s.n.to_string(),
+                format!("{:.1}", s.mean),
+                format!("{:.1}", s.p50),
+                format!("{:.1}", s.p99),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+
+    let cost = router.ledger.dollars(&router.config.cost);
+    let base = router.ledger.baseline_dollars(&router.config.cost);
+    println!(
+        "throughput: {:.2} req/s  |  hit rate: {:.1}%  |  cache: {} entries",
+        n_requests as f64 / wall.as_secs_f64(),
+        router.hit_rate() * 100.0,
+        router.cache().len(),
+    );
+    println!(
+        "cost: ${:.6} vs all-big ${:.6}  ->  {:.1}% of baseline",
+        cost,
+        base,
+        100.0 * cost / base.max(1e-12)
+    );
+    println!("\nstage latency:\n{}", router.latency.table());
+
+    // paper's qualitative claims, enforced
+    let tweak_mean = lat_by_path.get("tweak_hit").map(|v| Summary::of(v).mean);
+    let miss_mean = lat_by_path.get("miss").map(|v| Summary::of(v).mean);
+    if let (Some(t), Some(m)) = (tweak_mean, miss_mean) {
+        assert!(
+            t < m,
+            "hit pathway must be faster than miss pathway: tweak {t:.1}ms vs miss {m:.1}ms"
+        );
+    }
+    if base > 0.0 {
+        assert!(cost < base, "caching must reduce cost");
+    }
+    Ok(())
+}

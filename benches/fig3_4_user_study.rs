@@ -1,0 +1,146 @@
+//! Figures 3 & 4: the user study (simulated respondent population, see
+//! DESIGN.md "Substitutions") on the Question Pairs dataset.
+//!
+//! Protocol (paper §4.2.2): insert the first question of each pair into the
+//! vector DB, query with the second, keep cache hits (sim ≥ 0.7), select
+//! 120 queries — 40 per cosine band — and run the survey: 194 collected
+//! responses, 175 valid after the minimum-time filter; each respondent
+//! casts 3 side-by-side votes and 6 binary satisfaction votes.
+//!
+//! Paper shape: satisfaction of Small-Tweaked ≈ Big across bands, Tweaked >
+//! Big in 0.9–1.0 (82.6% vs 77.4%); side-by-side Draw+Small (274) > Big (213).
+//!
+//! `cargo bench --bench fig3_4_user_study [-- --pairs 2000]`
+
+use tweakllm::bench::{bench_args, load_embedder, Table};
+use tweakllm::cache::{FlatIndex, VectorIndex};
+use tweakllm::datasets::QuestionPairDataset;
+use tweakllm::eval::quality::QualityModel;
+use tweakllm::eval::survey::{run_survey, SurveyConfig, SurveyItem};
+use tweakllm::eval::Band;
+use tweakllm::runtime::TextEmbedder;
+use tweakllm::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let n_pairs = args.usize("pairs", 2000)?;
+    let per_band = args.usize("per-band", 40)?;
+    let seed = args.u64("seed", 20250923)?;
+
+    eprintln!("[fig3-4] loading artifacts + embedding model...");
+    let (_rt, embedder) = load_embedder()?;
+    let ds = QuestionPairDataset::generate(n_pairs, seed);
+
+    // --- populate cache with first questions (batched embeds) ---
+    eprintln!("[fig3-4] embedding {} cached + {} incoming queries...", ds.len(), ds.len());
+    let q1s: Vec<String> = ds.pairs.iter().map(|p| p.q1.text.clone()).collect();
+    let q2s: Vec<String> = ds.pairs.iter().map(|p| p.q2.text.clone()).collect();
+    let e1 = embedder.embed_batch(&q1s)?;
+    let e2 = embedder.embed_batch(&q2s)?;
+    let mut index = FlatIndex::new(embedder.out_dim());
+    for e in &e1 {
+        index.insert(e);
+    }
+
+    // --- route second questions; keep hits per band ---
+    let mut by_band: std::collections::HashMap<Band, Vec<(usize, usize, f32)>> =
+        Default::default();
+    for (qi, e) in e2.iter().enumerate() {
+        let hits = index.search(e, 1);
+        if let Some(h) = hits.first() {
+            if let Some(band) = Band::of(h.score) {
+                by_band.entry(band).or_default().push((qi, h.id, h.score));
+            }
+        }
+    }
+    for band in Band::ALL {
+        eprintln!(
+            "[fig3-4] band {}: {} cache hits",
+            band.label(),
+            by_band.get(&band).map(|v| v.len()).unwrap_or(0)
+        );
+    }
+
+    // --- select 40 per band, build survey items via the quality model ---
+    let mut rng = Rng::substream(seed, "fig34/select");
+    let mut qm = QualityModel::new(seed);
+    let mut items = Vec::new();
+    for band in Band::ALL {
+        let pool = by_band.remove(&band).unwrap_or_default();
+        if pool.is_empty() {
+            eprintln!("[fig3-4] WARNING: no hits in band {}", band.label());
+            continue;
+        }
+        let picks = {
+            let mut r = rng.sample_indices(pool.len(), per_band.min(pool.len()));
+            // if a band is short, reuse with replacement to keep 40
+            while r.len() < per_band {
+                r.push(rng.usize(pool.len()));
+            }
+            r
+        };
+        for pi in picks {
+            let (qi, cached_id, sim) = pool[pi];
+            let new_intent = ds.pairs[qi].q2.intent;
+            let cached_intent = ds.pairs[cached_id].q1.intent;
+            items.push(SurveyItem {
+                band,
+                big: qm.big_direct(),
+                tweaked: qm.small_tweaked(sim, Some((&new_intent, &cached_intent))),
+            });
+        }
+    }
+    eprintln!("[fig3-4] {} survey items selected", items.len());
+
+    // --- run the survey population ---
+    let result = run_survey(&items, &SurveyConfig::default(), seed);
+    eprintln!(
+        "[fig3-4] respondents: {} valid ({} excluded by time filter; paper: 175/19)",
+        result.respondents, result.excluded
+    );
+
+    let mut fig3 = Table::new(
+        "Fig 3 — satisfaction rating (%) by cosine band",
+        &["band", "Big LLM", "Small LLM Tweaked", "paper Big", "paper Tweaked"],
+    );
+    let paper3 = [("0.7-0.8", 76.0, 73.0), ("0.8-0.9", 75.0, 74.0), ("0.9-1.0", 77.4, 82.6)];
+    for ((band, big, tweaked), (pl, pb, pt)) in result.satisfaction.iter().zip(paper3) {
+        assert_eq!(band.label(), pl);
+        fig3.push(vec![
+            band.label().to_string(),
+            format!("{:.1}", big.rate()),
+            format!("{:.1}", tweaked.rate()),
+            format!("{pb:.1}"),
+            format!("{pt:.1}"),
+        ]);
+    }
+    println!("{}", fig3.render());
+
+    let mut fig4 = Table::new(
+        "Fig 4 — side-by-side votes by cosine band",
+        &["band", "Big", "Small(Tweaked)", "Draw", "Small+Draw %"],
+    );
+    let mut tot_big = 0;
+    let mut tot_rest = 0;
+    for (band, c) in &result.side_by_side {
+        tot_big += c.big;
+        tot_rest += c.small + c.draw;
+        let pct = 100.0 * (c.small + c.draw) as f64 / c.total().max(1) as f64;
+        fig4.push(vec![
+            band.label().to_string(),
+            c.big.to_string(),
+            c.small.to_string(),
+            c.draw.to_string(),
+            format!("{pct:.1}"),
+        ]);
+    }
+    println!("{}", fig4.render());
+    println!(
+        "overall: Big={tot_big}  Small+Draw={tot_rest}   (paper: Big=213, Small+Draw=274)"
+    );
+    assert!(
+        tot_rest > tot_big,
+        "Fig 4 headline failed: Small+Draw ({tot_rest}) must exceed Big ({tot_big})"
+    );
+    Ok(())
+}

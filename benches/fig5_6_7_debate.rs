@@ -1,0 +1,185 @@
+//! Figures 5, 6, 7: multi-agent LLM-as-evaluator debate verdicts.
+//!
+//! * Fig 5 — Big direct vs Small **tweaked**, Question Pairs dataset.
+//! * Fig 6 — Big direct vs Small **direct** (control validating the
+//!   method: small must be clearly inferior everywhere).
+//! * Fig 7 — Big direct vs Small tweaked, LMSYS-like dataset (half the
+//!   trace inserted, the rest queried; paper scale 248,808/82,700 is run
+//!   scaled down by --scale, default 20x smaller, same protocol).
+//!
+//! Paper shape: "tweaked better-or-on-par" grows with the similarity band —
+//! QP: 32.9% / 40.1% / 46.1%; LMSYS: 27.5% / 37.7% / 47.9%.
+//!
+//! `cargo bench --bench fig5_6_7_debate [-- --pairs 2000 --lmsys-n 16000]`
+
+use tweakllm::bench::{bench_args, load_embedder, Table};
+use tweakllm::cache::{FlatIndex, VectorIndex};
+use tweakllm::datasets::{ChatTrace, IntentKey, QuestionPairDataset, TraceProfile};
+use tweakllm::eval::debate::{debate, default_personas, DebateConfig, VerdictCounts};
+use tweakllm::eval::quality::QualityModel;
+use tweakllm::eval::Band;
+use tweakllm::runtime::TextEmbedder;
+use tweakllm::util::Rng;
+
+/// A cache hit ready for judging: (band, similarity, new intent, cached intent).
+struct Hit {
+    band: Band,
+    sim: f32,
+    new_intent: IntentKey,
+    cached_intent: IntentKey,
+}
+
+fn collect_hits(
+    inserted: &[(String, IntentKey)],
+    queried: &[(String, IntentKey)],
+    embedder: &dyn TextEmbedder,
+) -> anyhow::Result<Vec<Hit>> {
+    let ins_texts: Vec<String> = inserted.iter().map(|(t, _)| t.clone()).collect();
+    let q_texts: Vec<String> = queried.iter().map(|(t, _)| t.clone()).collect();
+    let mut index = FlatIndex::new(embedder.out_dim());
+    for e in embedder.embed_batch(&ins_texts)? {
+        index.insert(&e);
+    }
+    let mut hits = Vec::new();
+    for (qi, e) in embedder.embed_batch(&q_texts)?.iter().enumerate() {
+        if let Some(h) = index.search(e, 1).first() {
+            if let Some(band) = Band::of(h.score) {
+                hits.push(Hit {
+                    band,
+                    sim: h.score,
+                    new_intent: queried[qi].1,
+                    cached_intent: inserted[h.id].1,
+                });
+            }
+        }
+    }
+    Ok(hits)
+}
+
+fn judge(
+    hits: &[Hit],
+    tweaked: bool, // false => small-direct control (Fig 6)
+    seed: u64,
+    tag: &str,
+) -> Vec<(Band, VerdictCounts)> {
+    let personas = default_personas();
+    let cfg = DebateConfig::default();
+    let mut qm = QualityModel::new(seed ^ 0xD0D0);
+    let mut rng = Rng::substream(seed, tag);
+    let mut per_band: std::collections::HashMap<Band, VerdictCounts> = Default::default();
+    for h in hits {
+        let big = qm.big_direct();
+        let small = if tweaked {
+            qm.small_tweaked(h.sim, Some((&h.new_intent, &h.cached_intent)))
+        } else {
+            qm.small_direct()
+        };
+        // A = Big direct, B = Small (paper's labeling convention)
+        let outcome = debate(&big, &small, &personas, &cfg, &mut rng);
+        per_band.entry(h.band).or_default().push(outcome.verdict);
+    }
+    Band::ALL
+        .iter()
+        .map(|b| (*b, per_band.get(b).copied().unwrap_or_default()))
+        .collect()
+}
+
+fn render(title: &str, rows: &[(Band, VerdictCounts)], paper: [f64; 3]) -> Table {
+    let mut t = Table::new(
+        title,
+        &["band", "n", "Big", "Small", "AB", "Small-or-AB %", "paper %"],
+    );
+    for ((band, c), p) in rows.iter().zip(paper) {
+        t.push(vec![
+            band.label().to_string(),
+            c.total().to_string(),
+            c.a.to_string(),
+            c.b.to_string(),
+            c.ab.to_string(),
+            format!("{:.1}", 100.0 * c.frac_b_or_draw()),
+            format!("{p:.1}"),
+        ]);
+    }
+    t
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let n_pairs = args.usize("pairs", 2000)?;
+    let lmsys_n = args.usize("lmsys-n", 16_000)?;
+    let seed = args.u64("seed", 20250923)?;
+
+    eprintln!("[fig5-7] loading artifacts + embedding model...");
+    let (_rt, embedder) = load_embedder()?;
+
+    // ---------- Question Pairs: Figs 5 & 6 ----------
+    let ds = QuestionPairDataset::generate(n_pairs, seed);
+    let inserted: Vec<(String, IntentKey)> =
+        ds.pairs.iter().map(|p| (p.q1.text.clone(), p.q1.intent)).collect();
+    let queried: Vec<(String, IntentKey)> =
+        ds.pairs.iter().map(|p| (p.q2.text.clone(), p.q2.intent)).collect();
+    eprintln!("[fig5-7] embedding {} + {} question-pair queries...", inserted.len(), queried.len());
+    let qp_hits = collect_hits(&inserted, &queried, &embedder)?;
+    eprintln!("[fig5-7] question-pairs cache hits: {}", qp_hits.len());
+
+    let fig5 = judge(&qp_hits, true, seed, "fig5");
+    println!("{}", render(
+        "Fig 5 — debate: Big vs Small-Tweaked (Question Pairs)",
+        &fig5,
+        [32.9, 40.1, 46.1],
+    ).render());
+
+    let fig6 = judge(&qp_hits, false, seed, "fig6");
+    println!("{}", render(
+        "Fig 6 — debate control: Big vs Small-Direct (Question Pairs)",
+        &fig6,
+        [10.0, 10.0, 10.0], // paper: clearly inferior across the board
+    ).render());
+
+    // control sanity: small-direct must lose much more often than tweaked
+    for ((_, t5), (_, t6)) in fig5.iter().zip(&fig6) {
+        if t5.total() > 20 && t6.total() > 20 {
+            assert!(
+                t6.frac_b_or_draw() < t5.frac_b_or_draw(),
+                "control violated: direct {:.2} !< tweaked {:.2}",
+                t6.frac_b_or_draw(),
+                t5.frac_b_or_draw()
+            );
+        }
+    }
+
+    // ---------- LMSYS-like: Fig 7 ----------
+    let trace = ChatTrace::generate(TraceProfile::lmsys(), lmsys_n, seed);
+    let (first, second) = trace.halves();
+    let inserted: Vec<(String, IntentKey)> =
+        first.iter().map(|q| (q.text.clone(), q.intent)).collect();
+    let queried: Vec<(String, IntentKey)> =
+        second.iter().map(|q| (q.text.clone(), q.intent)).collect();
+    eprintln!(
+        "[fig5-7] embedding LMSYS-like trace: insert {} / query {} (paper: 248,808/82,700 scaled)",
+        inserted.len(),
+        queried.len()
+    );
+    let lmsys_hits = collect_hits(&inserted, &queried, &embedder)?;
+    eprintln!("[fig5-7] lmsys hits: {}", lmsys_hits.len());
+    let fig7 = judge(&lmsys_hits, true, seed, "fig7");
+    println!("{}", render(
+        "Fig 7 — debate: Big vs Small-Tweaked (LMSYS-like)",
+        &fig7,
+        [27.5, 37.7, 47.9],
+    ).render());
+
+    // monotonicity: the paper's central trend
+    for rows in [&fig5, &fig7] {
+        let fracs: Vec<f64> = rows.iter().map(|(_, c)| c.frac_b_or_draw()).collect();
+        if rows.iter().all(|(_, c)| c.total() > 20) {
+            assert!(
+                fracs[0] < fracs[2],
+                "trend violated: band 0.7-0.8 ({:.2}) should trail 0.9-1.0 ({:.2})",
+                fracs[0],
+                fracs[2]
+            );
+        }
+    }
+    Ok(())
+}

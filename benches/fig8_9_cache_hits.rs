@@ -1,0 +1,70 @@
+//! Figures 8 & 9: cache-hit similarity distributions on the LMSYS-like and
+//! WildChat-like traces (insert half, query half).
+//!
+//! Paper shape: 68% of LMSYS queries and 40% of WildChat queries land at
+//! cosine ≥ 0.8 against the cache.
+//!
+//! `cargo bench --bench fig8_9_cache_hits [-- --n 20000]`
+
+use tweakllm::bench::{bench_args, load_embedder, Table};
+use tweakllm::datasets::{ChatTrace, TraceProfile};
+use tweakllm::eval::hit_rate::run;
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let n = args.usize("n", 20_000)?;
+    let seed = args.u64("seed", 20250923)?;
+
+    eprintln!("[fig8-9] loading artifacts + embedding model...");
+    let (_rt, embedder) = load_embedder()?;
+
+    for (fig, profile, paper_at_08) in [
+        ("Fig 8", TraceProfile::lmsys(), 0.68),
+        ("Fig 9", TraceProfile::wildchat(), 0.40),
+    ] {
+        let trace = ChatTrace::generate(profile, n, seed);
+        let (a, b) = trace.halves();
+        eprintln!(
+            "[fig8-9] {} ({}): embedding insert {} / query {}...",
+            fig,
+            profile.name,
+            a.len(),
+            b.len()
+        );
+        let t0 = std::time::Instant::now();
+        let curve = run(a, b, &embedder)?;
+        eprintln!("[fig8-9] embedded + searched in {:?}", t0.elapsed());
+
+        let mut table = Table::new(
+            &format!("{fig} — {} cache hits by top-1 cosine similarity", profile.name),
+            &["bucket", "count", "% of queries"],
+        );
+        for (lo, hi, count) in curve.histogram(0.5, 10) {
+            table.push(vec![
+                format!("{lo:.2}-{hi:.2}"),
+                count.to_string(),
+                format!("{:.1}", 100.0 * count as f64 / curve.queried as f64),
+            ]);
+        }
+        println!("{}", table.render());
+
+        let mut sweep = Table::new(
+            &format!("{fig} — hit rate vs threshold"),
+            &["threshold", "hit rate %"],
+        );
+        for t in [0.5f32, 0.6, 0.7, 0.75, 0.8, 0.85, 0.9, 0.95, 0.99] {
+            sweep.push(vec![
+                format!("{t:.2}"),
+                format!("{:.1}", 100.0 * curve.hit_rate_at(t)),
+            ]);
+        }
+        println!("{}", sweep.render());
+        let measured = curve.hit_rate_at(0.8);
+        println!(
+            "hit rate @0.8: measured {:.1}%  (paper: {:.0}%)\n",
+            measured * 100.0,
+            paper_at_08 * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,152 @@
+//! Vector-index ablation bench (DESIGN.md ablations): FLAT vs IVF_FLAT
+//! latency + recall at store sizes, nprobe sweep, eviction policy
+//! throughput, and native-Rust scan vs the compiled `cosine_scores_b4096`
+//! Pallas artifact (the L1/L3 crossover).
+//!
+//! `cargo bench --bench vector_index [-- --n 50000]`
+
+use tweakllm::bench::{bench_args, load_runtime, measure, row, Table};
+use tweakllm::cache::{EvictionPolicy, FlatIndex, IvfFlatIndex, SemanticCache, VectorIndex};
+use tweakllm::cache::store::IndexKind;
+use tweakllm::runtime::HostTensor;
+use tweakllm::util::{normalize, Rng};
+
+fn rand_unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    normalize(&mut v);
+    v
+}
+
+fn clustered(rng: &mut Rng, n: usize, dim: usize, clusters: usize) -> Vec<Vec<f32>> {
+    let centers: Vec<Vec<f32>> = (0..clusters).map(|_| rand_unit(rng, dim)).collect();
+    (0..n)
+        .map(|i| {
+            let mut v: Vec<f32> = centers[i % clusters]
+                .iter()
+                .map(|x| x + 0.3 * rng.normal() as f32)
+                .collect();
+            normalize(&mut v);
+            v
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let n = args.usize("n", 50_000)?;
+    let dim = 384usize;
+    let mut rng = Rng::new(99);
+    let data = clustered(&mut rng, n, dim, 64);
+    let queries: Vec<Vec<f32>> = (0..64).map(|i| data[i * (n / 64)].clone()).collect();
+
+    // ---- FLAT vs IVF_FLAT search latency + recall ----
+    let mut flat = FlatIndex::new(dim);
+    for v in &data {
+        flat.insert(v);
+    }
+    let mut table = Table::new(
+        "Vector index — search latency & recall@1 vs FLAT (N vectors)",
+        &["index", "N", "nprobe", "mean us/query", "recall@1 %"],
+    );
+    let flat_lat = {
+        let mut qi = 0;
+        measure(3, 30, || {
+            let _ = flat.search(&queries[qi % queries.len()], 1);
+            qi += 1;
+        })
+    };
+    table.push(vec![
+        "FLAT".into(),
+        n.to_string(),
+        "-".into(),
+        format!("{:.1}", flat_lat.mean),
+        "100.0".into(),
+    ]);
+
+    for nprobe in [1usize, 4, 8, 16] {
+        let mut ivf = IvfFlatIndex::new(dim, 64, nprobe);
+        for v in &data {
+            ivf.insert(v);
+        }
+        let mut hits = 0;
+        for q in &queries {
+            let a = ivf.search(q, 1);
+            let b = flat.search(q, 1);
+            if a.first().map(|h| h.id) == b.first().map(|h| h.id) {
+                hits += 1;
+            }
+        }
+        let lat = {
+            let mut qi = 0;
+            measure(3, 30, || {
+                let _ = ivf.search(&queries[qi % queries.len()], 1);
+                qi += 1;
+            })
+        };
+        table.push(vec![
+            "IVF_FLAT".into(),
+            n.to_string(),
+            nprobe.to_string(),
+            format!("{:.1}", lat.mean),
+            format!("{:.1}", 100.0 * hits as f64 / queries.len() as f64),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // ---- eviction policy throughput at capacity ----
+    let mut evict_table = Table::new(
+        "Eviction ablation — bounded cache (capacity 4096), insert+search mix",
+        &["policy", "us/op", "evictions"],
+    );
+    for policy in [
+        EvictionPolicy::None,
+        EvictionPolicy::Fifo,
+        EvictionPolicy::Lru,
+        EvictionPolicy::Lfu,
+    ] {
+        let mut cache = SemanticCache::new(64, IndexKind::Flat)
+            .with_eviction(policy, 4096);
+        let vecs: Vec<Vec<f32>> = (0..6000).map(|_| rand_unit(&mut rng, 64)).collect();
+        let t = std::time::Instant::now();
+        for (i, v) in vecs.iter().enumerate() {
+            cache.insert(&format!("q{i}"), "r", v.clone());
+            if i % 4 == 0 {
+                let _ = cache.search(v, 1);
+            }
+        }
+        let us = t.elapsed().as_micros() as f64 / vecs.len() as f64;
+        evict_table.push(vec![
+            format!("{policy:?}"),
+            format!("{us:.1}"),
+            cache.stats().evictions.to_string(),
+        ]);
+    }
+    println!("{}", evict_table.render());
+
+    // ---- native scan vs compiled Pallas cosine artifact ----
+    eprintln!("[vector_index] loading cosine_scores artifact...");
+    match load_runtime() {
+        Ok(rt) => {
+            let exe = rt.executable("cosine_scores_b4096")?;
+            let block = 4096usize;
+            let db: Vec<f32> = data.iter().take(block).flatten().copied().collect();
+            let q = &queries[0];
+            let db_t = HostTensor::f32(db.clone(), &[block, dim]);
+            let q_t = HostTensor::f32(q.clone(), &[dim]);
+            let compiled = measure(2, 20, || {
+                let _ = exe.run(&[db_t.clone(), q_t.clone()]).unwrap();
+            });
+            let mut flat4k = FlatIndex::new(dim);
+            for v in data.iter().take(block) {
+                flat4k.insert(v);
+            }
+            let native = measure(2, 20, || {
+                let _ = flat4k.search(q, 1);
+            });
+            println!("{}", row("native scan (4096x384)", &native));
+            println!("{}", row("compiled pallas cosine (4096x384)", &compiled));
+        }
+        Err(e) => eprintln!("[vector_index] skipping compiled comparison: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Per-stage runtime profiler (the §Perf L2/L3 measurement tool).
+//!
+//! Times each compiled artifact in isolation — embed variants, prefill,
+//! single decode steps — separating literal-construction cost from
+//! execute cost, so EXPERIMENTS.md §Perf can attribute the budget.
+//!
+//! Run: `cargo run --release --example profile_runtime [--steps 16]`
+
+use anyhow::Result;
+use tweakllm::runtime::{HostTensor, Runtime, SamplingParams, TextEmbedder};
+use tweakllm::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize("steps", 16)?;
+    let dir = args.str("artifacts", "artifacts");
+    let rt = Runtime::load(&dir, &[])?;
+    println!("platform: {}", rt.platform());
+
+    // --- embed variants ---
+    let embedder = tweakllm::runtime::Embedder::new(&rt)?;
+    for b in [1usize, 8, 32] {
+        let texts: Vec<String> =
+            (0..b).map(|i| format!("why is topic {i} good for benchmarking?")).collect();
+        // warmup
+        embedder.embed_batch(&texts)?;
+        let t = std::time::Instant::now();
+        let reps = 5;
+        for _ in 0..reps {
+            embedder.embed_batch(&texts)?;
+        }
+        let per = t.elapsed() / (reps * b as u32);
+        println!("embed_b{b:<3}      per-text: {per:?}");
+    }
+
+    // --- decoders ---
+    for model in ["small", "big"] {
+        let prefill = rt.executable(&format!("{model}_prefill"))?;
+        let decode = rt.executable(&format!("{model}_decode"))?;
+        let spec = rt.manifest.model(model)?;
+        let max_prefill = spec.cfg("max_prefill")?;
+
+        let mut ids = vec![0i32; max_prefill];
+        for (i, t) in ids.iter_mut().enumerate().take(24) {
+            *t = 5 + (i as i32 * 37) % 8000;
+        }
+        let tok = HostTensor::i32(ids.clone(), &[max_prefill]);
+        let len = HostTensor::i32(vec![24], &[1]);
+
+        // prefill timing
+        let t = std::time::Instant::now();
+        let outs = prefill.run(&[tok.clone(), len.clone()])?;
+        let prefill_cold = t.elapsed();
+        let t = std::time::Instant::now();
+        let outs2 = prefill.run(&[tok, len])?;
+        let prefill_warm = t.elapsed();
+        drop(outs2);
+        println!("{model}_prefill   cold: {prefill_cold:?}  warm: {prefill_warm:?}");
+
+        let kv_spec = decode.spec.inputs[2].clone();
+        let mut it = outs.into_iter();
+        let _logits = it.next().unwrap();
+        let mut k = HostTensor::from_literal(&it.next().unwrap(), &kv_spec)?;
+        let mut v = HostTensor::from_literal(&it.next().unwrap(), &kv_spec)?;
+
+        // decode-step timing, split into literal prep vs execute
+        let mut exec_total = std::time::Duration::ZERO;
+        let t_all = std::time::Instant::now();
+        for s in 0..steps {
+            let tokl = HostTensor::i32(vec![100 + s as i32], &[1]);
+            let posl = HostTensor::i32(vec![24 + s as i32], &[1]);
+            let te = std::time::Instant::now();
+            let inputs = [tokl, posl, k, v];
+            let mut outs = decode.run(&inputs)?;
+            exec_total += te.elapsed();
+            v = HostTensor::from_literal(&outs.pop().unwrap(), &kv_spec)?;
+            k = HostTensor::from_literal(&outs.pop().unwrap(), &kv_spec)?;
+        }
+        let total = t_all.elapsed();
+        println!(
+            "{model}_decode    per-step total: {:?}  (execute+fetch: {:?})",
+            total / steps as u32,
+            exec_total / steps as u32
+        );
+    }
+
+    // --- full generate through the facade ---
+    let mut rng = tweakllm::util::Rng::new(1);
+    for model in ["small", "big"] {
+        let g = tweakllm::runtime::Generator::new(&rt, model)?;
+        let params = SamplingParams { max_new_tokens: steps, ..Default::default() };
+        let t = std::time::Instant::now();
+        let gen = g.generate(&["profile this prompt please"], &params, &mut rng)?;
+        println!(
+            "{model} generate  {} tok in {:?}  (prefill {}us, decode {}us)",
+            gen.stats.generated_tokens,
+            t.elapsed(),
+            gen.stats.prefill_micros,
+            gen.stats.decode_micros
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: the smallest complete TweakLLM program.
+//!
+//! Loads the compiled artifacts, builds a router with the paper's Table-1
+//! configuration, sends a few queries, and shows the three pathways
+//! (miss → Big LLM; semantic hit → Small LLM tweak; exact hit → verbatim).
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use tweakllm::config::Config;
+use tweakllm::coordinator::{Pathway, Router};
+use tweakllm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // 1) Load the AOT artifacts (HLO text + weights) onto the PJRT CPU client.
+    let mut cfg = Config::paper();
+    cfg.exact_match_fast_path = true; // §6.1 optimization
+    cfg.big_llm.max_new_tokens = 16; // keep the demo snappy
+    cfg.small_llm.max_new_tokens = 16;
+    let rt = Runtime::load(&cfg.artifact_dir, &[])?;
+    println!("loaded PJRT platform: {}", rt.platform());
+
+    // 2) Build the Figure-1 router: embedder + vector DB + Big/Small LLMs.
+    let mut router = Router::from_runtime(&rt, cfg)?;
+
+    // 3) Serve queries.
+    let queries = [
+        "why is coffee good for health?",                   // cold: miss -> Big
+        "can you explain why coffee is good for health?",   // paraphrase: tweak
+        "why is coffee good for health?",                   // identical: exact
+        "draft an email asking my landlord about parking",  // unrelated: miss
+    ];
+    for q in queries {
+        let r = router.handle(q)?;
+        let pathway = match r.pathway {
+            Pathway::Miss => "MISS  -> Big LLM",
+            Pathway::TweakHit => "HIT   -> Small LLM tweak",
+            Pathway::ExactHit => "EXACT -> cached verbatim",
+        };
+        println!(
+            "\nquery:      {q}\npathway:    {pathway}\nsimilarity: {}\nlatency:    {:.1} ms\nresponse:   {}",
+            r.similarity.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
+            r.total_micros as f64 / 1000.0,
+            &r.text[..r.text.len().min(72)],
+        );
+    }
+
+    // 4) Inspect the economics.
+    let cost = router.ledger.dollars(&router.config.cost);
+    let base = router.ledger.baseline_dollars(&router.config.cost);
+    println!(
+        "\ncache entries: {}  |  hit rate: {:.0}%  |  cost vs all-Big: {:.0}%",
+        router.cache().len(),
+        router.hit_rate() * 100.0,
+        100.0 * cost / base.max(1e-12),
+    );
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! End-to-end serving driver (the EXPERIMENTS.md validation run).
+//!
+//! Starts the full stack — engine thread owning the PJRT runtime, dynamic
+//! batcher, TCP front-end — then replays an LMSYS-like workload through
+//! real sockets with several concurrent client threads, and reports
+//! latency/throughput/hit-rate/cost. All three layers compose here:
+//! L1 Pallas kernels inside the L2 HLO programs, driven by the L3 router.
+//!
+//! Run: `cargo run --release --example serve_trace -- --requests 64 --clients 4`
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use tweakllm::config::Config;
+use tweakllm::coordinator::{Engine, Router};
+use tweakllm::datasets::{ChatTrace, TraceProfile};
+use tweakllm::runtime::Runtime;
+use tweakllm::server::{Client, Server};
+use tweakllm::util::{Args, Summary};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n_requests = args.usize("requests", 64)?;
+    let n_clients = args.usize("clients", 4)?;
+    let max_new = args.usize("max-new", 16)?;
+
+    // --- engine + server ---
+    let mut cfg = Config::paper();
+    cfg.exact_match_fast_path = true;
+    cfg.big_llm.max_new_tokens = max_new;
+    cfg.small_llm.max_new_tokens = max_new;
+    let artifact_dir = cfg.artifact_dir.clone();
+    eprintln!("[serve_trace] starting engine (artifacts: {artifact_dir})...");
+    let (engine, handle) = Engine::start(move || {
+        let rt = Runtime::load(&artifact_dir, &[])?;
+        eprintln!("[serve_trace] engine up on platform {}", rt.platform());
+        Router::from_runtime(&rt, cfg)
+    })?;
+    let server = Server::bind("127.0.0.1:0", handle.clone())?;
+    let addr = server.local_addr()?.to_string();
+    let stop = server.stop_flag();
+    let server_thread = std::thread::spawn(move || server.serve());
+    eprintln!("[serve_trace] listening on {addr}");
+
+    // --- workload ---
+    let trace = ChatTrace::generate(TraceProfile::lmsys(), n_requests, 20250923);
+    let work: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(
+        trace.queries.iter().rev().map(|q| q.text.clone()).collect(),
+    ));
+
+    // --- concurrent clients over real sockets ---
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..n_clients {
+        let work = Arc::clone(&work);
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(
+            move || -> anyhow::Result<Vec<(String, f64)>> {
+                let mut client = Client::connect(&addr)?;
+                let mut out = Vec::new();
+                loop {
+                    let q = match work.lock().unwrap().pop() {
+                        Some(q) => q,
+                        None => break,
+                    };
+                    let t = std::time::Instant::now();
+                    let resp = client.query(&q)?;
+                    let ms = t.elapsed().as_secs_f64() * 1e3;
+                    let pathway = resp
+                        .opt("pathway")
+                        .and_then(|p| p.str().ok())
+                        .unwrap_or("error")
+                        .to_string();
+                    if pathway == "error" {
+                        eprintln!("[client {c}] error: {}", resp.to_string());
+                    }
+                    out.push((pathway, ms));
+                }
+                Ok(out)
+            },
+        ));
+    }
+    let mut by_path: std::collections::HashMap<String, Vec<f64>> = Default::default();
+    let mut total = 0usize;
+    for j in joins {
+        for (p, ms) in j.join().unwrap()? {
+            by_path.entry(p).or_default().push(ms);
+            total += 1;
+        }
+    }
+    let wall = t0.elapsed();
+
+    // --- report ---
+    println!("\n=== serve_trace report ===");
+    println!(
+        "requests: {total}  clients: {n_clients}  wall: {:.2}s  throughput: {:.2} req/s",
+        wall.as_secs_f64(),
+        total as f64 / wall.as_secs_f64()
+    );
+    for (path, samples) in &by_path {
+        let s = Summary::of(samples);
+        println!(
+            "  {path:<10} n={:<4} mean={:>8.1}ms p50={:>8.1}ms p99={:>8.1}ms",
+            s.n, s.mean, s.p50, s.p99
+        );
+    }
+    let stats = handle.stats()?;
+    println!(
+        "hit rate: {:.1}%  cache: {} entries  mean embed batch: {:.2}",
+        100.0 * (stats.tweak_hits + stats.exact_hits) as f64
+            / stats.requests.max(1) as f64,
+        stats.cache_size,
+        stats.mean_batch_size,
+    );
+    println!(
+        "cost: ${:.6} vs all-Big ${:.6} -> {:.1}% of baseline",
+        stats.cost_dollars,
+        stats.baseline_dollars,
+        100.0 * stats.cost_dollars / stats.baseline_dollars.max(1e-12)
+    );
+    println!("\nengine stage latency:\n{}", stats.latency_table);
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = server_thread.join();
+    engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,298 @@
+"""AOT pipeline: lower every substrate computation to HLO text + export
+weights + write the artifact manifest the Rust runtime consumes.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that the xla crate's XLA
+(xla_extension 0.5.1) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifact calling convention (recorded in manifest.json):
+  HLO parameters = [<weights in params.py spec order>..., <inputs>...]
+  HLO result     = tuple of outputs (lowered with return_tuple=True)
+
+Run via ``make artifacts``; the target is skipped when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, params
+from .kernels.cosine_topk import cosine_scores as kernel_cosine_scores
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_entry(name, shape, dtype):
+    return {"name": name, "shape": [int(x) for x in shape], "dtype": dtype}
+
+
+def build_artifacts(out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+    manifest: dict = {
+        "format": "hlo-text-v1",
+        "seed": configs.RNG_SEED,
+        "vocab_size": configs.VOCAB_SIZE,
+        "embed_dim": configs.EMBED_OUT_DIM,
+        "special_tokens": {
+            "pad": configs.PAD_ID,
+            "bos": configs.BOS_ID,
+            "eos": configs.EOS_ID,
+            "sep": configs.SEP_ID,
+            "unk": configs.UNK_ID,
+            "first_word": configs.FIRST_WORD_ID,
+        },
+        "models": {},
+        "artifacts": [],
+    }
+
+    def log(msg):
+        if verbose:
+            print(f"[aot] {msg}", flush=True)
+
+    # ----- weights ---------------------------------------------------------
+    enc_cfg = configs.ENCODER
+    enc_specs = params.encoder_param_specs(enc_cfg)
+    enc_params = params.init_encoder(enc_cfg)
+    enc_names = params.param_names(enc_specs)
+
+    # Compute the mean-centering vector over a probe corpus of random
+    # content-word sequences (see params.encoder z_mean docstring).
+    import numpy as np
+
+    rng = np.random.default_rng(configs.RNG_SEED)
+    probe_z = []
+    plist_probe = {k: jnp.asarray(v) for k, v in enc_params.items()}
+    for _ in range(192):
+        n = int(rng.integers(3, 16))
+        toks = np.zeros((enc_cfg.max_seq,), np.int32)
+        toks[:n] = rng.integers(configs.FIRST_WORD_ID, enc_cfg.vocab_size, n)
+        z = model.embed_prenorm(
+            enc_cfg,
+            plist_probe,
+            jnp.asarray(toks),
+            jnp.asarray([n], jnp.int32),
+            use_kernels=False,
+        )
+        probe_z.append(np.asarray(z))
+    enc_params["z_mean"] = np.mean(np.stack(probe_z), axis=0).astype(np.float32)
+    log(f"z_mean norm: {float(np.linalg.norm(enc_params['z_mean'])):.3f}")
+    enc_idx = params.export_weights(
+        enc_params, enc_specs, os.path.join(out_dir, "weights", "encoder.bin")
+    )
+    manifest["models"]["encoder"] = {
+        "weights_file": "weights/encoder.bin",
+        "tensors": enc_idx,
+        "config": {
+            "d_model": enc_cfg.d_model,
+            "n_heads": enc_cfg.n_heads,
+            "d_ff": enc_cfg.d_ff,
+            "max_seq": enc_cfg.max_seq,
+            "out_dim": enc_cfg.out_dim,
+            "mix_alpha": enc_cfg.mix_alpha,
+            "proj_beta": enc_cfg.proj_beta,
+        },
+    }
+    log(f"encoder weights: {sum(t['numel'] for t in enc_idx)} params")
+
+    dec_data = {}
+    for cfg in (configs.SMALL_LLM, configs.BIG_LLM):
+        specs = params.decoder_param_specs(cfg)
+        ps = params.init_decoder(cfg)
+        names = params.param_names(specs)
+        idx = params.export_weights(
+            ps, specs, os.path.join(out_dir, "weights", f"{cfg.name}.bin")
+        )
+        manifest["models"][cfg.name] = {
+            "weights_file": f"weights/{cfg.name}.bin",
+            "tensors": idx,
+            "config": {
+                "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads,
+                "d_ff": cfg.d_ff,
+                "max_prefill": cfg.max_prefill,
+                "max_seq": cfg.max_seq,
+                "head_dim": cfg.head_dim,
+            },
+        }
+        dec_data[cfg.name] = (cfg, specs, ps, names)
+        log(f"{cfg.name} weights: {sum(t['numel'] for t in idx)} params")
+
+    # ----- lowering helpers -------------------------------------------------
+    def lower_artifact(name, fn, weight_specs, input_entries, output_entries, wset):
+        t0 = time.time()
+        arg_specs = [_spec(tuple(s), jnp.float32) for _, s in weight_specs]
+        arg_specs += [
+            _spec(tuple(e["shape"]), jnp.dtype(e["dtype"])) for e in input_entries
+        ]
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "weight_set": wset,
+                "n_weight_args": len(weight_specs),
+                "inputs": input_entries,
+                "outputs": output_entries,
+            }
+        )
+        log(f"lowered {name}: {len(text)} chars in {time.time() - t0:.1f}s")
+
+    # ----- embedder variants ------------------------------------------------
+    for b in configs.EMBED_BATCH_SIZES:
+
+        def embed_fn(*args, _b=b):
+            plist = list(args[: len(enc_names)])
+            tokens, lengths = args[len(enc_names) :]
+            return model.embed_batch(enc_cfg, plist, enc_names, tokens, lengths)
+
+        lower_artifact(
+            f"embed_b{b}",
+            embed_fn,
+            enc_specs,
+            [
+                _io_entry("tokens", (b, enc_cfg.max_seq), "int32"),
+                _io_entry("lengths", (b,), "int32"),
+            ],
+            [_io_entry("embeddings", (b, enc_cfg.out_dim), "float32")],
+            "encoder",
+        )
+
+    # ----- decoder prefill / decode ----------------------------------------
+    for mname, (cfg, specs, _ps, names) in dec_data.items():
+        kv_shape = (cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+
+        def prefill_fn(*args, _cfg=cfg, _names=names):
+            plist = list(args[: len(_names)])
+            tokens, length = args[len(_names) :]
+            return model.prefill(_cfg, plist, _names, tokens, length)
+
+        lower_artifact(
+            f"{mname}_prefill",
+            prefill_fn,
+            specs,
+            [
+                _io_entry("tokens", (cfg.max_prefill,), "int32"),
+                _io_entry("length", (1,), "int32"),
+            ],
+            [
+                _io_entry("logits", (cfg.vocab_size,), "float32"),
+                _io_entry("k_cache", kv_shape, "float32"),
+                _io_entry("v_cache", kv_shape, "float32"),
+            ],
+            mname,
+        )
+
+        def decode_fn(*args, _cfg=cfg, _names=names):
+            plist = list(args[: len(_names)])
+            token, pos, k_cache, v_cache = args[len(_names) :]
+            return model.decode_step(_cfg, plist, _names, token, pos, k_cache, v_cache)
+
+        lower_artifact(
+            f"{mname}_decode",
+            decode_fn,
+            specs,
+            [
+                _io_entry("token", (1,), "int32"),
+                _io_entry("pos", (1,), "int32"),
+                _io_entry("k_cache", kv_shape, "float32"),
+                _io_entry("v_cache", kv_shape, "float32"),
+            ],
+            [
+                _io_entry("logits", (cfg.vocab_size,), "float32"),
+                _io_entry("k_cache", kv_shape, "float32"),
+                _io_entry("v_cache", kv_shape, "float32"),
+            ],
+            mname,
+        )
+
+        # Fused multi-step decode (§Perf L2): amortizes the per-call KV
+        # transfer by DECODE_SPAN; sampling (top-k 40 + temperature) happens
+        # in-graph, driven by uniforms from the Rust PRNG.
+        span = configs.DECODE_SPAN
+
+        def span_fn(*args, _cfg=cfg, _names=names):
+            plist = list(args[: len(_names)])
+            token, pos, k_cache, v_cache, u, temp = args[len(_names) :]
+            return model.decode_span(
+                _cfg, plist, _names, token, pos, k_cache, v_cache, u, temp
+            )
+
+        lower_artifact(
+            f"{mname}_decode{span}",
+            span_fn,
+            specs,
+            [
+                _io_entry("token", (1,), "int32"),
+                _io_entry("pos", (1,), "int32"),
+                _io_entry("k_cache", kv_shape, "float32"),
+                _io_entry("v_cache", kv_shape, "float32"),
+                _io_entry("u", (span,), "float32"),
+                _io_entry("temperature", (1,), "float32"),
+            ],
+            [
+                _io_entry("tokens", (span,), "int32"),
+                _io_entry("k_cache", kv_shape, "float32"),
+                _io_entry("v_cache", kv_shape, "float32"),
+            ],
+            mname,
+        )
+
+    # ----- compiled cosine scorer -------------------------------------------
+    n_block = configs.COSINE_DB_BLOCK
+
+    def cosine_fn(db, q):
+        return (kernel_cosine_scores(db, q),)
+
+    lower_artifact(
+        f"cosine_scores_b{n_block}",
+        cosine_fn,
+        [],
+        [
+            _io_entry("db", (n_block, configs.EMBED_OUT_DIM), "float32"),
+            _io_entry("q", (configs.EMBED_OUT_DIM,), "float32"),
+        ],
+        [_io_entry("scores", (n_block,), "float32")],
+        None,
+    )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"manifest: {len(manifest['artifacts'])} artifacts")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args()
+    build_artifacts(args.out, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

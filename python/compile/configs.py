@@ -1,0 +1,133 @@
+"""Shared model / artifact configuration for the TweakLLM substrate models.
+
+These configs are the single source of truth for the build path (model.py,
+aot.py) and are exported into ``artifacts/manifest.json`` so the Rust runtime
+never hard-codes a shape.
+
+Sizes are deliberately small: the testbed is a single-core CPU PJRT client,
+and the paper's Big/Small distinction is about *cost ratio* (25x per output
+token, modelled in the Rust cost model), not about us matching GPT-4o's
+parameter count. See DESIGN.md "Substitutions".
+"""
+
+from dataclasses import dataclass, field
+
+
+VOCAB_SIZE = 8192
+EMBED_OUT_DIM = 384  # paper: all-MiniLM-L6-v2 output dimension
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+SEP_ID = 3
+UNK_ID = 4
+FIRST_WORD_ID = 5  # hashed word ids occupy [FIRST_WORD_ID, VOCAB_SIZE)
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """MiniLM-style sentence embedder (bag-of-embeddings + light mixing)."""
+
+    vocab_size: int = VOCAB_SIZE
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 64
+    out_dim: int = EMBED_OUT_DIM
+    # Residual mixing weight of the contextualizing layer. Small on purpose:
+    # the bag-of-embeddings signal must dominate so that paraphrases (shared
+    # tokens) land close in embedding space -- the behaviour MiniLM-class
+    # models exhibit and that the paper's C1 failure mode depends on.
+    mix_alpha: float = 0.3
+    # Weight of the nonlinear branch of the output projection (the linear
+    # branch preserves cosine structure, Johnson-Lindenstrauss style).
+    proj_beta: float = 0.2
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class DecoderConfig:
+    """Decoder-only causal transformer (the Big / Small LLM substrate)."""
+
+    name: str = "small"
+    vocab_size: int = VOCAB_SIZE
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+    max_prefill: int = 192  # longest prompt (tweak template incl. cached Q/R)
+    max_seq: int = 256  # prefill + generated tokens
+    block_q: int = 64
+    block_kv: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+ENCODER = EncoderConfig()
+SMALL_LLM = DecoderConfig(
+    name="small", d_model=128, n_layers=2, n_heads=4, d_ff=512
+)
+BIG_LLM = DecoderConfig(
+    name="big", d_model=256, n_layers=4, n_heads=8, d_ff=1024
+)
+
+# Batch-size variants compiled for the embedder. The Rust dynamic batcher
+# rounds a micro-batch up to the nearest compiled variant and pads.
+EMBED_BATCH_SIZES = (1, 8, 32)
+
+# Row-block size of the compiled cosine-similarity scorer artifact. The Rust
+# vector store chunks the DB matrix into blocks of this many rows.
+COSINE_DB_BLOCK = 4096
+
+# Steps fused into one decode-span executable (§Perf L2). Must stay in sync
+# with the Rust generator's span driver (it reads the span from the
+# artifact's input shapes, so only aot.py hard-codes it).
+DECODE_SPAN = 8
+
+RNG_SEED = 20250923  # paper's date line; fixed for reproducibility
+
+# Function words whose token-embedding rows are scaled down in the encoder
+# (by STOPWORD_SCALE). Trained sentence encoders learn exactly this
+# IDF-style downweighting; with random weights we inject it explicitly so
+# that sentence similarity is driven by content words, not by shared
+# question scaffolding ("why is ... good for ..."). The list must describe
+# the *function* vocabulary only — polarity adjectives stay full-weight, so
+# "why is X good" vs "why is X bad" remains a high-cosine near-duplicate
+# (the paper's false-positive regime).
+STOPWORDS = (
+    "a an the is are was were be being been do does did done am "
+    "can could should would will shall may might must "
+    "i you he she we they it its my your me us them this that these those "
+    "of for to in on at with about as by from into over under than then "
+    "and or but not no nor so up down out off if else "
+    "what which who whom whose how why when where "
+    "come comes make makes made get gets got getting go going goes "
+    "any some just really very please hey thanks thank appreciate "
+    "question honest serious quick wondering curious tell know "
+    "advance help i'm im ? ! . ,"
+).split()
+
+STOPWORD_SCALE = 0.22
+
+# Synonym groups whose embedding rows are tied together (row = a*rep +
+# b*noise with a^2+b^2=1, giving within-group cosine ~= a^2). Mirrors
+# `rust/src/datasets/vocabulary.rs::SYNONYMS` — a trained encoder puts
+# synonyms nearby; the hashed table needs it injected. Polarity antonyms
+# (good/bad, great/terrible, ...) are deliberately NOT tied: keeping them
+# unrelated is what makes polarity flips a single-content-word change.
+SYNONYM_GROUPS = (
+    ("why", "how come"),  # multi-word handled at tokenizer level as words
+    ("explain", "describe", "clarify"),
+    ("best", "ideal", "top"),
+    ("improve", "boost", "increase"),
+    ("tips", "advice", "suggestions"),
+    ("good", "solid", "decent"),
+    ("better", "superior"),
+    ("know", "understand", "learn"),
+)
+
+SYNONYM_TIE = 0.88  # within-group cosine ≈ SYNONYM_TIE^2 ≈ 0.77

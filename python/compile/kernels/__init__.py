@@ -1,0 +1,6 @@
+"""L1: Pallas kernels for the TweakLLM substrate models."""
+from .attention import attention
+from .cosine_topk import cosine_scores, cosine_topk
+from .decode_attention import decode_attention
+from .matmul import matmul_bias
+from .rmsnorm import rmsnorm

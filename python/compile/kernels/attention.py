@@ -1,0 +1,129 @@
+"""Pallas fused multi-head attention (prefill path), flash-style.
+
+Grid = (heads, query blocks). Each grid step holds one [block_q, hd] query
+tile plus the head's full [S, hd] K and V in VMEM (S <= 256, hd = 32 here:
+K+V = 64 KiB/head) and walks the key axis in block_kv chunks with an online
+softmax (running max / running sum), exactly the FlashAttention recurrence.
+
+TPU adaptation note (DESIGN.md #Hardware-Adaptation): the CUDA formulation
+assigns a threadblock per query tile and stages K/V through shared memory;
+here the BlockSpec index maps express the same HBM->VMEM schedule and the
+per-chunk [block_q, hd] x [hd, block_kv] product is MXU-shaped. On this CPU
+testbed the kernel runs under interpret=True (Mosaic custom-calls cannot
+execute on the CPU PJRT plugin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    len_ref,
+    o_ref,
+    *,
+    sm_scale: float,
+    causal: bool,
+    block_q: int,
+    block_kv: int,
+    seq_len: int,
+):
+    h_i = pl.program_id(0)
+    q_i = pl.program_id(1)
+    del h_i  # blocking already selects the head; only q_i is needed below
+
+    q = q_ref[0, :, :] * sm_scale  # [block_q, hd]
+    length = len_ref[0]
+    q_offset = q_i * block_q
+    q_pos = q_offset + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+
+    num_kv_blocks = seq_len // block_kv
+
+    def body(kv_i, carry):
+        acc, m_prev, l_prev = carry
+        kv_offset = kv_i * block_kv
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0, :, :], kv_offset, block_kv, axis=0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0, :, :], kv_offset, block_kv, axis=0)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bkv]
+
+        k_pos = kv_offset + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1
+        )
+        mask = k_pos < length
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_cur = jnp.max(s, axis=-1)  # [bq]
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)  # rescale of old accumulator
+        p = jnp.exp(s - m_new[:, None])  # [bq, bkv]
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return acc, m_new, l_new
+
+    hd = q.shape[-1]
+    init = (
+        jnp.zeros((block_q, hd), jnp.float32),
+        jnp.full((block_q,), NEG_INF, jnp.float32),
+        jnp.zeros((block_q,), jnp.float32),
+    )
+    acc, _m, l = jax.lax.fori_loop(0, num_kv_blocks, body, init)
+    # Fully-masked query rows (padding) have l == 0; guard the divide.
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0, :, :] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    length: jax.Array,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = 64,
+    block_kv: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused MHA over one padded sequence.
+
+    q, k, v: [H, S, hd]; length: [1] int32 (valid prefix length).
+    Returns [H, S, hd]; rows >= length are garbage (masked upstream).
+    """
+    h, s, hd = q.shape
+    if s % block_q != 0:
+        block_q = s
+    if s % block_kv != 0:
+        block_kv = s
+    scale = sm_scale if sm_scale is not None else 1.0 / float(hd) ** 0.5
+    grid = (h, s // block_q)
+    kernel = functools.partial(
+        _attention_kernel,
+        sm_scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_kv=block_kv,
+        seq_len=s,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((1, s, hd), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((1,), lambda hi, qi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda hi, qi: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v, length)

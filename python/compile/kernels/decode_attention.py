@@ -1,0 +1,61 @@
+"""Pallas single-token (decode-step) attention over a KV cache.
+
+Grid = (heads,). Each grid step holds one query row [hd] plus the head's
+full [S, hd] K and V cache tile in VMEM and computes a masked softmax over
+cache positions 0..=pos. S = 256 and hd = 32 here, so the working set is
+64 KiB/head -- the decode step is memory-bound (one MXU-shaped [1, hd] x
+[hd, S] product), which matches the serving-paper roofline expectation that
+decode attention streams the KV cache.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_attention_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, *, sm_scale):
+    q = q_ref[0, :] * sm_scale  # [hd]
+    k = k_ref[0, :, :]  # [S, hd]
+    v = v_ref[0, :, :]  # [S, hd]
+    pos = pos_ref[0]
+    s = k.shape[0]
+    logits = jnp.dot(k, q, preferred_element_type=jnp.float32)  # [S]
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (s, 1), 0)[:, 0]
+    logits = jnp.where(kpos <= pos, logits, NEG_INF)
+    m = jnp.max(logits)
+    p = jnp.exp(logits - m)
+    denom = jnp.sum(p)
+    o_ref[0, :] = (jnp.dot(p, v, preferred_element_type=jnp.float32) / denom).astype(
+        o_ref.dtype
+    )
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    sm_scale: float | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: [H, hd]; caches: [H, S, hd]; pos: [1] int32 -> [H, hd]."""
+    h, s, hd = k_cache.shape
+    scale = sm_scale if sm_scale is not None else 1.0 / float(hd) ** 0.5
+    kernel = functools.partial(_decode_attention_kernel, sm_scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, hd), lambda hi: (hi, 0)),
+            pl.BlockSpec((1, s, hd), lambda hi: (hi, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda hi: (hi, 0, 0)),
+            pl.BlockSpec((1,), lambda hi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, hd), lambda hi: (hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, hd), q.dtype),
+        interpret=interpret,
+    )(q, k_cache, v_cache, pos)

@@ -1,0 +1,88 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: each Pallas kernel in this directory
+must match its oracle to float32 tolerance across the shape/dtype sweeps in
+``python/tests/test_kernels.py`` (hypothesis drives the sweeps).
+
+Keep these boring and obviously-correct: no tiling, no tricks.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over the last axis. x: [..., D], weight: [D]."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * weight
+
+
+def matmul_bias(
+    x: jax.Array, w: jax.Array, b: jax.Array, activation: str = "none"
+) -> jax.Array:
+    """x @ w + b with optional fused activation. x: [M, K], w: [K, N], b: [N]."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if activation == "gelu":
+        y = jax.nn.gelu(y, approximate=True)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    length: jax.Array,
+    causal: bool,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Multi-head attention over one (padded) sequence.
+
+    q, k, v: [H, S, hd]; length: scalar int32 (#valid positions, rest pad).
+    Key positions >= length are masked; ``causal`` adds the autoregressive
+    mask. Returns [H, S, hd]; query rows >= length are meaningless (they
+    attend only within the valid prefix) and are excluded from comparisons.
+    """
+    h, s, hd = q.shape
+    scale = sm_scale if sm_scale is not None else 1.0 / float(hd) ** 0.5
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    kpos = jnp.arange(s)
+    mask = jnp.broadcast_to(kpos[None, None, :] < length, (h, s, s))
+    if causal:
+        qpos = jnp.arange(s)
+        mask = mask & (kpos[None, None, :] <= qpos[None, :, None])
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Single-token attention over a KV cache.
+
+    q: [H, hd]; k_cache, v_cache: [H, S, hd]; pos: scalar int32, index of the
+    current token (attends to cache positions 0..=pos). Returns [H, hd].
+    """
+    h, s, hd = k_cache.shape
+    scale = sm_scale if sm_scale is not None else 1.0 / float(hd) ** 0.5
+    logits = jnp.einsum("hd,hkd->hk", q, k_cache) * scale
+    mask = jnp.arange(s)[None, :] <= pos
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hk,hkd->hd", probs, v_cache)
+
+
+def cosine_scores(db: jax.Array, q: jax.Array) -> jax.Array:
+    """Cosine scores of one L2-normalized query against an L2-normalized DB.
+
+    db: [N, D] (rows normalized), q: [D] (normalized). Returns [N].
+    """
+    return db @ q

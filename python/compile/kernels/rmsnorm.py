@@ -1,0 +1,44 @@
+"""Pallas RMSNorm kernel.
+
+Row-blocked: each grid step normalizes a [block_rows, D] tile held in VMEM.
+D is the model width (128/256 here) so a tile is at most 256 rows x 256 cols
+x 4 B = 256 KiB -- comfortably inside a TPU core's ~16 MiB VMEM with room for
+double-buffering. The reduction runs on the VPU; there is no MXU work.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + eps) * w_ref[...]
+
+
+def rmsnorm(
+    x: jax.Array,
+    weight: jax.Array,
+    eps: float = 1e-6,
+    block_rows: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """RMSNorm over the last axis. x: [rows, D], weight: [D] -> [rows, D]."""
+    rows, d = x.shape
+    if rows % block_rows != 0:
+        block_rows = rows  # fall back to a single tile for ragged shapes
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, weight)

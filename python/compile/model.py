@@ -1,0 +1,322 @@
+"""L2: JAX forward passes for the TweakLLM substrate models.
+
+Three computations, all lowered to HLO text by ``aot.py`` and executed from
+the Rust runtime (Python is never on the request path):
+
+  * ``embed_batch``  -- MiniLM-style sentence embedder (the paper's
+    all-MiniLM-L6-v2 stand-in): token embeddings + one lightly-mixed
+    transformer layer, masked mean-pool, projection to 384-d, L2-normalize.
+  * ``prefill``      -- decoder-only causal LM prompt pass, returns the
+    next-token logits and a dense KV cache for the decode loop.
+  * ``decode_step``  -- single-token step that appends to the KV cache and
+    returns next-token logits. The Rust generator drives the autoregressive
+    loop, feeding the cache buffers back zero-copy (PJRT ``execute_b``).
+
+Every dense/attention op routes through the Pallas kernels in ``kernels/``
+(``use_kernels=False`` swaps in the pure-jnp oracle, which tests use to pin
+the two implementations together).
+
+Weights arrive as a *list* in ``params.py`` spec order; see manifest.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .configs import DecoderConfig, EncoderConfig
+from .kernels import ref
+
+
+def _ops(use_kernels: bool):
+    if use_kernels:
+        return kernels.rmsnorm, kernels.matmul_bias, kernels.attention
+    # Oracle twins (ref.attention takes a scalar length, kernel takes [1]).
+    def rms(x, w):
+        return ref.rmsnorm(x, w)
+
+    def mm(x, w, b, activation="none"):
+        return ref.matmul_bias(x, w, b, activation)
+
+    def attn(q, k, v, length, causal=True):
+        return ref.attention(q, k, v, length[0], causal)
+
+    return rms, mm, attn
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    """[S, D] -> [H, S, hd]"""
+    s, d = x.shape
+    return x.reshape(s, n_heads, d // n_heads).transpose(1, 0, 2)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    """[H, S, hd] -> [S, D]"""
+    h, s, hd = x.shape
+    return x.transpose(1, 0, 2).reshape(s, h * hd)
+
+
+# ---------------------------------------------------------------------------
+# Embedder
+# ---------------------------------------------------------------------------
+
+
+def _encoder_layer(cfg: EncoderConfig, p: dict, e: jax.Array, length, use_kernels):
+    """One pre-norm transformer layer with residual branches scaled by
+    ``mix_alpha`` so the bag-of-embeddings signal dominates (see configs).
+
+    The contextual branches are additionally scaled per token by the
+    embedding-row magnitude: RMSNorm inside the branches would otherwise
+    undo the encoder's IDF downweighting (params.py STOPWORD_SCALE) and
+    reinject function-word signal at full strength.
+    """
+    rms, mm, attn = _ops(use_kernels)
+    d, h = cfg.d_model, cfg.n_heads
+    tok_w = jnp.minimum(
+        jnp.linalg.norm(e, axis=-1, keepdims=True), 1.0
+    )  # [S, 1]; ~0.22 for downweighted function words, ~1 for content
+    en = rms(e, p["ln1_w"])
+    qkv = mm(en, p["w_qkv"], p["b_qkv"])
+    q, k, v = (_split_heads(t, h) for t in jnp.split(qkv, 3, axis=-1))
+    # Scale the *values* by token weight as well: RMSNorm has re-normalized
+    # every token, so without this the attention output is dominated by the
+    # (shared, template) function words regardless of their tiny embeddings.
+    v = v * tok_w[None, :, :]
+    a = attn(q, k, v, length, causal=False)
+    a = mm(_merge_heads(a), p["w_o"], p["b_o"])
+    h1 = e + cfg.mix_alpha * a * tok_w
+    hn = rms(h1, p["ln2_w"])
+    f = mm(mm(hn, p["w_ff1"], p["b_ff1"], "gelu"), p["w_ff2"], p["b_ff2"])
+    return h1 + cfg.mix_alpha * f * tok_w
+
+
+def embed_prenorm(
+    cfg: EncoderConfig,
+    p: dict,
+    tokens: jax.Array,
+    length: jax.Array,
+    use_kernels: bool = True,
+) -> jax.Array:
+    """Pre-normalization sentence vector (used by aot.py to compute the
+    mean-centering vector). tokens: [S] int32, length: [1] int32 -> [out_dim]."""
+    _, mm, _ = _ops(use_kernels)
+    s = cfg.max_seq
+    e = p["tok_emb"][tokens]  # [S, d]
+    h = _encoder_layer(cfg, p, e, length, use_kernels)
+    mask = (jnp.arange(s) < length[0]).astype(h.dtype)[:, None]
+    denom = jnp.maximum(length[0].astype(h.dtype), 1.0)
+    pooled = jnp.sum(h * mask, axis=0, keepdims=True) / denom  # [1, d]
+    lin = pooled @ p["w_proj"]  # cosine-preserving random projection
+    nl = mm(
+        mm(pooled, p["w_nl1"], p["b_nl1"], "gelu"), p["w_nl2"], p["b_nl2"]
+    )
+    return (lin + cfg.proj_beta * nl)[0]
+
+
+def embed_one(
+    cfg: EncoderConfig,
+    p: dict,
+    tokens: jax.Array,
+    length: jax.Array,
+    use_kernels: bool = True,
+) -> jax.Array:
+    """tokens: [S] int32, length: [1] int32 -> [out_dim] L2-normalized,
+    mean-centered (see params.py z_mean)."""
+    z = embed_prenorm(cfg, p, tokens, length, use_kernels) - p["z_mean"]
+    return z / jnp.maximum(jnp.linalg.norm(z), 1e-6)
+
+
+def embed_batch(
+    cfg: EncoderConfig,
+    plist: list[jax.Array],
+    names: list[str],
+    tokens: jax.Array,
+    lengths: jax.Array,
+    use_kernels: bool = True,
+) -> jax.Array:
+    """tokens: [B, S] int32, lengths: [B] int32 -> [B, out_dim]."""
+    p = dict(zip(names, plist))
+    outs = [
+        embed_one(cfg, p, tokens[b], lengths[b : b + 1], use_kernels)
+        for b in range(tokens.shape[0])
+    ]
+    return jnp.stack(outs)
+
+
+# ---------------------------------------------------------------------------
+# Decoder (Big / Small LLM)
+# ---------------------------------------------------------------------------
+
+
+def _decoder_layer_prefill(cfg, lp, h, length, use_kernels):
+    rms, mm, attn = _ops(use_kernels)
+    hn = rms(h, lp["ln1_w"])
+    qkv = mm(hn, lp["w_qkv"], lp["b_qkv"])
+    q, k, v = (_split_heads(t, cfg.n_heads) for t in jnp.split(qkv, 3, axis=-1))
+    a = attn(q, k, v, length, causal=True)
+    h = h + mm(_merge_heads(a), lp["w_o"], lp["b_o"])
+    hn = rms(h, lp["ln2_w"])
+    f = mm(mm(hn, lp["w_ff1"], lp["b_ff1"], "gelu"), lp["w_ff2"], lp["b_ff2"])
+    return h + f, k, v
+
+
+def _layer_params(p: dict, layer: int) -> dict:
+    pref = f"l{layer}."
+    return {k[len(pref) :]: v for k, v in p.items() if k.startswith(pref)}
+
+
+def prefill(
+    cfg: DecoderConfig,
+    plist: list[jax.Array],
+    names: list[str],
+    tokens: jax.Array,
+    length: jax.Array,
+    use_kernels: bool = True,
+):
+    """Prompt pass.
+
+    tokens: [max_prefill] int32 (padded), length: [1] int32.
+    Returns (logits [vocab], k_cache [L, H, max_seq, hd], v_cache [...]).
+    The caches hold the prompt K/V in positions [0, length); positions
+    beyond hold pad-token garbage that decode steps overwrite before reading
+    (decode masks attention to positions <= pos).
+    """
+    p = dict(zip(names, plist))
+    rms, mm, _ = _ops(use_kernels)
+    pmax, smax = cfg.max_prefill, cfg.max_seq
+    h = p["tok_emb"][tokens] + p["pos_emb"][:pmax]  # [P, d]
+    k_cache = jnp.zeros((cfg.n_layers, cfg.n_heads, smax, cfg.head_dim), h.dtype)
+    v_cache = jnp.zeros_like(k_cache)
+    for layer in range(cfg.n_layers):
+        h, k, v = _decoder_layer_prefill(
+            cfg, _layer_params(p, layer), h, length, use_kernels
+        )
+        k_cache = k_cache.at[layer, :, :pmax, :].set(k)
+        v_cache = v_cache.at[layer, :, :pmax, :].set(v)
+    hf = rms(h, p["lnf_w"])
+    last = jax.lax.dynamic_slice_in_dim(hf, length[0] - 1, 1, axis=0)  # [1, d]
+    logits = mm(
+        last,
+        p["tok_emb"].T,
+        jnp.zeros((cfg.vocab_size,), h.dtype),
+        block_n=cfg.vocab_size,
+    ) if use_kernels else last @ p["tok_emb"].T
+    return logits.reshape(cfg.vocab_size), k_cache, v_cache
+
+
+def decode_step(
+    cfg: DecoderConfig,
+    plist: list[jax.Array],
+    names: list[str],
+    token: jax.Array,
+    pos: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    use_kernels: bool = True,
+):
+    """One autoregressive step.
+
+    token: [1] int32 (the token at position ``pos``), pos: [1] int32,
+    caches: [L, H, max_seq, hd]. Returns (logits [vocab], k_cache, v_cache)
+    with the new K/V written at ``pos``.
+    """
+    p = dict(zip(names, plist))
+    return _decode_step_p(cfg, p, token, pos, k_cache, v_cache, use_kernels)
+
+
+def _decode_step_p(cfg, p, token, pos, k_cache, v_cache, use_kernels):
+    rms, mm, _ = _ops(use_kernels)
+    h = p["tok_emb"][token] + jax.lax.dynamic_slice_in_dim(
+        p["pos_emb"], pos[0], 1, axis=0
+    )  # [1, d]
+    hd, nh = cfg.head_dim, cfg.n_heads
+    for layer in range(cfg.n_layers):
+        lp = _layer_params(p, layer)
+        hn = rms(h, lp["ln1_w"])
+        qkv = mm(hn, lp["w_qkv"], lp["b_qkv"])  # [1, 3d]
+        q, k, v = (t.reshape(nh, hd) for t in jnp.split(qkv[0], 3))
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[None, :, None, :], (layer, 0, pos[0], 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[None, :, None, :], (layer, 0, pos[0], 0)
+        )
+        if use_kernels:
+            a = kernels.decode_attention(q, k_cache[layer], v_cache[layer], pos)
+        else:
+            a = ref.decode_attention(q, k_cache[layer], v_cache[layer], pos[0])
+        h = h + mm(a.reshape(1, cfg.d_model), lp["w_o"], lp["b_o"])
+        hn = rms(h, lp["ln2_w"])
+        f = mm(mm(hn, lp["w_ff1"], lp["b_ff1"], "gelu"), lp["w_ff2"], lp["b_ff2"])
+        h = h + f
+    hf = rms(h, p["lnf_w"])
+    logits = mm(
+        hf,
+        p["tok_emb"].T,
+        jnp.zeros((cfg.vocab_size,), h.dtype),
+        block_n=cfg.vocab_size,
+    ) if use_kernels else hf @ p["tok_emb"].T
+    return logits.reshape(cfg.vocab_size), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-step decode (§Perf L2): one executable runs SPAN autoregressive
+# steps with in-graph top-k sampling, amortizing the per-call PJRT transfer
+# of the KV caches (the dominant single-step cost on this testbed) by SPAN.
+# ---------------------------------------------------------------------------
+
+SPAN_TOP_K = 40  # static: matches SamplingParams::default() on the Rust side
+
+
+def _sample_topk(logits: jax.Array, u: jax.Array, temperature: jax.Array):
+    """In-graph top-k temperature sampling.
+
+    ``u`` is a uniform [0,1) scalar supplied by the Rust PRNG (keeps runs
+    deterministic and seed-driven from the coordinator). ``temperature`` ~ 0
+    degenerates to argmax (probability mass collapses onto the top logit).
+
+    Implemented as sort + threshold + inverse-CDF over the vocab axis (NOT
+    ``lax.top_k``): the modern ``topk`` HLO op is rejected by xla_extension
+    0.5.1's text parser, while ``sort``/``cumsum`` round-trip fine.
+    """
+    v = logits.shape[0]
+    kth = jnp.sort(logits)[v - SPAN_TOP_K]  # k-th largest as threshold
+    masked = jnp.where(logits >= kth, logits, -1e30)
+    probs = jax.nn.softmax(masked / jnp.maximum(temperature, 1e-4))
+    c = jnp.cumsum(probs)
+    j = jnp.sum((c < u).astype(jnp.int32))
+    return jnp.clip(j, 0, v - 1)
+
+
+def decode_span(
+    cfg: DecoderConfig,
+    plist: list[jax.Array],
+    names: list[str],
+    token: jax.Array,
+    pos: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    u: jax.Array,
+    temperature: jax.Array,
+    use_kernels: bool = True,
+):
+    """Run ``len(u)`` fused decode steps.
+
+    token: [1] int32 (first input token, at position ``pos``); u: [SPAN]
+    float32 uniforms (one per sampled token); temperature: [1] float32.
+    Returns (tokens [SPAN] int32 — the sampled continuation, k_cache,
+    v_cache). The Rust generator truncates at EOS.
+    """
+    p = dict(zip(names, plist))
+    span = u.shape[0]
+    tokens = []
+    tok = token
+    for i in range(span):
+        logits, k_cache, v_cache = _decode_step_p(
+            cfg, p, tok, pos + i, k_cache, v_cache, use_kernels
+        )
+        nxt = _sample_topk(logits, u[i], temperature[0])
+        tokens.append(nxt)
+        tok = nxt[None]
+    return jnp.stack(tokens), k_cache, v_cache

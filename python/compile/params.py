@@ -1,0 +1,231 @@
+"""Deterministic parameter initialization + binary export.
+
+Weights are *runtime arguments* of every compiled artifact (baking ~8M f32
+constants into HLO text would bloat the artifacts past what the XLA text
+parser handles comfortably). This module owns:
+
+  * the canonical *ordered* flattening of each model's parameters -- the
+    order of `param_names()` IS the argument order of the lowered HLO and is
+    recorded in artifacts/manifest.json for the Rust runtime;
+  * deterministic initialization from configs.RNG_SEED, so `make artifacts`
+    is reproducible bit-for-bit;
+  * raw little-endian f32 export (artifacts/weights/<model>.bin).
+
+Initialization scales are chosen so the *embedder* behaves like a sentence
+encoder (bag-of-embeddings dominant; see configs.EncoderConfig) and the
+decoders produce well-conditioned logits for sampling.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .configs import (
+    DecoderConfig,
+    EncoderConfig,
+    FIRST_WORD_ID,
+    RNG_SEED,
+    STOPWORD_SCALE,
+    STOPWORDS,
+    SYNONYM_GROUPS,
+    SYNONYM_TIE,
+)
+
+
+# ---------------------------------------------------------------------------
+# Rust-tokenizer hash mirror (util::rng::hash_bytes + tokenizer::word_id).
+# Needed so the encoder can downweight the embedding rows of function words
+# — the ids are assigned by the Rust tokenizer's hash at runtime.
+# ---------------------------------------------------------------------------
+
+_M64 = (1 << 64) - 1
+
+
+def _splitmix64(state: int) -> int:
+    state = (state + 0x9E3779B97F4A7C15) & _M64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+    return z ^ (z >> 31)
+
+
+def hash_bytes(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & _M64
+    return _splitmix64(h)
+
+
+def word_id(word: str, vocab_size: int) -> int:
+    h = hash_bytes(word.encode())
+    return FIRST_WORD_ID + h % (vocab_size - FIRST_WORD_ID)
+
+
+def _rng(tag: str) -> np.random.Generator:
+    # Stable per-tensor stream: seed derived from the global seed + tag hash.
+    h = np.uint64(1469598103934665603)
+    for b in tag.encode():
+        h = np.uint64((int(h) ^ b) * 1099511628211 % (1 << 64))
+    return np.random.default_rng([RNG_SEED, int(h % (1 << 32))])
+
+
+def _normal(tag: str, shape, scale: float) -> np.ndarray:
+    return (_rng(tag).standard_normal(shape) * scale).astype(np.float32)
+
+
+def _zeros(shape) -> np.ndarray:
+    return np.zeros(shape, np.float32)
+
+
+def _ones(shape) -> np.ndarray:
+    return np.ones(shape, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Encoder (embedder)
+# ---------------------------------------------------------------------------
+
+
+def encoder_param_specs(cfg: EncoderConfig) -> list[tuple[str, tuple[int, ...]]]:
+    d, ff, od = cfg.d_model, cfg.d_ff, cfg.out_dim
+    return [
+        ("tok_emb", (cfg.vocab_size, d)),
+        ("ln1_w", (d,)),
+        ("w_qkv", (d, 3 * d)),
+        ("b_qkv", (3 * d,)),
+        ("w_o", (d, d)),
+        ("b_o", (d,)),
+        ("ln2_w", (d,)),
+        ("w_ff1", (d, ff)),
+        ("b_ff1", (ff,)),
+        ("w_ff2", (ff, d)),
+        ("b_ff2", (d,)),
+        ("w_proj", (d, od)),  # linear branch: preserves cosine structure
+        ("w_nl1", (d, ff)),  # nonlinear branch
+        ("b_nl1", (ff,)),
+        ("w_nl2", (ff, od)),
+        ("b_nl2", (od,)),
+        # Mean-centering vector, computed at AOT time over a probe corpus
+        # and subtracted before normalization. Without it every embedding
+        # shares a large common component (the GELU branch has positive
+        # mean), giving unrelated sentences a cosine floor of ~0.7 — trained
+        # encoders do this centering implicitly. See aot.py.
+        ("z_mean", (od,)),
+    ]
+
+
+def init_encoder(cfg: EncoderConfig) -> dict[str, np.ndarray]:
+    d = cfg.d_model
+    params: dict[str, np.ndarray] = {}
+    for name, shape in encoder_param_specs(cfg):
+        tag = f"enc/{name}"
+        if name == "tok_emb":
+            emb = _normal(tag, shape, 1.0 / np.sqrt(d))
+            # Tie synonym rows toward a shared representative (see configs).
+            a = SYNONYM_TIE
+            b = float(np.sqrt(1.0 - a * a))
+            for group in SYNONYM_GROUPS:
+                rep = _normal(f"enc/syn/{group[0]}", (d,), 1.0 / np.sqrt(d))
+                for w in group:
+                    for token in w.split():  # multi-word synonyms: tie each
+                        wid = word_id(token, cfg.vocab_size)
+                        emb[wid] = a * rep + b * emb[wid]
+            # IDF-style downweighting of function words (see configs).
+            for w in STOPWORDS:
+                emb[word_id(w, cfg.vocab_size)] *= STOPWORD_SCALE
+            params[name] = emb
+        elif name.startswith("ln"):
+            params[name] = _ones(shape)
+        elif name.startswith("b_") or name == "z_mean":
+            params[name] = _zeros(shape)
+        else:
+            fan_in = shape[0]
+            params[name] = _normal(tag, shape, 1.0 / np.sqrt(fan_in))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Decoder (Big / Small LLM)
+# ---------------------------------------------------------------------------
+
+
+def decoder_param_specs(cfg: DecoderConfig) -> list[tuple[str, tuple[int, ...]]]:
+    d, ff = cfg.d_model, cfg.d_ff
+    specs: list[tuple[str, tuple[int, ...]]] = [("tok_emb", (cfg.vocab_size, d))]
+    specs.append(("pos_emb", (cfg.max_seq, d)))
+    for layer in range(cfg.n_layers):
+        p = f"l{layer}."
+        specs += [
+            (p + "ln1_w", (d,)),
+            (p + "w_qkv", (d, 3 * d)),
+            (p + "b_qkv", (3 * d,)),
+            (p + "w_o", (d, d)),
+            (p + "b_o", (d,)),
+            (p + "ln2_w", (d,)),
+            (p + "w_ff1", (d, ff)),
+            (p + "b_ff1", (ff,)),
+            (p + "w_ff2", (ff, d)),
+            (p + "b_ff2", (d,)),
+        ]
+    specs.append(("lnf_w", (d,)))
+    return specs
+
+
+def init_decoder(cfg: DecoderConfig) -> dict[str, np.ndarray]:
+    d = cfg.d_model
+    # Residual-branch outputs scaled down by depth (GPT-2 style) so the
+    # logits stay well-conditioned without training.
+    resid_scale = 1.0 / np.sqrt(2.0 * cfg.n_layers)
+    params: dict[str, np.ndarray] = {}
+    for name, shape in decoder_param_specs(cfg):
+        tag = f"dec/{cfg.name}/{name}"
+        base = name.split(".")[-1]
+        if base == "tok_emb":
+            params[name] = _normal(tag, shape, 0.02 * np.sqrt(d))
+        elif base == "pos_emb":
+            params[name] = _normal(tag, shape, 0.01 * np.sqrt(d))
+        elif base.startswith("ln"):
+            params[name] = _ones(shape)
+        elif base.startswith("b_"):
+            params[name] = _zeros(shape)
+        elif base in ("w_o", "w_ff2"):
+            params[name] = _normal(tag, shape, resid_scale / np.sqrt(shape[0]))
+        else:
+            params[name] = _normal(tag, shape, 1.0 / np.sqrt(shape[0]))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Flatten / export
+# ---------------------------------------------------------------------------
+
+
+def param_names(specs: list[tuple[str, tuple[int, ...]]]) -> list[str]:
+    return [name for name, _ in specs]
+
+
+def flatten(params: dict[str, np.ndarray], specs) -> list[np.ndarray]:
+    """Arguments in manifest order -- MUST match aot.py's lowering order."""
+    return [params[name] for name, _ in specs]
+
+
+def export_weights(params: dict[str, np.ndarray], specs, path: str) -> list[dict]:
+    """Write raw little-endian f32 concatenation; return the tensor index."""
+    index = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, shape in specs:
+            arr = np.ascontiguousarray(params[name], dtype="<f4")
+            assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+            f.write(arr.tobytes())
+            index.append(
+                {
+                    "name": name,
+                    "shape": list(shape),
+                    "offset": offset,
+                    "numel": int(arr.size),
+                }
+            )
+            offset += arr.size * 4
+    return index

@@ -1,0 +1,229 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes (and block sizes, which must never change numerics)
+so a tiling bug that only shows on ragged/odd shapes cannot slip through.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.cosine_topk import cosine_scores, cosine_topk
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.matmul import matmul_bias
+from compile.kernels.rmsnorm import rmsnorm
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([1, 3, 16, 64, 128, 192]),
+    d=st.sampled_from([8, 32, 128, 256]),
+    block=st.sampled_from([16, 64, 128]),
+)
+def test_rmsnorm_matches_ref(rows, d, block):
+    x = _rand(0, (rows, d), 2.0)
+    w = _rand(1, (d,))
+    got = rmsnorm(x, w, block_rows=block)
+    want = ref.rmsnorm(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rmsnorm_scale_invariant_direction():
+    # rmsnorm(c*x) == rmsnorm(x) for c > 0 (up to eps) -- a core invariant.
+    x = _rand(2, (4, 64))
+    w = jnp.ones((64,))
+    a = rmsnorm(x, w)
+    b = rmsnorm(17.0 * x, w)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_rmsnorm_unit_rows():
+    # Output rows have RMS ~= mean(weight applied) when weight == 1.
+    x = _rand(3, (8, 128), 5.0)
+    out = rmsnorm(x, jnp.ones((128,)))
+    rms = jnp.sqrt(jnp.mean(out * out, axis=-1))
+    np.testing.assert_allclose(rms, jnp.ones(8), rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# matmul_bias
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 5, 64, 96]),
+    k=st.sampled_from([16, 128, 384]),
+    n=st.sampled_from([24, 128, 512]),
+    act=st.sampled_from(["none", "gelu"]),
+    bm=st.sampled_from([16, 64]),
+    bn=st.sampled_from([64, 128]),
+)
+def test_matmul_matches_ref(m, k, n, act, bm, bn):
+    x = _rand(0, (m, k))
+    w = _rand(1, (k, n), 1.0 / np.sqrt(k))
+    b = _rand(2, (n,), 0.1)
+    got = matmul_bias(x, w, b, act, block_m=bm, block_n=bn)
+    want = ref.matmul_bias(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_activation():
+    x, w, b = jnp.ones((2, 2)), jnp.ones((2, 2)), jnp.ones((2,))
+    with pytest.raises(ValueError):
+        matmul_bias(x, w, b, "relu6")
+
+
+def test_matmul_zero_bias_identity():
+    x = _rand(4, (8, 16))
+    eye = jnp.eye(16)
+    got = matmul_bias(x, eye, jnp.zeros((16,)))
+    np.testing.assert_allclose(got, x, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# attention (prefill)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.sampled_from([1, 4, 8]),
+    s=st.sampled_from([64, 128, 192]),
+    hd=st.sampled_from([16, 32]),
+    frac=st.floats(0.1, 1.0),
+    causal=st.booleans(),
+    bq=st.sampled_from([32, 64]),
+    bkv=st.sampled_from([32, 64]),
+)
+def test_attention_matches_ref(h, s, hd, frac, causal, bq, bkv):
+    length = max(1, int(s * frac))
+    q = _rand(0, (h, s, hd))
+    k = _rand(1, (h, s, hd))
+    v = _rand(2, (h, s, hd))
+    got = attention(
+        q, k, v, jnp.array([length], jnp.int32), causal=causal,
+        block_q=bq, block_kv=bkv,
+    )
+    want = ref.attention(q, k, v, length, causal=causal)
+    # Only rows < length are defined (padding rows are masked garbage).
+    np.testing.assert_allclose(
+        got[:, :length], want[:, :length], rtol=1e-4, atol=1e-4
+    )
+
+
+def test_attention_is_convex_combination():
+    # Each output row must lie in the convex hull of V rows: bounded by
+    # [min(v), max(v)] per channel.
+    h, s, hd = 2, 64, 32
+    q = _rand(0, (h, s, hd))
+    k = _rand(1, (h, s, hd))
+    v = _rand(2, (h, s, hd))
+    out = attention(q, k, v, jnp.array([s], jnp.int32), causal=False)
+    assert float(out.max()) <= float(v.max()) + 1e-5
+    assert float(out.min()) >= float(v.min()) - 1e-5
+
+
+def test_attention_causal_first_row_is_v0():
+    # With causal masking, the first query position can only attend to k0,
+    # so out[:, 0] == v[:, 0] exactly (softmax over a single logit).
+    h, s, hd = 2, 64, 16
+    q = _rand(3, (h, s, hd))
+    k = _rand(4, (h, s, hd))
+    v = _rand(5, (h, s, hd))
+    out = attention(q, k, v, jnp.array([s], jnp.int32), causal=True)
+    np.testing.assert_allclose(out[:, 0], v[:, 0], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.sampled_from([1, 4, 8]),
+    s=st.sampled_from([64, 256]),
+    hd=st.sampled_from([16, 32]),
+    posfrac=st.floats(0.0, 0.999),
+)
+def test_decode_attention_matches_ref(h, s, hd, posfrac):
+    pos = int(s * posfrac)
+    q = _rand(0, (h, hd))
+    k = _rand(1, (h, s, hd))
+    v = _rand(2, (h, s, hd))
+    got = decode_attention(q, k, v, jnp.array([pos], jnp.int32))
+    want = ref.decode_attention(q, k, v, pos)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_pos0_returns_v0():
+    h, s, hd = 4, 64, 32
+    q = _rand(0, (h, hd))
+    k = _rand(1, (h, s, hd))
+    v = _rand(2, (h, s, hd))
+    out = decode_attention(q, k, v, jnp.array([0], jnp.int32))
+    np.testing.assert_allclose(out, v[:, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_prefill_row():
+    # The decode kernel at pos p must equal the prefill kernel's row p.
+    h, s, hd = 4, 128, 32
+    q = _rand(0, (h, s, hd))
+    k = _rand(1, (h, s, hd))
+    v = _rand(2, (h, s, hd))
+    p = 77
+    full = attention(q, k, v, jnp.array([s], jnp.int32), causal=True)
+    one = decode_attention(q[:, p], k, v, jnp.array([p], jnp.int32))
+    np.testing.assert_allclose(one, full[:, p], rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# cosine scores / top-k
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 7, 512, 1024, 4096]),
+    d=st.sampled_from([64, 384]),
+    block=st.sampled_from([128, 512]),
+)
+def test_cosine_scores_matches_ref(n, d, block):
+    db = _rand(0, (n, d))
+    db = db / jnp.linalg.norm(db, axis=1, keepdims=True)
+    q = db[n // 2]
+    got = cosine_scores(db, q, block_rows=block)
+    want = ref.cosine_scores(db, q)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_cosine_topk_self_match():
+    db = _rand(1, (256, 384))
+    db = db / jnp.linalg.norm(db, axis=1, keepdims=True)
+    scores, idx = cosine_topk(db, db[13], k=4)
+    assert int(idx[0]) == 13
+    np.testing.assert_allclose(float(scores[0]), 1.0, rtol=1e-5)
+
+
+def test_cosine_scores_bounded():
+    db = _rand(2, (128, 64))
+    db = db / jnp.linalg.norm(db, axis=1, keepdims=True)
+    q = db[0]
+    s = cosine_scores(db, q)
+    assert float(s.max()) <= 1.0 + 1e-5 and float(s.min()) >= -1.0 - 1e-5

@@ -1,0 +1,179 @@
+"""L2 correctness: the kernel-backed models vs their pure-jnp twins, plus the
+semantic properties the TweakLLM cache depends on (paraphrase similarity,
+prefill/decode consistency)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, params
+
+ENC = configs.ENCODER
+
+
+@pytest.fixture(scope="module")
+def enc_params():
+    specs = params.encoder_param_specs(ENC)
+    ps = params.init_encoder(ENC)
+    names = params.param_names(specs)
+    return [jnp.asarray(ps[n]) for n in names], names
+
+
+@pytest.fixture(scope="module")
+def small_llm():
+    cfg = configs.SMALL_LLM
+    specs = params.decoder_param_specs(cfg)
+    ps = params.init_decoder(cfg)
+    names = params.param_names(specs)
+    return cfg, [jnp.asarray(ps[n]) for n in names], names
+
+
+def _tok_batch(rows):
+    b = len(rows)
+    toks = np.zeros((b, ENC.max_seq), np.int32)
+    lens = np.zeros((b,), np.int32)
+    for i, row in enumerate(rows):
+        toks[i, : len(row)] = row
+        lens[i] = len(row)
+    return jnp.asarray(toks), jnp.asarray(lens)
+
+
+class TestEmbedder:
+    def test_kernel_matches_oracle(self, enc_params):
+        plist, names = enc_params
+        toks, lens = _tok_batch([[5, 6, 7, 8], [9, 10, 11, 12, 13, 14]])
+        a = model.embed_batch(ENC, plist, names, toks, lens, use_kernels=True)
+        b = model.embed_batch(ENC, plist, names, toks, lens, use_kernels=False)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_unit_norm(self, enc_params):
+        plist, names = enc_params
+        toks, lens = _tok_batch([[5, 6, 7], [100, 200, 300, 400]])
+        e = model.embed_batch(ENC, plist, names, toks, lens)
+        np.testing.assert_allclose(
+            np.linalg.norm(e, axis=1), np.ones(2), rtol=1e-5
+        )
+
+    def test_identical_queries_cosine_one(self, enc_params):
+        plist, names = enc_params
+        toks, lens = _tok_batch([[42, 43, 44, 45]] * 2)
+        e = model.embed_batch(ENC, plist, names, toks, lens)
+        assert float(e[0] @ e[1]) > 0.9999
+
+    def test_paraphrase_closer_than_unrelated(self, enc_params):
+        # The property the whole cache depends on: token-overlapping
+        # paraphrases land closer than disjoint queries.
+        plist, names = enc_params
+        base = [50, 51, 52, 53, 54, 55]
+        paraphrase = [50, 51, 52, 53, 54, 99]  # one token swapped
+        reorder = [55, 50, 51, 52, 53, 54]
+        unrelated = [900, 901, 902, 903, 904, 905]
+        toks, lens = _tok_batch([base, paraphrase, reorder, unrelated])
+        e = model.embed_batch(ENC, plist, names, toks, lens)
+        sim_para = float(e[0] @ e[1])
+        sim_reorder = float(e[0] @ e[2])
+        sim_unrel = float(e[0] @ e[3])
+        assert sim_para > sim_unrel
+        assert sim_reorder > sim_unrel
+        assert sim_para > 0.6
+
+    def test_length_respected(self, enc_params):
+        # Tokens past `length` must not affect the embedding.
+        plist, names = enc_params
+        toks_a, lens = _tok_batch([[5, 6, 7]])
+        toks_b = toks_a.at[0, 3:10].set(777)
+        ea = model.embed_batch(ENC, plist, names, toks_a, lens)
+        eb = model.embed_batch(ENC, plist, names, toks_b, lens)
+        np.testing.assert_allclose(ea, eb, rtol=1e-5, atol=1e-5)
+
+
+class TestDecoder:
+    def _prompt(self, cfg, n, seed=0):
+        rng = np.random.default_rng(seed)
+        toks = np.zeros((cfg.max_prefill,), np.int32)
+        toks[:n] = rng.integers(configs.FIRST_WORD_ID, cfg.vocab_size, n)
+        return jnp.asarray(toks), jnp.asarray([n], jnp.int32)
+
+    def test_prefill_kernel_matches_oracle(self, small_llm):
+        cfg, plist, names = small_llm
+        toks, ln = self._prompt(cfg, 23)
+        lg_k, kc_k, vc_k = model.prefill(cfg, plist, names, toks, ln, True)
+        lg_r, kc_r, vc_r = model.prefill(cfg, plist, names, toks, ln, False)
+        np.testing.assert_allclose(lg_k, lg_r, rtol=2e-3, atol=2e-3)
+        # cache rows < length must agree too (pad rows are garbage)
+        np.testing.assert_allclose(
+            kc_k[:, :, :23], kc_r[:, :, :23], rtol=2e-3, atol=2e-3
+        )
+        np.testing.assert_allclose(
+            vc_k[:, :, :23], vc_r[:, :, :23], rtol=2e-3, atol=2e-3
+        )
+
+    def test_decode_step_matches_oracle(self, small_llm):
+        cfg, plist, names = small_llm
+        toks, ln = self._prompt(cfg, 11)
+        _, kc, vc = model.prefill(cfg, plist, names, toks, ln, True)
+        tok = jnp.asarray([77], jnp.int32)
+        pos = jnp.asarray([11], jnp.int32)
+        lg_k, _, _ = model.decode_step(cfg, plist, names, tok, pos, kc, vc, True)
+        lg_r, _, _ = model.decode_step(cfg, plist, names, tok, pos, kc, vc, False)
+        np.testing.assert_allclose(lg_k, lg_r, rtol=2e-3, atol=2e-3)
+
+    def test_decode_consistent_with_prefill(self, small_llm):
+        # Decoding token t at position L must produce the same logits as
+        # prefilling the (L+1)-length prompt ending in t.
+        cfg, plist, names = small_llm
+        toks, ln = self._prompt(cfg, 9)
+        lg, kc, vc = model.prefill(cfg, plist, names, toks, ln, True)
+        nxt = int(jnp.argmax(lg))
+        lg2, _, _ = model.decode_step(
+            cfg, plist, names,
+            jnp.asarray([nxt], jnp.int32), jnp.asarray([9], jnp.int32),
+            kc, vc, True,
+        )
+        toks2 = toks.at[9].set(nxt)
+        lg_full, _, _ = model.prefill(
+            cfg, plist, names, toks2, jnp.asarray([10], jnp.int32), True
+        )
+        np.testing.assert_allclose(lg2, lg_full, rtol=5e-3, atol=5e-3)
+
+    def test_prefill_ignores_padding(self, small_llm):
+        cfg, plist, names = small_llm
+        toks, ln = self._prompt(cfg, 8)
+        toks_dirty = toks.at[8:20].set(4242)
+        a, _, _ = model.prefill(cfg, plist, names, toks, ln, True)
+        b, _, _ = model.prefill(cfg, plist, names, toks_dirty, ln, True)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_logits_finite_and_varied(self, small_llm):
+        cfg, plist, names = small_llm
+        toks, ln = self._prompt(cfg, 30, seed=3)
+        lg, _, _ = model.prefill(cfg, plist, names, toks, ln, True)
+        assert np.isfinite(np.asarray(lg)).all()
+        assert float(jnp.std(lg)) > 0.1  # not collapsed
+
+
+class TestParams:
+    def test_deterministic_init(self):
+        a = params.init_decoder(configs.SMALL_LLM)
+        b = params.init_decoder(configs.SMALL_LLM)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+    def test_big_small_distinct(self):
+        a = params.init_decoder(configs.SMALL_LLM)
+        b = params.init_decoder(configs.BIG_LLM)
+        assert a["tok_emb"].shape != b["tok_emb"].shape
+
+    def test_export_roundtrip(self, tmp_path):
+        cfg = configs.SMALL_LLM
+        specs = params.decoder_param_specs(cfg)
+        ps = params.init_decoder(cfg)
+        path = str(tmp_path / "w.bin")
+        idx = params.export_weights(ps, specs, path)
+        raw = np.fromfile(path, "<f4")
+        assert raw.size == sum(t["numel"] for t in idx)
+        for t in idx:
+            got = raw[t["offset"] // 4 : t["offset"] // 4 + t["numel"]]
+            np.testing.assert_array_equal(
+                got, ps[t["name"]].reshape(-1)
+            )

@@ -1,0 +1,118 @@
+//! GPTCache-style baseline (Bang, 2023; paper §2, §4.2.1): single-layer
+//! semantic cache that returns cached responses *verbatim* — no tweaking.
+//!
+//! put(): embed + insert. get(): ANN top-k by cosine above the vector-DB
+//! threshold, then re-rank the candidates with a cross-encoder and return
+//! the best match. This is the architecture Fig 2 sweeps.
+
+use anyhow::Result;
+
+use super::rerank::CrossEncoder;
+use crate::cache::{FlatIndex, SearchHit, VectorIndex};
+use crate::runtime::TextEmbedder;
+
+pub struct GptCacheBaseline<'a> {
+    embedder: &'a dyn TextEmbedder,
+    rerank: Box<dyn CrossEncoder>,
+    /// Vector-DB retrieval threshold (the swept knob in Fig 2).
+    pub ann_threshold: f32,
+    /// Candidates fetched before re-ranking.
+    pub top_k: usize,
+    /// Final accept threshold on the cross-encoder score.
+    pub rerank_threshold: f64,
+    index: FlatIndex,
+    queries: Vec<String>,
+    responses: Vec<String>,
+}
+
+/// A returned cache hit.
+#[derive(Clone, Debug)]
+pub struct GptCacheHit {
+    pub id: usize,
+    pub cached_query: String,
+    pub cached_response: String,
+    pub cosine: f32,
+    pub rerank_score: f64,
+}
+
+impl<'a> GptCacheBaseline<'a> {
+    pub fn new(
+        embedder: &'a dyn TextEmbedder,
+        rerank: Box<dyn CrossEncoder>,
+        ann_threshold: f32,
+    ) -> Self {
+        GptCacheBaseline {
+            index: FlatIndex::new(embedder.out_dim()),
+            embedder,
+            rerank,
+            ann_threshold,
+            top_k: 4,
+            rerank_threshold: 0.55,
+            queries: Vec::new(),
+            responses: Vec::new(),
+        }
+    }
+
+    /// put(): store (query, response).
+    pub fn put(&mut self, query: &str, response: &str) -> Result<()> {
+        let e = self.embedder.embed(query)?;
+        self.index.insert(&e);
+        self.queries.push(query.to_string());
+        self.responses.push(response.to_string());
+        Ok(())
+    }
+
+    /// Bulk put with batched embedding.
+    pub fn put_batch(&mut self, pairs: &[(String, String)]) -> Result<()> {
+        let qs: Vec<String> = pairs.iter().map(|(q, _)| q.clone()).collect();
+        let es = self.embedder.embed_batch(&qs)?;
+        for ((q, r), e) in pairs.iter().zip(es) {
+            self.index.insert(&e);
+            self.queries.push(q.clone());
+            self.responses.push(r.clone());
+        }
+        Ok(())
+    }
+
+    /// get(): retrieve the best cached response for `query`, if any
+    /// candidate clears both thresholds.
+    pub fn get(&self, query: &str) -> Result<Option<GptCacheHit>> {
+        let e = self.embedder.embed(query)?;
+        self.get_embedded(query, &e)
+    }
+
+    pub fn get_embedded(&self, query: &str, embedding: &[f32]) -> Result<Option<GptCacheHit>> {
+        let hits: Vec<SearchHit> = self
+            .index
+            .search(embedding, self.top_k)
+            .into_iter()
+            .filter(|h| h.score >= self.ann_threshold)
+            .collect();
+        if hits.is_empty() {
+            return Ok(None);
+        }
+        // Re-rank the candidates with the cross-encoder.
+        let mut best: Option<GptCacheHit> = None;
+        for h in hits {
+            let s = self.rerank.score(query, &self.queries[h.id]);
+            if best.as_ref().map(|b| s > b.rerank_score).unwrap_or(true) {
+                best = Some(GptCacheHit {
+                    id: h.id,
+                    cached_query: self.queries[h.id].clone(),
+                    cached_response: self.responses[h.id].clone(),
+                    cosine: h.score,
+                    rerank_score: s,
+                });
+            }
+        }
+        Ok(best.filter(|b| b.rerank_score >= self.rerank_threshold))
+    }
+
+    pub fn len(&self) -> usize {
+        self.queries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queries.is_empty()
+    }
+}

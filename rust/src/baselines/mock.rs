@@ -1,0 +1,94 @@
+//! Mock language models for unit tests and quality-model-driven evals:
+//! deterministic, artifact-free, and instrumented.
+
+use anyhow::Result;
+
+use crate::cost::TokenUsage;
+use crate::llm::{LanguageModel, LlmResponse, TweakPrompt};
+use crate::tokenizer::Tokenizer;
+
+/// Echo-style mock: responds with a deterministic transform of the prompt;
+/// records every call.
+pub struct MockLlm {
+    name: String,
+    pub respond_calls: Vec<String>,
+    pub tweak_calls: Vec<TweakPrompt>,
+    /// Fixed number of output tokens to report.
+    pub output_tokens: usize,
+}
+
+impl MockLlm {
+    pub fn new(name: &str) -> MockLlm {
+        MockLlm {
+            name: name.to_string(),
+            respond_calls: Vec::new(),
+            tweak_calls: Vec::new(),
+            output_tokens: 16,
+        }
+    }
+}
+
+impl LanguageModel for MockLlm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn respond(&mut self, query: &str) -> Result<LlmResponse> {
+        self.respond_calls.push(query.to_string());
+        let input_tokens = Tokenizer::words(query).len();
+        Ok(LlmResponse {
+            text: format!("[{}-fresh] answer about: {}", self.name, query),
+            usage: TokenUsage { input_tokens, output_tokens: self.output_tokens },
+            prefill_micros: 0,
+            decode_micros: 0,
+        })
+    }
+
+    fn tweak(&mut self, prompt: &TweakPrompt) -> Result<LlmResponse> {
+        self.tweak_calls.push(prompt.clone());
+        let input_tokens = Tokenizer::words(&prompt.new_query).len()
+            + Tokenizer::words(&prompt.cached_query).len()
+            + Tokenizer::words(&prompt.cached_response).len();
+        Ok(LlmResponse {
+            text: format!(
+                "[{}-tweaked] {} (basis: {})",
+                self.name, prompt.new_query, prompt.cached_response
+            ),
+            usage: TokenUsage { input_tokens, output_tokens: self.output_tokens },
+            prefill_micros: 0,
+            decode_micros: 0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_records_calls() {
+        let mut m = MockLlm::new("big");
+        m.respond("q1").unwrap();
+        m.tweak(&TweakPrompt {
+            new_query: "nq".into(),
+            cached_query: "cq".into(),
+            cached_response: "cr".into(),
+        })
+        .unwrap();
+        assert_eq!(m.respond_calls, vec!["q1"]);
+        assert_eq!(m.tweak_calls.len(), 1);
+    }
+
+    #[test]
+    fn usage_counts_all_tweak_segments() {
+        let mut m = MockLlm::new("small");
+        let r = m
+            .tweak(&TweakPrompt {
+                new_query: "one two".into(),
+                cached_query: "three".into(),
+                cached_response: "four five six".into(),
+            })
+            .unwrap();
+        assert_eq!(r.usage.input_tokens, 6);
+    }
+}

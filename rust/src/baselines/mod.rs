@@ -1,0 +1,18 @@
+//! Baselines the paper compares against (or that its evaluation needs):
+//!
+//! * `gptcache` — GPTCache-style verbatim semantic cache with cross-encoder
+//!   re-ranking (Fig 2's subject, and §2's primary related work);
+//! * `rerank` — the two cross-encoder proxies;
+//! * `mock` — deterministic mock LLMs for tests and quality-model evals.
+//!
+//! The "no-cache" baseline (everything served by Big LLM) and the
+//! "small-direct" control (Fig 6) need no machinery: they are the router
+//! with the cache disabled / the Small LLM called directly.
+
+pub mod gptcache;
+pub mod mock;
+pub mod rerank;
+
+pub use gptcache::{GptCacheBaseline, GptCacheHit};
+pub use mock::MockLlm;
+pub use rerank::{AlbertLike, CrossEncoder, DistilRobertaLike};

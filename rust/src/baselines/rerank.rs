@@ -1,0 +1,273 @@
+//! Cross-encoder re-ranker proxies for the GPTCache baseline (§4.2.1 uses
+//! `GPTCache/albert-duplicate-onnx` and
+//! `cross-encoder/quora-distilroberta-base`).
+//!
+//! A cross-encoder reads *both* texts jointly and scores duplicate
+//! likelihood; unlike the bi-encoder embedding it can catch polarity flips
+//! — sometimes. The proxies score lexical-overlap evidence plus an
+//! antonym-flip detector with model-specific reliability, reproducing the
+//! Fig 2 behaviour: re-ranking buys precision at a recall cost, and the two
+//! models trade off slightly differently.
+
+use crate::datasets::vocabulary::{POLARITY, SYNONYMS};
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::hash_bytes;
+
+/// Function/template words a duplicate classifier learns to ignore.
+const STOPWORDS: &[&str] = &[
+    "a", "an", "the", "is", "are", "was", "be", "being", "been", "do", "does",
+    "did", "can", "could", "should", "would", "will", "i", "you", "my", "me",
+    "we", "it", "its", "this", "that", "these", "those", "of", "for", "to",
+    "in", "on", "at", "with", "about", "as", "by", "from", "into", "than",
+    "then", "and", "or", "but", "not", "no", "so", "up", "down", "out", "if",
+    "when", "what", "which", "who", "how", "why", "where", "come", "comes",
+    "make", "makes", "made", "get", "getting", "go", "going", "am", "pick",
+    "place", "start", "new", "other", "most", "more", "any", "some", "just",
+    "really", "please", "hey", "thanks", "advance", "appreciate", "help",
+    "curious", "honest", "serious", "question", "quick", "wondering", "tell",
+    "know", "?", "!", ".", ",",
+    // template furniture (paraphrase-invariant wording a trained duplicate
+    // classifier abstracts over; polarity flips are still caught by the
+    // antonym detector, which reads the raw token sets)
+    "way", "improve", "boost", "increase", "tips", "advice", "suggestions",
+    "best", "ideal", "top", "better", "superior", "explain", "describe",
+    "clarify", "options", "choices", "compared", "beginner", "learn",
+    "understand", "good", "solid", "decent", "bad", "great", "terrible",
+    "helpful", "harmful", "recommended", "discouraged", "effective",
+    "ineffective", "things",
+];
+
+fn is_stopword(w: &str) -> bool {
+    STOPWORDS.contains(&w)
+}
+
+/// Canonicalize a word to its synonym-group representative (what a trained
+/// cross-encoder's representation does implicitly).
+fn canonical(w: &str) -> &str {
+    for group in SYNONYMS {
+        if group.contains(&w) {
+            return group[0];
+        }
+    }
+    w
+}
+
+/// Multi-word synonyms ("how come" == "why") handled at text level.
+fn normalize_text(text: &str) -> Vec<String> {
+    let lowered = text.to_lowercase().replace("how come", "why");
+    Tokenizer::words(&lowered)
+        .into_iter()
+        .map(|w| canonical(&w).to_string())
+        .collect()
+}
+
+/// Content words (canonicalized, stopwords removed).
+fn content_set(text: &str) -> std::collections::BTreeSet<String> {
+    normalize_text(text)
+        .into_iter()
+        .filter(|w| !is_stopword(w))
+        .collect()
+}
+
+/// A scored judgement from a cross-encoder-style duplicate classifier.
+pub trait CrossEncoder: Send {
+    fn name(&self) -> &'static str;
+
+    /// Duplicate likelihood in [0, 1] for (query, candidate).
+    fn score(&self, query: &str, candidate: &str) -> f64;
+}
+
+/// Shared lexical machinery.
+fn word_set(text: &str) -> std::collections::BTreeSet<String> {
+    Tokenizer::words(text).into_iter().collect()
+}
+
+fn jaccard(a: &std::collections::BTreeSet<String>, b: &std::collections::BTreeSet<String>) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let inter = a.intersection(b).count() as f64;
+    let union = a.union(b).count() as f64;
+    inter / union
+}
+
+/// Does the pair contain an antonym flip (e.g. "good" in one, "bad" in the
+/// other)? Returns the flipped pair when present.
+fn antonym_flip(a: &std::collections::BTreeSet<String>, b: &std::collections::BTreeSet<String>) -> bool {
+    for pair in POLARITY {
+        let (p, n) = (pair[0], pair[1]);
+        if (a.contains(p) && b.contains(n)) || (a.contains(n) && b.contains(p)) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Deterministic pseudo-random coin for "does this model notice the flip on
+/// this particular pair" — stable across runs, varies across pairs.
+fn pair_coin(query: &str, candidate: &str, salt: u64) -> f64 {
+    let h = hash_bytes(format!("{query}\u{1}{candidate}\u{1}{salt}").as_bytes());
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Shared scoring core: lexical overlap evidence + content-word mismatch
+/// detection + antonym-flip detection, with model-specific reliabilities.
+/// A trained cross-encoder reads both texts jointly, so unlike the
+/// bi-encoder it can notice "same template, different entity" — sometimes.
+fn cross_encoder_score(
+    query: &str,
+    candidate: &str,
+    overlap_exp: f64,
+    mismatch_detection: f64,
+    mismatch_penalty: f64,
+    flip_detection: f64,
+    jitter: f64,
+    salt: u64,
+) -> f64 {
+    let (a, b) = (word_set(query), word_set(candidate));
+    let (ca, cb) = (content_set(query), content_set(candidate));
+    let mut s = jaccard(&a, &b).powf(overlap_exp);
+
+    // content-word mismatches (entity/attribute swaps): each side's
+    // exclusive content words are evidence of different intent
+    let mismatches = ca.symmetric_difference(&cb).count();
+    for m in 0..mismatches {
+        if pair_coin(query, candidate, salt ^ (m as u64 + 1)) < mismatch_detection {
+            s *= mismatch_penalty;
+        }
+    }
+
+    // antonym polarity flips ("good" vs "bad") — the canonical killer
+    if antonym_flip(&a, &b) && pair_coin(query, candidate, salt ^ 0xF11F) < flip_detection {
+        s *= 0.2;
+    }
+
+    // mild pair-specific jitter (model idiosyncrasy)
+    s * (1.0 - jitter + 2.0 * jitter * pair_coin(query, candidate, salt ^ 0x7777))
+}
+
+/// ALBERT-duplicate-style proxy: strong mismatch/flip detector, slightly
+/// conservative overall.
+pub struct AlbertLike {
+    pub flip_detection_rate: f64,
+    pub mismatch_detection_rate: f64,
+}
+
+impl Default for AlbertLike {
+    fn default() -> Self {
+        AlbertLike { flip_detection_rate: 0.80, mismatch_detection_rate: 0.58 }
+    }
+}
+
+impl CrossEncoder for AlbertLike {
+    fn name(&self) -> &'static str {
+        "albert-duplicate-onnx(proxy)"
+    }
+
+    fn score(&self, query: &str, candidate: &str) -> f64 {
+        cross_encoder_score(
+            query,
+            candidate,
+            0.6,
+            self.mismatch_detection_rate,
+            0.40,
+            self.flip_detection_rate,
+            0.06,
+            0xA1,
+        )
+    }
+}
+
+/// quora-distilroberta-style proxy: more recall-friendly, weaker detectors.
+pub struct DistilRobertaLike {
+    pub flip_detection_rate: f64,
+    pub mismatch_detection_rate: f64,
+}
+
+impl Default for DistilRobertaLike {
+    fn default() -> Self {
+        DistilRobertaLike { flip_detection_rate: 0.68, mismatch_detection_rate: 0.55 }
+    }
+}
+
+impl CrossEncoder for DistilRobertaLike {
+    fn name(&self) -> &'static str {
+        "quora-distilroberta-base(proxy)"
+    }
+
+    fn score(&self, query: &str, candidate: &str) -> f64 {
+        cross_encoder_score(
+            query,
+            candidate,
+            0.45,
+            self.mismatch_detection_rate,
+            0.50,
+            self.flip_detection_rate,
+            0.08,
+            0xD1,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_scores_high() {
+        let ce = AlbertLike::default();
+        let s = ce.score("why is coffee good for health?", "why is coffee good for health?");
+        assert!(s > 0.85, "s={s}");
+    }
+
+    #[test]
+    fn disjoint_scores_low() {
+        let ce = AlbertLike::default();
+        let s = ce.score("why is coffee good?", "draft an email about travel");
+        assert!(s < 0.3, "s={s}");
+    }
+
+    #[test]
+    fn polarity_flip_usually_caught_by_albert() {
+        let ce = AlbertLike::default();
+        // average over many paraphrase pairs so the detection coin averages
+        let mut penalized = 0;
+        for i in 0..100 {
+            let q = format!("why is coffee {i} good for health?");
+            let c = format!("why is coffee {i} bad for health?");
+            let flip = ce.score(&q, &c);
+            let same = ce.score(&q, &q.replace("good", "good"));
+            if flip < same * 0.5 {
+                penalized += 1;
+            }
+        }
+        assert!(penalized >= 65, "penalized={penalized}");
+    }
+
+    #[test]
+    fn distilroberta_weaker_on_flips() {
+        let a = AlbertLike::default();
+        let d = DistilRobertaLike::default();
+        let mut a_caught = 0;
+        let mut d_caught = 0;
+        for i in 0..200 {
+            let q = format!("is running {i} helpful for recovery?");
+            let c = format!("is running {i} harmful for recovery?");
+            if a.score(&q, &c) < 0.4 {
+                a_caught += 1;
+            }
+            if d.score(&q, &c) < 0.4 {
+                d_caught += 1;
+            }
+        }
+        assert!(a_caught > d_caught, "albert={a_caught} distil={d_caught}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let ce = DistilRobertaLike::default();
+        let s1 = ce.score("a b c", "a b d");
+        let s2 = ce.score("a b c", "a b d");
+        assert_eq!(s1, s2);
+    }
+}

@@ -1,0 +1,145 @@
+//! Mini bench harness (criterion is unavailable offline).
+//!
+//! Provides timed measurement with warmup + repetitions and a stable text
+//! report. Each `benches/*.rs` binary (registered with `harness = false`)
+//! uses this to print the rows of one paper table/figure; `cargo bench`
+//! runs them all.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{Embedder, Runtime};
+use crate::util::Summary;
+
+/// Standard bench bootstrap: load the artifact runtime + compiled embedder.
+/// Honors `TWEAKLLM_ARTIFACTS` (defaults to `artifacts/`).
+pub fn load_runtime() -> Result<Runtime> {
+    let dir = std::env::var("TWEAKLLM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Runtime::load(&dir, &[])
+}
+
+/// Load runtime + embedder together (most figure benches only embed).
+pub fn load_embedder() -> Result<(Runtime, Embedder)> {
+    let rt = load_runtime()?;
+    let e = Embedder::new(&rt)?;
+    Ok((rt, e))
+}
+
+/// Bench arg helper: `cargo bench --bench x -- --n 500` style flags, also
+/// tolerating the harness's own flags (e.g. `--bench`).
+pub fn bench_args() -> crate::util::Args {
+    crate::util::Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))
+}
+
+/// Measure a closure: `warmup` untimed runs, then `iters` timed runs.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6); // micros
+    }
+    Summary::of(&samples)
+}
+
+/// Format a measurement row.
+pub fn row(name: &str, s: &Summary) -> String {
+    format!(
+        "{:<40} n={:<5} mean={:>10.1}us p50={:>10.1}us p99={:>10.1}us",
+        name, s.n, s.mean, s.p50, s.p99
+    )
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) -> String {
+    format!("\n=== {title} ===")
+}
+
+/// A simple fixed-width table builder for figure reproduction output.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n## {}\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(
+            &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_runs_and_summarizes() {
+        let mut n = 0u64;
+        let s = measure(2, 10, || {
+            n += 1;
+        });
+        assert_eq!(n, 12);
+        assert_eq!(s.n, 10);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Fig X", &["threshold", "precision", "recall"]);
+        t.push(vec!["0.70".into(), "0.90".into(), "0.85".into()]);
+        t.push(vec!["0.97".into(), "0.97".into(), "0.20".into()]);
+        let r = t.render();
+        assert!(r.contains("Fig X"));
+        assert!(r.contains("0.97"));
+        assert_eq!(r.lines().count(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push(vec!["1".into()]);
+    }
+}

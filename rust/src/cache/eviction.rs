@@ -1,0 +1,220 @@
+//! Cache eviction policies.
+//!
+//! The paper's implementation is append-only (§3.1) and names eviction as
+//! future work (§6.2); we implement the standard family so the ablation
+//! bench (`vector_index`) can compare them under a bounded cache.
+
+use std::collections::HashMap;
+
+/// Which entry to evict when the cache is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Paper default: never evict.
+    None,
+    /// Least-recently-used (hit or insert refreshes recency).
+    Lru,
+    /// Least-frequently-used (hit count; ties broken by recency).
+    Lfu,
+    /// Time-to-live: evict entries older than `ttl_ticks` regardless of use.
+    Ttl,
+    /// First-in-first-out.
+    Fifo,
+}
+
+impl EvictionPolicy {
+    pub fn parse(s: &str) -> Option<EvictionPolicy> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "none" => EvictionPolicy::None,
+            "lru" => EvictionPolicy::Lru,
+            "lfu" => EvictionPolicy::Lfu,
+            "ttl" => EvictionPolicy::Ttl,
+            "fifo" => EvictionPolicy::Fifo,
+            _ => return None,
+        })
+    }
+}
+
+/// Bookkeeping for a bounded cache. The store calls `on_insert` / `on_hit`
+/// with a logical clock tick; `victim()` returns the id to evict.
+#[derive(Debug)]
+pub struct EvictionStrategy {
+    pub policy: EvictionPolicy,
+    pub capacity: usize,
+    pub ttl_ticks: u64,
+    inserted_at: HashMap<usize, u64>,
+    last_used: HashMap<usize, u64>,
+    use_count: HashMap<usize, u64>,
+    live: Vec<usize>,
+}
+
+impl EvictionStrategy {
+    pub fn new(policy: EvictionPolicy, capacity: usize) -> Self {
+        EvictionStrategy {
+            policy,
+            capacity: capacity.max(1),
+            ttl_ticks: u64::MAX,
+            inserted_at: HashMap::new(),
+            last_used: HashMap::new(),
+            use_count: HashMap::new(),
+            live: Vec::new(),
+        }
+    }
+
+    pub fn with_ttl(mut self, ttl_ticks: u64) -> Self {
+        self.ttl_ticks = ttl_ticks;
+        self
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn on_insert(&mut self, id: usize, tick: u64) {
+        self.inserted_at.insert(id, tick);
+        self.last_used.insert(id, tick);
+        self.use_count.insert(id, 0);
+        self.live.push(id);
+    }
+
+    pub fn on_hit(&mut self, id: usize, tick: u64) {
+        self.last_used.insert(id, tick);
+        *self.use_count.entry(id).or_insert(0) += 1;
+    }
+
+    /// True when an insert would exceed capacity (policy != None).
+    pub fn needs_eviction(&self) -> bool {
+        self.policy != EvictionPolicy::None && self.live.len() >= self.capacity
+    }
+
+    /// Entries past TTL at `tick` (only for Ttl policy).
+    pub fn expired(&self, tick: u64) -> Vec<usize> {
+        if self.policy != EvictionPolicy::Ttl {
+            return Vec::new();
+        }
+        self.live
+            .iter()
+            .copied()
+            .filter(|id| {
+                tick.saturating_sub(*self.inserted_at.get(id).unwrap_or(&0))
+                    > self.ttl_ticks
+            })
+            .collect()
+    }
+
+    /// Pick and forget the victim. Returns None when nothing is evictable.
+    pub fn victim(&mut self) -> Option<usize> {
+        if self.live.is_empty() {
+            return None;
+        }
+        let idx = match self.policy {
+            EvictionPolicy::None => return None,
+            EvictionPolicy::Fifo | EvictionPolicy::Ttl => 0, // oldest insert
+            EvictionPolicy::Lru => {
+                let mut best = 0;
+                for (i, id) in self.live.iter().enumerate() {
+                    if self.last_used[id] < self.last_used[&self.live[best]] {
+                        best = i;
+                    }
+                }
+                best
+            }
+            EvictionPolicy::Lfu => {
+                let mut best = 0;
+                for (i, id) in self.live.iter().enumerate() {
+                    let (c, t) = (self.use_count[id], self.last_used[id]);
+                    let (bc, bt) =
+                        (self.use_count[&self.live[best]], self.last_used[&self.live[best]]);
+                    if c < bc || (c == bc && t < bt) {
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        let id = self.live.remove(idx);
+        self.inserted_at.remove(&id);
+        self.last_used.remove(&id);
+        self.use_count.remove(&id);
+        Some(id)
+    }
+
+    pub fn forget(&mut self, id: usize) {
+        self.live.retain(|x| *x != id);
+        self.inserted_at.remove(&id);
+        self.last_used.remove(&id);
+        self.use_count.remove(&id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_policies() {
+        assert_eq!(EvictionPolicy::parse("LRU"), Some(EvictionPolicy::Lru));
+        assert_eq!(EvictionPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn none_never_evicts() {
+        let mut e = EvictionStrategy::new(EvictionPolicy::None, 2);
+        e.on_insert(0, 0);
+        e.on_insert(1, 1);
+        e.on_insert(2, 2);
+        assert!(!e.needs_eviction());
+        assert_eq!(e.victim(), None);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut e = EvictionStrategy::new(EvictionPolicy::Lru, 3);
+        e.on_insert(0, 0);
+        e.on_insert(1, 1);
+        e.on_insert(2, 2);
+        e.on_hit(0, 3); // refresh 0; LRU victim becomes 1
+        assert!(e.needs_eviction());
+        assert_eq!(e.victim(), Some(1));
+    }
+
+    #[test]
+    fn lfu_evicts_least_used() {
+        let mut e = EvictionStrategy::new(EvictionPolicy::Lfu, 3);
+        for id in 0..3 {
+            e.on_insert(id, id as u64);
+        }
+        e.on_hit(0, 5);
+        e.on_hit(0, 6);
+        e.on_hit(2, 7);
+        assert_eq!(e.victim(), Some(1)); // never hit
+    }
+
+    #[test]
+    fn fifo_evicts_oldest() {
+        let mut e = EvictionStrategy::new(EvictionPolicy::Fifo, 2);
+        e.on_insert(7, 0);
+        e.on_insert(8, 1);
+        e.on_hit(7, 2); // FIFO ignores recency
+        assert_eq!(e.victim(), Some(7));
+    }
+
+    #[test]
+    fn ttl_expiry() {
+        let mut e = EvictionStrategy::new(EvictionPolicy::Ttl, 100).with_ttl(10);
+        e.on_insert(0, 0);
+        e.on_insert(1, 5);
+        assert_eq!(e.expired(20), vec![0, 1]);
+        assert_eq!(e.expired(12), vec![0]);
+        assert_eq!(e.expired(5), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn forget_removes() {
+        let mut e = EvictionStrategy::new(EvictionPolicy::Lru, 4);
+        e.on_insert(0, 0);
+        e.on_insert(1, 1);
+        e.forget(0);
+        assert_eq!(e.live_count(), 1);
+        assert_eq!(e.victim(), Some(1));
+    }
+}

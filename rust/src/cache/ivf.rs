@@ -1,0 +1,349 @@
+//! IVF_FLAT index: k-means coarse quantizer + inverted lists + nprobe search.
+//!
+//! This mirrors the index family the paper configures in Milvus (Table 1:
+//! "IVF_FLAT index on embeddings for search acceleration"). Vectors are
+//! assigned to their nearest centroid's inverted list; a query scans only the
+//! `nprobe` nearest lists. The quantizer trains lazily once `train_after`
+//! vectors have arrived and retrains when the store grows by `retrain_factor`
+//! — cheap insurance against drift as the cache fills (the paper's cache is
+//! append-only and distribution-shifting by construction).
+
+use super::{flat::FlatIndex, SearchHit, TopK, VectorIndex};
+use crate::util::Rng;
+
+pub struct IvfFlatIndex {
+    dim: usize,
+    nlist: usize,
+    nprobe: usize,
+    train_after: usize,
+    retrain_factor: f64,
+    seed: u64,
+    // Row-major vector storage (same layout as FLAT; ids are row numbers).
+    data: Vec<f32>,
+    removed: Vec<bool>,
+    // Quantizer state. Empty until trained; until then search falls back to
+    // a brute-force scan (identical results, just slower).
+    centroids: Vec<f32>,
+    lists: Vec<Vec<usize>>,
+    assignments: Vec<u32>,
+    trained_at: usize,
+}
+
+pub const UNASSIGNED: u32 = u32::MAX;
+
+impl IvfFlatIndex {
+    pub fn new(dim: usize, nlist: usize, nprobe: usize) -> Self {
+        assert!(dim > 0 && nlist > 0 && nprobe > 0);
+        IvfFlatIndex {
+            dim,
+            nlist,
+            nprobe: nprobe.min(nlist),
+            train_after: (nlist * 8).max(64),
+            retrain_factor: 4.0,
+            seed: 0x1ff_2025,
+            data: Vec::new(),
+            removed: Vec::new(),
+            centroids: Vec::new(),
+            lists: Vec::new(),
+            assignments: Vec::new(),
+            trained_at: 0,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn nprobe(&self) -> usize {
+        self.nprobe
+    }
+
+    pub fn set_nprobe(&mut self, nprobe: usize) {
+        self.nprobe = nprobe.clamp(1, self.nlist);
+    }
+
+    pub fn is_trained(&self) -> bool {
+        !self.centroids.is_empty()
+    }
+
+    #[inline]
+    fn row(&self, id: usize) -> &[f32] {
+        &self.data[id * self.dim..(id + 1) * self.dim]
+    }
+
+    #[inline]
+    fn centroid(&self, c: usize) -> &[f32] {
+        &self.centroids[c * self.dim..(c + 1) * self.dim]
+    }
+
+    fn nearest_centroid(&self, v: &[f32]) -> usize {
+        let mut best = 0usize;
+        let mut best_score = f32::NEG_INFINITY;
+        for c in 0..self.lists.len() {
+            let s = FlatIndex::dot_unrolled(self.centroid(c), v);
+            if s > best_score {
+                best_score = s;
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Lloyd's k-means (cosine / spherical: centroids renormalized each
+    /// round) over all live vectors. A handful of iterations is plenty for a
+    /// coarse quantizer.
+    fn train(&mut self) {
+        let n = self.removed.len();
+        let live: Vec<usize> = (0..n).filter(|&i| !self.removed[i]).collect();
+        let k = self.nlist.min(live.len().max(1));
+        if live.is_empty() {
+            return;
+        }
+        let mut rng = Rng::new(self.seed ^ n as u64);
+        // k-means++ style seeding lite: random distinct picks.
+        let picks = rng.sample_indices(live.len(), k);
+        let mut centroids = vec![0.0f32; k * self.dim];
+        for (c, &p) in picks.iter().enumerate() {
+            centroids[c * self.dim..(c + 1) * self.dim]
+                .copy_from_slice(self.row(live[p]));
+        }
+        let mut assign = vec![0usize; live.len()];
+        for _iter in 0..6 {
+            // assignment step
+            for (li, &id) in live.iter().enumerate() {
+                let v = self.row(id);
+                let mut best = 0;
+                let mut best_s = f32::NEG_INFINITY;
+                for c in 0..k {
+                    let s = FlatIndex::dot_unrolled(
+                        &centroids[c * self.dim..(c + 1) * self.dim],
+                        v,
+                    );
+                    if s > best_s {
+                        best_s = s;
+                        best = c;
+                    }
+                }
+                assign[li] = best;
+            }
+            // update step
+            let mut sums = vec![0.0f32; k * self.dim];
+            let mut counts = vec![0usize; k];
+            for (li, &id) in live.iter().enumerate() {
+                let c = assign[li];
+                counts[c] += 1;
+                let v = self.row(id);
+                let dst = &mut sums[c * self.dim..(c + 1) * self.dim];
+                for (d, &x) in dst.iter_mut().zip(v) {
+                    *d += x;
+                }
+            }
+            for c in 0..k {
+                if counts[c] == 0 {
+                    // re-seed empty cluster from a random live vector
+                    let id = live[rng.usize(live.len())];
+                    sums[c * self.dim..(c + 1) * self.dim].copy_from_slice(self.row(id));
+                }
+                let cent = &mut sums[c * self.dim..(c + 1) * self.dim];
+                crate::util::normalize(cent);
+            }
+            centroids = sums;
+        }
+        self.centroids = centroids;
+        self.lists = vec![Vec::new(); k];
+        self.assignments = vec![UNASSIGNED; n];
+        for (li, &id) in live.iter().enumerate() {
+            self.lists[assign[li]].push(id);
+            self.assignments[id] = assign[li] as u32;
+        }
+        self.trained_at = live.len();
+    }
+
+    fn maybe_train(&mut self) {
+        let n_live = self.removed.iter().filter(|r| !**r).count();
+        if !self.is_trained() {
+            if n_live >= self.train_after {
+                self.train();
+            }
+        } else if n_live as f64 >= self.trained_at as f64 * self.retrain_factor {
+            self.train();
+        }
+    }
+
+    fn brute_force(&self, q: &[f32], k: usize) -> Vec<SearchHit> {
+        let mut top = TopK::new(k);
+        for id in 0..self.removed.len() {
+            if !self.removed[id] {
+                top.push(SearchHit { id, score: FlatIndex::dot_unrolled(self.row(id), q) });
+            }
+        }
+        top.into_vec()
+    }
+}
+
+impl VectorIndex for IvfFlatIndex {
+    fn insert(&mut self, v: &[f32]) -> usize {
+        assert_eq!(v.len(), self.dim, "dimension mismatch");
+        let id = self.removed.len();
+        self.data.extend_from_slice(v);
+        self.removed.push(false);
+        if self.is_trained() {
+            let c = self.nearest_centroid(v);
+            self.lists[c].push(id);
+            self.assignments.push(c as u32);
+        } else {
+            self.assignments.push(UNASSIGNED);
+        }
+        self.maybe_train();
+        id
+    }
+
+    fn search(&self, q: &[f32], k: usize) -> Vec<SearchHit> {
+        assert_eq!(q.len(), self.dim, "dimension mismatch");
+        if !self.is_trained() {
+            return self.brute_force(q, k);
+        }
+        // rank centroids, probe the top-nprobe lists
+        let mut cent_scores: Vec<(usize, f32)> = (0..self.lists.len())
+            .map(|c| (c, FlatIndex::dot_unrolled(self.centroid(c), q)))
+            .collect();
+        cent_scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut top = TopK::new(k);
+        for &(c, _) in cent_scores.iter().take(self.nprobe) {
+            for &id in &self.lists[c] {
+                if !self.removed[id] {
+                    top.push(SearchHit {
+                        id,
+                        score: FlatIndex::dot_unrolled(self.row(id), q),
+                    });
+                }
+            }
+        }
+        top.into_vec()
+    }
+
+    fn len(&self) -> usize {
+        self.removed.len()
+    }
+
+    fn remove(&mut self, id: usize) {
+        if id < self.removed.len() {
+            self.removed[id] = true;
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{normalize, Rng};
+
+    fn rand_unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        normalize(&mut v);
+        v
+    }
+
+    /// Clustered data: IVF's bread and butter.
+    fn clustered(rng: &mut Rng, n: usize, dim: usize, n_clusters: usize) -> Vec<Vec<f32>> {
+        let centers: Vec<Vec<f32>> = (0..n_clusters).map(|_| rand_unit(rng, dim)).collect();
+        (0..n)
+            .map(|i| {
+                let c = &centers[i % n_clusters];
+                let mut v: Vec<f32> = c
+                    .iter()
+                    .map(|x| x + 0.25 * rng.normal() as f32)
+                    .collect();
+                normalize(&mut v);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn brute_force_before_training() {
+        let mut idx = IvfFlatIndex::new(32, 16, 4);
+        let mut rng = Rng::new(1);
+        let v = rand_unit(&mut rng, 32);
+        idx.insert(&v);
+        assert!(!idx.is_trained());
+        let hits = idx.search(&v, 1);
+        assert_eq!(hits[0].id, 0);
+    }
+
+    #[test]
+    fn trains_after_threshold_and_high_recall() {
+        let mut idx = IvfFlatIndex::new(32, 8, 3);
+        let mut rng = Rng::new(2);
+        let vs = clustered(&mut rng, 600, 32, 8);
+        for v in &vs {
+            idx.insert(v);
+        }
+        assert!(idx.is_trained());
+        // recall@1 vs brute force on held-out queries near the data
+        let mut hitc = 0;
+        for i in 0..100 {
+            let q = &vs[i * 6 % vs.len()];
+            let ivf = idx.search(q, 1);
+            let bf = idx.brute_force(q, 1);
+            if ivf[0].id == bf[0].id {
+                hitc += 1;
+            }
+        }
+        assert!(hitc >= 90, "recall@1 = {hitc}/100");
+    }
+
+    #[test]
+    fn self_query_after_training() {
+        let mut idx = IvfFlatIndex::new(16, 4, 2);
+        let mut rng = Rng::new(3);
+        let vs = clustered(&mut rng, 300, 16, 4);
+        for v in &vs {
+            idx.insert(v);
+        }
+        // every vector should find itself: it lives in its own nearest list
+        // (nprobe=2 gives slack at cluster borders)
+        let mut ok = 0;
+        for (i, v) in vs.iter().enumerate() {
+            if idx.search(v, 1)[0].id == i {
+                ok += 1;
+            }
+        }
+        assert!(ok as f64 >= vs.len() as f64 * 0.95, "self-recall={ok}/{}", vs.len());
+    }
+
+    #[test]
+    fn removed_excluded_after_training() {
+        let mut idx = IvfFlatIndex::new(16, 4, 4);
+        let mut rng = Rng::new(4);
+        let vs = clustered(&mut rng, 200, 16, 4);
+        for v in &vs {
+            idx.insert(v);
+        }
+        idx.remove(10);
+        let hits = idx.search(&vs[10], 5);
+        assert!(hits.iter().all(|h| h.id != 10));
+    }
+
+    #[test]
+    fn nprobe_full_equals_bruteforce() {
+        let mut idx = IvfFlatIndex::new(24, 6, 6);
+        let mut rng = Rng::new(5);
+        let vs = clustered(&mut rng, 400, 24, 6);
+        for v in &vs {
+            idx.insert(v);
+        }
+        let q = rand_unit(&mut rng, 24);
+        let a = idx.search(&q, 7);
+        let b = idx.brute_force(&q, 7);
+        assert_eq!(
+            a.iter().map(|h| h.id).collect::<Vec<_>>(),
+            b.iter().map(|h| h.id).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,116 @@
+//! Semantic cache substrate: the in-process vector database.
+//!
+//! Stand-in for the paper's Milvus v2.5 deployment (Table 1): stores
+//! `(query_text, query_embedding, response_text)` triples, serves cosine
+//! top-k via a FLAT (exact scan) or IVF_FLAT (k-means coarse quantizer +
+//! nprobe) index, and supports the append-only policy the paper uses plus
+//! the eviction policies its §6.2 lists as future work.
+
+pub mod eviction;
+pub mod flat;
+pub mod ivf;
+pub mod store;
+
+pub use eviction::{EvictionPolicy, EvictionStrategy};
+pub use flat::FlatIndex;
+pub use ivf::IvfFlatIndex;
+pub use store::{CacheEntry, CacheStats, IndexKind, SemanticCache};
+
+/// A scored search result.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SearchHit {
+    /// Position of the entry in the store (stable id).
+    pub id: usize,
+    /// Cosine similarity in [-1, 1] (vectors are L2-normalized on insert).
+    pub score: f32,
+}
+
+/// Common interface over the index families.
+pub trait VectorIndex: Send {
+    /// Insert a normalized vector; returns its id (insertion order).
+    fn insert(&mut self, v: &[f32]) -> usize;
+
+    /// Top-k by cosine similarity. `k >= 1`. Results sorted descending.
+    fn search(&self, q: &[f32], k: usize) -> Vec<SearchHit>;
+
+    /// Number of stored vectors (including tombstoned ones for id stability).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Mark an id as removed (eviction). Removed ids never match again.
+    fn remove(&mut self, id: usize);
+
+    fn dim(&self) -> usize;
+}
+
+/// Maintain a bounded top-k set of hits (small k: linear insertion beats a
+/// heap in practice and allocates once).
+#[derive(Debug)]
+pub struct TopK {
+    k: usize,
+    hits: Vec<SearchHit>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        TopK { k: k.max(1), hits: Vec::with_capacity(k.max(1) + 1) }
+    }
+
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.hits.len() < self.k {
+            f32::NEG_INFINITY
+        } else {
+            self.hits[self.hits.len() - 1].score
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, hit: SearchHit) {
+        if hit.score <= self.threshold() {
+            return;
+        }
+        let pos = self
+            .hits
+            .iter()
+            .position(|h| h.score < hit.score)
+            .unwrap_or(self.hits.len());
+        self.hits.insert(pos, hit);
+        self.hits.truncate(self.k);
+    }
+
+    pub fn into_vec(self) -> Vec<SearchHit> {
+        self.hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_keeps_best_sorted() {
+        let mut t = TopK::new(3);
+        for (i, s) in [0.1, 0.9, 0.5, 0.7, 0.3].iter().enumerate() {
+            t.push(SearchHit { id: i, score: *s });
+        }
+        let v = t.into_vec();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0].id, 1);
+        assert_eq!(v[1].id, 3);
+        assert_eq!(v[2].id, 2);
+    }
+
+    #[test]
+    fn topk_k1() {
+        let mut t = TopK::new(1);
+        t.push(SearchHit { id: 0, score: 0.2 });
+        t.push(SearchHit { id: 1, score: 0.8 });
+        t.push(SearchHit { id: 2, score: 0.5 });
+        let v = t.into_vec();
+        assert_eq!(v, vec![SearchHit { id: 1, score: 0.8 }]);
+    }
+}

@@ -1,0 +1,241 @@
+//! The semantic cache: entries + vector index + exact-match fast path +
+//! eviction. This is the paper's "Vector Database" + "Cache Management"
+//! boxes in Figure 1.
+
+use std::collections::HashMap;
+
+use super::{EvictionPolicy, EvictionStrategy, FlatIndex, IvfFlatIndex, SearchHit, VectorIndex};
+
+/// One cached interaction: the paper stores exactly this triple.
+#[derive(Clone, Debug)]
+pub struct CacheEntry {
+    pub query_text: String,
+    pub response_text: String,
+    /// L2-normalized embedding (kept for re-ranking / debugging; the index
+    /// holds its own copy in scan-friendly layout).
+    pub embedding: Vec<f32>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub inserts: u64,
+    pub lookups: u64,
+    pub exact_hits: u64,
+    pub evictions: u64,
+}
+
+/// Index family selector (Table 1 uses IVF_FLAT; FLAT is the exact baseline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexKind {
+    Flat,
+    IvfFlat { nlist: usize, nprobe: usize },
+}
+
+pub struct SemanticCache {
+    entries: Vec<Option<CacheEntry>>,
+    index: Box<dyn VectorIndex>,
+    /// Exact-match fast path: normalized text -> entry id. §6.1 of the paper:
+    /// "For exact matches (cosine similarity = 1.0), directly returning
+    /// cached responses without tweaking ensures further cost savings".
+    exact: HashMap<u64, usize>,
+    exact_enabled: bool,
+    eviction: EvictionStrategy,
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl SemanticCache {
+    pub fn new(dim: usize, kind: IndexKind) -> Self {
+        let index: Box<dyn VectorIndex> = match kind {
+            IndexKind::Flat => Box::new(FlatIndex::new(dim)),
+            IndexKind::IvfFlat { nlist, nprobe } => {
+                Box::new(IvfFlatIndex::new(dim, nlist, nprobe))
+            }
+        };
+        SemanticCache {
+            entries: Vec::new(),
+            index,
+            exact: HashMap::new(),
+            exact_enabled: true,
+            eviction: EvictionStrategy::new(EvictionPolicy::None, usize::MAX),
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn with_eviction(mut self, policy: EvictionPolicy, capacity: usize) -> Self {
+        self.eviction = EvictionStrategy::new(policy, capacity);
+        self
+    }
+
+    pub fn with_exact_match(mut self, enabled: bool) -> Self {
+        self.exact_enabled = enabled;
+        self
+    }
+
+    fn text_key(text: &str) -> u64 {
+        // Normalize whitespace + case so trivially-reformatted duplicates hit.
+        let norm: String = text.split_whitespace().collect::<Vec<_>>().join(" ");
+        crate::util::rng::hash_bytes(norm.to_lowercase().as_bytes())
+    }
+
+    /// Insert a (query, response, embedding) triple; returns the entry id.
+    pub fn insert(&mut self, query: &str, response: &str, embedding: Vec<f32>) -> usize {
+        self.tick += 1;
+        self.stats.inserts += 1;
+        while self.eviction.needs_eviction() {
+            if let Some(victim) = self.eviction.victim() {
+                self.index.remove(victim);
+                if let Some(e) = self.entries[victim].take() {
+                    self.exact.remove(&Self::text_key(&e.query_text));
+                }
+                self.stats.evictions += 1;
+            } else {
+                break;
+            }
+        }
+        let id = self.index.insert(&embedding);
+        debug_assert_eq!(id, self.entries.len());
+        self.entries.push(Some(CacheEntry {
+            query_text: query.to_string(),
+            response_text: response.to_string(),
+            embedding,
+        }));
+        if self.exact_enabled {
+            self.exact.insert(Self::text_key(query), id);
+        }
+        self.eviction.on_insert(id, self.tick);
+        id
+    }
+
+    /// Exact-text fast path (no embedding needed). Returns the entry.
+    pub fn lookup_exact(&mut self, query: &str) -> Option<(usize, &CacheEntry)> {
+        if !self.exact_enabled {
+            return None;
+        }
+        self.tick += 1;
+        let id = *self.exact.get(&Self::text_key(query))?;
+        let e = self.entries[id].as_ref()?;
+        self.stats.exact_hits += 1;
+        self.eviction.on_hit(id, self.tick);
+        Some((id, e))
+    }
+
+    /// ANN lookup: top-k entries by cosine similarity.
+    pub fn search(&mut self, embedding: &[f32], k: usize) -> Vec<SearchHit> {
+        self.tick += 1;
+        self.stats.lookups += 1;
+        self.index.search(embedding, k)
+    }
+
+    /// Record that a search hit was *used* (feeds LRU/LFU).
+    pub fn touch(&mut self, id: usize) {
+        self.tick += 1;
+        self.eviction.on_hit(id, self.tick);
+    }
+
+    pub fn entry(&self, id: usize) -> Option<&CacheEntry> {
+        self.entries.get(id).and_then(|e| e.as_ref())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.iter().filter(|e| e.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn dim(&self) -> usize {
+        self.index.dim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{normalize, Rng};
+
+    fn unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        normalize(&mut v);
+        v
+    }
+
+    #[test]
+    fn insert_search_roundtrip() {
+        let mut c = SemanticCache::new(16, IndexKind::Flat);
+        let mut rng = Rng::new(1);
+        let e = unit(&mut rng, 16);
+        let id = c.insert("why is the sky blue?", "rayleigh scattering", e.clone());
+        let hits = c.search(&e, 1);
+        assert_eq!(hits[0].id, id);
+        assert!(hits[0].score > 0.999);
+        assert_eq!(c.entry(id).unwrap().response_text, "rayleigh scattering");
+    }
+
+    #[test]
+    fn exact_fast_path_normalizes() {
+        let mut c = SemanticCache::new(8, IndexKind::Flat);
+        let mut rng = Rng::new(2);
+        c.insert("Why is the sky   blue?", "resp", unit(&mut rng, 8));
+        assert!(c.lookup_exact("why is the sky blue?").is_some());
+        assert!(c.lookup_exact("why is the sea blue?").is_none());
+        assert_eq!(c.stats().exact_hits, 1);
+    }
+
+    #[test]
+    fn exact_path_can_be_disabled() {
+        let mut c = SemanticCache::new(8, IndexKind::Flat).with_exact_match(false);
+        let mut rng = Rng::new(3);
+        c.insert("q", "r", unit(&mut rng, 8));
+        assert!(c.lookup_exact("q").is_none());
+    }
+
+    #[test]
+    fn bounded_lru_evicts() {
+        let mut c = SemanticCache::new(8, IndexKind::Flat)
+            .with_eviction(EvictionPolicy::Lru, 3);
+        let mut rng = Rng::new(4);
+        let vs: Vec<_> = (0..4).map(|_| unit(&mut rng, 8)).collect();
+        for (i, v) in vs.iter().enumerate() {
+            c.insert(&format!("q{i}"), "r", v.clone());
+        }
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.stats().evictions, 1);
+        // q0 was evicted: exact lookup gone, index won't return it
+        assert!(c.lookup_exact("q0").is_none());
+        let hits = c.search(&vs[0], 4);
+        assert!(hits.iter().all(|h| h.id != 0));
+    }
+
+    #[test]
+    fn ivf_backend_works() {
+        let mut c = SemanticCache::new(
+            16,
+            IndexKind::IvfFlat { nlist: 4, nprobe: 2 },
+        );
+        let mut rng = Rng::new(5);
+        let vs: Vec<_> = (0..200).map(|_| unit(&mut rng, 16)).collect();
+        for (i, v) in vs.iter().enumerate() {
+            c.insert(&format!("q{i}"), &format!("r{i}"), v.clone());
+        }
+        let hits = c.search(&vs[42], 1);
+        assert_eq!(hits[0].id, 42);
+    }
+
+    #[test]
+    fn append_only_by_default() {
+        let mut c = SemanticCache::new(8, IndexKind::Flat);
+        let mut rng = Rng::new(6);
+        for i in 0..100 {
+            c.insert(&format!("q{i}"), "r", unit(&mut rng, 8));
+        }
+        assert_eq!(c.len(), 100);
+        assert_eq!(c.stats().evictions, 0);
+    }
+}

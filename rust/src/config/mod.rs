@@ -1,0 +1,300 @@
+//! Typed configuration for the whole stack, with a TOML-subset file loader
+//! and CLI overrides. The `paper` preset matches Table 1 of the paper.
+//!
+//! The file format supports the subset of TOML we need: `[section]` headers,
+//! `key = value` with string / number / boolean values, and `#` comments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cache::{EvictionPolicy, IndexKind};
+
+/// Routing + cache + model configuration (Fig 1 + Table 1).
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Cosine similarity threshold for the hit pathway (Table 1: 0.7).
+    pub similarity_threshold: f32,
+    /// Top-k candidates retrieved from the vector DB.
+    pub top_k: usize,
+    /// Exact-match fast path (§6.1): return cached response verbatim when
+    /// the normalized query text is identical.
+    pub exact_match_fast_path: bool,
+    /// Vector index family (Table 1: IVF_FLAT).
+    pub index: IndexConfig,
+    /// Eviction (paper: append-only, i.e. None).
+    pub eviction: EvictionConfig,
+    /// Dynamic batcher.
+    pub batcher: BatcherConfig,
+    /// Generation settings per model role.
+    pub big_llm: GenConfig,
+    pub small_llm: GenConfig,
+    /// Cost model: API price ratio (Table 1: ~25x per output token).
+    pub cost: CostConfig,
+    /// Artifact directory.
+    pub artifact_dir: String,
+    /// Master seed for all deterministic randomness.
+    pub seed: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct IndexConfig {
+    pub kind: IndexKindConfig,
+    pub nlist: usize,
+    pub nprobe: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexKindConfig {
+    Flat,
+    IvfFlat,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EvictionConfig {
+    pub policy: EvictionPolicy,
+    pub capacity: usize,
+    pub ttl_ticks: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Maximum embed micro-batch (must be <= largest compiled variant).
+    pub max_batch: usize,
+    /// Maximum time a request waits for batch-mates.
+    pub max_wait_micros: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct GenConfig {
+    pub temperature: f32,
+    pub top_k: usize,
+    pub max_new_tokens: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CostConfig {
+    /// $ per 1M output tokens for the Big LLM (GPT-4o ballpark).
+    pub big_per_mtok: f64,
+    /// $ per 1M output tokens for the Small LLM (Llama 3.1 8B ballpark;
+    /// 25x cheaper per Table 1).
+    pub small_per_mtok: f64,
+    /// Input tokens priced at this fraction of output tokens.
+    pub input_frac: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config::paper()
+    }
+}
+
+impl Config {
+    /// Table 1 of the paper.
+    pub fn paper() -> Config {
+        Config {
+            similarity_threshold: 0.7,
+            top_k: 1,
+            exact_match_fast_path: false, // paper's implementation: tweak all hits
+            index: IndexConfig {
+                kind: IndexKindConfig::IvfFlat,
+                nlist: 64,
+                nprobe: 8,
+            },
+            eviction: EvictionConfig {
+                policy: EvictionPolicy::None,
+                capacity: usize::MAX,
+                ttl_ticks: u64::MAX,
+            },
+            batcher: BatcherConfig { max_batch: 32, max_wait_micros: 2_000 },
+            big_llm: GenConfig { temperature: 1.0, top_k: 40, max_new_tokens: 48 },
+            small_llm: GenConfig { temperature: 1.0, top_k: 40, max_new_tokens: 48 },
+            cost: CostConfig {
+                // GPT-4o: $10/M output; Llama 3.1 8B: $0.40/M output ≈ 25x.
+                big_per_mtok: 10.0,
+                small_per_mtok: 0.40,
+                input_frac: 0.25,
+            },
+            artifact_dir: "artifacts".to_string(),
+            seed: 20250923,
+        }
+    }
+
+    /// Fast preset for tests: FLAT index, tiny generations.
+    pub fn test() -> Config {
+        let mut c = Config::paper();
+        c.index.kind = IndexKindConfig::Flat;
+        c.big_llm.max_new_tokens = 8;
+        c.small_llm.max_new_tokens = 8;
+        c
+    }
+
+    pub fn index_kind(&self) -> IndexKind {
+        match self.index.kind {
+            IndexKindConfig::Flat => IndexKind::Flat,
+            IndexKindConfig::IvfFlat => IndexKind::IvfFlat {
+                nlist: self.index.nlist,
+                nprobe: self.index.nprobe,
+            },
+        }
+    }
+
+    /// Load from a TOML-subset file and apply on top of the paper preset.
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let kv = parse_toml_subset(&text)?;
+        let mut c = Config::paper();
+        c.apply(&kv)?;
+        Ok(c)
+    }
+
+    /// Apply `section.key -> value` overrides.
+    pub fn apply(&mut self, kv: &BTreeMap<String, String>) -> Result<()> {
+        for (key, val) in kv {
+            self.set(key, val)
+                .with_context(|| format!("config key {key:?} = {val:?}"))?;
+        }
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        let f = || -> Result<f64> { val.parse().map_err(|_| anyhow!("not a number")) };
+        let u = || -> Result<usize> { val.parse().map_err(|_| anyhow!("not an integer")) };
+        let b = || -> Result<bool> { val.parse().map_err(|_| anyhow!("not a bool")) };
+        match key {
+            "router.similarity_threshold" => self.similarity_threshold = f()? as f32,
+            "router.top_k" => self.top_k = u()?,
+            "router.exact_match_fast_path" => self.exact_match_fast_path = b()?,
+            "index.kind" => {
+                self.index.kind = match val {
+                    "flat" => IndexKindConfig::Flat,
+                    "ivf_flat" => IndexKindConfig::IvfFlat,
+                    _ => bail!("unknown index kind (flat|ivf_flat)"),
+                }
+            }
+            "index.nlist" => self.index.nlist = u()?,
+            "index.nprobe" => self.index.nprobe = u()?,
+            "eviction.policy" => {
+                self.eviction.policy = EvictionPolicy::parse(val)
+                    .ok_or_else(|| anyhow!("unknown eviction policy"))?
+            }
+            "eviction.capacity" => self.eviction.capacity = u()?,
+            "eviction.ttl_ticks" => self.eviction.ttl_ticks = u()? as u64,
+            "batcher.max_batch" => self.batcher.max_batch = u()?,
+            "batcher.max_wait_micros" => self.batcher.max_wait_micros = u()? as u64,
+            "big_llm.temperature" => self.big_llm.temperature = f()? as f32,
+            "big_llm.top_k" => self.big_llm.top_k = u()?,
+            "big_llm.max_new_tokens" => self.big_llm.max_new_tokens = u()?,
+            "small_llm.temperature" => self.small_llm.temperature = f()? as f32,
+            "small_llm.top_k" => self.small_llm.top_k = u()?,
+            "small_llm.max_new_tokens" => self.small_llm.max_new_tokens = u()?,
+            "cost.big_per_mtok" => self.cost.big_per_mtok = f()?,
+            "cost.small_per_mtok" => self.cost.small_per_mtok = f()?,
+            "cost.input_frac" => self.cost.input_frac = f()?,
+            "runtime.artifact_dir" => self.artifact_dir = val.to_string(),
+            "runtime.seed" => self.seed = val.parse()?,
+            _ => bail!("unknown config key"),
+        }
+        Ok(())
+    }
+
+    /// Render as Table 1-style rows (for `tweakllm config`).
+    pub fn table(&self) -> Vec<(String, String)> {
+        vec![
+            ("Big LLM".into(), format!("substrate decoder 'big' (temp {}, top-k {}, max {} tok)", self.big_llm.temperature, self.big_llm.top_k, self.big_llm.max_new_tokens)),
+            ("Small LLM".into(), format!("substrate decoder 'small' (temp {}, top-k {}, max {} tok; {:.0}x cheaper/ tok)", self.small_llm.temperature, self.small_llm.top_k, self.small_llm.max_new_tokens, self.cost.big_per_mtok / self.cost.small_per_mtok)),
+            ("Embedding Model".into(), "substrate encoder, 384-dim, L2-normalized".into()),
+            ("Vector Database".into(), match self.index.kind {
+                IndexKindConfig::Flat => "in-process FLAT (exact scan)".into(),
+                IndexKindConfig::IvfFlat => format!("in-process IVF_FLAT (nlist {}, nprobe {})", self.index.nlist, self.index.nprobe),
+            }),
+            ("Similarity Threshold".into(), format!("{}", self.similarity_threshold)),
+            ("Eviction".into(), format!("{:?} (capacity {})", self.eviction.policy, if self.eviction.capacity == usize::MAX { "unbounded".into() } else { self.eviction.capacity.to_string() })),
+        ]
+    }
+}
+
+/// Parse the TOML subset: sections, scalar keys, comments.
+pub fn parse_toml_subset(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(sec) = line.strip_prefix('[') {
+            let sec = sec
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: bad section header", lineno + 1))?;
+            section = sec.trim().to_string();
+        } else if let Some((k, v)) = line.split_once('=') {
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let v = v.trim().trim_matches('"').to_string();
+            out.insert(key, v);
+        } else {
+            bail!("line {}: expected key = value", lineno + 1);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_preset_matches_table1() {
+        let c = Config::paper();
+        assert_eq!(c.similarity_threshold, 0.7);
+        assert!((c.cost.big_per_mtok / c.cost.small_per_mtok - 25.0).abs() < 1e-9);
+        assert_eq!(c.index.kind, IndexKindConfig::IvfFlat);
+    }
+
+    #[test]
+    fn toml_subset_parses() {
+        let kv = parse_toml_subset(
+            "# comment\n[router]\nsimilarity_threshold = 0.8\ntop_k = 3\n\n[index]\nkind = \"flat\"\n",
+        )
+        .unwrap();
+        assert_eq!(kv["router.similarity_threshold"], "0.8");
+        assert_eq!(kv["index.kind"], "flat");
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut c = Config::paper();
+        let mut kv = BTreeMap::new();
+        kv.insert("router.similarity_threshold".to_string(), "0.85".to_string());
+        kv.insert("index.kind".to_string(), "flat".to_string());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.similarity_threshold, 0.85);
+        assert_eq!(c.index.kind, IndexKindConfig::Flat);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = Config::paper();
+        assert!(c.set("nope.nope", "1").is_err());
+    }
+
+    #[test]
+    fn bad_section_rejected() {
+        assert!(parse_toml_subset("[oops\nk=v").is_err());
+        assert!(parse_toml_subset("just a line").is_err());
+    }
+
+    #[test]
+    fn table_has_paper_components() {
+        let rows = Config::paper().table();
+        let keys: Vec<_> = rows.iter().map(|(k, _)| k.as_str()).collect();
+        assert!(keys.contains(&"Big LLM"));
+        assert!(keys.contains(&"Vector Database"));
+        assert!(keys.contains(&"Similarity Threshold"));
+    }
+}

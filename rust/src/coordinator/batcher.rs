@@ -1,0 +1,155 @@
+//! Dynamic micro-batcher for the embed stage.
+//!
+//! vLLM-router-style policy: collect requests until either `max_batch` is
+//! reached or the oldest request has waited `max_wait`. The compiled
+//! embedder has batch variants {1, 8, 32}; batching amortizes the per-call
+//! PJRT dispatch overhead across concurrent requests.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::config::BatcherConfig;
+
+/// A queued item: opaque payload + arrival time.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub payload: T,
+    pub arrived: Instant,
+}
+
+#[derive(Debug)]
+pub struct Batcher<T> {
+    queue: VecDeque<Pending<T>>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    batches_emitted: u64,
+    items_emitted: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher {
+            queue: VecDeque::new(),
+            max_batch: cfg.max_batch.max(1),
+            max_wait: Duration::from_micros(cfg.max_wait_micros),
+            batches_emitted: 0,
+            items_emitted: 0,
+        }
+    }
+
+    pub fn push(&mut self, payload: T) {
+        self.queue.push_back(Pending { payload, arrived: Instant::now() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should the current queue be flushed now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        if self.queue.len() >= self.max_batch {
+            return true;
+        }
+        now.duration_since(self.queue.front().unwrap().arrived) >= self.max_wait
+    }
+
+    /// How long until the oldest item times out (None if empty).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|p| {
+            self.max_wait
+                .saturating_sub(now.duration_since(p.arrived))
+        })
+    }
+
+    /// Drain up to `max_batch` items.
+    pub fn drain(&mut self) -> Vec<T> {
+        let n = self.queue.len().min(self.max_batch);
+        let batch: Vec<T> = self.queue.drain(..n).map(|p| p.payload).collect();
+        if !batch.is_empty() {
+            self.batches_emitted += 1;
+            self.items_emitted += batch.len() as u64;
+        }
+        batch
+    }
+
+    /// Mean batch size so far (batching effectiveness metric).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches_emitted == 0 {
+            0.0
+        } else {
+            self.items_emitted as f64 / self.batches_emitted as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, wait_us: u64) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait_micros: wait_us }
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let mut b = Batcher::new(cfg(4, 1_000_000));
+        for i in 0..4 {
+            b.push(i);
+        }
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.drain(), vec![0, 1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn not_ready_below_batch_before_deadline() {
+        let mut b = Batcher::new(cfg(8, 1_000_000));
+        b.push(1);
+        assert!(!b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn ready_after_deadline() {
+        let mut b = Batcher::new(cfg(8, 0));
+        b.push(1);
+        assert!(b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn drain_respects_max_batch() {
+        let mut b = Batcher::new(cfg(3, 0));
+        for i in 0..7 {
+            b.push(i);
+        }
+        assert_eq!(b.drain().len(), 3);
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn mean_batch_size_tracks() {
+        let mut b = Batcher::new(cfg(4, 0));
+        for i in 0..4 {
+            b.push(i);
+        }
+        b.drain();
+        for i in 0..2 {
+            b.push(i);
+        }
+        b.drain();
+        assert!((b.mean_batch_size() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_never_ready() {
+        let b: Batcher<u32> = Batcher::new(cfg(1, 0));
+        assert!(!b.ready(Instant::now()));
+        assert!(b.time_to_deadline(Instant::now()).is_none());
+    }
+}

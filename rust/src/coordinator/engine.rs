@@ -1,0 +1,224 @@
+//! The serving engine: a dedicated thread that owns the `Router` (and with
+//! it the PJRT client) and consumes requests from a channel, batching the
+//! embed stage.
+//!
+//! Leader/worker shape: the engine thread is the single worker for model
+//! compute (the CPU PJRT client serializes execution anyway); front-ends
+//! (TCP server, in-process clients, bench harnesses) are leaders that
+//! submit `Request` messages and block on a rendezvous channel.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::{Batcher, RoutedResponse, Router};
+
+enum Msg {
+    Request {
+        query: String,
+        reply: mpsc::Sender<Result<RoutedResponse>>,
+    },
+    Stats {
+        reply: mpsc::Sender<EngineStats>,
+    },
+    Shutdown,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub requests: u64,
+    pub tweak_hits: u64,
+    pub exact_hits: u64,
+    pub misses: u64,
+    pub cache_size: usize,
+    pub mean_batch_size: f64,
+    pub latency_table: String,
+    pub cost_dollars: f64,
+    pub baseline_dollars: f64,
+}
+
+/// Handle used by front-ends to talk to the engine. Cheap to clone.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl EngineHandle {
+    /// Route one query (blocks until the engine responds).
+    pub fn request(&self, query: &str) -> Result<RoutedResponse> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Request { query: query.to_string(), reply })
+            .map_err(|_| anyhow!("engine is down"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped the request"))?
+    }
+
+    pub fn stats(&self) -> Result<EngineStats> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Stats { reply })
+            .map_err(|_| anyhow!("engine is down"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped the stats request"))
+    }
+}
+
+pub struct Engine {
+    tx: mpsc::Sender<Msg>,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Start the engine thread. The router is *constructed on the engine
+    /// thread* by `factory` because the PJRT handles inside it are not
+    /// `Send`; construction errors are surfaced here synchronously.
+    pub fn start<F>(factory: F) -> Result<(Engine, EngineHandle)>
+    where
+        F: FnOnce() -> Result<Router> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread = thread::Builder::new()
+            .name("tweakllm-engine".into())
+            .spawn(move || {
+                let mut router = match factory() {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut batcher: Batcher<(String, mpsc::Sender<Result<RoutedResponse>>)> =
+                    Batcher::new(router.config.batcher);
+                loop {
+                    // Block for the first message, then drain greedily up to
+                    // the batch deadline.
+                    let first = match rx.recv() {
+                        Ok(m) => m,
+                        Err(_) => break,
+                    };
+                    match first {
+                        Msg::Shutdown => break,
+                        Msg::Stats { reply } => {
+                            let _ = reply.send(Self::collect_stats(&router, &batcher));
+                            continue;
+                        }
+                        Msg::Request { query, reply } => batcher.push((query, reply)),
+                    }
+                    // Greedy drain: accept more requests until ready.
+                    loop {
+                        let now = Instant::now();
+                        if batcher.ready(now) {
+                            break;
+                        }
+                        let timeout = batcher
+                            .time_to_deadline(now)
+                            .unwrap_or_default();
+                        match rx.recv_timeout(timeout) {
+                            Ok(Msg::Request { query, reply }) => {
+                                batcher.push((query, reply))
+                            }
+                            Ok(Msg::Stats { reply }) => {
+                                let _ = reply
+                                    .send(Self::collect_stats(&router, &batcher));
+                            }
+                            Ok(Msg::Shutdown) => {
+                                Self::flush(&mut router, &mut batcher);
+                                return;
+                            }
+                            Err(mpsc::RecvTimeoutError::Timeout) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                Self::flush(&mut router, &mut batcher);
+                                return;
+                            }
+                        }
+                    }
+                    Self::flush(&mut router, &mut batcher);
+                }
+            })
+            .expect("spawn engine thread");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok((Engine { tx: tx.clone(), thread: Some(thread) }, EngineHandle { tx }))
+    }
+
+    /// Embed the whole micro-batch in one artifact call, then route each
+    /// request sequentially (generation is inherently sequential on the
+    /// single PJRT CPU device).
+    fn flush(
+        router: &mut Router,
+        batcher: &mut Batcher<(String, mpsc::Sender<Result<RoutedResponse>>)>,
+    ) {
+        let batch = batcher.drain();
+        if batch.is_empty() {
+            return;
+        }
+        let t_start = Instant::now();
+        // Exact-match fast path first: those don't need embeddings.
+        let mut to_embed: Vec<(String, mpsc::Sender<Result<RoutedResponse>>)> =
+            Vec::with_capacity(batch.len());
+        for (query, reply) in batch {
+            if let Some(resp) = router.try_exact(&query, t_start) {
+                let _ = reply.send(Ok(resp));
+            } else {
+                to_embed.push((query, reply));
+            }
+        }
+        if to_embed.is_empty() {
+            return;
+        }
+        let queries: Vec<String> = to_embed.iter().map(|(q, _)| q.clone()).collect();
+        match router.embedder().embed_batch(&queries) {
+            Ok(embeddings) => {
+                for ((query, reply), emb) in to_embed.into_iter().zip(embeddings) {
+                    let resp = router.handle_embedded(&query, emb, t_start);
+                    let _ = reply.send(resp);
+                }
+            }
+            Err(e) => {
+                let msg = format!("batched embed failed: {e}");
+                for (_, reply) in to_embed {
+                    let _ = reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+
+    fn collect_stats(
+        router: &Router,
+        batcher: &Batcher<(String, mpsc::Sender<Result<RoutedResponse>>)>,
+    ) -> EngineStats {
+        EngineStats {
+            requests: router.counters.get("requests"),
+            tweak_hits: router.counters.get("tweak_hits"),
+            exact_hits: router.counters.get("exact_hits"),
+            misses: router.counters.get("misses"),
+            cache_size: router.cache().len(),
+            mean_batch_size: batcher.mean_batch_size(),
+            latency_table: router.latency.table(),
+            cost_dollars: router.ledger.dollars(&router.config.cost),
+            baseline_dollars: router.ledger.baseline_dollars(&router.config.cost),
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! The TweakLLM router — Figure 1 of the paper.
+//!
+//! Pipeline per query: embed → vector-DB top-k → threshold routing:
+//! * similarity ≥ τ → **hit pathway**: Small LLM tweaks the cached response
+//!   using (new query, cached query, cached response);
+//! * similarity < τ → **miss pathway**: Big LLM generates fresh; the new
+//!   (query, embedding, response) triple is inserted into the cache;
+//! * optional exact-match fast path (§6.1): identical normalized text
+//!   returns the cached response verbatim at zero model cost.
+
+pub mod batcher;
+pub mod engine;
+
+pub use batcher::Batcher;
+pub use engine::{Engine, EngineHandle};
+
+use anyhow::Result;
+
+use crate::cache::SemanticCache;
+use crate::config::Config;
+use crate::cost::{CostLedger, ModelRole, TokenUsage};
+use crate::llm::{LanguageModel, TweakPrompt};
+use crate::metrics::{Counters, LatencyRecorder};
+use crate::runtime::{Embedder, Runtime, SamplingParams, TextEmbedder};
+
+/// Which pathway served a request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Pathway {
+    /// Exact text match — cached response returned verbatim, no model run.
+    ExactHit,
+    /// Semantic hit — Small LLM tweaked the cached response.
+    TweakHit,
+    /// Miss — Big LLM generated fresh (and the cache was updated).
+    Miss,
+}
+
+#[derive(Clone, Debug)]
+pub struct RoutedResponse {
+    pub text: String,
+    pub pathway: Pathway,
+    /// Top-1 cosine similarity (None when the cache was empty).
+    pub similarity: Option<f32>,
+    /// The cached query used as tweak basis (TweakHit/ExactHit).
+    pub cached_query: Option<String>,
+    /// The id of the cache entry used (hits) or inserted (misses).
+    pub cache_entry: Option<usize>,
+    pub usage: TokenUsage,
+    pub total_micros: u128,
+}
+
+/// The router: owns the cache and both models. Single-threaded by design —
+/// the engine wraps it in a dedicated thread (PJRT CPU serializes compute).
+pub struct Router {
+    pub config: Config,
+    embedder: Box<dyn TextEmbedder>,
+    cache: SemanticCache,
+    big: Box<dyn LanguageModel>,
+    small: Box<dyn LanguageModel>,
+    pub ledger: CostLedger,
+    pub latency: LatencyRecorder,
+    pub counters: Counters,
+}
+
+impl Router {
+    /// Build from compiled artifacts (the production path).
+    pub fn from_runtime(rt: &Runtime, config: Config) -> Result<Router> {
+        let embedder: Box<dyn TextEmbedder> = Box::new(Embedder::new(rt)?);
+        let big = Box::new(crate::llm::SubstrateLlm::new(
+            rt,
+            "big",
+            SamplingParams {
+                temperature: config.big_llm.temperature,
+                top_k: config.big_llm.top_k,
+                max_new_tokens: config.big_llm.max_new_tokens,
+            },
+            config.seed,
+        )?);
+        let small = Box::new(crate::llm::SubstrateLlm::new(
+            rt,
+            "small",
+            SamplingParams {
+                temperature: config.small_llm.temperature,
+                top_k: config.small_llm.top_k,
+                max_new_tokens: config.small_llm.max_new_tokens,
+            },
+            config.seed,
+        )?);
+        Ok(Self::with_models(embedder, big, small, config))
+    }
+
+    /// Build with injected models (tests / baselines / quality-model eval).
+    pub fn with_models(
+        embedder: Box<dyn TextEmbedder>,
+        big: Box<dyn LanguageModel>,
+        small: Box<dyn LanguageModel>,
+        config: Config,
+    ) -> Router {
+        let cache = SemanticCache::new(embedder.out_dim(), config.index_kind())
+            .with_eviction(config.eviction.policy, config.eviction.capacity)
+            .with_exact_match(config.exact_match_fast_path);
+        Router {
+            config,
+            embedder,
+            cache,
+            big,
+            small,
+            ledger: CostLedger::default(),
+            latency: LatencyRecorder::new(),
+            counters: Counters::default(),
+        }
+    }
+
+    pub fn cache(&self) -> &SemanticCache {
+        &self.cache
+    }
+
+    pub fn embedder(&self) -> &dyn TextEmbedder {
+        self.embedder.as_ref()
+    }
+
+    /// Pre-populate the cache (dataset warm-up in the eval protocols).
+    pub fn warm(&mut self, pairs: &[(String, String)]) -> Result<()> {
+        let queries: Vec<String> = pairs.iter().map(|(q, _)| q.clone()).collect();
+        let embeddings = self.embedder.embed_batch(&queries)?;
+        for ((q, r), e) in pairs.iter().zip(embeddings) {
+            self.cache.insert(q, r, e);
+        }
+        Ok(())
+    }
+
+    /// Route one query through the Figure-1 pipeline.
+    pub fn handle(&mut self, query: &str) -> Result<RoutedResponse> {
+        let t_start = std::time::Instant::now();
+
+        // 0) exact-match fast path (§6.1)
+        if let Some(resp) = self.try_exact(query, t_start) {
+            return Ok(resp);
+        }
+
+        // 1) embed
+        let t = std::time::Instant::now();
+        let embedding = self.embedder.embed(query)?;
+        self.latency.record_duration("embed", t.elapsed());
+
+        self.handle_embedded(query, embedding, t_start)
+    }
+
+    /// Exact-match fast path; `None` when disabled or no exact entry.
+    pub fn try_exact(
+        &mut self,
+        query: &str,
+        t_start: std::time::Instant,
+    ) -> Option<RoutedResponse> {
+        if !self.config.exact_match_fast_path {
+            return None;
+        }
+        let (id, entry) = self.cache.lookup_exact(query)?;
+        let text = entry.response_text.clone();
+        let cached_query = entry.query_text.clone();
+        self.cache.touch(id);
+        self.ledger.record_free();
+        self.counters.inc("requests");
+        self.counters.inc("exact_hits");
+        self.latency.record("total", t_start.elapsed().as_micros() as f64);
+        Some(RoutedResponse {
+            text,
+            pathway: Pathway::ExactHit,
+            similarity: Some(1.0),
+            cached_query: Some(cached_query),
+            cache_entry: Some(id),
+            usage: TokenUsage::default(),
+            total_micros: t_start.elapsed().as_micros(),
+        })
+    }
+
+    /// Route a query whose embedding was already computed (batched front).
+    pub fn handle_embedded(
+        &mut self,
+        query: &str,
+        embedding: Vec<f32>,
+        t_start: std::time::Instant,
+    ) -> Result<RoutedResponse> {
+        self.counters.inc("requests");
+        // 2) cache lookup
+        let t = std::time::Instant::now();
+        let hits = self.cache.search(&embedding, self.config.top_k);
+        self.latency.record_duration("search", t.elapsed());
+        let top = hits.first().copied();
+
+        // 3) threshold routing
+        let threshold = self.config.similarity_threshold;
+        match top {
+            Some(hit) if hit.score >= threshold => {
+                // ---- hit pathway: tweak via Small LLM ----
+                let entry = self
+                    .cache
+                    .entry(hit.id)
+                    .expect("search returned tombstoned id");
+                let prompt = TweakPrompt {
+                    new_query: query.to_string(),
+                    cached_query: entry.query_text.clone(),
+                    cached_response: entry.response_text.clone(),
+                };
+                let cached_query = entry.query_text.clone();
+                let t = std::time::Instant::now();
+                let resp = self.small.tweak(&prompt)?;
+                self.latency.record_duration("tweak_generate", t.elapsed());
+                self.cache.touch(hit.id);
+                self.ledger.record(ModelRole::Small, resp.usage);
+                self.counters.inc("tweak_hits");
+                self.latency.record("total", t_start.elapsed().as_micros() as f64);
+                Ok(RoutedResponse {
+                    text: resp.text,
+                    pathway: Pathway::TweakHit,
+                    similarity: Some(hit.score),
+                    cached_query: Some(cached_query),
+                    cache_entry: Some(hit.id),
+                    usage: resp.usage,
+                    total_micros: t_start.elapsed().as_micros(),
+                })
+            }
+            top => {
+                // ---- miss pathway: Big LLM + cache update ----
+                let t = std::time::Instant::now();
+                let resp = self.big.respond(query)?;
+                self.latency.record_duration("big_generate", t.elapsed());
+                let t = std::time::Instant::now();
+                let id = self.cache.insert(query, &resp.text, embedding);
+                self.latency.record_duration("cache_insert", t.elapsed());
+                self.ledger.record(ModelRole::Big, resp.usage);
+                self.counters.inc("misses");
+                self.latency.record("total", t_start.elapsed().as_micros() as f64);
+                Ok(RoutedResponse {
+                    text: resp.text,
+                    pathway: Pathway::Miss,
+                    similarity: top.map(|h| h.score),
+                    cached_query: None,
+                    cache_entry: Some(id),
+                    usage: resp.usage,
+                    total_micros: t_start.elapsed().as_micros(),
+                })
+            }
+        }
+    }
+
+    /// Hit rate over the lifetime of this router (tweak + exact hits).
+    pub fn hit_rate(&self) -> f64 {
+        let hits = self.counters.get("tweak_hits") + self.counters.get("exact_hits");
+        let total = self.counters.get("requests");
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Router unit tests use mock models + a mock embedder; they live in
+    // rust/tests/router.rs because Embedder requires compiled artifacts.
+    // Here we test the pure pieces.
+    use super::*;
+
+    #[test]
+    fn pathway_eq() {
+        assert_ne!(Pathway::ExactHit, Pathway::Miss);
+        assert_eq!(Pathway::TweakHit, Pathway::TweakHit);
+    }
+}

@@ -1,0 +1,221 @@
+//! Synthetic conversational traces (the LMSYS-Chat-1M / WildChat-1M
+//! stand-ins, §4.1).
+//!
+//! A trace is a stream of first-turn queries drawn from a Zipf-popular
+//! intent pool: popular intents recur as exact repeats or paraphrases
+//! (cache-hit mass), the long tail is freeform one-offs (cache-miss mass).
+//! Per-corpus profiles set those proportions so the hit-rate-vs-threshold
+//! curves land in the paper's regimes: LMSYS ~68% of queries ≥0.8 cosine
+//! after half-insert, WildChat ~40% (Figs 8–9).
+
+use super::{realize, IntentKey, QueryRecord};
+use crate::datasets::vocabulary::{DOMAINS, FREEFORM};
+use crate::util::{Rng, ZipfSampler};
+
+#[derive(Clone, Copy, Debug)]
+pub struct TraceProfile {
+    pub name: &'static str,
+    /// Size of the recurring-intent pool.
+    pub n_intents: usize,
+    /// Zipf exponent over the pool (higher = heavier head = more repeats).
+    pub zipf_exponent: f64,
+    /// Probability a query is a freeform long-tail one-off.
+    pub frac_freeform: f64,
+    /// Probability a recurring query repeats a previous *exact* wording.
+    pub frac_exact_repeat: f64,
+}
+
+impl TraceProfile {
+    /// LMSYS-like: crowd of users poking at the same popular prompts;
+    /// heavy head, many exact repeats ("numerous identical queries", §6.1).
+    pub fn lmsys() -> TraceProfile {
+        TraceProfile {
+            name: "lmsys_like",
+            n_intents: 5000,
+            zipf_exponent: 1.02,
+            frac_freeform: 0.27,
+            frac_exact_repeat: 0.30,
+        }
+    }
+
+    /// WildChat-like: more diverse, longer tail, fewer repeats.
+    pub fn wildchat() -> TraceProfile {
+        TraceProfile {
+            name: "wildchat_like",
+            n_intents: 22000,
+            zipf_exponent: 0.75,
+            frac_freeform: 0.55,
+            frac_exact_repeat: 0.08,
+        }
+    }
+}
+
+/// A generated trace: ordered queries (first user turns).
+pub struct ChatTrace {
+    pub profile: TraceProfile,
+    pub queries: Vec<QueryRecord>,
+}
+
+impl ChatTrace {
+    pub fn generate(profile: TraceProfile, n_queries: usize, seed: u64) -> ChatTrace {
+        let mut rng = Rng::substream(seed, profile.name);
+        // Build the recurring intent pool.
+        let mut pool: Vec<IntentKey> = Vec::with_capacity(profile.n_intents);
+        for v in 0..profile.n_intents {
+            pool.push(random_trace_intent(&mut rng, v));
+        }
+        let zipf = ZipfSampler::new(pool.len(), profile.zipf_exponent);
+        // Canonical wording per intent (for exact repeats).
+        let canonical: Vec<String> =
+            pool.iter().map(|i| realize(i, &mut rng)).collect();
+
+        let mut queries = Vec::with_capacity(n_queries);
+        let mut freeform_counter: u32 = 0;
+        for _ in 0..n_queries {
+            if rng.chance(profile.frac_freeform) {
+                // long-tail one-off: unique freeform intent
+                freeform_counter += 1;
+                let intent = IntentKey {
+                    domain: rng.usize(DOMAINS.len()) as u16,
+                    entity: rng.usize(8) as u16,
+                    attribute: rng.usize(6) as u16,
+                    polarity: 2,
+                    class: 255,
+                    variant: (freeform_counter % FREEFORM.len() as u32) as u8,
+                };
+                let mut text = realize(&intent, &mut rng);
+                // salt with a unique token so one-offs never collide exactly
+                text = format!(
+                    "{text} {} {} {}",
+                    unique_tag(freeform_counter),
+                    unique_tag(freeform_counter.wrapping_mul(2654435761)),
+                    unique_tag(freeform_counter.wrapping_mul(40503).wrapping_add(7))
+                );
+                queries.push(QueryRecord { text, intent });
+            } else {
+                let idx = zipf.sample(&mut rng);
+                let intent = pool[idx];
+                let text = if rng.chance(profile.frac_exact_repeat) {
+                    canonical[idx].clone()
+                } else {
+                    realize(&intent, &mut rng)
+                };
+                queries.push(QueryRecord { text, intent });
+            }
+        }
+        ChatTrace { profile, queries }
+    }
+
+    /// Split into (inserted half, queried half) per §4.2.3.
+    pub fn halves(&self) -> (&[QueryRecord], &[QueryRecord]) {
+        let mid = self.queries.len() / 2;
+        (&self.queries[..mid], &self.queries[mid..])
+    }
+
+    pub fn len(&self) -> usize {
+        self.queries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queries.is_empty()
+    }
+}
+
+fn random_trace_intent(rng: &mut Rng, variant: usize) -> IntentKey {
+    let domain = rng.usize(DOMAINS.len()) as u16;
+    let d = &DOMAINS[domain as usize];
+    let class = rng.usize(5) as u8;
+    IntentKey {
+        domain,
+        entity: rng.usize(d.entities.len()) as u16,
+        attribute: rng.usize(d.attributes.len()) as u16,
+        polarity: if class == 0 { rng.usize(2) as u8 } else { 2 },
+        class,
+        variant: (variant % 251) as u8,
+    }
+}
+
+fn unique_tag(counter: u32) -> String {
+    // Deterministic unique word outside the synonym/filler vocabulary.
+    format!("ref{counter}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn generates_requested_size() {
+        let t = ChatTrace::generate(TraceProfile::lmsys(), 1000, 1);
+        assert_eq!(t.len(), 1000);
+    }
+
+    #[test]
+    fn lmsys_has_more_exact_repeats_than_wildchat() {
+        let count_exact = |t: &ChatTrace| {
+            let mut seen: HashMap<&str, usize> = HashMap::new();
+            let mut repeats = 0;
+            for q in &t.queries {
+                let c = seen.entry(q.text.as_str()).or_insert(0);
+                if *c > 0 {
+                    repeats += 1;
+                }
+                *c += 1;
+            }
+            repeats
+        };
+        let l = ChatTrace::generate(TraceProfile::lmsys(), 4000, 2);
+        let w = ChatTrace::generate(TraceProfile::wildchat(), 4000, 2);
+        assert!(
+            count_exact(&l) > count_exact(&w) * 2,
+            "lmsys={} wildchat={}",
+            count_exact(&l),
+            count_exact(&w)
+        );
+    }
+
+    #[test]
+    fn freeform_oneoffs_are_unique_text() {
+        let t = ChatTrace::generate(TraceProfile::wildchat(), 2000, 3);
+        let freeform: Vec<&str> = t
+            .queries
+            .iter()
+            .filter(|q| q.intent.class == 255)
+            .map(|q| q.text.as_str())
+            .collect();
+        let mut dedup = freeform.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(freeform.len(), dedup.len());
+        assert!(freeform.len() > 400);
+    }
+
+    #[test]
+    fn popular_intents_recur_across_halves() {
+        let t = ChatTrace::generate(TraceProfile::lmsys(), 12_000, 4);
+        let (first, second) = t.halves();
+        let first_intents: std::collections::HashSet<_> =
+            first.iter().map(|q| q.intent).collect();
+        let recur = second
+            .iter()
+            .filter(|q| first_intents.contains(&q.intent))
+            .count();
+        // a solid share of second-half queries must have intent mass in the
+        // first half — that's the cache-hit opportunity (Fig 8 regime)
+        assert!(
+            recur as f64 > second.len() as f64 * 0.4,
+            "recur={recur}/{}",
+            second.len()
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = ChatTrace::generate(TraceProfile::lmsys(), 100, 9);
+        let b = ChatTrace::generate(TraceProfile::lmsys(), 100, 9);
+        for (x, y) in a.queries.iter().zip(&b.queries) {
+            assert_eq!(x.text, y.text);
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Synthetic dataset substrates.
+//!
+//! The paper evaluates on Quora Question Pairs, LMSYS-Chat-1M and
+//! WildChat-1M — all gated behind downloads we don't have offline. These
+//! generators produce the closest synthetic equivalents (DESIGN.md
+//! "Substitutions"): intent-grid question pairs with construction-time
+//! duplicate labels, and Zipf-popularity chat traces with per-corpus
+//! duplicate profiles.
+
+pub mod chat_traces;
+pub mod question_pairs;
+pub mod vocabulary;
+
+pub use chat_traces::{ChatTrace, TraceProfile};
+pub use question_pairs::{LabeledPair, QuestionPairDataset};
+
+use crate::util::Rng;
+use vocabulary::{DOMAINS, POLARITY, PREFIX_FILLERS, SUFFIX_FILLERS, SYNONYMS, TEMPLATES};
+
+/// Ground-truth intent of a generated query. Two queries are *duplicates*
+/// iff their intents are equal (facet-for-facet).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct IntentKey {
+    pub domain: u16,
+    pub entity: u16,
+    pub attribute: u16,
+    /// 0 = positive, 1 = negative, 2 = neutral (non-polar templates).
+    pub polarity: u8,
+    /// Template class (see vocabulary::Template::class); 255 = freeform.
+    pub class: u8,
+    /// Distinguishes freeform intents sharing a grid cell.
+    pub variant: u8,
+}
+
+/// A generated query with its ground truth.
+#[derive(Clone, Debug)]
+pub struct QueryRecord {
+    pub text: String,
+    pub intent: IntentKey,
+}
+
+/// Semantic affinity of two intents in [0, 1]: how appropriate a response
+/// for `b` is as a basis for answering `a`. This is the ground truth the
+/// quality model (eval::quality) consumes. The asymmetric cases don't
+/// matter at our granularity, so it's symmetric.
+pub fn intent_affinity(a: &IntentKey, b: &IntentKey) -> f64 {
+    if a == b {
+        return 1.0;
+    }
+    if a.domain != b.domain {
+        return 0.15; // unrelated worlds (still generic-answer salvageable)
+    }
+    // Same domain: start from a base and dock per differing facet.
+    let mut aff: f64 = 0.9;
+    if a.entity != b.entity {
+        // a cached answer about a sibling entity is still a usable basis
+        // (same structure, same domain knowledge) — the tweak rewrites the
+        // subject
+        aff -= 0.22;
+    }
+    if a.attribute != b.attribute {
+        aff -= 0.18;
+    }
+    if a.class != b.class {
+        aff -= 0.10;
+    }
+    if a.polarity != b.polarity && a.polarity != 2 && b.polarity != 2 {
+        // Polarity flip: surface-similar, intent-opposite — the paper's
+        // canonical false-positive ("Why is X good?" vs "Why is X bad?").
+        aff -= 0.45;
+    }
+    if a.variant != b.variant {
+        aff -= 0.10;
+    }
+    aff.clamp(0.02, 1.0)
+}
+
+/// Realize an intent as text. `style` controls the surface variation so
+/// re-realizing the same intent yields a paraphrase, not a copy.
+pub fn realize(intent: &IntentKey, rng: &mut Rng) -> String {
+    let d = &DOMAINS[intent.domain as usize % DOMAINS.len()];
+    let e = d.entities[intent.entity as usize % d.entities.len()];
+    let a = d.attributes[intent.attribute as usize % d.attributes.len()];
+    let base = if intent.class == 255 {
+        let f = vocabulary::FREEFORM
+            [intent.variant as usize % vocabulary::FREEFORM.len()];
+        f.to_string()
+    } else {
+        // Pick a template within the intent's class. Mostly the intent's
+        // canonical wording (duplicate pairs in Quora usually share
+        // substantial phrasing), sometimes a sibling template — that's the
+        // paraphrase diversity.
+        let class_templates: Vec<&vocabulary::Template> = TEMPLATES
+            .iter()
+            .filter(|t| t.class == intent.class)
+            .collect();
+        let canonical = (intent.entity as usize * 7
+            + intent.attribute as usize * 13
+            + intent.domain as usize)
+            % class_templates.len();
+        let idx = if rng.chance(0.3) {
+            rng.usize(class_templates.len())
+        } else {
+            canonical
+        };
+        class_templates[idx].text.to_string()
+    };
+    let p_pair = POLARITY[(intent.entity as usize + intent.attribute as usize) % POLARITY.len()];
+    let p = match intent.polarity {
+        0 => p_pair[0],
+        1 => p_pair[1],
+        _ => "notable",
+    };
+    let mut text = base
+        .replace("{e}", e)
+        .replace("{a}", a)
+        .replace("{p}", p)
+        .replace("{d}", d.name);
+
+    // surface paraphrase transforms
+    if rng.chance(0.35) {
+        text = format!("{} {}", rng.choose(PREFIX_FILLERS), text);
+    }
+    if rng.chance(0.2) {
+        text = format!("{} {}", text.trim_end_matches('?'), rng.choose(SUFFIX_FILLERS));
+    }
+    if rng.chance(0.5) {
+        text = apply_synonyms(&text, rng);
+    }
+    text
+}
+
+/// Word-level synonym substitution (keeps most tokens shared).
+fn apply_synonyms(text: &str, rng: &mut Rng) -> String {
+    let mut words: Vec<String> = text.split(' ').map(|w| w.to_string()).collect();
+    for w in &mut words {
+        for group in SYNONYMS {
+            if group.contains(&w.as_str()) && rng.chance(0.5) {
+                *w = rng.choose(group).to_string();
+                break;
+            }
+        }
+    }
+    words.join(" ")
+}
+
+/// A canonical "ideal" response text for an intent — what the Big LLM
+/// "knows". Deterministic per intent; used as cache content and as the
+/// reference the quality model measures against.
+pub fn ideal_response(intent: &IntentKey) -> String {
+    let d = &DOMAINS[intent.domain as usize % DOMAINS.len()];
+    let e = d.entities[intent.entity as usize % d.entities.len()];
+    let a = d.attributes[intent.attribute as usize % d.attributes.len()];
+    let stance = match intent.polarity {
+        0 => "the upsides dominate",
+        1 => "the downsides dominate",
+        _ => "the evidence is mixed",
+    };
+    format!(
+        "regarding {a} of {e} in {d}: {stance}; key factors include context, \
+consistency, and tradeoffs specific to {e}",
+        d = d.name
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(domain: u16, entity: u16, attribute: u16, polarity: u8, class: u8) -> IntentKey {
+        IntentKey { domain, entity, attribute, polarity, class, variant: 0 }
+    }
+
+    #[test]
+    fn affinity_identity() {
+        let a = key(1, 2, 3, 0, 0);
+        assert_eq!(intent_affinity(&a, &a), 1.0);
+    }
+
+    #[test]
+    fn polarity_flip_destroys_affinity() {
+        let a = key(1, 2, 3, 0, 0);
+        let b = key(1, 2, 3, 1, 0);
+        assert!(intent_affinity(&a, &b) < 0.5);
+    }
+
+    #[test]
+    fn cross_domain_near_zero() {
+        let a = key(0, 2, 3, 0, 0);
+        let b = key(5, 2, 3, 0, 0);
+        assert!(intent_affinity(&a, &b) <= 0.2);
+    }
+
+    #[test]
+    fn affinity_ordering_is_sane() {
+        let base = key(1, 2, 3, 0, 0);
+        let same_diff_class = key(1, 2, 3, 0, 1);
+        let diff_attr = key(1, 2, 4, 0, 0);
+        let diff_entity = key(1, 5, 3, 0, 0);
+        let flipped = key(1, 2, 3, 1, 0);
+        let a1 = intent_affinity(&base, &same_diff_class);
+        let a2 = intent_affinity(&base, &diff_attr);
+        let a3 = intent_affinity(&base, &diff_entity);
+        let a4 = intent_affinity(&base, &flipped);
+        assert!(a1 > a2 && a2 > a4, "{a1} {a2} {a4}");
+        assert!(a1 > a3, "{a1} {a3}");
+    }
+
+    #[test]
+    fn realize_same_intent_shares_tokens() {
+        let mut rng = Rng::new(1);
+        let i = key(0, 1, 2, 0, 0);
+        let a = realize(&i, &mut rng);
+        let b = realize(&i, &mut rng);
+        let wa: std::collections::HashSet<_> = a.split(' ').collect();
+        let wb: std::collections::HashSet<_> = b.split(' ').collect();
+        let shared = wa.intersection(&wb).count();
+        assert!(shared >= 3, "a={a:?} b={b:?}");
+    }
+
+    #[test]
+    fn realize_includes_entity() {
+        let mut rng = Rng::new(2);
+        let i = key(0, 1, 2, 0, 1);
+        let t = realize(&i, &mut rng);
+        assert!(t.contains("rust"), "{t}");
+    }
+
+    #[test]
+    fn ideal_response_is_deterministic() {
+        let i = key(3, 1, 2, 1, 0);
+        assert_eq!(ideal_response(&i), ideal_response(&i));
+        assert!(ideal_response(&i).contains("downsides"));
+    }
+}

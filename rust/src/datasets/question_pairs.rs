@@ -1,0 +1,167 @@
+//! Synthetic Question Pairs dataset (the Quora stand-in, §4.1).
+//!
+//! Each pair carries a construction-time duplicate label:
+//! * **duplicates** — two independent realizations of the SAME intent
+//!   (template swap within class + synonym/filler paraphrasing);
+//! * **hard negatives** — realizations of two intents differing in exactly
+//!   one facet (polarity flip / entity swap / attribute swap): high token
+//!   overlap, different intent — the precision killers of Fig 2;
+//! * **easy negatives** — unrelated intents.
+
+use super::{realize, IntentKey, QueryRecord};
+use crate::datasets::vocabulary::DOMAINS;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct LabeledPair {
+    pub q1: QueryRecord,
+    pub q2: QueryRecord,
+    pub is_duplicate: bool,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct PairProfile {
+    pub frac_duplicates: f64,
+    /// Among negatives, fraction that are hard (single-facet) negatives.
+    pub frac_hard_negatives: f64,
+}
+
+impl Default for PairProfile {
+    fn default() -> Self {
+        // Quora-like: curated to be duplicate-heavy with adversarial
+        // lexical overlap in the negatives.
+        PairProfile { frac_duplicates: 0.5, frac_hard_negatives: 0.75 }
+    }
+}
+
+pub struct QuestionPairDataset {
+    pub pairs: Vec<LabeledPair>,
+}
+
+impl QuestionPairDataset {
+    pub fn generate(n_pairs: usize, seed: u64) -> Self {
+        Self::generate_with(n_pairs, seed, PairProfile::default())
+    }
+
+    pub fn generate_with(n_pairs: usize, seed: u64, profile: PairProfile) -> Self {
+        let mut rng = Rng::substream(seed, "question_pairs");
+        let mut pairs = Vec::with_capacity(n_pairs);
+        for _ in 0..n_pairs {
+            let base = random_intent(&mut rng);
+            let dup = rng.chance(profile.frac_duplicates);
+            let other = if dup {
+                base
+            } else if rng.chance(profile.frac_hard_negatives) {
+                mutate_one_facet(&base, &mut rng)
+            } else {
+                random_intent(&mut rng)
+            };
+            let q1 = QueryRecord { text: realize(&base, &mut rng), intent: base };
+            let q2 = QueryRecord { text: realize(&other, &mut rng), intent: other };
+            pairs.push(LabeledPair { q1, q2, is_duplicate: dup });
+        }
+        QuestionPairDataset { pairs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+}
+
+pub fn random_intent(rng: &mut Rng) -> IntentKey {
+    let domain = rng.usize(DOMAINS.len()) as u16;
+    let d = &DOMAINS[domain as usize];
+    let class = rng.usize(5) as u8;
+    IntentKey {
+        domain,
+        entity: rng.usize(d.entities.len()) as u16,
+        attribute: rng.usize(d.attributes.len()) as u16,
+        // class 0 templates are polar; the rest neutral
+        polarity: if class == 0 { rng.usize(2) as u8 } else { 2 },
+        class,
+        variant: 0,
+    }
+}
+
+/// Flip exactly one facet → a hard negative sharing most surface tokens.
+pub fn mutate_one_facet(base: &IntentKey, rng: &mut Rng) -> IntentKey {
+    let d = &DOMAINS[base.domain as usize];
+    let mut m = *base;
+    // Prefer the polarity flip when available (the paper's canonical case).
+    let choice = if base.polarity != 2 { rng.usize(3) } else { 1 + rng.usize(2) };
+    match choice {
+        0 => m.polarity = 1 - base.polarity,
+        1 => {
+            m.entity = ((base.entity as usize + 1 + rng.usize(d.entities.len() - 1))
+                % d.entities.len()) as u16
+        }
+        _ => {
+            m.attribute = ((base.attribute as usize
+                + 1
+                + rng.usize(d.attributes.len() - 1))
+                % d.attributes.len()) as u16
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::intent_affinity;
+
+    #[test]
+    fn generates_requested_count() {
+        let ds = QuestionPairDataset::generate(100, 7);
+        assert_eq!(ds.len(), 100);
+    }
+
+    #[test]
+    fn labels_match_intents() {
+        let ds = QuestionPairDataset::generate(500, 1);
+        for p in &ds.pairs {
+            assert_eq!(p.is_duplicate, p.q1.intent == p.q2.intent);
+        }
+    }
+
+    #[test]
+    fn duplicate_fraction_close_to_profile() {
+        let ds = QuestionPairDataset::generate(2000, 2);
+        let dups = ds.pairs.iter().filter(|p| p.is_duplicate).count();
+        let frac = dups as f64 / ds.len() as f64;
+        assert!((frac - 0.5).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn hard_negatives_have_moderate_affinity() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let base = random_intent(&mut rng);
+            let hard = mutate_one_facet(&base, &mut rng);
+            assert_ne!(base, hard);
+            let aff = intent_affinity(&base, &hard);
+            assert!(aff < 1.0 && aff > 0.05, "aff={aff}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = QuestionPairDataset::generate(50, 42);
+        let b = QuestionPairDataset::generate(50, 42);
+        for (x, y) in a.pairs.iter().zip(&b.pairs) {
+            assert_eq!(x.q1.text, y.q1.text);
+            assert_eq!(x.is_duplicate, y.is_duplicate);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = QuestionPairDataset::generate(50, 1);
+        let b = QuestionPairDataset::generate(50, 2);
+        assert!(a.pairs.iter().zip(&b.pairs).any(|(x, y)| x.q1.text != y.q1.text));
+    }
+}

@@ -1,0 +1,203 @@
+//! Generation grammar for the synthetic datasets: topic/entity/attribute
+//! grids, question templates, synonym groups, filler phrases, polarity
+//! pairs.
+//!
+//! The grids are the ground truth of the benchmark: two queries realized
+//! from the same (topic, entity, attribute, polarity) intent are duplicates
+//! *by construction* (the stand-in for Quora's human annotations), while
+//! hard negatives flip exactly one facet — reproducing the "similar words,
+//! opposite meaning" failure mode the paper's C1 is about.
+
+/// One topical domain: a name, its entities, and its attributes.
+pub struct Domain {
+    pub name: &'static str,
+    pub entities: &'static [&'static str],
+    pub attributes: &'static [&'static str],
+}
+
+pub const DOMAINS: &[Domain] = &[
+    Domain {
+        name: "programming",
+        entities: &["python", "rust", "java", "javascript", "golang", "c++", "haskell", "kotlin", "swift", "ruby"],
+        attributes: &["performance", "safety", "readability", "popularity", "tooling", "concurrency", "portability", "ecosystem"],
+    },
+    Domain {
+        name: "nutrition",
+        entities: &["coffee", "green tea", "red meat", "chocolate", "eggs", "milk", "salt", "sugar", "olive oil", "honey"],
+        attributes: &["health", "energy", "digestion", "heart health", "weight loss", "sleep", "skin", "immunity"],
+    },
+    Domain {
+        name: "finance",
+        entities: &["bitcoin", "gold", "index funds", "real estate", "bonds", "savings accounts", "stocks", "options", "commodities", "etfs"],
+        attributes: &["returns", "risk", "liquidity", "taxes", "inflation protection", "volatility", "fees", "diversification"],
+    },
+    Domain {
+        name: "fitness",
+        entities: &["running", "swimming", "yoga", "weightlifting", "cycling", "pilates", "boxing", "hiking", "rowing", "crossfit"],
+        attributes: &["endurance", "strength", "flexibility", "recovery", "fat loss", "posture", "joint health", "mental health"],
+    },
+    Domain {
+        name: "travel",
+        entities: &["japan", "italy", "iceland", "thailand", "morocco", "peru", "portugal", "vietnam", "turkey", "greece"],
+        attributes: &["food", "cost", "safety", "weather", "culture", "transport", "nightlife", "nature"],
+    },
+    Domain {
+        name: "technology",
+        entities: &["smartphones", "laptops", "electric cars", "smart watches", "drones", "tablets", "vr headsets", "routers", "cameras", "printers"],
+        attributes: &["battery life", "price", "durability", "performance", "privacy", "repairability", "design", "software support"],
+    },
+    Domain {
+        name: "science",
+        entities: &["black holes", "vaccines", "photosynthesis", "dna", "antibiotics", "earthquakes", "neurons", "glaciers", "enzymes", "magnets"],
+        attributes: &["mechanism", "discovery", "measurement", "applications", "limits", "history", "risks", "evolution"],
+    },
+    Domain {
+        name: "cooking",
+        entities: &["sourdough", "risotto", "ramen", "steak", "curry", "pizza dough", "pancakes", "dumplings", "tacos", "pasta"],
+        attributes: &["texture", "flavor", "timing", "temperature", "ingredients", "technique", "storage", "seasoning"],
+    },
+    Domain {
+        name: "pets",
+        entities: &["golden retrievers", "siamese cats", "parrots", "hamsters", "goldfish", "rabbits", "turtles", "ferrets", "geckos", "huskies"],
+        attributes: &["diet", "training", "grooming", "lifespan", "temperament", "exercise", "health issues", "cost"],
+    },
+    Domain {
+        name: "career",
+        entities: &["data science", "nursing", "teaching", "law", "accounting", "marketing", "plumbing", "architecture", "journalism", "consulting"],
+        attributes: &["salary", "job security", "work life balance", "education requirements", "growth", "stress", "remote options", "demand"],
+    },
+    Domain {
+        name: "history",
+        entities: &["the roman empire", "the silk road", "the renaissance", "the industrial revolution", "ancient egypt", "the cold war", "the vikings", "the ottoman empire", "the maya", "feudal japan"],
+        attributes: &["economy", "decline", "inventions", "daily life", "warfare", "trade", "religion", "legacy"],
+    },
+    Domain {
+        name: "gardening",
+        entities: &["tomatoes", "roses", "succulents", "basil", "orchids", "lavender", "ferns", "peppers", "strawberries", "bonsai"],
+        attributes: &["watering", "sunlight", "soil", "pruning", "pests", "fertilizer", "propagation", "winter care"],
+    },
+];
+
+/// Question templates. `{e}` = entity, `{a}` = attribute, `{p}` = polarity
+/// adjective, `{d}` = domain name. Templates in the same *class* ask the
+/// same thing (swapping them preserves intent).
+pub struct Template {
+    pub text: &'static str,
+    /// Intent class: templates sharing a class are mutual paraphrases.
+    pub class: u8,
+}
+
+pub const TEMPLATES: &[Template] = &[
+    // class 0: polarity-judgement question — the paper's canonical example
+    Template { text: "why is {e} {p} for {a}?", class: 0 },
+    Template { text: "what makes {e} {p} when it comes to {a}?", class: 0 },
+    Template { text: "how come {e} is {p} for {a}?", class: 0 },
+    Template { text: "can you explain why {e} is {p} for {a}?", class: 0 },
+    // class 1: factual explanation
+    Template { text: "how does {a} work for {e}?", class: 1 },
+    Template { text: "explain the {a} of {e}", class: 1 },
+    Template { text: "what should i know about the {a} of {e}?", class: 1 },
+    Template { text: "tell me about {a} and {e}", class: 1 },
+    // class 2: recommendation
+    Template { text: "what is the best way to improve {a} with {e}?", class: 2 },
+    Template { text: "how can i get better {a} using {e}?", class: 2 },
+    Template { text: "any tips on {a} for {e}?", class: 2 },
+    // class 3: comparison-lite (entity vs domain norm)
+    Template { text: "is {e} better than most {d} options for {a}?", class: 3 },
+    Template { text: "compared to other {d} choices, how is {e} for {a}?", class: 3 },
+    // class 4: beginner question
+    Template { text: "i am new to {d}, is {e} a good place to start for {a}?", class: 4 },
+    Template { text: "as a beginner in {d}, should i pick {e} for {a}?", class: 4 },
+];
+
+/// Polarity adjective pairs: index 0 = positive, 1 = negative. Flipping
+/// polarity swaps one word while keeping every other token — the hard
+/// negative GPTCache mis-serves.
+pub const POLARITY: &[[&str; 2]] = &[
+    ["good", "bad"],
+    ["great", "terrible"],
+    ["helpful", "harmful"],
+    ["recommended", "discouraged"],
+    ["effective", "ineffective"],
+];
+
+/// Filler phrases optionally prepended/appended during paraphrasing.
+pub const PREFIX_FILLERS: &[&str] = &[
+    "please",
+    "quick question",
+    "hey",
+    "i was wondering",
+    "honest question",
+    "serious question",
+];
+
+pub const SUFFIX_FILLERS: &[&str] = &[
+    "thanks",
+    "thanks in advance",
+    "appreciate any help",
+    "just curious",
+];
+
+/// Synonym groups applied word-by-word during paraphrasing.
+pub const SYNONYMS: &[&[&str]] = &[
+    &["why", "how come"],
+    &["explain", "describe", "clarify"],
+    &["best", "ideal", "top"],
+    &["improve", "boost", "increase"],
+    &["tips", "advice", "suggestions"],
+    &["good", "solid", "decent"],
+    &["better", "superior"],
+    &["know", "understand", "learn"],
+];
+
+/// Free-form conversational openers for the chat traces (queries that are
+/// NOT grid questions — the long tail real corpora have).
+pub const FREEFORM: &[&str] = &[
+    "write a short poem about {e}",
+    "summarize the main ideas behind {a} in {d}",
+    "draft an email asking my landlord about {e}",
+    "give me a study plan for learning about {e}",
+    "brainstorm names for a blog about {d}",
+    "translate this sentence about {e} into french",
+    "write a product description for {e}",
+    "roleplay as an expert in {d} and critique {e}",
+    "make a checklist for {a} when dealing with {e}",
+    "pretend you are my coach and motivate me about {a}",
+    "list five facts about {e}",
+    "write a tweet about {a} in {d}",
+];
+
+pub fn domain_count() -> usize {
+    DOMAINS.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_are_nonempty_and_rich() {
+        assert!(DOMAINS.len() >= 10);
+        for d in DOMAINS {
+            assert!(d.entities.len() >= 8, "{}", d.name);
+            assert!(d.attributes.len() >= 6, "{}", d.name);
+        }
+        assert!(TEMPLATES.len() >= 12);
+        assert!(FREEFORM.len() >= 10);
+    }
+
+    #[test]
+    fn template_classes_have_paraphrases() {
+        for class in 0..5u8 {
+            let n = TEMPLATES.iter().filter(|t| t.class == class).count();
+            assert!(n >= 2, "class {class} has {n} templates");
+        }
+    }
+
+    #[test]
+    fn polarity_pairs_differ() {
+        for p in POLARITY {
+            assert_ne!(p[0], p[1]);
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Multi-agent LLM-as-evaluator debate (paper §4.2.2 "LLM-as-evaluator
+//! pipeline", Table 2, Appendix B; results Figs 5–7).
+//!
+//! Three personas — Factual Accuracy, User Experience, Relevance &
+//! Completeness — each scores both (blinded) responses through its own
+//! facet weighting plus observation noise, voting A / B / AB. The debate
+//! runs two rounds (ChatEval-style): in round 2 each persona re-scores with
+//! its perception partially pulled toward the round-1 panel consensus
+//! (peer influence), exactly the role the shared "History" plays in the
+//! paper's prompts. The majority verdict wins; ties → AB.
+
+use super::quality::ResponseQuality;
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Verdict {
+    A,
+    B,
+    AB,
+}
+
+/// A debate persona: facet weights + behavioural constants.
+#[derive(Clone, Debug)]
+pub struct Persona {
+    pub name: &'static str,
+    /// Weights over (factual, ux, relevance); sum to 1.
+    pub weights: [f64; 3],
+    /// Score margin below which the persona calls AB.
+    pub tie_margin: f64,
+}
+
+pub fn default_personas() -> Vec<Persona> {
+    vec![
+        Persona {
+            name: "Factual Accuracy Evaluator",
+            weights: [0.70, 0.10, 0.20],
+            tie_margin: 0.045,
+        },
+        Persona {
+            name: "User Experience Evaluator",
+            weights: [0.10, 0.70, 0.20],
+            tie_margin: 0.055,
+        },
+        Persona {
+            name: "Relevance & Completeness Evaluator",
+            weights: [0.15, 0.15, 0.70],
+            tie_margin: 0.045,
+        },
+    ]
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct DebateConfig {
+    /// Observation noise per persona per round.
+    pub noise_std: f64,
+    /// Round-2 pull toward the round-1 panel mean (0 = independent).
+    pub peer_influence: f64,
+    pub rounds: usize,
+}
+
+impl Default for DebateConfig {
+    fn default() -> Self {
+        DebateConfig { noise_std: 0.06, peer_influence: 0.30, rounds: 2 }
+    }
+}
+
+/// Outcome of one debate.
+#[derive(Clone, Debug)]
+pub struct DebateOutcome {
+    pub verdict: Verdict,
+    /// Final-round per-persona verdicts (for the ablation bench).
+    pub persona_verdicts: Vec<Verdict>,
+}
+
+/// Debate one pair: response A vs response B with latent qualities.
+pub fn debate(
+    a: &ResponseQuality,
+    b: &ResponseQuality,
+    personas: &[Persona],
+    cfg: &DebateConfig,
+    rng: &mut Rng,
+) -> DebateOutcome {
+    let facets_a = [a.factual, a.ux, a.relevance];
+    let facets_b = [b.factual, b.ux, b.relevance];
+    // Round 1: independent noisy scoring.
+    let mut diffs: Vec<f64> = personas
+        .iter()
+        .map(|p| {
+            let sa: f64 = p.weights.iter().zip(&facets_a).map(|(w, f)| w * f).sum();
+            let sb: f64 = p.weights.iter().zip(&facets_b).map(|(w, f)| w * f).sum();
+            (sa - sb) + rng.normal_ms(0.0, cfg.noise_std)
+        })
+        .collect();
+
+    for _round in 1..cfg.rounds {
+        // Panel consensus from the previous round.
+        let consensus = diffs.iter().sum::<f64>() / diffs.len() as f64;
+        diffs = personas
+            .iter()
+            .zip(&diffs)
+            .map(|(p, prev)| {
+                let sa: f64 = p.weights.iter().zip(&facets_a).map(|(w, f)| w * f).sum();
+                let sb: f64 = p.weights.iter().zip(&facets_b).map(|(w, f)| w * f).sum();
+                let fresh = (sa - sb) + rng.normal_ms(0.0, cfg.noise_std * 0.8);
+                // The persona "considers other referees' judgements" but is
+                // "not required to output the same value": blend.
+                let blended = (1.0 - cfg.peer_influence) * fresh
+                    + cfg.peer_influence * consensus;
+                // Keep a memory of the persona's own prior view too.
+                0.8 * blended + 0.2 * prev
+            })
+            .collect();
+    }
+
+    let persona_verdicts: Vec<Verdict> = personas
+        .iter()
+        .zip(&diffs)
+        .map(|(p, d)| {
+            if d.abs() < p.tie_margin {
+                Verdict::AB
+            } else if *d > 0.0 {
+                Verdict::A
+            } else {
+                Verdict::B
+            }
+        })
+        .collect();
+
+    DebateOutcome { verdict: majority(&persona_verdicts), persona_verdicts }
+}
+
+/// Majority across persona verdicts; no majority → AB.
+pub fn majority(vs: &[Verdict]) -> Verdict {
+    let count = |v: Verdict| vs.iter().filter(|x| **x == v).count();
+    let (a, b, ab) = (count(Verdict::A), count(Verdict::B), count(Verdict::AB));
+    if a > b && a > ab {
+        Verdict::A
+    } else if b > a && b > ab {
+        Verdict::B
+    } else if ab > a && ab > b {
+        Verdict::AB
+    } else {
+        Verdict::AB
+    }
+}
+
+/// Aggregated verdict counts (one figure bar group).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VerdictCounts {
+    pub a: u64,
+    pub b: u64,
+    pub ab: u64,
+}
+
+impl VerdictCounts {
+    pub fn push(&mut self, v: Verdict) {
+        match v {
+            Verdict::A => self.a += 1,
+            Verdict::B => self.b += 1,
+            Verdict::AB => self.ab += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.a + self.b + self.ab
+    }
+
+    /// Paper metric: share of B (tweaked/small) wins *or* draws — "better
+    /// or on par".
+    pub fn frac_b_or_draw(&self) -> f64 {
+        if self.total() == 0 {
+            return 0.0;
+        }
+        (self.b + self.ab) as f64 / self.total() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::quality::QualityModel;
+
+    fn q(f: f64) -> ResponseQuality {
+        ResponseQuality { factual: f, ux: f, relevance: f }
+    }
+
+    #[test]
+    fn clear_winner_wins() {
+        let personas = default_personas();
+        let cfg = DebateConfig::default();
+        let mut rng = Rng::new(1);
+        let mut a_wins = 0;
+        for _ in 0..100 {
+            let o = debate(&q(0.9), &q(0.4), &personas, &cfg, &mut rng);
+            if o.verdict == Verdict::A {
+                a_wins += 1;
+            }
+        }
+        assert!(a_wins >= 95, "a_wins={a_wins}");
+    }
+
+    #[test]
+    fn equal_quality_mostly_draws_or_splits() {
+        let personas = default_personas();
+        let cfg = DebateConfig::default();
+        let mut rng = Rng::new(2);
+        let mut counts = VerdictCounts::default();
+        for _ in 0..400 {
+            counts.push(debate(&q(0.7), &q(0.7), &personas, &cfg, &mut rng).verdict);
+        }
+        // symmetric: neither side should dominate
+        let a_frac = counts.a as f64 / counts.total() as f64;
+        let b_frac = counts.b as f64 / counts.total() as f64;
+        assert!((a_frac - b_frac).abs() < 0.12, "a={a_frac} b={b_frac}");
+        assert!(counts.ab > 0);
+    }
+
+    #[test]
+    fn majority_logic() {
+        use Verdict::*;
+        assert_eq!(majority(&[A, A, B]), A);
+        assert_eq!(majority(&[B, AB, B]), B);
+        assert_eq!(majority(&[A, B, AB]), AB);
+        assert_eq!(majority(&[AB, AB, A]), AB);
+    }
+
+    #[test]
+    fn peer_influence_increases_consensus() {
+        // With high peer influence, persona verdicts agree more often.
+        let personas = default_personas();
+        let mut rng = Rng::new(3);
+        let mut m = QualityModel::new(3);
+        let agreement = |peer: f64, rng: &mut Rng, m: &mut QualityModel| {
+            let cfg = DebateConfig { peer_influence: peer, ..Default::default() };
+            let mut agree = 0;
+            for _ in 0..300 {
+                let a = m.big_direct();
+                let b = m.small_tweaked(0.8, None);
+                let o = debate(&a, &b, &personas, &cfg, rng);
+                let first = o.persona_verdicts[0];
+                if o.persona_verdicts.iter().all(|v| *v == first) {
+                    agree += 1;
+                }
+            }
+            agree
+        };
+        let low = agreement(0.0, &mut rng, &mut m);
+        let high = agreement(0.8, &mut rng, &mut m);
+        assert!(high > low, "high={high} low={low}");
+    }
+
+    #[test]
+    fn frac_b_or_draw() {
+        let mut c = VerdictCounts::default();
+        c.push(Verdict::A);
+        c.push(Verdict::B);
+        c.push(Verdict::AB);
+        c.push(Verdict::AB);
+        assert!((c.frac_b_or_draw() - 0.75).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,125 @@
+//! Cache-hit distribution study (paper §4.2.3, Figs 8–9) and the §5.2.3
+//! cost analysis.
+//!
+//! Protocol: insert the first half of a trace into the vector DB, query the
+//! second half, and record the top-1 cosine similarity of every query. The
+//! hit rate at threshold τ is the fraction of queries with similarity ≥ τ;
+//! the cost saving follows from the hit rate and the per-token price ratio.
+
+use anyhow::Result;
+
+use crate::cache::{FlatIndex, VectorIndex};
+use crate::cost::analytic_cost_ratio;
+use crate::datasets::QueryRecord;
+use crate::runtime::TextEmbedder;
+
+/// Result of one half-insert/half-query run.
+#[derive(Clone, Debug)]
+pub struct HitRateCurve {
+    /// Top-1 similarity per queried item (NaN-free; empty-cache → -1).
+    pub similarities: Vec<f32>,
+    pub inserted: usize,
+    pub queried: usize,
+}
+
+impl HitRateCurve {
+    pub fn hit_rate_at(&self, threshold: f32) -> f64 {
+        if self.similarities.is_empty() {
+            return 0.0;
+        }
+        let hits = self.similarities.iter().filter(|s| **s >= threshold).count();
+        hits as f64 / self.similarities.len() as f64
+    }
+
+    /// The Figs 8–9 histogram: bucket counts over [lo, 1.0].
+    pub fn histogram(&self, lo: f32, buckets: usize) -> Vec<(f32, f32, usize)> {
+        let width = (1.0 - lo) / buckets as f32;
+        let mut out: Vec<(f32, f32, usize)> = (0..buckets)
+            .map(|i| (lo + i as f32 * width, lo + (i + 1) as f32 * width, 0))
+            .collect();
+        for &s in &self.similarities {
+            if s < lo {
+                continue;
+            }
+            let idx = (((s - lo) / width) as usize).min(buckets - 1);
+            out[idx].2 += 1;
+        }
+        out
+    }
+
+    /// §5.2.3: fraction of original (all-Big) cost when hits above τ go to
+    /// the small pathway.
+    pub fn cost_ratio(&self, threshold: f32, price_ratio: f64) -> f64 {
+        analytic_cost_ratio(self.hit_rate_at(threshold), price_ratio)
+    }
+}
+
+/// Run the protocol with batched embedding.
+pub fn run(
+    insert: &[QueryRecord],
+    query: &[QueryRecord],
+    embedder: &dyn TextEmbedder,
+) -> Result<HitRateCurve> {
+    let mut index = FlatIndex::new(embedder.out_dim());
+    let insert_texts: Vec<String> = insert.iter().map(|q| q.text.clone()).collect();
+    for e in embedder.embed_batch(&insert_texts)? {
+        index.insert(&e);
+    }
+    let query_texts: Vec<String> = query.iter().map(|q| q.text.clone()).collect();
+    let mut similarities = Vec::with_capacity(query.len());
+    for e in embedder.embed_batch(&query_texts)? {
+        let top = index.search(&e, 1);
+        similarities.push(top.first().map(|h| h.score).unwrap_or(-1.0));
+    }
+    Ok(HitRateCurve { similarities, inserted: insert.len(), queried: query.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{ChatTrace, TraceProfile};
+    use crate::runtime::NativeBowEmbedder;
+
+    fn curve(profile: TraceProfile, n: usize, seed: u64) -> HitRateCurve {
+        let t = ChatTrace::generate(profile, n, seed);
+        let (a, b) = t.halves();
+        let emb = NativeBowEmbedder::new(96, 3);
+        run(a, b, &emb).unwrap()
+    }
+
+    #[test]
+    fn lmsys_hits_more_than_wildchat() {
+        // the Fig 8 vs Fig 9 headline: 68% vs 40% at τ=0.8
+        let l = curve(TraceProfile::lmsys(), 3000, 1);
+        let w = curve(TraceProfile::wildchat(), 3000, 1);
+        let (hl, hw) = (l.hit_rate_at(0.8), w.hit_rate_at(0.8));
+        assert!(hl > hw + 0.1, "lmsys={hl} wildchat={hw}");
+    }
+
+    #[test]
+    fn hit_rate_monotone_in_threshold() {
+        let c = curve(TraceProfile::lmsys(), 2000, 2);
+        let mut prev = 1.1;
+        for t in [0.5, 0.6, 0.7, 0.8, 0.9, 0.99] {
+            let h = c.hit_rate_at(t);
+            assert!(h <= prev + 1e-9);
+            prev = h;
+        }
+    }
+
+    #[test]
+    fn histogram_sums_to_inrange() {
+        let c = curve(TraceProfile::wildchat(), 1000, 3);
+        let hist = c.histogram(0.0, 20);
+        let total: usize = hist.iter().map(|(_, _, n)| n).sum();
+        let inrange = c.similarities.iter().filter(|s| **s >= 0.0).count();
+        assert_eq!(total, inrange);
+    }
+
+    #[test]
+    fn cost_ratio_sane() {
+        let c = curve(TraceProfile::lmsys(), 2000, 4);
+        let r = c.cost_ratio(0.8, 25.0);
+        assert!(r > 0.0 && r < 1.0, "r={r}");
+    }
+}

@@ -1,0 +1,80 @@
+//! Evaluation harnesses: everything in the paper's §4.2/§5.
+//!
+//! * `quality` — the calibrated response-quality model (the stand-in for
+//!   "what would GPT-4o / Llama-8B / a tweaked response actually read
+//!   like"; see DESIGN.md "Substitutions").
+//! * `survey` — simulated user study (Figs 3–4).
+//! * `debate` — multi-agent LLM-as-evaluator debate (Figs 5–7).
+//! * `precision_recall` — traditional semantic caching study (Fig 2).
+//! * `hit_rate` — cache-hit CDFs + cost analysis (Figs 8–9, §5.2.3).
+
+pub mod debate;
+pub mod hit_rate;
+pub mod precision_recall;
+pub mod quality;
+pub mod survey;
+
+pub use quality::{QualityModel, ResponseKind, ResponseQuality};
+
+/// The cosine-similarity bands the paper reports (0.7–0.8, 0.8–0.9,
+/// 0.9–1.0).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Band {
+    B70,
+    B80,
+    B90,
+}
+
+impl Band {
+    pub const ALL: [Band; 3] = [Band::B70, Band::B80, Band::B90];
+
+    pub fn of(similarity: f32) -> Option<Band> {
+        if similarity >= 0.9 {
+            Some(Band::B90)
+        } else if similarity >= 0.8 {
+            Some(Band::B80)
+        } else if similarity >= 0.7 {
+            Some(Band::B70)
+        } else {
+            None
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Band::B70 => "0.7-0.8",
+            Band::B80 => "0.8-0.9",
+            Band::B90 => "0.9-1.0",
+        }
+    }
+
+    /// Band midpoint (for the quality model's similarity input when only
+    /// the band is known).
+    pub fn midpoint(&self) -> f32 {
+        match self {
+            Band::B70 => 0.75,
+            Band::B80 => 0.85,
+            Band::B90 => 0.95,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn banding() {
+        assert_eq!(Band::of(0.95), Some(Band::B90));
+        assert_eq!(Band::of(0.9), Some(Band::B90));
+        assert_eq!(Band::of(0.85), Some(Band::B80));
+        assert_eq!(Band::of(0.72), Some(Band::B70));
+        assert_eq!(Band::of(0.69), None);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Band::B70.label(), "0.7-0.8");
+        assert_eq!(Band::B90.label(), "0.9-1.0");
+    }
+}

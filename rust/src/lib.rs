@@ -1,0 +1,33 @@
+//! # TweakLLM
+//!
+//! Reproduction of *TweakLLM: A Routing Architecture for Dynamic Tailoring
+//! of Cached Responses* (Cheema et al., 2025) as a three-layer
+//! Rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: threshold-routed
+//!   semantic caching with small-LLM response tweaking, plus every substrate
+//!   it depends on (vector DB, tokenizer, batcher, eval harnesses,
+//!   baselines, datasets, cost model).
+//! * **L2** — JAX models (embedder + Big/Small decoder) in
+//!   `python/compile/model.py`, AOT-lowered to HLO text.
+//! * **L1** — Pallas kernels (attention, decode attention, fused matmul,
+//!   RMSNorm, cosine scoring) in `python/compile/kernels/`.
+//!
+//! The Rust binary loads `artifacts/*.hlo.txt` via the PJRT CPU client and
+//! is self-contained after `make artifacts`; Python never runs on the
+//! request path. See DESIGN.md for the experiment index.
+
+pub mod baselines;
+pub mod bench;
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod datasets;
+pub mod eval;
+pub mod llm;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod tokenizer;
+pub mod util;

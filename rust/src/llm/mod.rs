@@ -1,0 +1,97 @@
+//! LLM facades: the Big and Small models behind a common interface, plus
+//! the tweak-prompt template (paper Appendix A).
+
+use anyhow::Result;
+
+use crate::cost::TokenUsage;
+use crate::runtime::{Generation, Generator, Runtime, SamplingParams};
+use crate::util::Rng;
+
+pub mod prompts;
+
+pub use prompts::TweakPrompt;
+
+/// A model that turns a prompt into a response (the compiled substrate
+/// decoders at runtime; the quality-model mocks in eval/tests).
+///
+/// NB: deliberately NOT `Send` — the substrate implementation wraps PJRT
+/// handles (`Rc` internally). The engine thread constructs and owns it.
+pub trait LanguageModel {
+    fn name(&self) -> &str;
+
+    /// Respond to a raw user query.
+    fn respond(&mut self, query: &str) -> Result<LlmResponse>;
+
+    /// Tweak a cached response for a new query (Appendix A pathway).
+    fn tweak(&mut self, prompt: &TweakPrompt) -> Result<LlmResponse>;
+}
+
+#[derive(Clone, Debug)]
+pub struct LlmResponse {
+    pub text: String,
+    pub usage: TokenUsage,
+    pub prefill_micros: u128,
+    pub decode_micros: u128,
+}
+
+/// Compiled-artifact-backed model.
+pub struct SubstrateLlm {
+    gen: Generator,
+    params: SamplingParams,
+    rng: Rng,
+}
+
+impl SubstrateLlm {
+    pub fn new(rt: &Runtime, model: &str, params: SamplingParams, seed: u64) -> Result<Self> {
+        Ok(SubstrateLlm {
+            gen: Generator::new(rt, model)?,
+            params,
+            rng: Rng::substream(seed, &format!("llm/{model}")),
+        })
+    }
+
+    fn run(&mut self, segments: &[&str]) -> Result<LlmResponse> {
+        let g: Generation = self.gen.generate(segments, &self.params, &mut self.rng)?;
+        Ok(LlmResponse {
+            text: g.text,
+            usage: TokenUsage {
+                input_tokens: g.stats.prompt_tokens,
+                output_tokens: g.stats.generated_tokens,
+            },
+            prefill_micros: g.stats.prefill_micros,
+            decode_micros: g.stats.decode_micros,
+        })
+    }
+}
+
+impl LanguageModel for SubstrateLlm {
+    fn name(&self) -> &str {
+        &self.gen.model_name
+    }
+
+    fn respond(&mut self, query: &str) -> Result<LlmResponse> {
+        self.run(&[query])
+    }
+
+    fn tweak(&mut self, prompt: &TweakPrompt) -> Result<LlmResponse> {
+        let segs = prompt.segments();
+        self.run(&segs.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tweak_prompt_orders_new_query_first() {
+        let p = TweakPrompt {
+            new_query: "why is rust fast?".into(),
+            cached_query: "why is rust safe?".into(),
+            cached_response: "because borrow checker".into(),
+        };
+        let segs = p.segments();
+        assert_eq!(segs[0], "why is rust fast?");
+        assert_eq!(segs.len(), 3);
+    }
+}

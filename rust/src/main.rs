@@ -1,0 +1,133 @@
+//! `tweakllm` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   config                         Print the (Table 1) configuration.
+//!   serve  [--addr 127.0.0.1:7411] Start the engine + TCP front-end.
+//!   query  --addr .. "text"        Send one query to a running server.
+//!   demo   [--n 12]                Self-contained routing demo on a trace.
+//!
+//! Figure/table reproduction lives in `cargo bench` (see DESIGN.md);
+//! examples/ hold the end-to-end drivers.
+
+use anyhow::Result;
+
+use tweakllm::config::Config;
+use tweakllm::coordinator::{Engine, Router};
+use tweakllm::datasets::{ChatTrace, TraceProfile};
+use tweakllm::runtime::Runtime;
+use tweakllm::server::{pathway_str, Client, Server};
+use tweakllm::util::{Args, Json};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: tweakllm <config|serve|query|demo> [--flags]\n\
+     \n\
+     config                          print the active configuration (Table 1)\n\
+     serve  [--addr HOST:PORT]       start engine + TCP front-end\n\
+            [--config FILE] [--threshold T] [--exact-fast-path BOOL]\n\
+     query  [--addr HOST:PORT] TEXT  send one query to a running server\n\
+     demo   [--n N] [--threshold T]  route a small synthetic trace and report\n"
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::paper(),
+    };
+    if let Some(t) = args.opt_str("threshold") {
+        cfg.set("router.similarity_threshold", t)?;
+    }
+    if let Some(b) = args.opt_str("exact-fast-path") {
+        cfg.set("router.exact_match_fast_path", b)?;
+    }
+    if let Some(d) = args.opt_str("artifacts") {
+        cfg.set("runtime.artifact_dir", d)?;
+    }
+    Ok(cfg)
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "config" => {
+            let cfg = load_config(&args)?;
+            println!("TweakLLM configuration (cf. paper Table 1)");
+            println!("{:-<72}", "");
+            for (k, v) in cfg.table() {
+                println!("{k:<24} {v}");
+            }
+            Ok(())
+        }
+        "serve" => {
+            let cfg = load_config(&args)?;
+            let addr = args.str("addr", "127.0.0.1:7411");
+            eprintln!("[tweakllm] loading artifacts from {} ...", cfg.artifact_dir);
+            let (_engine, handle) = Engine::start(move || {
+                let rt = Runtime::load(&cfg.artifact_dir, &[])?;
+                eprintln!("[tweakllm] platform: {}", rt.platform());
+                Router::from_runtime(&rt, cfg)
+            })?;
+            let server = Server::bind(&addr, handle)?;
+            eprintln!("[tweakllm] serving on {}", server.local_addr()?);
+            server.serve()
+        }
+        "query" => {
+            let addr = args.str("addr", "127.0.0.1:7411");
+            let text = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("query: missing TEXT argument"))?;
+            let mut client = Client::connect(&addr)?;
+            let resp = client.query(text)?;
+            println!("{}", resp.to_string());
+            Ok(())
+        }
+        "demo" => {
+            let cfg = load_config(&args)?;
+            let n = args.usize("n", 12)?;
+            eprintln!("[demo] loading artifacts from {} ...", cfg.artifact_dir);
+            let rt = Runtime::load(&cfg.artifact_dir, &[])?;
+            let mut router = Router::from_runtime(&rt, cfg)?;
+            let trace = ChatTrace::generate(TraceProfile::lmsys(), n, 7);
+            println!(
+                "{:<10} {:>6} {:>9}  {}",
+                "pathway", "sim", "us", "query"
+            );
+            for q in &trace.queries {
+                let r = router.handle(&q.text)?;
+                println!(
+                    "{:<10} {:>6} {:>9}  {}",
+                    pathway_str(r.pathway),
+                    r.similarity.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
+                    r.total_micros,
+                    &q.text[..q.text.len().min(56)]
+                );
+            }
+            let stats = Json::obj_from(vec![
+                ("requests", Json::num(router.counters.get("requests") as f64)),
+                ("tweak_hits", Json::num(router.counters.get("tweak_hits") as f64)),
+                ("misses", Json::num(router.counters.get("misses") as f64)),
+                ("hit_rate", Json::num(router.hit_rate())),
+                ("cost_dollars", Json::num(router.ledger.dollars(&router.config.cost))),
+                (
+                    "baseline_dollars",
+                    Json::num(router.ledger.baseline_dollars(&router.config.cost)),
+                ),
+            ]);
+            println!("\nstats: {}", stats.to_string());
+            println!("\nlatency breakdown:\n{}", router.latency.table());
+            Ok(())
+        }
+        _ => {
+            print!("{}", usage());
+            Ok(())
+        }
+    }
+}

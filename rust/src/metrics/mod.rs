@@ -1,0 +1,127 @@
+//! Serving metrics: latency recorders, counters, and the per-pathway
+//! breakdown the e2e driver reports.
+
+use std::collections::BTreeMap;
+
+use crate::util::{Summary};
+
+/// Latency samples per named stage (embed, search, prefill, decode, ...).
+#[derive(Debug, Default)]
+pub struct LatencyRecorder {
+    samples: BTreeMap<String, Vec<f64>>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, stage: &str, micros: f64) {
+        self.samples.entry(stage.to_string()).or_default().push(micros);
+    }
+
+    pub fn record_duration(&mut self, stage: &str, d: std::time::Duration) {
+        self.record(stage, d.as_micros() as f64);
+    }
+
+    pub fn summary(&self, stage: &str) -> Option<Summary> {
+        self.samples.get(stage).map(|s| Summary::of(s))
+    }
+
+    pub fn stages(&self) -> impl Iterator<Item = (&String, Summary)> {
+        self.samples.iter().map(|(k, v)| (k, Summary::of(v)))
+    }
+
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        for (k, v) in &other.samples {
+            self.samples.entry(k.clone()).or_default().extend(v);
+        }
+    }
+
+    /// Formatted table (micros) for reports.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<18} {:>8} {:>10} {:>10} {:>10} {:>10}\n",
+            "stage", "n", "mean_us", "p50_us", "p90_us", "p99_us"
+        ));
+        for (stage, s) in self.stages() {
+            out.push_str(&format!(
+                "{:<18} {:>8} {:>10.0} {:>10.0} {:>10.0} {:>10.0}\n",
+                stage, s.n, s.mean, s.p50, s.p90, s.p99
+            ));
+        }
+        out
+    }
+}
+
+/// Monotonic counters.
+#[derive(Debug, Default, Clone)]
+pub struct Counters {
+    inner: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &str, by: u64) {
+        *self.inner.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.inner.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &u64)> {
+        self.inner.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_summary() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record("embed", i as f64);
+        }
+        let s = r.summary("embed").unwrap();
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!(r.summary("missing").is_none());
+    }
+
+    #[test]
+    fn merge_recorders() {
+        let mut a = LatencyRecorder::new();
+        a.record("x", 1.0);
+        let mut b = LatencyRecorder::new();
+        b.record("x", 3.0);
+        b.record("y", 5.0);
+        a.merge(&b);
+        assert_eq!(a.summary("x").unwrap().n, 2);
+        assert_eq!(a.summary("y").unwrap().n, 1);
+    }
+
+    #[test]
+    fn counters() {
+        let mut c = Counters::default();
+        c.inc("hits");
+        c.add("hits", 4);
+        assert_eq!(c.get("hits"), 5);
+        assert_eq!(c.get("misses"), 0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut r = LatencyRecorder::new();
+        r.record("decode", 1234.0);
+        let t = r.table();
+        assert!(t.contains("decode"));
+        assert!(t.contains("p99_us"));
+    }
+}

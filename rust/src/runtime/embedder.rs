@@ -1,0 +1,212 @@
+//! Embedder driver: text → 384-d L2-normalized embedding via the compiled
+//! `embed_b{1,8,32}` artifacts.
+//!
+//! The dynamic batcher hands us up to 32 texts; we pick the smallest
+//! compiled batch variant that fits and pad the remainder with empty rows
+//! (their outputs are discarded). One executable per variant — XLA shapes
+//! are static.
+
+use anyhow::{bail, Result};
+
+use super::{to_f32_vec, Executable, HostTensor, Runtime};
+use crate::tokenizer::Tokenizer;
+
+/// Anything that maps text to a fixed-dim L2-normalized vector.
+///
+/// Two implementations: [`Embedder`] runs the compiled `embed_b*` artifacts
+/// (the production path — this is what every figure bench uses), and
+/// [`NativeBowEmbedder`] is a pure-Rust bag-of-words random projection used
+/// by unit tests that must run without artifacts and by scale smoke-tests.
+/// The two agree qualitatively by construction: the compiled encoder is
+/// deliberately bag-of-embeddings-dominant (see python/compile/configs.py).
+// NB: deliberately NOT `Send` — the compiled implementation wraps PJRT
+// handles (`Rc` internally). The engine thread constructs and owns it.
+pub trait TextEmbedder {
+    fn out_dim(&self) -> usize;
+    fn embed_batch(&self, texts: &[String]) -> Result<Vec<Vec<f32>>>;
+
+    fn embed(&self, text: &str) -> Result<Vec<f32>> {
+        Ok(self
+            .embed_batch(std::slice::from_ref(&text.to_string()))?
+            .remove(0))
+    }
+}
+
+pub struct Embedder {
+    variants: Vec<(usize, std::sync::Arc<Executable>)>, // sorted by batch
+    tokenizer: Tokenizer,
+    max_seq: usize,
+    out_dim: usize,
+}
+
+impl Embedder {
+    pub fn new(rt: &Runtime) -> Result<Embedder> {
+        let enc = rt.manifest.model("encoder")?;
+        let max_seq = enc.cfg("max_seq")?;
+        let out_dim = enc.cfg("out_dim")?;
+        let mut variants = Vec::new();
+        for (name, spec) in &rt.manifest.artifacts {
+            if let Some(b) = name.strip_prefix("embed_b") {
+                if let Ok(batch) = b.parse::<usize>() {
+                    debug_assert_eq!(spec.inputs[0].shape[0], batch);
+                    variants.push((batch, rt.executable(name)?));
+                }
+            }
+        }
+        if variants.is_empty() {
+            bail!("no embed_b* artifacts compiled");
+        }
+        variants.sort_by_key(|(b, _)| *b);
+        Ok(Embedder {
+            variants,
+            tokenizer: Tokenizer::new(rt.manifest.vocab_size),
+            max_seq,
+            out_dim,
+        })
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.variants.last().map(|(b, _)| *b).unwrap_or(1)
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    fn embed_chunk(&self, texts: &[String]) -> Result<Vec<Vec<f32>>> {
+        let (batch, exe) = self
+            .variants
+            .iter()
+            .find(|(b, _)| *b >= texts.len())
+            .unwrap_or_else(|| self.variants.last().unwrap());
+        let batch = *batch;
+        let mut tokens = Vec::with_capacity(batch * self.max_seq);
+        let mut lengths = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let text = texts.get(i).map(|s| s.as_str()).unwrap_or("");
+            let (ids, len) = self.tokenizer.encode_padded(text, self.max_seq);
+            tokens.extend(ids);
+            lengths.push(len as i32);
+        }
+        let tok_t = HostTensor::i32(tokens, &[batch, self.max_seq]);
+        let len_t = HostTensor::i32(lengths, &[batch]);
+        let outputs = exe.run(&[tok_t, len_t])?;
+        let flat = to_f32_vec(&outputs[0])?;
+        debug_assert_eq!(flat.len(), batch * self.out_dim);
+        Ok(texts
+            .iter()
+            .enumerate()
+            .map(|(i, _)| flat[i * self.out_dim..(i + 1) * self.out_dim].to_vec())
+            .collect())
+    }
+}
+
+impl TextEmbedder for Embedder {
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// Embed up to `max_batch()` texts per executable call; larger slices
+    /// are chunked.
+    fn embed_batch(&self, texts: &[String]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(texts.len());
+        for chunk in texts.chunks(self.max_batch()) {
+            out.extend(self.embed_chunk(chunk)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Pure-Rust bag-of-words embedder: each word hashes to a deterministic
+/// random unit vector; a sentence is the mean of its word vectors plus a
+/// small word-order perturbation, L2-normalized. Mirrors the compiled
+/// encoder's similarity structure (token overlap → high cosine) without
+/// requiring artifacts. Used in unit tests and very-large-N smoke sweeps.
+pub struct NativeBowEmbedder {
+    dim: usize,
+    seed: u64,
+}
+
+impl NativeBowEmbedder {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        NativeBowEmbedder { dim, seed }
+    }
+
+    fn word_vec(&self, word: &str, out: &mut [f32], scale: f32) {
+        let mut rng = crate::util::Rng::new(
+            crate::util::rng::hash_bytes(word.as_bytes()) ^ self.seed,
+        );
+        for o in out.iter_mut() {
+            *o += scale * rng.normal() as f32;
+        }
+    }
+}
+
+impl TextEmbedder for NativeBowEmbedder {
+    fn out_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn embed_batch(&self, texts: &[String]) -> Result<Vec<Vec<f32>>> {
+        Ok(texts
+            .iter()
+            .map(|t| {
+                let words = Tokenizer::words(t);
+                let mut v = vec![0.0f32; self.dim];
+                for (i, w) in words.iter().enumerate() {
+                    // mirror the compiled encoder's IDF downweighting
+                    let scale = if crate::tokenizer::is_function_word(w) {
+                        0.22
+                    } else {
+                        1.0
+                    };
+                    self.word_vec(w, &mut v, scale);
+                    // mild positional salt so pure reorders aren't cos=1.0
+                    self.word_vec(&format!("{w}@{i}"), &mut v, 0.18 * scale);
+                }
+                if words.is_empty() {
+                    v[0] = 1.0;
+                }
+                crate::util::normalize(&mut v);
+                v
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bow_unit_norm_and_deterministic() {
+        let e = NativeBowEmbedder::new(64, 7);
+        let a = e.embed("why is rust fast").unwrap();
+        let b = e.embed("why is rust fast").unwrap();
+        assert_eq!(a, b);
+        let n: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn bow_paraphrase_closer_than_unrelated() {
+        let e = NativeBowEmbedder::new(128, 7);
+        let base = e.embed("why is coffee good for health").unwrap();
+        let para = e.embed("why is coffee great for health").unwrap();
+        let unrel = e.embed("draft an email to my landlord").unwrap();
+        let cos = |a: &[f32], b: &[f32]| crate::util::dot(a, b);
+        assert!(cos(&base, &para) > cos(&base, &unrel));
+        assert!(cos(&base, &para) > 0.6);
+    }
+
+    #[test]
+    fn bow_polarity_flip_is_still_close() {
+        // the false-positive regime the paper critiques: one-word flips
+        // stay above typical thresholds
+        let e = NativeBowEmbedder::new(128, 7);
+        let good = e.embed("why is coffee good for health ?").unwrap();
+        let bad = e.embed("why is coffee bad for health ?").unwrap();
+        assert!(crate::util::dot(&good, &bad) > 0.55);
+    }
+}
+

@@ -1,0 +1,337 @@
+//! Generator driver: the autoregressive loop over compiled prefill/decode
+//! artifacts. Rust owns the loop and the sampling; the KV cache travels as
+//! literals between steps and the prompt is never re-prefilled (DESIGN.md
+//! §Perf L2).
+
+use anyhow::{bail, Result};
+
+use super::{to_f32_vec, Executable, HostTensor, Runtime};
+use crate::tokenizer::{Tokenizer, EOS_ID};
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingParams {
+    /// 0.0 = greedy argmax.
+    pub temperature: f32,
+    /// Restrict sampling to the k most likely tokens (0 = no restriction).
+    pub top_k: usize,
+    pub max_new_tokens: usize,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        // "default temperature" per the paper's Table 1 — 1.0 with a top-k
+        // guard keeps the untrained substrate model's output distribution
+        // from degenerating into uniform noise.
+        SamplingParams { temperature: 1.0, top_k: 40, max_new_tokens: 32 }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy(max_new_tokens: usize) -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, max_new_tokens }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct GenerationStats {
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub prefill_micros: u128,
+    pub decode_micros: u128,
+}
+
+#[derive(Debug)]
+pub struct Generation {
+    pub token_ids: Vec<i32>,
+    pub text: String,
+    pub stats: GenerationStats,
+}
+
+/// Sample a token id from logits. Exposed for unit testing.
+pub fn sample_token(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> i32 {
+    debug_assert!(!logits.is_empty());
+    if params.temperature <= 0.0 {
+        // greedy
+        let mut best = 0usize;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > logits[best] {
+                best = i;
+            }
+        }
+        return best as i32;
+    }
+    // top-k indices by logit (partial selection; k is small)
+    let k = if params.top_k == 0 { logits.len() } else { params.top_k.min(logits.len()) };
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        logits[b].partial_cmp(&logits[a]).unwrap()
+    });
+    idx.truncate(k);
+    let max = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let mut weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i] - max) / params.temperature) as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        return idx[0] as i32;
+    }
+    for w in &mut weights {
+        *w /= total;
+    }
+    idx[rng.weighted(&weights)] as i32
+}
+
+pub struct Generator {
+    prefill: std::sync::Arc<Executable>,
+    decode: std::sync::Arc<Executable>,
+    /// Fused multi-step decode (§Perf L2): runs N steps + in-graph top-k
+    /// sampling per executable call, amortizing the KV-cache transfer.
+    /// `None` when the artifact set predates spans. Only used when the
+    /// sampling params match the baked-in top-k (see `SPAN_TOP_K`).
+    span: Option<(usize, std::sync::Arc<Executable>)>,
+    tokenizer: Tokenizer,
+    pub model_name: String,
+    max_prefill: usize,
+    max_seq: usize,
+}
+
+/// The top-k baked into the decode-span artifact
+/// (python/compile/model.py::SPAN_TOP_K).
+pub const SPAN_TOP_K: usize = 40;
+
+impl Generator {
+    /// `model` is "small" or "big" (manifest model names).
+    pub fn new(rt: &Runtime, model: &str) -> Result<Generator> {
+        let spec = rt.manifest.model(model)?;
+        // discover a decode-span artifact (name: {model}_decode{N}, N > 1)
+        let span = rt
+            .manifest
+            .artifacts
+            .keys()
+            .filter_map(|name| {
+                let n: usize = name
+                    .strip_prefix(&format!("{model}_decode"))?
+                    .parse()
+                    .ok()?;
+                (n > 1).then_some((n, name.clone()))
+            })
+            .max_by_key(|(n, _)| *n)
+            // tolerate selective loading (tests compile only a subset)
+            .and_then(|(n, name)| rt.executable(&name).ok().map(|e| (n, e)));
+        Ok(Generator {
+            prefill: rt.executable(&format!("{model}_prefill"))?,
+            decode: rt.executable(&format!("{model}_decode"))?,
+            span,
+            tokenizer: Tokenizer::new(rt.manifest.vocab_size),
+            model_name: model.to_string(),
+            max_prefill: spec.cfg("max_prefill")?,
+            max_seq: spec.cfg("max_seq")?,
+        })
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    pub fn max_prefill(&self) -> usize {
+        self.max_prefill
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Generate a completion for a prompt built from `segments`
+    /// (BOS seg0 SEP seg1 ...). Deterministic given `rng`.
+    pub fn generate(
+        &self,
+        segments: &[&str],
+        params: &SamplingParams,
+        rng: &mut Rng,
+    ) -> Result<Generation> {
+        let (ids, len) = self.tokenizer.encode_prompt(segments, self.max_prefill);
+        if len == 0 {
+            bail!("empty prompt");
+        }
+        let mut stats = GenerationStats { prompt_tokens: len, ..Default::default() };
+
+        // --- prefill ---
+        let t0 = std::time::Instant::now();
+        let tok_t = HostTensor::i32(ids, &[self.max_prefill]);
+        let len_t = HostTensor::i32(vec![len as i32], &[1]);
+        let mut outs = self.prefill.run(&[tok_t, len_t])?;
+        stats.prefill_micros = t0.elapsed().as_micros();
+        let kv_spec = &self.decode.spec.inputs[2]; // k_cache spec (shape/dtype)
+        let mut v_cache = HostTensor::from_literal(&outs.pop().expect("v_cache"), kv_spec)?;
+        let mut k_cache = HostTensor::from_literal(&outs.pop().expect("k_cache"), kv_spec)?;
+        let mut logits = to_f32_vec(&outs.pop().expect("logits"))?;
+
+        // --- decode loop ---
+        let max_new = params.max_new_tokens.min(self.max_seq - len);
+        let mut generated: Vec<i32> = Vec::with_capacity(max_new);
+        let t1 = std::time::Instant::now();
+
+        // Fused span path: usable whenever the top-k matches the artifact's
+        // baked-in constant (greedy works too: temperature ~ 0 collapses the
+        // in-graph softmax onto the argmax).
+        let use_span = self
+            .span
+            .as_ref()
+            .map(|(n, _)| {
+                max_new >= *n && (params.top_k == SPAN_TOP_K || params.temperature <= 0.0)
+            })
+            .unwrap_or(false);
+
+        if use_span {
+            let (span_n, span_exe) = self.span.as_ref().unwrap();
+            let span_n = *span_n;
+            // first sampled token comes from the prefill logits (keeps span
+            // inputs uniform: span consumes the *input* token and samples n)
+            let mut next = sample_token(&logits, params, rng);
+            generated.push(next);
+            let mut pos = len as i32;
+            'outer: while generated.len() < max_new && *generated.last().unwrap() != EOS_ID
+            {
+                let remaining = max_new - generated.len();
+                if remaining < span_n {
+                    // finish with single steps
+                    break;
+                }
+                let u: Vec<f32> = (0..span_n).map(|_| rng.f32()).collect();
+                let temp = params.temperature.max(0.0);
+                let inputs = [
+                    HostTensor::i32(vec![next], &[1]),
+                    HostTensor::i32(vec![pos], &[1]),
+                    k_cache,
+                    v_cache,
+                    HostTensor::f32(u, &[span_n]),
+                    HostTensor::f32(vec![temp], &[1]),
+                ];
+                let mut outs = span_exe.run(&inputs)?;
+                v_cache =
+                    HostTensor::from_literal(&outs.pop().expect("v_cache"), kv_spec)?;
+                k_cache =
+                    HostTensor::from_literal(&outs.pop().expect("k_cache"), kv_spec)?;
+                let tokens = outs.pop().expect("tokens").to_vec::<i32>()?;
+                for t in tokens {
+                    generated.push(t);
+                    pos += 1;
+                    if t == EOS_ID || generated.len() >= max_new {
+                        break 'outer;
+                    }
+                }
+                next = *generated.last().unwrap();
+            }
+            // tail: finish any remainder with single steps
+            while generated.len() < max_new && *generated.last().unwrap() != EOS_ID {
+                let pos_now = (len + generated.len() - 1) as i32;
+                let inputs = [
+                    HostTensor::i32(vec![*generated.last().unwrap()], &[1]),
+                    HostTensor::i32(vec![pos_now], &[1]),
+                    k_cache,
+                    v_cache,
+                ];
+                let mut outs = self.decode.run(&inputs)?;
+                v_cache =
+                    HostTensor::from_literal(&outs.pop().expect("v_cache"), kv_spec)?;
+                k_cache =
+                    HostTensor::from_literal(&outs.pop().expect("k_cache"), kv_spec)?;
+                logits = to_f32_vec(&outs.pop().expect("logits"))?;
+                generated.push(sample_token(&logits, params, rng));
+            }
+        } else {
+            for step in 0..max_new {
+                let next = sample_token(&logits, params, rng);
+                generated.push(next);
+                if next == EOS_ID || step + 1 == max_new {
+                    break;
+                }
+                let pos = (len + step) as i32;
+                let inputs = [
+                    HostTensor::i32(vec![next], &[1]),
+                    HostTensor::i32(vec![pos], &[1]),
+                    k_cache,
+                    v_cache,
+                ];
+                let mut outs = self.decode.run(&inputs)?;
+                v_cache =
+                    HostTensor::from_literal(&outs.pop().expect("v_cache"), kv_spec)?;
+                k_cache =
+                    HostTensor::from_literal(&outs.pop().expect("k_cache"), kv_spec)?;
+                logits = to_f32_vec(&outs.pop().expect("logits"))?;
+            }
+        }
+        stats.decode_micros = t1.elapsed().as_micros();
+        stats.generated_tokens = generated.len();
+
+        Ok(Generation {
+            text: self.tokenizer.decode(&generated),
+            token_ids: generated,
+            stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        let mut rng = Rng::new(1);
+        let p = SamplingParams::greedy(8);
+        assert_eq!(sample_token(&logits, &p, &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_restricts_support() {
+        let mut logits = vec![0.0f32; 100];
+        logits[7] = 5.0;
+        logits[13] = 4.5;
+        let p = SamplingParams { temperature: 1.0, top_k: 2, max_new_tokens: 1 };
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let t = sample_token(&logits, &p, &mut rng);
+            assert!(t == 7 || t == 13, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn temperature_zero_equals_greedy() {
+        let logits = vec![0.3, 0.1, 0.9, 0.2];
+        let p = SamplingParams { temperature: 0.0, top_k: 5, max_new_tokens: 1 };
+        let mut rng = Rng::new(3);
+        assert_eq!(sample_token(&logits, &p, &mut rng), 2);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_given_seed() {
+        let logits: Vec<f32> = (0..50).map(|i| ((i * 37) % 11) as f32 / 3.0).collect();
+        let p = SamplingParams::default();
+        let a: Vec<i32> = {
+            let mut rng = Rng::new(9);
+            (0..20).map(|_| sample_token(&logits, &p, &mut rng)).collect()
+        };
+        let b: Vec<i32> = {
+            let mut rng = Rng::new(9);
+            (0..20).map(|_| sample_token(&logits, &p, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let mut logits = vec![0.0f32; 10];
+        logits[0] = 1.0;
+        let p = SamplingParams { temperature: 100.0, top_k: 0, max_new_tokens: 1 };
+        let mut rng = Rng::new(4);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..300 {
+            seen.insert(sample_token(&logits, &p, &mut rng));
+        }
+        assert!(seen.len() >= 8, "only saw {} distinct tokens", seen.len());
+    }
+}

@@ -1,0 +1,219 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and this
+//! runtime. Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            _ => bail!("unsupported dtype {s:?}"),
+        }
+    }
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: j.get("name")?.str()?.to_string(),
+            shape: j
+                .get("shape")?
+                .arr()?
+                .iter()
+                .map(|d| d.usize())
+                .collect::<Result<_>>()?,
+            dtype: Dtype::parse(j.get("dtype")?.str()?)?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub numel: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub weights_file: String,
+    pub tensors: Vec<TensorSpec>,
+    pub config: BTreeMap<String, f64>,
+}
+
+impl ModelSpec {
+    pub fn cfg(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .map(|x| *x as usize)
+            .with_context(|| format!("model config missing {key:?}"))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub weight_set: Option<String>,
+    pub n_weight_args: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab_size: usize,
+    pub embed_dim: usize,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        if j.get("format")?.str()? != "hlo-text-v1" {
+            bail!("unknown manifest format");
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models")?.obj()? {
+            let tensors = m
+                .get("tensors")?
+                .arr()?
+                .iter()
+                .map(|t| {
+                    Ok(TensorSpec {
+                        name: t.get("name")?.str()?.to_string(),
+                        shape: t
+                            .get("shape")?
+                            .arr()?
+                            .iter()
+                            .map(|d| d.usize())
+                            .collect::<Result<_>>()?,
+                        offset: t.get("offset")?.usize()?,
+                        numel: t.get("numel")?.usize()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let config = m
+                .get("config")?
+                .obj()?
+                .iter()
+                .filter_map(|(k, v)| v.f64().ok().map(|x| (k.clone(), x)))
+                .collect();
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    weights_file: m.get("weights_file")?.str()?.to_string(),
+                    tensors,
+                    config,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in j.get("artifacts")?.arr()? {
+            let spec = ArtifactSpec {
+                name: a.get("name")?.str()?.to_string(),
+                file: a.get("file")?.str()?.to_string(),
+                weight_set: a
+                    .opt("weight_set")
+                    .map(|w| w.str().map(|s| s.to_string()))
+                    .transpose()?,
+                n_weight_args: a.get("n_weight_args")?.usize()?,
+                inputs: a
+                    .get("inputs")?
+                    .arr()?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .get("outputs")?
+                    .arr()?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect::<Result<_>>()?,
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+
+        Ok(Manifest {
+            dir,
+            vocab_size: j.get("vocab_size")?.usize()?,
+            embed_dim: j.get("embed_dim")?.usize()?,
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("twk-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text-v1","vocab_size":8192,"embed_dim":384,
+                "models":{"m":{"weights_file":"weights/m.bin","config":{"d_model":128},
+                  "tensors":[{"name":"w","shape":[2,3],"offset":0,"numel":6}]}},
+                "artifacts":[{"name":"a","file":"a.hlo.txt","weight_set":"m",
+                  "n_weight_args":1,
+                  "inputs":[{"name":"x","shape":[4],"dtype":"int32"}],
+                  "outputs":[{"name":"y","shape":[4],"dtype":"float32"}]}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.vocab_size, 8192);
+        let a = m.artifact("a").unwrap();
+        assert_eq!(a.inputs[0].dtype, Dtype::I32);
+        assert_eq!(a.outputs[0].numel(), 4);
+        assert_eq!(m.model("m").unwrap().cfg("d_model").unwrap(), 128);
+        assert!(m.artifact("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

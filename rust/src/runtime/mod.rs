@@ -1,0 +1,277 @@
+//! Runtime bridge: load AOT-compiled HLO-text artifacts and execute them on
+//! the PJRT CPU client via the `xla` crate.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! because jax ≥ 0.5 emits serialized protos with 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects.
+//!
+//! Calling convention (manifest): HLO params = [weights..., inputs...] and
+//! the result is a tuple. Weights are loaded once per model and shared
+//! across that model's executables.
+
+pub mod embedder;
+pub mod generator;
+pub mod manifest;
+pub mod weights;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+pub use embedder::{Embedder, NativeBowEmbedder, TextEmbedder};
+pub use generator::Generation;
+pub use generator::{Generator, SamplingParams};
+pub use manifest::{ArtifactSpec, Dtype, IoSpec, Manifest};
+
+/// A compiled artifact plus its resident (on-device) weight arguments.
+///
+/// Weights are uploaded to device buffers ONCE and reused via `execute_b`.
+/// This matters twice over: (a) the `xla` crate's literal-based `execute`
+/// leaks every input's device buffer (`buffer.release()` in xla_rs.cc is
+/// never freed), so repeated literal execution leaks the full weight set
+/// per call; (b) re-uploading megabytes of weights per decode step would
+/// dominate the step time. See EXPERIMENTS.md §Perf.
+/// A host-side tensor destined for (or fetched from) the device.
+///
+/// Uploads go through `buffer_from_host_buffer`, whose
+/// `kImmutableOnlyDuringCall` semantics force a synchronous copy — the only
+/// safe upload path in this xla_extension build (`BufferFromHostLiteral` is
+/// asynchronous and the wrapper neither awaits the transfer nor keeps the
+/// literal alive: racing uploads crash in `CopyFromLiteral`).
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> HostTensor {
+        HostTensor::F32 { data, dims: dims.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> HostTensor {
+        HostTensor::I32 { data, dims: dims.to_vec() }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    /// Convert a fetched output literal back into a host tensor so it can
+    /// be re-fed as an input (the KV-cache decode loop).
+    pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<HostTensor> {
+        Ok(match spec.dtype {
+            Dtype::F32 => HostTensor::f32(lit.to_vec::<f32>()?, &spec.shape),
+            Dtype::I32 => HostTensor::i32(lit.to_vec::<i32>()?, &spec.shape),
+        })
+    }
+
+    fn upload(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        match self {
+            HostTensor::F32 { data, dims } => {
+                Ok(client.buffer_from_host_buffer(data, dims, None)?)
+            }
+            HostTensor::I32 { data, dims } => {
+                Ok(client.buffer_from_host_buffer(data, dims, None)?)
+            }
+        }
+    }
+}
+
+/// Weight set resident on device.
+pub struct WeightSet {
+    device: Vec<xla::PjRtBuffer>,
+}
+
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    weights: Arc<WeightSet>,
+    client: xla::PjRtClient,
+}
+
+impl Executable {
+    /// Execute with the given non-weight inputs; returns the output tuple
+    /// decomposed into one `Literal` per manifest output.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<xla::Literal>> {
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if t.numel() != spec.numel() {
+                bail!(
+                    "{}: input {} has {} elements, expected {}",
+                    self.spec.name,
+                    spec.name,
+                    t.numel(),
+                    spec.numel()
+                );
+            }
+        }
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| t.upload(&self.client))
+            .collect::<Result<_>>()
+            .with_context(|| format!("uploading inputs for {}", self.spec.name))?;
+        self.run_b(&bufs)
+    }
+
+    /// Execute with pre-uploaded input buffers (the zero-copy hot path).
+    pub fn run_b(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.weights.device.len() + inputs.len());
+        args.extend(self.weights.device.iter());
+        args.extend(inputs.iter());
+        let outs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let result = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.spec.name))?;
+        let parts = result
+            .to_tuple()
+            .with_context(|| format!("untupling {} output", self.spec.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: manifest promises {} outputs, HLO returned {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+}
+
+/// Owns the PJRT client, the manifest, per-model weights and all compiled
+/// executables. NOT `Sync` — the coordinator runs it on a dedicated engine
+/// thread (the PJRT CPU client serializes compute anyway).
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    weights: BTreeMap<String, Arc<WeightSet>>,
+    executables: BTreeMap<String, Arc<Executable>>,
+}
+
+impl Runtime {
+    /// Load the manifest and eagerly compile the given artifacts (pass the
+    /// empty slice to compile everything in the manifest).
+    pub fn load(artifact_dir: &str, only: &[&str]) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut rt = Runtime {
+            manifest,
+            client,
+            weights: BTreeMap::new(),
+            executables: BTreeMap::new(),
+        };
+        let names: Vec<String> = if only.is_empty() {
+            rt.manifest.artifacts.keys().cloned().collect()
+        } else {
+            only.iter().map(|s| s.to_string()).collect()
+        };
+        for name in names {
+            rt.compile_artifact(&name)?;
+        }
+        Ok(rt)
+    }
+
+    /// Compile one artifact (idempotent), loading its weight set on demand.
+    pub fn compile_artifact(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let weights = match &spec.weight_set {
+            Some(model) => self.model_weights(model)?,
+            None => Arc::new(WeightSet { device: Vec::new() }),
+        };
+        if weights.device.len() != spec.n_weight_args {
+            bail!(
+                "{name}: weight set has {} tensors, artifact expects {}",
+                weights.device.len(),
+                spec.n_weight_args
+            );
+        }
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.executables.insert(
+            name.to_string(),
+            Arc::new(Executable { spec, exe, weights, client: self.client.clone() }),
+        );
+        Ok(())
+    }
+
+    fn model_weights(&mut self, model: &str) -> Result<Arc<WeightSet>> {
+        if let Some(w) = self.weights.get(model) {
+            return Ok(Arc::clone(w));
+        }
+        let spec = self.manifest.model(model)?.clone();
+        let tensors = weights::load_weight_tensors(&self.manifest.dir, &spec)?;
+        let bufs: Vec<xla::PjRtBuffer> = tensors
+            .iter()
+            .map(|(data, dims)| {
+                self.client
+                    .buffer_from_host_buffer(data, dims, None)
+                    .context("uploading weights")
+            })
+            .collect::<Result<_>>()?;
+        let arc = Arc::new(WeightSet { device: bufs });
+        self.weights.insert(model.to_string(), Arc::clone(&arc));
+        Ok(arc)
+    }
+
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        self.executables
+            .get(name)
+            .cloned()
+            .with_context(|| format!("artifact {name:?} not compiled"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Extraction helpers shared by embedder & generator.
+// ---------------------------------------------------------------------------
+
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Integration tests that need built artifacts live in rust/tests/;
+    // here we only check the pure helpers.
+    #[test]
+    fn host_tensor_numel() {
+        let t = HostTensor::f32(vec![0.0; 6], &[2, 3]);
+        assert_eq!(t.numel(), 6);
+        let t = HostTensor::i32(vec![1, 2], &[2]);
+        assert_eq!(t.numel(), 2);
+    }
+}

@@ -1,0 +1,88 @@
+//! Weight loading: raw little-endian f32 blobs (written by
+//! `python/compile/params.py::export_weights`) → per-tensor host arrays in
+//! manifest order (= HLO argument order). The runtime uploads them to
+//! device buffers once, via the synchronous-copy path.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::ModelSpec;
+
+/// Read the weight file and slice it into `(data, dims)` tensors.
+pub fn load_weight_tensors(
+    dir: &Path,
+    spec: &ModelSpec,
+) -> Result<Vec<(Vec<f32>, Vec<usize>)>> {
+    let path = dir.join(&spec.weights_file);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading weights {path:?}"))?;
+    let expected: usize = spec.tensors.iter().map(|t| t.numel * 4).sum();
+    if bytes.len() != expected {
+        bail!(
+            "weight file {path:?} is {} bytes, manifest expects {}",
+            bytes.len(),
+            expected
+        );
+    }
+    let mut out = Vec::with_capacity(spec.tensors.len());
+    for t in &spec.tensors {
+        let start = t.offset;
+        let end = start + t.numel * 4;
+        let mut data = Vec::with_capacity(t.numel);
+        for chunk in bytes[start..end].chunks_exact(4) {
+            data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        out.push((data, t.shape.clone()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorSpec;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn loads_and_slices() {
+        let dir = std::env::temp_dir().join(format!("twk-w-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("w.bin"), &bytes).unwrap();
+        let spec = ModelSpec {
+            weights_file: "w.bin".into(),
+            tensors: vec![
+                TensorSpec { name: "a".into(), shape: vec![2, 3], offset: 0, numel: 6 },
+                TensorSpec { name: "b".into(), shape: vec![4], offset: 24, numel: 4 },
+            ],
+            config: BTreeMap::new(),
+        };
+        let tensors = load_weight_tensors(&dir, &spec).unwrap();
+        assert_eq!(tensors.len(), 2);
+        assert_eq!(tensors[0].0, vals[..6]);
+        assert_eq!(tensors[0].1, vec![2, 3]);
+        assert_eq!(tensors[1].0, vals[6..]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("twk-w2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("w.bin"), [0u8; 8]).unwrap();
+        let spec = ModelSpec {
+            weights_file: "w.bin".into(),
+            tensors: vec![TensorSpec {
+                name: "a".into(),
+                shape: vec![4],
+                offset: 0,
+                numel: 4,
+            }],
+            config: BTreeMap::new(),
+        };
+        assert!(load_weight_tensors(&dir, &spec).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

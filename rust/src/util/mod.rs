@@ -1,0 +1,58 @@
+//! Shared substrates: PRNG, statistics, JSON, argument parsing, threadpool.
+//!
+//! Everything here exists because the offline vendor set contains only the
+//! `xla` crate closure — serde/clap/rand/tokio/criterion are reimplemented
+//! minimally (and tested) rather than stubbed.
+
+pub mod args;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use args::Args;
+pub use json::Json;
+pub use rng::{Rng, ZipfSampler};
+pub use stats::{Histogram, Online, Summary};
+pub use threadpool::ThreadPool;
+
+/// Monotonic wall-clock helper for latency measurement.
+pub fn now() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+/// Dot product of two equal-length f32 slices (the vector-search hot loop;
+/// see `cache::flat` for the blocked/unrolled variant used in the scan).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// L2-normalize a vector in place; returns the original norm.
+pub fn normalize(v: &mut [f32]) -> f32 {
+    let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 1e-12 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_normalize() {
+        let mut v = vec![3.0, 4.0];
+        let n = normalize(&mut v);
+        assert!((n - 5.0).abs() < 1e-6);
+        assert!((dot(&v, &v) - 1.0).abs() < 1e-6);
+    }
+}

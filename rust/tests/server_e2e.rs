@@ -1,0 +1,122 @@
+//! Engine + TCP server end-to-end over mock models (no artifacts needed):
+//! real sockets, real engine thread, real dynamic batching.
+
+use std::sync::atomic::Ordering;
+
+use tweakllm::baselines::MockLlm;
+use tweakllm::config::{Config, IndexKindConfig};
+use tweakllm::coordinator::{Engine, EngineHandle, Router};
+use tweakllm::runtime::{NativeBowEmbedder, TextEmbedder};
+use tweakllm::server::{Client, Server};
+
+fn start_stack() -> (tweakllm::coordinator::Engine, EngineHandle, String, std::sync::Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let (engine, handle) = Engine::start(|| {
+        let mut cfg = Config::paper();
+        cfg.index.kind = IndexKindConfig::Flat;
+        cfg.exact_match_fast_path = true;
+        let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+        Ok(Router::with_models(
+            embedder,
+            Box::new(MockLlm::new("big")),
+            Box::new(MockLlm::new("small")),
+            cfg,
+        ))
+    })
+    .expect("engine start");
+    let server = Server::bind("127.0.0.1:0", handle.clone()).expect("bind");
+    let addr = server.local_addr().unwrap().to_string();
+    let stop = server.stop_flag();
+    let join = std::thread::spawn(move || server.serve());
+    (engine, handle, addr, stop, join)
+}
+
+#[test]
+fn query_roundtrip_over_tcp() {
+    let (_engine, _handle, addr, stop, join) = start_stack();
+    let mut client = Client::connect(&addr).unwrap();
+
+    let r1 = client.query("why is coffee good for health?").unwrap();
+    assert_eq!(r1.get("pathway").unwrap().str().unwrap(), "miss");
+    assert!(r1.get("text").unwrap().str().unwrap().contains("big-fresh"));
+
+    let r2 = client.query("why is coffee great for health?").unwrap();
+    assert_eq!(r2.get("pathway").unwrap().str().unwrap(), "tweak_hit");
+    let sim = r2.get("similarity").unwrap().f64().unwrap();
+    assert!(sim >= 0.7, "sim={sim}");
+
+    let r3 = client.query("why is coffee good for health?").unwrap();
+    assert_eq!(r3.get("pathway").unwrap().str().unwrap(), "exact_hit");
+
+    stop.store(true, Ordering::Relaxed);
+    drop(client);
+    let _ = join.join().unwrap();
+}
+
+#[test]
+fn stats_endpoint_reports_counters() {
+    let (_engine, _handle, addr, stop, join) = start_stack();
+    let mut client = Client::connect(&addr).unwrap();
+    client.query("explain the soil of tomatoes").unwrap();
+    client.query("explain the soil of tomatoes please").unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("requests").unwrap().f64().unwrap() as u64, 2);
+    assert_eq!(stats.get("cache_size").unwrap().f64().unwrap() as u64, 1);
+    let hits = stats.get("tweak_hits").unwrap().f64().unwrap()
+        + stats.get("exact_hits").unwrap().f64().unwrap();
+    assert_eq!(hits as u64, 1);
+    stop.store(true, Ordering::Relaxed);
+    drop(client);
+    let _ = join.join().unwrap();
+}
+
+#[test]
+fn malformed_request_reports_error_not_crash() {
+    let (_engine, _handle, addr, stop, join) = start_stack();
+    let mut client = Client::connect(&addr).unwrap();
+    let resp = client
+        .roundtrip(&tweakllm::util::Json::obj_from(vec![(
+            "nonsense",
+            tweakllm::util::Json::num(1.0),
+        )]))
+        .unwrap();
+    assert!(resp.opt("error").is_some());
+    // server still alive afterwards
+    let ok = client.query("hello there").unwrap();
+    assert!(ok.opt("pathway").is_some());
+    stop.store(true, Ordering::Relaxed);
+    drop(client);
+    let _ = join.join().unwrap();
+}
+
+#[test]
+fn concurrent_clients_all_served() {
+    let (_engine, _handle, addr, stop, join) = start_stack();
+    let mut joins = Vec::new();
+    for c in 0..4 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let mut served = 0;
+            for i in 0..10 {
+                let r = client.query(&format!("client {c} question {i} about topic {i}")).unwrap();
+                assert!(r.opt("pathway").is_some(), "{}", r.to_string());
+                served += 1;
+            }
+            served
+        }));
+    }
+    let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    assert_eq!(total, 40);
+    stop.store(true, Ordering::Relaxed);
+    let _ = join.join().unwrap();
+}
+
+#[test]
+fn engine_in_process_handle_works_alongside_tcp() {
+    let (_engine, handle, _addr, stop, _join) = start_stack();
+    let r = handle.request("direct in-process request").unwrap();
+    assert!(!r.text.is_empty());
+    let stats = handle.stats().unwrap();
+    assert!(stats.requests >= 1);
+    stop.store(true, Ordering::Relaxed);
+}
