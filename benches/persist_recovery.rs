@@ -1,0 +1,138 @@
+//! Persistence bench (DESIGN.md §Persistence): snapshot-write, WAL-append,
+//! and recovery (snapshot load + WAL replay) throughput at cache sizes up
+//! to 100k entries — the warm-restart path a production cache-serving
+//! stack takes on every deploy.
+//!
+//! `cargo bench --bench persist_recovery [-- --n 100000 --dim 64]`
+//!
+//! No artifacts needed: entries are synthetic unit vectors. Dim defaults to
+//! 64 (not the embedder's 384) to keep the default run I/O-bound on record
+//! framing rather than raw byte volume; pass `--dim 384` for paper-scale
+//! vectors.
+
+use std::time::Instant;
+
+use tweakllm::bench::bench_args;
+use tweakllm::cache::{EvictionPolicy, IndexKind, PersistConfig, SemanticCache};
+use tweakllm::util::{normalize, Rng};
+
+fn rand_unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    normalize(&mut v);
+    v
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let n = args.usize("n", 100_000)?;
+    let dim = args.usize("dim", 64)?;
+
+    let dir = std::env::temp_dir().join(format!(
+        "tweakllm-bench-persist-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = PersistConfig {
+        data_dir: dir.to_string_lossy().to_string(),
+        wal_fsync: false,
+        compact_bytes: u64::MAX, // explicit compaction only: we time it
+    };
+
+    println!("\n=== Cache persistence — {n} entries, dim {dim} ===");
+    let mut rng = Rng::new(20260728);
+    let queries: Vec<String> = (0..n)
+        .map(|i| format!("synthetic query number {i} about topic {}", i % 997))
+        .collect();
+    let vectors: Vec<Vec<f32>> = (0..n).map(|_| rand_unit(&mut rng, dim)).collect();
+
+    // ---- WAL append throughput (journaled inserts) ----
+    let (mut cache, _) = SemanticCache::open_persistent(
+        dim,
+        IndexKind::Flat,
+        EvictionPolicy::None,
+        usize::MAX,
+        true,
+        &cfg,
+    )?;
+    let t = Instant::now();
+    for (q, v) in queries.iter().zip(&vectors) {
+        cache.insert(q, "cached response body (short)", v.clone());
+    }
+    let wal_s = t.elapsed().as_secs_f64();
+    let wal_bytes = cache.persist_status().unwrap().wal_bytes;
+    println!(
+        "WAL append      : {:>9.0} inserts/s   ({:.2} s, {:.1} MiB, {:.1} MiB/s)",
+        n as f64 / wal_s,
+        wal_s,
+        wal_bytes as f64 / (1024.0 * 1024.0),
+        wal_bytes as f64 / (1024.0 * 1024.0) / wal_s
+    );
+
+    // ---- WAL replay throughput (crash recovery path) ----
+    drop(cache); // no snapshot: the WAL is the only durable state
+    let t = Instant::now();
+    let (mut cache, report) = SemanticCache::open_persistent(
+        dim,
+        IndexKind::Flat,
+        EvictionPolicy::None,
+        usize::MAX,
+        true,
+        &cfg,
+    )?;
+    let replay_s = t.elapsed().as_secs_f64();
+    assert_eq!(report.recovered_entries as usize, n);
+    assert_eq!(report.replayed_ops as usize, n);
+    println!(
+        "WAL replay      : {:>9.0} ops/s       ({:.2} s for {} ops)",
+        n as f64 / replay_s,
+        replay_s,
+        report.replayed_ops
+    );
+
+    // ---- snapshot write (compaction) ----
+    let t = Instant::now();
+    let generation = cache.compact_now()?.unwrap();
+    let snap_s = t.elapsed().as_secs_f64();
+    let snap_path = std::fs::read_dir(&dir)?
+        .map(|e| e.unwrap().path())
+        .find(|p| p.to_string_lossy().ends_with(".snap"))
+        .expect("snapshot file");
+    let snap_bytes = std::fs::metadata(&snap_path)?.len();
+    println!(
+        "snapshot write  : {:>9.0} entries/s   ({:.2} s, {:.1} MiB, {:.1} MiB/s, gen {generation})",
+        n as f64 / snap_s,
+        snap_s,
+        snap_bytes as f64 / (1024.0 * 1024.0),
+        snap_bytes as f64 / (1024.0 * 1024.0) / snap_s
+    );
+
+    // ---- snapshot load (warm restart after graceful shutdown) ----
+    drop(cache);
+    let t = Instant::now();
+    let (cache, report) = SemanticCache::open_persistent(
+        dim,
+        IndexKind::Flat,
+        EvictionPolicy::None,
+        usize::MAX,
+        true,
+        &cfg,
+    )?;
+    let load_s = t.elapsed().as_secs_f64();
+    assert_eq!(report.recovered_entries as usize, n);
+    assert_eq!(report.replayed_ops, 0);
+    println!(
+        "snapshot load   : {:>9.0} entries/s   ({:.2} s)",
+        n as f64 / load_s,
+        load_s
+    );
+
+    // Sanity: the recovered cache answers (spot-check one self-query).
+    let hits = {
+        let mut c = cache;
+        c.search(&vectors[n / 2], 1)
+    };
+    assert_eq!(hits[0].id, n / 2);
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

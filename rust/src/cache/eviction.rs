@@ -138,6 +138,27 @@ impl EvictionStrategy {
         Some(id)
     }
 
+    /// Per-id metadata `(inserted_at, last_used, use_count)` for snapshots.
+    /// `None` when the id is not live (evicted / never inserted).
+    pub fn meta(&self, id: usize) -> Option<(u64, u64, u64)> {
+        let inserted = *self.inserted_at.get(&id)?;
+        Some((
+            inserted,
+            self.last_used.get(&id).copied().unwrap_or(inserted),
+            self.use_count.get(&id).copied().unwrap_or(0),
+        ))
+    }
+
+    /// Re-register an id with explicit metadata (persistence recovery).
+    /// Ids must be restored in ascending order so FIFO/TTL victim selection
+    /// (which takes `live[0]` as oldest) matches the pre-crash ordering.
+    pub fn restore(&mut self, id: usize, inserted_at: u64, last_used: u64, use_count: u64) {
+        self.inserted_at.insert(id, inserted_at);
+        self.last_used.insert(id, last_used);
+        self.use_count.insert(id, use_count);
+        self.live.push(id);
+    }
+
     pub fn forget(&mut self, id: usize) {
         self.live.retain(|x| *x != id);
         self.inserted_at.remove(&id);
@@ -206,6 +227,22 @@ mod tests {
         assert_eq!(e.expired(20), vec![0, 1]);
         assert_eq!(e.expired(12), vec![0]);
         assert_eq!(e.expired(5), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn meta_roundtrips_through_restore() {
+        let mut e = EvictionStrategy::new(EvictionPolicy::Lru, 4);
+        e.on_insert(0, 10);
+        e.on_hit(0, 12);
+        e.on_hit(0, 15);
+        let (ins, last, uses) = e.meta(0).unwrap();
+        assert_eq!((ins, last, uses), (10, 15, 2));
+        assert_eq!(e.meta(9), None);
+
+        let mut r = EvictionStrategy::new(EvictionPolicy::Lru, 4);
+        r.restore(0, ins, last, uses);
+        assert_eq!(r.meta(0), Some((10, 15, 2)));
+        assert_eq!(r.live_count(), 1);
     }
 
     #[test]

@@ -5,15 +5,21 @@
 //! top-k via a FLAT (exact scan) or IVF_FLAT (k-means coarse quantizer +
 //! nprobe) index, and supports the append-only policy the paper uses plus
 //! the eviction policies its §6.2 lists as future work.
+//!
+//! The `persist` submodule makes the store durable: binary snapshots + an
+//! append-only WAL with crash-safe recovery, so the cache — the asset whose
+//! value accrues over millions of queries — survives process restarts.
 
 pub mod eviction;
 pub mod flat;
 pub mod ivf;
+pub mod persist;
 pub mod store;
 
 pub use eviction::{EvictionPolicy, EvictionStrategy};
 pub use flat::FlatIndex;
 pub use ivf::IvfFlatIndex;
+pub use persist::{PersistConfig, PersistStatus, Persistence, RecoveryReport, WalOp};
 pub use store::{CacheEntry, CacheStats, IndexKind, SemanticCache};
 
 /// A scored search result.

@@ -1,0 +1,1027 @@
+//! Durable cache persistence: binary snapshots + append-only WAL + crash
+//! recovery + size-triggered compaction.
+//!
+//! The paper's cache accrues value over millions of queries, but an
+//! in-process store dies with the process. This module makes the cache a
+//! long-lived asset (cf. SCALM / MeanCache, which both treat the semantic
+//! cache as a persistent store):
+//!
+//! * **Snapshot** — one binary file holding the full cache state: every id
+//!   slot (live entries *and* tombstones, so ids stay stable), L2-normalized
+//!   embeddings, eviction/touch metadata, the logical clock, and the cache
+//!   stats. Written atomically (tmp + rename) and verified by a trailing
+//!   checksum.
+//! * **WAL** — an append-only log of every `insert` / `remove` / `touch`
+//!   between snapshots. Each record is individually checksummed so a torn
+//!   tail (crash mid-append) is detected and dropped, never replayed.
+//! * **Recovery** — `snapshot + WAL replay → identical cache`. A generation
+//!   counter pairs each WAL with the snapshot it extends; stale files from
+//!   older generations are garbage-collected on open.
+//! * **Compaction** — once the WAL outgrows `compact_bytes`, the whole state
+//!   is folded into a fresh snapshot at generation `g+1` and a new empty WAL
+//!   is started; the old generation's files are deleted.
+//!
+//! File layout inside `data_dir` (all integers little-endian):
+//!
+//! ```text
+//! snapshot-<gen>.snap:
+//!   "TWKS" | version u32 | generation u64 | dim u64 | tick u64
+//!   | stats (inserts, lookups, exact_hits, evictions: u64 x4)
+//!   | n_slots u64
+//!   | per slot: flag u8 (0 = tombstone, 1 = live);
+//!       live: query str | response str | embedding f32[dim]
+//!             | inserted_at u64 | last_used u64 | use_count u64
+//!   | checksum u64 (hash of every preceding byte)
+//!
+//! wal-<gen>.log:
+//!   "TWKW" | version u32 | generation u64
+//!   | records: op u8 | payload_len u32 | payload | checksum u64 (op+payload)
+//! ```
+//!
+//! Strings are `u32` length + UTF-8 bytes; embeddings are `u32` count + raw
+//! f32 little-endian. Checksums use the crate's FNV-style `hash_bytes`.
+//!
+//! A `LOCK` file (owner pid) guards the directory against a second writer;
+//! see `acquire_lock`.
+//!
+//! Caveat: recovery rebuilds the vector index by re-inserting embeddings.
+//! For FLAT this is bit-identical (same rows, same order, same scores). For
+//! IVF_FLAT the recovered quantizer may train at a different point than the
+//! original run's (tombstones replay as insert+remove, shifting the live
+//! count trajectory), so ANN results near cluster borders can differ after
+//! recovery; the quantizer state itself is not serialized.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::store::CacheStats;
+use crate::util::rng::hash_bytes;
+
+pub const SNAPSHOT_MAGIC: [u8; 4] = *b"TWKS";
+pub const WAL_MAGIC: [u8; 4] = *b"TWKW";
+pub const FORMAT_VERSION: u32 = 1;
+
+const OP_INSERT: u8 = 1;
+const OP_REMOVE: u8 = 2;
+const OP_TOUCH: u8 = 3;
+
+/// `[persist]` section of the config. An empty `data_dir` disables the
+/// subsystem entirely (the paper-faithful ephemeral mode).
+#[derive(Clone, Debug)]
+pub struct PersistConfig {
+    /// Directory for snapshot + WAL files. Empty string = disabled.
+    pub data_dir: String,
+    /// fsync the WAL after every append (durable but slower). Snapshots are
+    /// always synced regardless.
+    pub wal_fsync: bool,
+    /// Fold the WAL into a fresh snapshot once it exceeds this many bytes.
+    pub compact_bytes: u64,
+}
+
+impl Default for PersistConfig {
+    fn default() -> Self {
+        PersistConfig {
+            data_dir: String::new(),
+            wal_fsync: false,
+            compact_bytes: 64 * 1024 * 1024,
+        }
+    }
+}
+
+impl PersistConfig {
+    pub fn enabled(&self) -> bool {
+        !self.data_dir.is_empty()
+    }
+}
+
+/// What recovery found on open (surfaced in `EngineStats` and logs).
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// Generation of the recovered state.
+    pub generation: u64,
+    /// Id slots restored from the snapshot (live + tombstoned).
+    pub snapshot_slots: u64,
+    /// WAL records replayed on top of the snapshot.
+    pub replayed_ops: u64,
+    /// Live entries in the cache after recovery.
+    pub recovered_entries: u64,
+    /// True when the WAL ended in a torn (partially-written) record that was
+    /// discarded.
+    pub torn_tail: bool,
+}
+
+/// Live counters for the persistence layer (surfaced in stats/metrics).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PersistStatus {
+    pub generation: u64,
+    pub wal_bytes: u64,
+    pub wal_records: u64,
+    pub compactions: u64,
+    /// Unix seconds of the last compaction/snapshot (0 = never this run).
+    pub last_compaction_unix: u64,
+    /// Journal append failures (the cache keeps serving; see store.rs).
+    pub io_errors: u64,
+}
+
+/// Everything a snapshot captures for one live id slot.
+#[derive(Clone, Debug)]
+pub struct SnapshotEntry {
+    pub query: String,
+    pub response: String,
+    pub embedding: Vec<f32>,
+    pub inserted_at: u64,
+    pub last_used: u64,
+    pub use_count: u64,
+}
+
+/// Full serializable cache state (`None` slots are tombstones, kept so that
+/// ids stay stable across restarts).
+#[derive(Clone, Debug)]
+pub struct SnapshotState {
+    pub dim: usize,
+    pub tick: u64,
+    pub stats: CacheStats,
+    pub entries: Vec<Option<SnapshotEntry>>,
+}
+
+/// One WAL record (the read-side representation; the write side encodes
+/// straight from borrowed data to avoid clones on the hot path).
+#[derive(Clone, Debug)]
+pub enum WalOp {
+    Insert {
+        id: u64,
+        tick: u64,
+        query: String,
+        response: String,
+        embedding: Vec<f32>,
+    },
+    Remove {
+        id: u64,
+        tick: u64,
+    },
+    Touch {
+        id: u64,
+        tick: u64,
+    },
+}
+
+// ---------------------------------------------------------------------------
+// byte-level encoding helpers
+// ---------------------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    put_u32(buf, v.len() as u32);
+    for x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked reader over a byte slice.
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cursor { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("truncated record: wanted {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        Ok(String::from_utf8(s.to_vec()).context("invalid UTF-8 in record")?)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let s = self.take(n * 4)?;
+        let mut v = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut a = [0u8; 4];
+            a.copy_from_slice(&s[i * 4..i * 4 + 4]);
+            v.push(f32::from_le_bytes(a));
+        }
+        Ok(v)
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.b.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// snapshot encode / decode
+// ---------------------------------------------------------------------------
+
+/// Serialize a snapshot (including trailing checksum).
+pub fn encode_snapshot(state: &SnapshotState, generation: u64) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + state.entries.len() * 64);
+    buf.extend_from_slice(&SNAPSHOT_MAGIC);
+    put_u32(&mut buf, FORMAT_VERSION);
+    put_u64(&mut buf, generation);
+    put_u64(&mut buf, state.dim as u64);
+    put_u64(&mut buf, state.tick);
+    put_u64(&mut buf, state.stats.inserts);
+    put_u64(&mut buf, state.stats.lookups);
+    put_u64(&mut buf, state.stats.exact_hits);
+    put_u64(&mut buf, state.stats.evictions);
+    put_u64(&mut buf, state.entries.len() as u64);
+    for slot in &state.entries {
+        match slot {
+            None => buf.push(0),
+            Some(e) => {
+                buf.push(1);
+                put_str(&mut buf, &e.query);
+                put_str(&mut buf, &e.response);
+                put_f32s(&mut buf, &e.embedding);
+                put_u64(&mut buf, e.inserted_at);
+                put_u64(&mut buf, e.last_used);
+                put_u64(&mut buf, e.use_count);
+            }
+        }
+    }
+    let sum = hash_bytes(&buf);
+    put_u64(&mut buf, sum);
+    buf
+}
+
+/// Parse + verify a snapshot; returns the state and its generation.
+pub fn decode_snapshot(bytes: &[u8]) -> Result<(SnapshotState, u64)> {
+    if bytes.len() < 4 + 4 + 8 + 8 {
+        bail!("snapshot too short ({} bytes)", bytes.len());
+    }
+    let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let mut a = [0u8; 8];
+    a.copy_from_slice(sum_bytes);
+    let want = u64::from_le_bytes(a);
+    let got = hash_bytes(body);
+    if want != got {
+        bail!("snapshot checksum mismatch (file {want:#x}, computed {got:#x})");
+    }
+    let mut c = Cursor::new(body);
+    if c.take(4)? != SNAPSHOT_MAGIC {
+        bail!("bad snapshot magic");
+    }
+    let version = c.u32()?;
+    if version != FORMAT_VERSION {
+        bail!("unsupported snapshot version {version}");
+    }
+    let generation = c.u64()?;
+    let dim = c.u64()? as usize;
+    let tick = c.u64()?;
+    let stats = CacheStats {
+        inserts: c.u64()?,
+        lookups: c.u64()?,
+        exact_hits: c.u64()?,
+        evictions: c.u64()?,
+    };
+    let n = c.u64()? as usize;
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        match c.u8()? {
+            0 => entries.push(None),
+            1 => {
+                let query = c.str()?;
+                let response = c.str()?;
+                let embedding = c.f32s()?;
+                if embedding.len() != dim {
+                    bail!(
+                        "snapshot embedding dim {} != header dim {dim}",
+                        embedding.len()
+                    );
+                }
+                let inserted_at = c.u64()?;
+                let last_used = c.u64()?;
+                let use_count = c.u64()?;
+                entries.push(Some(SnapshotEntry {
+                    query,
+                    response,
+                    embedding,
+                    inserted_at,
+                    last_used,
+                    use_count,
+                }));
+            }
+            f => bail!("bad slot flag {f}"),
+        }
+    }
+    if !c.done() {
+        bail!("trailing bytes after snapshot body");
+    }
+    Ok((SnapshotState { dim, tick, stats, entries }, generation))
+}
+
+// ---------------------------------------------------------------------------
+// WAL writer / reader
+// ---------------------------------------------------------------------------
+
+const WAL_HEADER_LEN: u64 = 4 + 4 + 8;
+
+/// Append-only WAL handle. Each record is framed and checksummed so that a
+/// crash mid-write corrupts at most the tail, which replay detects and drops.
+pub struct WalWriter {
+    file: File,
+    fsync: bool,
+    bytes: u64,
+    records: u64,
+}
+
+impl WalWriter {
+    /// Create a fresh WAL (truncates) and write the header.
+    fn create(path: &Path, generation: u64, fsync: bool) -> Result<WalWriter> {
+        let mut file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("creating WAL {}", path.display()))?;
+        let mut header = Vec::with_capacity(WAL_HEADER_LEN as usize);
+        header.extend_from_slice(&WAL_MAGIC);
+        put_u32(&mut header, FORMAT_VERSION);
+        put_u64(&mut header, generation);
+        file.write_all(&header)?;
+        file.sync_data()?;
+        Ok(WalWriter { file, fsync, bytes: WAL_HEADER_LEN, records: 0 })
+    }
+
+    /// Reopen an existing WAL for append at `valid_bytes` (everything past a
+    /// torn tail is truncated away first).
+    fn open_append(
+        path: &Path,
+        valid_bytes: u64,
+        records: u64,
+        fsync: bool,
+    ) -> Result<WalWriter> {
+        let mut file = OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening WAL {}", path.display()))?;
+        file.set_len(valid_bytes)?;
+        file.seek(SeekFrom::End(0))?;
+        Ok(WalWriter { file, fsync, bytes: valid_bytes, records })
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    fn append_raw(&mut self, op: u8, payload: &[u8]) -> Result<()> {
+        let mut frame = Vec::with_capacity(1 + 4 + payload.len() + 8);
+        frame.push(op);
+        put_u32(&mut frame, payload.len() as u32);
+        frame.extend_from_slice(payload);
+        let mut sum_input = Vec::with_capacity(1 + payload.len());
+        sum_input.push(op);
+        sum_input.extend_from_slice(payload);
+        put_u64(&mut frame, hash_bytes(&sum_input));
+        self.file.write_all(&frame)?;
+        if self.fsync {
+            self.file.sync_data()?;
+        }
+        self.bytes += frame.len() as u64;
+        self.records += 1;
+        Ok(())
+    }
+
+    pub fn append_insert(
+        &mut self,
+        id: u64,
+        tick: u64,
+        query: &str,
+        response: &str,
+        embedding: &[f32],
+    ) -> Result<()> {
+        let mut p = Vec::with_capacity(16 + query.len() + response.len() + embedding.len() * 4);
+        put_u64(&mut p, id);
+        put_u64(&mut p, tick);
+        put_str(&mut p, query);
+        put_str(&mut p, response);
+        put_f32s(&mut p, embedding);
+        self.append_raw(OP_INSERT, &p)
+    }
+
+    pub fn append_remove(&mut self, id: u64, tick: u64) -> Result<()> {
+        let mut p = Vec::with_capacity(16);
+        put_u64(&mut p, id);
+        put_u64(&mut p, tick);
+        self.append_raw(OP_REMOVE, &p)
+    }
+
+    pub fn append_touch(&mut self, id: u64, tick: u64) -> Result<()> {
+        let mut p = Vec::with_capacity(16);
+        put_u64(&mut p, id);
+        put_u64(&mut p, tick);
+        self.append_raw(OP_TOUCH, &p)
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+/// Result of scanning a WAL file.
+pub struct WalScan {
+    pub generation: u64,
+    pub ops: Vec<WalOp>,
+    /// Byte offset of the last fully-valid record's end.
+    pub valid_bytes: u64,
+    /// True when trailing bytes after `valid_bytes` were discarded.
+    pub torn_tail: bool,
+}
+
+/// Read a WAL file, stopping (not failing) at the first torn/corrupt record.
+pub fn read_wal(path: &Path) -> Result<WalScan> {
+    let mut bytes = Vec::new();
+    File::open(path)
+        .with_context(|| format!("opening WAL {}", path.display()))?
+        .read_to_end(&mut bytes)?;
+    if bytes.len() < WAL_HEADER_LEN as usize {
+        bail!("WAL shorter than header ({} bytes)", bytes.len());
+    }
+    if bytes[..4] != WAL_MAGIC {
+        bail!("bad WAL magic");
+    }
+    let mut c = Cursor::new(&bytes);
+    c.take(4)?; // magic
+    let version = c.u32()?;
+    if version != FORMAT_VERSION {
+        bail!("unsupported WAL version {version}");
+    }
+    let generation = c.u64()?;
+    let mut ops = Vec::new();
+    let mut valid = c.pos as u64;
+    let mut torn = false;
+    loop {
+        if c.done() {
+            break;
+        }
+        match read_wal_record(&mut c) {
+            Ok(op) => {
+                ops.push(op);
+                valid = c.pos as u64;
+            }
+            Err(_) => {
+                // Torn tail: drop everything from the failed record on.
+                torn = true;
+                break;
+            }
+        }
+    }
+    Ok(WalScan { generation, ops, valid_bytes: valid, torn_tail: torn })
+}
+
+fn read_wal_record(c: &mut Cursor) -> Result<WalOp> {
+    let op = c.u8()?;
+    let len = c.u32()? as usize;
+    let payload = c.take(len)?;
+    let want = c.u64()?;
+    let mut sum_input = Vec::with_capacity(1 + len);
+    sum_input.push(op);
+    sum_input.extend_from_slice(payload);
+    let got = hash_bytes(&sum_input);
+    if want != got {
+        bail!("WAL record checksum mismatch");
+    }
+    let mut p = Cursor::new(payload);
+    let rec = match op {
+        OP_INSERT => WalOp::Insert {
+            id: p.u64()?,
+            tick: p.u64()?,
+            query: p.str()?,
+            response: p.str()?,
+            embedding: p.f32s()?,
+        },
+        OP_REMOVE => WalOp::Remove { id: p.u64()?, tick: p.u64()? },
+        OP_TOUCH => WalOp::Touch { id: p.u64()?, tick: p.u64()? },
+        x => bail!("unknown WAL op {x}"),
+    };
+    if !p.done() {
+        bail!("trailing bytes in WAL payload");
+    }
+    Ok(rec)
+}
+
+// ---------------------------------------------------------------------------
+// the persistence manager: generations, recovery, compaction
+// ---------------------------------------------------------------------------
+
+fn snapshot_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("snapshot-{generation:08}.snap"))
+}
+
+fn wal_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("wal-{generation:08}.log"))
+}
+
+fn parse_gen(name: &str, prefix: &str, suffix: &str) -> Option<u64> {
+    name.strip_prefix(prefix)?.strip_suffix(suffix)?.parse().ok()
+}
+
+fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+fn lock_path(dir: &Path) -> PathBuf {
+    dir.join("LOCK")
+}
+
+/// Advisory cross-process lock: a `LOCK` file holding the owner's pid. Two
+/// processes appending to the same WAL would interleave frames and corrupt
+/// the stream, so a second open fails fast while the owner is alive. A lock
+/// left by a dead process (crash) is detected via `/proc/<pid>` on Linux
+/// and taken over; on platforms without `/proc` the lock is best-effort.
+fn acquire_lock(dir: &Path) -> Result<()> {
+    let path = lock_path(dir);
+    if let Ok(prev) = fs::read_to_string(&path) {
+        if let Ok(pid) = prev.trim().parse::<u32>() {
+            let alive = pid != std::process::id()
+                && Path::new(&format!("/proc/{pid}")).exists();
+            if alive {
+                bail!(
+                    "data dir {} is locked by live process {pid} \
+                     (two writers would corrupt the WAL); remove {} only if \
+                     that process is really gone",
+                    dir.display(),
+                    path.display()
+                );
+            }
+        }
+    }
+    fs::write(&path, format!("{}\n", std::process::id()))
+        .with_context(|| format!("writing lock {}", path.display()))?;
+    Ok(())
+}
+
+/// Owns the data directory: the open WAL, the generation counter, and the
+/// compaction machinery. Attached to a `SemanticCache` after recovery; the
+/// cache journals every mutation through it.
+pub struct Persistence {
+    dir: PathBuf,
+    cfg: PersistConfig,
+    generation: u64,
+    wal: WalWriter,
+    compactions: u64,
+    last_compaction_unix: u64,
+    pub(super) io_errors: u64,
+    /// Set when a WAL append failed: further appends are suppressed (a gap
+    /// or partial frame would make everything after it unrecoverable) until
+    /// a successful compaction re-establishes a clean snapshot + fresh WAL.
+    poisoned: bool,
+}
+
+impl Persistence {
+    /// Open (or create) the data dir, pick the newest verified snapshot, and
+    /// scan its WAL. Returns the manager plus whatever state must be
+    /// replayed into a fresh cache.
+    ///
+    /// A snapshot that exists but fails verification is an **error**, not a
+    /// silent fallback: compaction deletes the WAL the snapshot folded, so
+    /// skipping a corrupt snapshot would serve an empty cache as if nothing
+    /// were lost.
+    pub fn open(
+        cfg: &PersistConfig,
+    ) -> Result<(Persistence, Option<SnapshotState>, Vec<WalOp>, RecoveryReport)> {
+        if !cfg.enabled() {
+            bail!("persistence is disabled (empty data_dir)");
+        }
+        let dir = PathBuf::from(&cfg.data_dir);
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating data dir {}", dir.display()))?;
+        acquire_lock(&dir)?;
+
+        // Newest snapshot generation on disk, if any.
+        let mut snap_gens: Vec<u64> = Vec::new();
+        for ent in fs::read_dir(&dir)? {
+            let ent = ent?;
+            let name = ent.file_name();
+            let name = name.to_string_lossy();
+            if let Some(g) = parse_gen(&name, "snapshot-", ".snap") {
+                snap_gens.push(g);
+            }
+        }
+        snap_gens.sort_unstable();
+
+        let mut report = RecoveryReport::default();
+        let (snapshot, generation) = match snap_gens.last() {
+            Some(&g) => {
+                let path = snapshot_path(&dir, g);
+                let mut bytes = Vec::new();
+                File::open(&path)
+                    .with_context(|| format!("opening snapshot {}", path.display()))?
+                    .read_to_end(&mut bytes)?;
+                let (state, file_gen) = decode_snapshot(&bytes)
+                    .with_context(|| format!("verifying snapshot {}", path.display()))?;
+                if file_gen != g {
+                    bail!(
+                        "snapshot {} claims generation {file_gen}, filename says {g}",
+                        path.display()
+                    );
+                }
+                report.snapshot_slots = state.entries.len() as u64;
+                (Some(state), g)
+            }
+            None => (None, 0),
+        };
+        report.generation = generation;
+
+        // Scan + reopen this generation's WAL (create it if absent — e.g. a
+        // crash between snapshot rename and WAL creation during compaction).
+        let wpath = wal_path(&dir, generation);
+        let (wal, ops) = if wpath.exists() {
+            let scan = read_wal(&wpath)
+                .with_context(|| format!("scanning WAL {}", wpath.display()))?;
+            if scan.generation != generation {
+                bail!(
+                    "WAL {} is generation {}, expected {generation}",
+                    wpath.display(),
+                    scan.generation
+                );
+            }
+            report.replayed_ops = scan.ops.len() as u64;
+            report.torn_tail = scan.torn_tail;
+            let w = WalWriter::open_append(
+                &wpath,
+                scan.valid_bytes,
+                scan.ops.len() as u64,
+                cfg.wal_fsync,
+            )?;
+            (w, scan.ops)
+        } else {
+            (WalWriter::create(&wpath, generation, cfg.wal_fsync)?, Vec::new())
+        };
+
+        let p = Persistence {
+            dir,
+            cfg: cfg.clone(),
+            generation,
+            wal,
+            compactions: 0,
+            last_compaction_unix: 0,
+            io_errors: 0,
+            poisoned: false,
+        };
+        p.gc_stale_generations();
+        Ok((p, snapshot, ops, report))
+    }
+
+    /// Delete files from generations other than the current one (stale after
+    /// compaction, or left behind by a crash mid-compaction).
+    fn gc_stale_generations(&self) {
+        let entries = match fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(_) => return,
+        };
+        for ent in entries.flatten() {
+            let name = ent.file_name();
+            let name = name.to_string_lossy().to_string();
+            let stale = match (
+                parse_gen(&name, "snapshot-", ".snap"),
+                parse_gen(&name, "wal-", ".log"),
+            ) {
+                (Some(g), _) | (_, Some(g)) => g != self.generation,
+                _ => name.ends_with(".tmp"),
+            };
+            if stale {
+                let _ = fs::remove_file(ent.path());
+            }
+        }
+    }
+
+    pub fn wal_mut(&mut self) -> &mut WalWriter {
+        &mut self.wal
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn status(&self) -> PersistStatus {
+        PersistStatus {
+            generation: self.generation,
+            wal_bytes: self.wal.bytes(),
+            wal_records: self.wal.records(),
+            compactions: self.compactions,
+            last_compaction_unix: self.last_compaction_unix,
+            io_errors: self.io_errors,
+        }
+    }
+
+    /// True once the WAL has outgrown the configured compaction threshold —
+    /// or when a failed append poisoned it and only a fresh snapshot can
+    /// restore durability.
+    pub fn wants_compaction(&self) -> bool {
+        self.poisoned || self.wal.bytes() >= self.cfg.compact_bytes
+    }
+
+    pub(super) fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    pub(super) fn poison(&mut self) {
+        self.poisoned = true;
+    }
+
+    /// Fold the given full state into a fresh snapshot at generation `g+1`,
+    /// start an empty WAL, and delete the old generation's files. Returns
+    /// the new generation.
+    pub fn compact(&mut self, state: &SnapshotState) -> Result<u64> {
+        let new_gen = self.generation + 1;
+        let bytes = encode_snapshot(state, new_gen);
+        let final_path = snapshot_path(&self.dir, new_gen);
+        let tmp_path = self.dir.join(format!("snapshot-{new_gen:08}.snap.tmp"));
+        {
+            let mut f = File::create(&tmp_path)
+                .with_context(|| format!("creating {}", tmp_path.display()))?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        // Create the new generation's WAL *before* publishing its snapshot:
+        // once the rename lands, recovery commits to generation g+1, so its
+        // WAL must already exist. (A crash before the rename leaves a stale
+        // future WAL that gc_stale_generations sweeps.) The reverse order
+        // would let a WAL-creation failure strand all subsequent journaling
+        // in the old generation, which the next open garbage-collects.
+        let new_wal = WalWriter::create(
+            &wal_path(&self.dir, new_gen),
+            new_gen,
+            self.cfg.wal_fsync,
+        )?;
+        if let Err(e) = fs::rename(&tmp_path, &final_path) {
+            let _ = fs::remove_file(wal_path(&self.dir, new_gen));
+            let _ = fs::remove_file(&tmp_path);
+            return Err(e)
+                .with_context(|| format!("publishing {}", final_path.display()));
+        }
+        let old_gen = self.generation;
+        self.wal = new_wal;
+        self.generation = new_gen;
+        self.compactions += 1;
+        self.last_compaction_unix = unix_now();
+        self.poisoned = false;
+        let _ = fs::remove_file(snapshot_path(&self.dir, old_gen));
+        let _ = fs::remove_file(wal_path(&self.dir, old_gen));
+        Ok(new_gen)
+    }
+}
+
+impl Drop for Persistence {
+    fn drop(&mut self) {
+        // Release the advisory lock iff we still own it.
+        let path = lock_path(&self.dir);
+        if let Ok(prev) = fs::read_to_string(&path) {
+            if prev.trim().parse::<u32>() == Ok(std::process::id()) {
+                let _ = fs::remove_file(&path);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "tweakllm-persist-{}-{}",
+            std::process::id(),
+            tag
+        ));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn state_with(n: usize, dim: usize) -> SnapshotState {
+        let entries = (0..n)
+            .map(|i| {
+                if i % 5 == 3 {
+                    None // tombstone
+                } else {
+                    Some(SnapshotEntry {
+                        query: format!("query {i}"),
+                        response: format!("response {i}"),
+                        embedding: (0..dim).map(|d| (i * dim + d) as f32).collect(),
+                        inserted_at: i as u64,
+                        last_used: i as u64 + 1,
+                        use_count: i as u64 % 3,
+                    })
+                }
+            })
+            .collect();
+        SnapshotState {
+            dim,
+            tick: 2 * n as u64,
+            stats: CacheStats { inserts: n as u64, lookups: 7, exact_hits: 2, evictions: 1 },
+            entries,
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let s = state_with(23, 8);
+        let bytes = encode_snapshot(&s, 5);
+        let (back, generation) = decode_snapshot(&bytes).unwrap();
+        assert_eq!(generation, 5);
+        assert_eq!(back.dim, 8);
+        assert_eq!(back.tick, s.tick);
+        assert_eq!(back.stats.inserts, s.stats.inserts);
+        assert_eq!(back.entries.len(), 23);
+        assert!(back.entries[3].is_none());
+        let e = back.entries[4].as_ref().unwrap();
+        assert_eq!(e.query, "query 4");
+        assert_eq!(e.embedding.len(), 8);
+        assert_eq!(e.last_used, 5);
+    }
+
+    #[test]
+    fn snapshot_detects_corruption() {
+        let s = state_with(4, 4);
+        let mut bytes = encode_snapshot(&s, 1);
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        assert!(decode_snapshot(&bytes).is_err());
+    }
+
+    #[test]
+    fn wal_roundtrip_and_torn_tail() {
+        let dir = tmp_dir("wal");
+        let path = wal_path(&dir, 3);
+        {
+            let mut w = WalWriter::create(&path, 3, false).unwrap();
+            w.append_insert(0, 1, "q0", "r0", &[0.5, -0.5]).unwrap();
+            w.append_touch(0, 2).unwrap();
+            w.append_remove(0, 3).unwrap();
+            w.sync().unwrap();
+            assert_eq!(w.records(), 3);
+        }
+        let scan = read_wal(&path).unwrap();
+        assert_eq!(scan.generation, 3);
+        assert_eq!(scan.ops.len(), 3);
+        assert!(!scan.torn_tail);
+        match &scan.ops[0] {
+            WalOp::Insert { id, tick, query, embedding, .. } => {
+                assert_eq!((*id, *tick), (0, 1));
+                assert_eq!(query, "q0");
+                assert_eq!(embedding, &vec![0.5, -0.5]);
+            }
+            other => panic!("expected insert, got {other:?}"),
+        }
+
+        // Append garbage: replay keeps the valid prefix and flags the tear.
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[OP_INSERT, 200, 0, 0]).unwrap(); // truncated frame
+        }
+        let scan = read_wal(&path).unwrap();
+        assert_eq!(scan.ops.len(), 3);
+        assert!(scan.torn_tail);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_creates_and_recovers_generations() {
+        let dir = tmp_dir("open");
+        let cfg = PersistConfig {
+            data_dir: dir.to_string_lossy().to_string(),
+            wal_fsync: false,
+            compact_bytes: u64::MAX,
+        };
+        // Fresh dir: generation 0, no snapshot, empty WAL.
+        {
+            let (mut p, snap, ops, report) = Persistence::open(&cfg).unwrap();
+            assert!(snap.is_none());
+            assert!(ops.is_empty());
+            assert_eq!(report.generation, 0);
+            p.wal_mut().append_insert(0, 1, "q", "r", &[1.0]).unwrap();
+            // Compact into generation 1.
+            let state = SnapshotState {
+                dim: 1,
+                tick: 1,
+                stats: CacheStats { inserts: 1, ..Default::default() },
+                entries: vec![Some(SnapshotEntry {
+                    query: "q".into(),
+                    response: "r".into(),
+                    embedding: vec![1.0],
+                    inserted_at: 1,
+                    last_used: 1,
+                    use_count: 0,
+                })],
+            };
+            assert_eq!(p.compact(&state).unwrap(), 1);
+            p.wal_mut().append_touch(0, 2).unwrap();
+        }
+        // Old generation files are gone; reopen resumes generation 1 with
+        // the snapshot plus one WAL op.
+        assert!(!wal_path(&dir, 0).exists());
+        {
+            let (p, snap, ops, report) = Persistence::open(&cfg).unwrap();
+            assert_eq!(p.generation(), 1);
+            assert_eq!(report.generation, 1);
+            let snap = snap.unwrap();
+            assert_eq!(snap.entries.len(), 1);
+            assert_eq!(ops.len(), 1);
+            assert!(matches!(ops[0], WalOp::Touch { id: 0, tick: 2 }));
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lock_file_blocks_a_second_live_writer() {
+        let dir = tmp_dir("lock");
+        let cfg = PersistConfig {
+            data_dir: dir.to_string_lossy().to_string(),
+            wal_fsync: false,
+            compact_bytes: u64::MAX,
+        };
+        {
+            let (_p, _, _, _) = Persistence::open(&cfg).unwrap();
+            assert!(lock_path(&dir).exists());
+        }
+        // Dropped: the lock is released.
+        assert!(!lock_path(&dir).exists());
+        // A lock held by a live foreign process blocks the open. pid 1 is
+        // always alive on Linux; elsewhere the lock is best-effort only.
+        if cfg!(target_os = "linux") && Path::new("/proc/1").exists() {
+            fs::write(lock_path(&dir), "1\n").unwrap();
+            assert!(Persistence::open(&cfg).is_err());
+            fs::remove_file(lock_path(&dir)).unwrap();
+        }
+        // A stale lock from a dead process is taken over.
+        fs::write(lock_path(&dir), "999999999\n").unwrap();
+        assert!(Persistence::open(&cfg).is_ok());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_an_error_not_a_fallback() {
+        let dir = tmp_dir("corrupt");
+        let cfg = PersistConfig {
+            data_dir: dir.to_string_lossy().to_string(),
+            wal_fsync: false,
+            compact_bytes: u64::MAX,
+        };
+        {
+            let (mut p, _, _, _) = Persistence::open(&cfg).unwrap();
+            let state = state_with(6, 2);
+            p.compact(&state).unwrap();
+        }
+        // Flip a byte in the snapshot: open must refuse, not serve empty.
+        let path = snapshot_path(&dir, 1);
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        fs::write(&path, &bytes).unwrap();
+        assert!(Persistence::open(&cfg).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -4,6 +4,12 @@
 
 use std::collections::HashMap;
 
+use anyhow::{bail, Result};
+
+use super::persist::{
+    PersistConfig, Persistence, PersistStatus, RecoveryReport, SnapshotEntry, SnapshotState,
+    WalOp,
+};
 use super::{EvictionPolicy, EvictionStrategy, FlatIndex, IvfFlatIndex, SearchHit, VectorIndex};
 
 /// One cached interaction: the paper stores exactly this triple.
@@ -42,6 +48,8 @@ pub struct SemanticCache {
     eviction: EvictionStrategy,
     tick: u64,
     stats: CacheStats,
+    /// Durability layer (snapshots + WAL). `None` = ephemeral (paper mode).
+    persist: Option<Persistence>,
 }
 
 impl SemanticCache {
@@ -60,7 +68,39 @@ impl SemanticCache {
             eviction: EvictionStrategy::new(EvictionPolicy::None, usize::MAX),
             tick: 0,
             stats: CacheStats::default(),
+            persist: None,
         }
+    }
+
+    /// Build a durable cache: recover `snapshot + WAL` from `cfg.data_dir`
+    /// (creating it on first run), then keep journaling every mutation.
+    pub fn open_persistent(
+        dim: usize,
+        kind: IndexKind,
+        policy: EvictionPolicy,
+        capacity: usize,
+        exact_enabled: bool,
+        cfg: &PersistConfig,
+    ) -> Result<(SemanticCache, RecoveryReport)> {
+        let (persistence, snapshot, ops, mut report) = Persistence::open(cfg)?;
+        let mut cache = SemanticCache::new(dim, kind)
+            .with_eviction(policy, capacity)
+            .with_exact_match(exact_enabled);
+        if let Some(state) = snapshot {
+            if state.dim != dim {
+                bail!(
+                    "snapshot dim {} does not match embedder dim {dim}",
+                    state.dim
+                );
+            }
+            cache.restore(state);
+        }
+        for op in ops {
+            cache.apply_wal_op(op)?;
+        }
+        report.recovered_entries = cache.len() as u64;
+        cache.persist = Some(persistence);
+        Ok((cache, report))
     }
 
     pub fn with_eviction(mut self, policy: EvictionPolicy, capacity: usize) -> Self {
@@ -87,15 +127,24 @@ impl SemanticCache {
             if let Some(victim) = self.eviction.victim() {
                 self.index.remove(victim);
                 if let Some(e) = self.entries[victim].take() {
-                    self.exact.remove(&Self::text_key(&e.query_text));
+                    // Only drop the exact-map key if it still points at the
+                    // victim: a later duplicate insert may own it by now.
+                    let key = Self::text_key(&e.query_text);
+                    if self.exact.get(&key) == Some(&victim) {
+                        self.exact.remove(&key);
+                    }
                 }
                 self.stats.evictions += 1;
+                let tick = self.tick;
+                self.journal(|w| w.append_remove(victim as u64, tick));
             } else {
                 break;
             }
         }
         let id = self.index.insert(&embedding);
         debug_assert_eq!(id, self.entries.len());
+        let tick = self.tick;
+        self.journal(|w| w.append_insert(id as u64, tick, query, response, &embedding));
         self.entries.push(Some(CacheEntry {
             query_text: query.to_string(),
             response_text: response.to_string(),
@@ -105,6 +154,7 @@ impl SemanticCache {
             self.exact.insert(Self::text_key(query), id);
         }
         self.eviction.on_insert(id, self.tick);
+        self.maybe_compact();
         id
     }
 
@@ -115,10 +165,15 @@ impl SemanticCache {
         }
         self.tick += 1;
         let id = *self.exact.get(&Self::text_key(query))?;
-        let e = self.entries[id].as_ref()?;
+        if self.entries.get(id).map_or(true, |e| e.is_none()) {
+            return None;
+        }
         self.stats.exact_hits += 1;
         self.eviction.on_hit(id, self.tick);
-        Some((id, e))
+        let tick = self.tick;
+        self.journal(|w| w.append_touch(id as u64, tick));
+        self.maybe_compact();
+        self.entries[id].as_ref().map(|e| (id, e))
     }
 
     /// ANN lookup: top-k entries by cosine similarity.
@@ -132,6 +187,190 @@ impl SemanticCache {
     pub fn touch(&mut self, id: usize) {
         self.tick += 1;
         self.eviction.on_hit(id, self.tick);
+        let tick = self.tick;
+        self.journal(|w| w.append_touch(id as u64, tick));
+        // Hit-heavy workloads append Touch records without ever inserting,
+        // so the size check must live on this path too.
+        self.maybe_compact();
+    }
+
+    /// Append one record to the WAL, if persistence is attached. Journal
+    /// failures never take down serving: they are counted (see
+    /// `persist_status().io_errors`) and logged, and the cache stays usable
+    /// as an ephemeral store. A failed append *poisons* the WAL — a gap or
+    /// partial frame would make every later record unrecoverable, so
+    /// appends stop until the next successful compaction (which the next
+    /// mutation attempts via `maybe_compact`) re-establishes durability.
+    fn journal<F>(&mut self, f: F)
+    where
+        F: FnOnce(&mut super::persist::WalWriter) -> Result<()>,
+    {
+        if let Some(p) = self.persist.as_mut() {
+            if p.is_poisoned() {
+                return;
+            }
+            if let Err(e) = f(p.wal_mut()) {
+                p.io_errors += 1;
+                p.poison();
+                eprintln!("[cache::persist] WAL append failed: {e:#}");
+            }
+        }
+    }
+
+    /// Fold the WAL into a fresh snapshot when it outgrew `compact_bytes`.
+    fn maybe_compact(&mut self) {
+        let wants = self.persist.as_ref().map_or(false, |p| p.wants_compaction());
+        if wants {
+            if let Err(e) = self.compact_now() {
+                if let Some(p) = self.persist.as_mut() {
+                    p.io_errors += 1;
+                }
+                eprintln!("[cache::persist] compaction failed: {e:#}");
+            }
+        }
+    }
+
+    /// Force a snapshot + WAL rotation now (graceful shutdown, the
+    /// `{"admin": "snapshot"}` protocol verb). Returns the new generation,
+    /// or `None` when persistence is disabled.
+    pub fn compact_now(&mut self) -> Result<Option<u64>> {
+        if self.persist.is_none() {
+            return Ok(None);
+        }
+        let state = self.snapshot_state();
+        let p = self.persist.as_mut().expect("checked above");
+        Ok(Some(p.compact(&state)?))
+    }
+
+    /// Live persistence counters (`None` when running ephemeral).
+    pub fn persist_status(&self) -> Option<PersistStatus> {
+        self.persist.as_ref().map(|p| p.status())
+    }
+
+    /// Capture the full cache state for a snapshot: every id slot (live and
+    /// tombstoned), embeddings, and eviction/touch metadata.
+    pub fn snapshot_state(&self) -> SnapshotState {
+        let entries = self
+            .entries
+            .iter()
+            .enumerate()
+            .map(|(id, slot)| {
+                slot.as_ref().map(|e| {
+                    let (inserted_at, last_used, use_count) =
+                        self.eviction.meta(id).unwrap_or((0, 0, 0));
+                    SnapshotEntry {
+                        query: e.query_text.clone(),
+                        response: e.response_text.clone(),
+                        embedding: e.embedding.clone(),
+                        inserted_at,
+                        last_used,
+                        use_count,
+                    }
+                })
+            })
+            .collect();
+        SnapshotState {
+            dim: self.index.dim(),
+            tick: self.tick,
+            stats: self.stats,
+            entries,
+        }
+    }
+
+    /// Rebuild state from a snapshot. Only valid on a freshly-built cache.
+    /// Tombstoned slots are re-created (as removed index rows) so that ids
+    /// keep their pre-crash values.
+    fn restore(&mut self, state: SnapshotState) {
+        assert!(
+            self.entries.is_empty(),
+            "restore() requires an empty cache"
+        );
+        for (id, slot) in state.entries.into_iter().enumerate() {
+            match slot {
+                Some(e) => {
+                    let got = self.index.insert(&e.embedding);
+                    debug_assert_eq!(got, id);
+                    if self.exact_enabled {
+                        self.exact.insert(Self::text_key(&e.query), id);
+                    }
+                    self.eviction.restore(id, e.inserted_at, e.last_used, e.use_count);
+                    self.entries.push(Some(CacheEntry {
+                        query_text: e.query,
+                        response_text: e.response,
+                        embedding: e.embedding,
+                    }));
+                }
+                None => {
+                    let placeholder = vec![0.0f32; self.index.dim()];
+                    let got = self.index.insert(&placeholder);
+                    debug_assert_eq!(got, id);
+                    self.index.remove(id);
+                    self.entries.push(None);
+                }
+            }
+        }
+        self.tick = state.tick;
+        self.stats = state.stats;
+    }
+
+    /// Replay one WAL record on top of the current state. Unlike `insert`,
+    /// replay never runs the eviction policy: the original run's evictions
+    /// are explicit `Remove` records that precede their triggering insert.
+    fn apply_wal_op(&mut self, op: WalOp) -> Result<()> {
+        match op {
+            WalOp::Insert { id, tick, query, response, embedding } => {
+                let id = id as usize;
+                if id != self.entries.len() {
+                    bail!(
+                        "WAL insert id {id} out of order (expected {})",
+                        self.entries.len()
+                    );
+                }
+                if embedding.len() != self.index.dim() {
+                    bail!(
+                        "WAL embedding dim {} != index dim {}",
+                        embedding.len(),
+                        self.index.dim()
+                    );
+                }
+                let got = self.index.insert(&embedding);
+                debug_assert_eq!(got, id);
+                if self.exact_enabled {
+                    self.exact.insert(Self::text_key(&query), id);
+                }
+                self.eviction.restore(id, tick, tick, 0);
+                self.entries.push(Some(CacheEntry {
+                    query_text: query,
+                    response_text: response,
+                    embedding,
+                }));
+                self.stats.inserts += 1;
+                self.tick = self.tick.max(tick);
+            }
+            WalOp::Remove { id, tick } => {
+                let id = id as usize;
+                if let Some(e) = self.entries.get_mut(id).and_then(|s| s.take()) {
+                    // Mirror the live eviction path: leave the key alone if
+                    // a later duplicate insert owns it.
+                    let key = Self::text_key(&e.query_text);
+                    if self.exact.get(&key) == Some(&id) {
+                        self.exact.remove(&key);
+                    }
+                    self.index.remove(id);
+                    self.eviction.forget(id);
+                    self.stats.evictions += 1;
+                }
+                self.tick = self.tick.max(tick);
+            }
+            WalOp::Touch { id, tick } => {
+                let id = id as usize;
+                if self.entries.get(id).map_or(false, |e| e.is_some()) {
+                    self.eviction.on_hit(id, tick);
+                }
+                self.tick = self.tick.max(tick);
+            }
+        }
+        Ok(())
     }
 
     pub fn entry(&self, id: usize) -> Option<&CacheEntry> {
@@ -237,5 +476,141 @@ mod tests {
         }
         assert_eq!(c.len(), 100);
         assert_eq!(c.stats().evictions, 0);
+    }
+
+    fn persist_cfg(tag: &str) -> PersistConfig {
+        let dir = std::env::temp_dir().join(format!(
+            "tweakllm-store-{}-{}",
+            std::process::id(),
+            tag
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        PersistConfig {
+            data_dir: dir.to_string_lossy().to_string(),
+            wal_fsync: false,
+            compact_bytes: u64::MAX,
+        }
+    }
+
+    #[test]
+    fn wal_replay_restores_identical_search_results() {
+        let cfg = persist_cfg("replay");
+        let mut rng = Rng::new(7);
+        let vs: Vec<_> = (0..20).map(|_| unit(&mut rng, 8)).collect();
+        let before: Vec<SearchHit>;
+        {
+            let (mut c, report) = SemanticCache::open_persistent(
+                8,
+                IndexKind::Flat,
+                EvictionPolicy::None,
+                usize::MAX,
+                true,
+                &cfg,
+            )
+            .unwrap();
+            assert_eq!(report.recovered_entries, 0);
+            for (i, v) in vs.iter().enumerate() {
+                c.insert(&format!("q{i}"), &format!("r{i}"), v.clone());
+            }
+            before = c.search(&vs[3], 5);
+            // No compact_now(): drop without a snapshot = simulated crash.
+        }
+        let (mut c, report) = SemanticCache::open_persistent(
+            8,
+            IndexKind::Flat,
+            EvictionPolicy::None,
+            usize::MAX,
+            true,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(report.recovered_entries, 20);
+        assert_eq!(report.replayed_ops, 20);
+        assert_eq!(c.len(), 20);
+        assert_eq!(c.search(&vs[3], 5), before);
+        assert_eq!(c.entry(7).unwrap().response_text, "r7");
+        assert!(c.lookup_exact("q11").is_some());
+        let _ = std::fs::remove_dir_all(&cfg.data_dir);
+    }
+
+    #[test]
+    fn snapshot_then_wal_recovers_and_generation_advances() {
+        let cfg = persist_cfg("snapwal");
+        let mut rng = Rng::new(8);
+        let vs: Vec<_> = (0..12).map(|_| unit(&mut rng, 8)).collect();
+        {
+            let (mut c, _) = SemanticCache::open_persistent(
+                8,
+                IndexKind::Flat,
+                EvictionPolicy::None,
+                usize::MAX,
+                false,
+                &cfg,
+            )
+            .unwrap();
+            for (i, v) in vs.iter().enumerate().take(8) {
+                c.insert(&format!("q{i}"), "r", v.clone());
+            }
+            assert_eq!(c.compact_now().unwrap(), Some(1));
+            // Post-snapshot mutations land in the generation-1 WAL.
+            for (i, v) in vs.iter().enumerate().skip(8) {
+                c.insert(&format!("q{i}"), "r", v.clone());
+            }
+            let st = c.persist_status().unwrap();
+            assert_eq!(st.generation, 1);
+            assert_eq!(st.wal_records, 4);
+        }
+        let (mut c, report) = SemanticCache::open_persistent(
+            8,
+            IndexKind::Flat,
+            EvictionPolicy::None,
+            usize::MAX,
+            false,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(report.generation, 1);
+        assert_eq!(report.snapshot_slots, 8);
+        assert_eq!(report.replayed_ops, 4);
+        assert_eq!(c.len(), 12);
+        assert_eq!(c.search(&vs[10], 1)[0].id, 10);
+        let _ = std::fs::remove_dir_all(&cfg.data_dir);
+    }
+
+    #[test]
+    fn size_triggered_compaction_folds_wal() {
+        let mut cfg = persist_cfg("autocompact");
+        cfg.compact_bytes = 2_000; // tiny: force several compactions
+        let mut rng = Rng::new(9);
+        {
+            let (mut c, _) = SemanticCache::open_persistent(
+                8,
+                IndexKind::Flat,
+                EvictionPolicy::None,
+                usize::MAX,
+                false,
+                &cfg,
+            )
+            .unwrap();
+            for i in 0..60 {
+                c.insert(&format!("q{i}"), "r", unit(&mut rng, 8));
+            }
+            let st = c.persist_status().unwrap();
+            assert!(st.compactions >= 1, "no compaction at {} bytes", st.wal_bytes);
+            assert!(st.wal_bytes < 3_000);
+            assert!(st.last_compaction_unix > 0);
+        }
+        let (c, report) = SemanticCache::open_persistent(
+            8,
+            IndexKind::Flat,
+            EvictionPolicy::None,
+            usize::MAX,
+            false,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(c.len(), 60);
+        assert!(report.generation >= 1);
+        let _ = std::fs::remove_dir_all(&cfg.data_dir);
     }
 }

@@ -8,7 +8,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::cache::{EvictionPolicy, IndexKind};
+use crate::cache::{EvictionPolicy, IndexKind, PersistConfig};
 
 /// Routing + cache + model configuration (Fig 1 + Table 1).
 #[derive(Clone, Debug)]
@@ -31,6 +31,10 @@ pub struct Config {
     pub small_llm: GenConfig,
     /// Cost model: API price ratio (Table 1: ~25x per output token).
     pub cost: CostConfig,
+    /// Durable cache persistence (snapshots + WAL). Disabled by default
+    /// (the paper's deployment is ephemeral); set `persist.data_dir` to
+    /// enable warm restarts.
+    pub persist: PersistConfig,
     /// Artifact directory.
     pub artifact_dir: String,
     /// Master seed for all deterministic randomness.
@@ -115,6 +119,7 @@ impl Config {
                 small_per_mtok: 0.40,
                 input_frac: 0.25,
             },
+            persist: PersistConfig::default(),
             artifact_dir: "artifacts".to_string(),
             seed: 20250923,
         }
@@ -192,6 +197,9 @@ impl Config {
             "cost.big_per_mtok" => self.cost.big_per_mtok = f()?,
             "cost.small_per_mtok" => self.cost.small_per_mtok = f()?,
             "cost.input_frac" => self.cost.input_frac = f()?,
+            "persist.data_dir" => self.persist.data_dir = val.to_string(),
+            "persist.wal_fsync" => self.persist.wal_fsync = b()?,
+            "persist.compact_bytes" => self.persist.compact_bytes = u()? as u64,
             "runtime.artifact_dir" => self.artifact_dir = val.to_string(),
             "runtime.seed" => self.seed = val.parse()?,
             _ => bail!("unknown config key"),
@@ -211,6 +219,11 @@ impl Config {
             }),
             ("Similarity Threshold".into(), format!("{}", self.similarity_threshold)),
             ("Eviction".into(), format!("{:?} (capacity {})", self.eviction.policy, if self.eviction.capacity == usize::MAX { "unbounded".into() } else { self.eviction.capacity.to_string() })),
+            ("Persistence".into(), if self.persist.enabled() {
+                format!("WAL+snapshots in {} (fsync {}, compact at {} MiB)", self.persist.data_dir, self.persist.wal_fsync, self.persist.compact_bytes / (1024 * 1024))
+            } else {
+                "disabled (ephemeral, as in the paper)".into()
+            }),
         ]
     }
 }
@@ -275,6 +288,23 @@ mod tests {
         c.apply(&kv).unwrap();
         assert_eq!(c.similarity_threshold, 0.85);
         assert_eq!(c.index.kind, IndexKindConfig::Flat);
+    }
+
+    #[test]
+    fn persist_section_applies() {
+        let mut c = Config::paper();
+        assert!(!c.persist.enabled());
+        let mut kv = BTreeMap::new();
+        kv.insert("persist.data_dir".to_string(), "/tmp/cache".to_string());
+        kv.insert("persist.wal_fsync".to_string(), "true".to_string());
+        kv.insert("persist.compact_bytes".to_string(), "1048576".to_string());
+        c.apply(&kv).unwrap();
+        assert!(c.persist.enabled());
+        assert_eq!(c.persist.data_dir, "/tmp/cache");
+        assert!(c.persist.wal_fsync);
+        assert_eq!(c.persist.compact_bytes, 1_048_576);
+        let rows = c.table();
+        assert!(rows.iter().any(|(k, v)| k == "Persistence" && v.contains("/tmp/cache")));
     }
 
     #[test]

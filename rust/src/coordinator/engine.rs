@@ -23,6 +23,9 @@ enum Msg {
     Stats {
         reply: mpsc::Sender<EngineStats>,
     },
+    Snapshot {
+        reply: mpsc::Sender<Result<SnapshotReport>>,
+    },
     Shutdown,
 }
 
@@ -37,6 +40,25 @@ pub struct EngineStats {
     pub latency_table: String,
     pub cost_dollars: f64,
     pub baseline_dollars: f64,
+    // ---- persistence (all zero when the [persist] section is disabled) ----
+    pub persist_enabled: bool,
+    pub persist_generation: u64,
+    pub wal_bytes: u64,
+    pub wal_records: u64,
+    pub compactions: u64,
+    pub last_compaction_unix: u64,
+    /// Live entries recovered from snapshot + WAL at startup.
+    pub recovered_entries: u64,
+}
+
+/// Result of an explicit `{"admin": "snapshot"}` request.
+#[derive(Clone, Debug, Default)]
+pub struct SnapshotReport {
+    pub persist_enabled: bool,
+    /// Generation of the snapshot just written (0 when disabled).
+    pub generation: u64,
+    /// Live entries captured.
+    pub entries: usize,
 }
 
 /// Handle used by front-ends to talk to the engine. Cheap to clone.
@@ -61,6 +83,16 @@ impl EngineHandle {
             .send(Msg::Stats { reply })
             .map_err(|_| anyhow!("engine is down"))?;
         rx.recv().map_err(|_| anyhow!("engine dropped the stats request"))
+    }
+
+    /// Force a cache snapshot + WAL rotation (the admin protocol verb).
+    pub fn snapshot(&self) -> Result<SnapshotReport> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Snapshot { reply })
+            .map_err(|_| anyhow!("engine is down"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("engine dropped the snapshot request"))?
     }
 }
 
@@ -94,17 +126,21 @@ impl Engine {
                 };
                 let mut batcher: Batcher<(String, mpsc::Sender<Result<RoutedResponse>>)> =
                     Batcher::new(router.config.batcher);
-                loop {
+                'serve: loop {
                     // Block for the first message, then drain greedily up to
                     // the batch deadline.
                     let first = match rx.recv() {
                         Ok(m) => m,
-                        Err(_) => break,
+                        Err(_) => break 'serve,
                     };
                     match first {
-                        Msg::Shutdown => break,
+                        Msg::Shutdown => break 'serve,
                         Msg::Stats { reply } => {
                             let _ = reply.send(Self::collect_stats(&router, &batcher));
+                            continue;
+                        }
+                        Msg::Snapshot { reply } => {
+                            let _ = reply.send(Self::do_snapshot(&mut router));
                             continue;
                         }
                         Msg::Request { query, reply } => batcher.push((query, reply)),
@@ -126,18 +162,28 @@ impl Engine {
                                 let _ = reply
                                     .send(Self::collect_stats(&router, &batcher));
                             }
+                            Ok(Msg::Snapshot { reply }) => {
+                                let _ = reply.send(Self::do_snapshot(&mut router));
+                            }
                             Ok(Msg::Shutdown) => {
                                 Self::flush(&mut router, &mut batcher);
-                                return;
+                                break 'serve;
                             }
                             Err(mpsc::RecvTimeoutError::Timeout) => break,
                             Err(mpsc::RecvTimeoutError::Disconnected) => {
                                 Self::flush(&mut router, &mut batcher);
-                                return;
+                                break 'serve;
                             }
                         }
                     }
                     Self::flush(&mut router, &mut batcher);
+                }
+                // Graceful shutdown: fold the WAL into a final snapshot so
+                // the next start replays nothing. Crash recovery does not
+                // depend on this — it is an optimization, not a correctness
+                // requirement.
+                if let Err(e) = router.snapshot() {
+                    eprintln!("[engine] final snapshot failed: {e:#}");
                 }
             })
             .expect("spawn engine thread");
@@ -189,10 +235,27 @@ impl Engine {
         }
     }
 
+    fn do_snapshot(router: &mut Router) -> Result<SnapshotReport> {
+        let entries = router.cache().len();
+        match router.snapshot()? {
+            Some(generation) => Ok(SnapshotReport {
+                persist_enabled: true,
+                generation,
+                entries,
+            }),
+            None => Ok(SnapshotReport {
+                persist_enabled: false,
+                generation: 0,
+                entries,
+            }),
+        }
+    }
+
     fn collect_stats(
         router: &Router,
         batcher: &Batcher<(String, mpsc::Sender<Result<RoutedResponse>>)>,
     ) -> EngineStats {
+        let persist = router.cache().persist_status();
         EngineStats {
             requests: router.counters.get("requests"),
             tweak_hits: router.counters.get("tweak_hits"),
@@ -203,6 +266,16 @@ impl Engine {
             latency_table: router.latency.table(),
             cost_dollars: router.ledger.dollars(&router.config.cost),
             baseline_dollars: router.ledger.baseline_dollars(&router.config.cost),
+            persist_enabled: persist.is_some(),
+            persist_generation: persist.map_or(0, |p| p.generation),
+            wal_bytes: persist.map_or(0, |p| p.wal_bytes),
+            wal_records: persist.map_or(0, |p| p.wal_records),
+            compactions: persist.map_or(0, |p| p.compactions),
+            last_compaction_unix: persist.map_or(0, |p| p.last_compaction_unix),
+            recovered_entries: router
+                .recovery
+                .as_ref()
+                .map_or(0, |r| r.recovered_entries),
         }
     }
 

@@ -12,10 +12,11 @@ pub mod batcher;
 pub mod engine;
 
 pub use batcher::Batcher;
-pub use engine::{Engine, EngineHandle};
+pub use engine::{Engine, EngineHandle, EngineStats, SnapshotReport};
 
 use anyhow::Result;
 
+use crate::cache::persist::RecoveryReport;
 use crate::cache::SemanticCache;
 use crate::config::Config;
 use crate::cost::{CostLedger, ModelRole, TokenUsage};
@@ -59,6 +60,8 @@ pub struct Router {
     pub ledger: CostLedger,
     pub latency: LatencyRecorder,
     pub counters: Counters,
+    /// What crash recovery found on startup (None: persistence disabled).
+    pub recovery: Option<RecoveryReport>,
 }
 
 impl Router {
@@ -85,7 +88,9 @@ impl Router {
             },
             config.seed,
         )?);
-        Ok(Self::with_models(embedder, big, small, config))
+        let mut router = Self::with_models(embedder, big, small, config);
+        router.enable_persistence()?;
+        Ok(router)
     }
 
     /// Build with injected models (tests / baselines / quality-model eval).
@@ -107,7 +112,35 @@ impl Router {
             ledger: CostLedger::default(),
             latency: LatencyRecorder::new(),
             counters: Counters::default(),
+            recovery: None,
         }
+    }
+
+    /// Swap the ephemeral cache for a durable one recovered from
+    /// `config.persist.data_dir` (snapshot + WAL replay). No-op when the
+    /// `[persist]` section is disabled. Must run before serving traffic —
+    /// it replaces the cache wholesale.
+    pub fn enable_persistence(&mut self) -> Result<Option<RecoveryReport>> {
+        if !self.config.persist.enabled() {
+            return Ok(None);
+        }
+        let (cache, report) = SemanticCache::open_persistent(
+            self.embedder.out_dim(),
+            self.config.index_kind(),
+            self.config.eviction.policy,
+            self.config.eviction.capacity,
+            self.config.exact_match_fast_path,
+            &self.config.persist,
+        )?;
+        self.cache = cache;
+        self.recovery = Some(report.clone());
+        Ok(Some(report))
+    }
+
+    /// Snapshot the cache now (graceful shutdown / the admin verb).
+    /// Returns the new persistence generation; `None` when ephemeral.
+    pub fn snapshot(&mut self) -> Result<Option<u64>> {
+        self.cache.compact_now()
     }
 
     pub fn cache(&self) -> &SemanticCache {
@@ -161,7 +194,10 @@ impl Router {
         self.ledger.record_free();
         self.counters.inc("requests");
         self.counters.inc("exact_hits");
-        self.latency.record("total", t_start.elapsed().as_micros() as f64);
+        // Sample elapsed once: the recorded latency and the reported
+        // total_micros must be the same number.
+        let total_micros = t_start.elapsed().as_micros();
+        self.latency.record("total", total_micros as f64);
         Some(RoutedResponse {
             text,
             pathway: Pathway::ExactHit,
@@ -169,7 +205,7 @@ impl Router {
             cached_query: Some(cached_query),
             cache_entry: Some(id),
             usage: TokenUsage::default(),
-            total_micros: t_start.elapsed().as_micros(),
+            total_micros,
         })
     }
 
@@ -208,7 +244,8 @@ impl Router {
                 self.cache.touch(hit.id);
                 self.ledger.record(ModelRole::Small, resp.usage);
                 self.counters.inc("tweak_hits");
-                self.latency.record("total", t_start.elapsed().as_micros() as f64);
+                let total_micros = t_start.elapsed().as_micros();
+                self.latency.record("total", total_micros as f64);
                 Ok(RoutedResponse {
                     text: resp.text,
                     pathway: Pathway::TweakHit,
@@ -216,7 +253,7 @@ impl Router {
                     cached_query: Some(cached_query),
                     cache_entry: Some(hit.id),
                     usage: resp.usage,
-                    total_micros: t_start.elapsed().as_micros(),
+                    total_micros,
                 })
             }
             top => {
@@ -229,7 +266,8 @@ impl Router {
                 self.latency.record_duration("cache_insert", t.elapsed());
                 self.ledger.record(ModelRole::Big, resp.usage);
                 self.counters.inc("misses");
-                self.latency.record("total", t_start.elapsed().as_micros() as f64);
+                let total_micros = t_start.elapsed().as_micros();
+                self.latency.record("total", total_micros as f64);
                 Ok(RoutedResponse {
                     text: resp.text,
                     pathway: Pathway::Miss,
@@ -237,7 +275,7 @@ impl Router {
                     cached_query: None,
                     cache_entry: Some(id),
                     usage: resp.usage,
-                    total_micros: t_start.elapsed().as_micros(),
+                    total_micros,
                 })
             }
         }

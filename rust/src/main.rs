@@ -3,7 +3,10 @@
 //! Subcommands:
 //!   config                         Print the (Table 1) configuration.
 //!   serve  [--addr 127.0.0.1:7411] Start the engine + TCP front-end.
+//!          [--data-dir DIR]        Durable cache (WAL + snapshots): recover
+//!                                  on start, snapshot on graceful stop.
 //!   query  --addr .. "text"        Send one query to a running server.
+//!   snapshot [--addr ..]           Ask a running server to snapshot now.
 //!   demo   [--n 12]                Self-contained routing demo on a trace.
 //!
 //! Figure/table reproduction lives in `cargo bench` (see DESIGN.md);
@@ -26,12 +29,15 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: tweakllm <config|serve|query|demo> [--flags]\n\
+    "usage: tweakllm <config|serve|query|snapshot|demo> [--flags]\n\
      \n\
      config                          print the active configuration (Table 1)\n\
      serve  [--addr HOST:PORT]       start engine + TCP front-end\n\
             [--config FILE] [--threshold T] [--exact-fast-path BOOL]\n\
+            [--data-dir DIR]         durable cache: replay WAL+snapshot on\n\
+                                     start, snapshot on graceful shutdown\n\
      query  [--addr HOST:PORT] TEXT  send one query to a running server\n\
+     snapshot [--addr HOST:PORT]     force a cache snapshot + WAL rotation\n\
      demo   [--n N] [--threshold T]  route a small synthetic trace and report\n"
 }
 
@@ -48,6 +54,9 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     if let Some(d) = args.opt_str("artifacts") {
         cfg.set("runtime.artifact_dir", d)?;
+    }
+    if let Some(d) = args.opt_str("data-dir") {
+        cfg.set("persist.data_dir", d)?;
     }
     Ok(cfg)
 }
@@ -72,7 +81,17 @@ fn run() -> Result<()> {
             let (_engine, handle) = Engine::start(move || {
                 let rt = Runtime::load(&cfg.artifact_dir, &[])?;
                 eprintln!("[tweakllm] platform: {}", rt.platform());
-                Router::from_runtime(&rt, cfg)
+                let router = Router::from_runtime(&rt, cfg)?;
+                if let Some(r) = &router.recovery {
+                    eprintln!(
+                        "[tweakllm] recovered {} cache entries (generation {}, {} WAL ops replayed{})",
+                        r.recovered_entries,
+                        r.generation,
+                        r.replayed_ops,
+                        if r.torn_tail { ", torn WAL tail dropped" } else { "" }
+                    );
+                }
+                Ok(router)
             })?;
             let server = Server::bind(&addr, handle)?;
             eprintln!("[tweakllm] serving on {}", server.local_addr()?);
@@ -86,6 +105,13 @@ fn run() -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("query: missing TEXT argument"))?;
             let mut client = Client::connect(&addr)?;
             let resp = client.query(text)?;
+            println!("{}", resp.to_string());
+            Ok(())
+        }
+        "snapshot" => {
+            let addr = args.str("addr", "127.0.0.1:7411");
+            let mut client = Client::connect(&addr)?;
+            let resp = client.snapshot()?;
             println!("{}", resp.to_string());
             Ok(())
         }

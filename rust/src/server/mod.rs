@@ -4,11 +4,15 @@
 //!   → {"query": "why is coffee good for health?"}
 //!   ← {"text": "...", "pathway": "tweak_hit", "similarity": 0.83,
 //!      "latency_us": 1234}
-//!   → {"stats": true}   ← {"requests": 10, ...}
+//!   → {"stats": true}   ← {"requests": 10, "latency_table": "...", ...}
+//!   → {"admin": "snapshot"}
+//!   ← {"snapshot": true, "generation": 3, "entries": 120}
 //!
 //! The server accepts any number of concurrent connections; each connection
 //! thread forwards to the shared `EngineHandle` (the engine thread owns the
-//! PJRT client and does the batching).
+//! PJRT client and does the batching). Connection reads carry a short
+//! timeout so idle connections observe the stop flag instead of pinning
+//! their thread in a blocking read forever.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -74,26 +78,47 @@ impl Server {
     }
 }
 
+/// How often an idle connection wakes up to poll the stop flag.
+const READ_POLL_INTERVAL: std::time::Duration = std::time::Duration::from_millis(100);
+
 fn handle_connection(
     stream: TcpStream,
     handle: EngineHandle,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // A blocking `read_line` on an idle connection would never observe the
+    // stop flag (the old shutdown hang): bound every read so the loop polls.
+    stream.set_read_timeout(Some(READ_POLL_INTERVAL))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
         if stop.load(Ordering::Relaxed) {
             break;
         }
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+        // NB: on timeout, bytes already consumed stay appended to `line`;
+        // the next read_line call continues the same partial line, so slow
+        // writers lose nothing.
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF: client closed
+            Ok(_) => {
+                if !line.trim().is_empty() {
+                    let reply = process_line(&line, &handle);
+                    writer.write_all(reply.to_string().as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    writer.flush()?;
+                }
+                line.clear();
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // stop-flag poll point
+            }
+            Err(e) => return Err(e.into()),
         }
-        let reply = process_line(&line, &handle);
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
     }
     Ok(())
 }
@@ -116,8 +141,35 @@ fn process_line(line: &str, handle: &EngineHandle) -> Json {
                 ("mean_batch_size", Json::num(s.mean_batch_size)),
                 ("cost_dollars", Json::num(s.cost_dollars)),
                 ("baseline_dollars", Json::num(s.baseline_dollars)),
+                ("latency_table", Json::s(s.latency_table)),
+                ("persist_enabled", Json::Bool(s.persist_enabled)),
+                ("persist_generation", Json::num(s.persist_generation as f64)),
+                ("wal_bytes", Json::num(s.wal_bytes as f64)),
+                ("wal_records", Json::num(s.wal_records as f64)),
+                ("compactions", Json::num(s.compactions as f64)),
+                (
+                    "last_compaction_unix",
+                    Json::num(s.last_compaction_unix as f64),
+                ),
+                ("recovered_entries", Json::num(s.recovered_entries as f64)),
             ]),
             Err(e) => Json::obj_from(vec![("error", Json::s(format!("{e}")))]),
+        };
+    }
+    if let Some(admin) = req.opt("admin") {
+        return match admin.str() {
+            Ok("snapshot") => match handle.snapshot() {
+                Ok(r) => Json::obj_from(vec![
+                    ("snapshot", Json::Bool(r.persist_enabled)),
+                    ("generation", Json::num(r.generation as f64)),
+                    ("entries", Json::num(r.entries as f64)),
+                ]),
+                Err(e) => Json::obj_from(vec![("error", Json::s(format!("{e}")))]),
+            },
+            _ => Json::obj_from(vec![(
+                "error",
+                Json::s("unknown admin command (expected \"snapshot\")"),
+            )]),
         };
     }
     let query = match req.opt("query").and_then(|q| q.str().ok()) {
@@ -171,6 +223,11 @@ impl Client {
 
     pub fn stats(&mut self) -> Result<Json> {
         self.roundtrip(&Json::obj_from(vec![("stats", Json::Bool(true))]))
+    }
+
+    /// Ask the server to snapshot its cache now (`{"admin": "snapshot"}`).
+    pub fn snapshot(&mut self) -> Result<Json> {
+        self.roundtrip(&Json::obj_from(vec![("admin", Json::s("snapshot"))]))
     }
 }
 

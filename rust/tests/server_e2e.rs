@@ -70,6 +70,94 @@ fn stats_endpoint_reports_counters() {
 }
 
 #[test]
+fn stats_surfaces_latency_table_and_persist_fields() {
+    let (_engine, _handle, addr, stop, join) = start_stack();
+    let mut client = Client::connect(&addr).unwrap();
+    client.query("tell me about the moons of jupiter").unwrap();
+    let stats = client.stats().unwrap();
+    // latency_table: collected in EngineStats and now surfaced remotely.
+    let table = stats.get("latency_table").unwrap().str().unwrap().to_string();
+    assert!(table.contains("stage"), "missing header: {table}");
+    assert!(table.contains("total"), "missing total row: {table}");
+    // Persistence is disabled in this stack: fields present, zeroed.
+    assert!(!stats.get("persist_enabled").unwrap().bool().unwrap());
+    assert_eq!(stats.get("wal_bytes").unwrap().f64().unwrap() as u64, 0);
+    assert_eq!(stats.get("recovered_entries").unwrap().f64().unwrap() as u64, 0);
+    stop.store(true, Ordering::Relaxed);
+    drop(client);
+    let _ = join.join().unwrap();
+}
+
+#[test]
+fn admin_snapshot_verb_answers_on_ephemeral_stack() {
+    let (_engine, _handle, addr, stop, join) = start_stack();
+    let mut client = Client::connect(&addr).unwrap();
+    client.query("what is a semaphore").unwrap();
+    let resp = client.snapshot().unwrap();
+    // No [persist] config: the verb reports snapshot=false, still counts
+    // live entries, and must not error.
+    assert!(!resp.get("snapshot").unwrap().bool().unwrap());
+    assert_eq!(resp.get("entries").unwrap().f64().unwrap() as u64, 1);
+    let resp = client
+        .roundtrip(&tweakllm::util::Json::obj_from(vec![(
+            "admin",
+            tweakllm::util::Json::s("reboot"),
+        )]))
+        .unwrap();
+    assert!(resp.opt("error").is_some(), "unknown admin verbs must error");
+    stop.store(true, Ordering::Relaxed);
+    drop(client);
+    let _ = join.join().unwrap();
+}
+
+#[test]
+fn slow_writer_survives_read_timeouts() {
+    // The connection loop polls the stop flag on a read timeout; bytes of a
+    // partial line consumed before the timeout must be retained, not lost.
+    use std::io::{BufRead, BufReader, Write};
+    let (_engine, _handle, addr, stop, join) = start_stack();
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    let req = "{\"query\": \"why is the sky blue on earth?\"}\n";
+    let (head, tail) = req.split_at(14);
+    stream.write_all(head.as_bytes()).unwrap();
+    stream.flush().unwrap();
+    // Longer than the server's 100ms read-poll interval.
+    std::thread::sleep(std::time::Duration::from_millis(350));
+    stream.write_all(tail.as_bytes()).unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
+    let resp = tweakllm::util::Json::parse(&line).unwrap();
+    assert_eq!(resp.get("pathway").unwrap().str().unwrap(), "miss");
+    stop.store(true, Ordering::Relaxed);
+    drop(stream);
+    let _ = join.join().unwrap();
+}
+
+#[test]
+fn idle_connection_does_not_block_stop() {
+    // Regression: an idle connection used to pin its thread in a blocking
+    // read_line forever. With the read timeout it observes the stop flag.
+    let (_engine, _handle, addr, stop, join) = start_stack();
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    // Never send anything; raise stop while the connection is idle.
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    stop.store(true, Ordering::Relaxed);
+    let _ = join.join().unwrap(); // accept loop exits
+    // The connection thread exits on its next poll tick; the server closing
+    // our socket (EOF) is observable within a couple of poll intervals.
+    use std::io::Read;
+    let mut s = stream;
+    s.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+    let mut buf = [0u8; 16];
+    match s.read(&mut buf) {
+        Ok(0) => {}                 // clean EOF: connection thread exited
+        Ok(_) => panic!("unexpected data on idle connection"),
+        Err(e) => panic!("expected EOF after stop, got {e}"),
+    }
+}
+
+#[test]
 fn malformed_request_reports_error_not_crash() {
     let (_engine, _handle, addr, stop, join) = start_stack();
     let mut client = Client::connect(&addr).unwrap();
