@@ -33,8 +33,8 @@ fn main() -> anyhow::Result<()> {
 
     // --- populate cache with first questions (batched embeds) ---
     eprintln!("[fig3-4] embedding {} cached + {} incoming queries...", ds.len(), ds.len());
-    let q1s: Vec<String> = ds.pairs.iter().map(|p| p.q1.text.clone()).collect();
-    let q2s: Vec<String> = ds.pairs.iter().map(|p| p.q2.text.clone()).collect();
+    let q1s: Vec<&str> = ds.pairs.iter().map(|p| p.q1.text.as_str()).collect();
+    let q2s: Vec<&str> = ds.pairs.iter().map(|p| p.q2.text.as_str()).collect();
     let e1 = embedder.embed_batch(&q1s)?;
     let e2 = embedder.embed_batch(&q2s)?;
     let mut index = FlatIndex::new(embedder.out_dim());

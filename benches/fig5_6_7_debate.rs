@@ -34,8 +34,8 @@ fn collect_hits(
     queried: &[(String, IntentKey)],
     embedder: &dyn TextEmbedder,
 ) -> anyhow::Result<Vec<Hit>> {
-    let ins_texts: Vec<String> = inserted.iter().map(|(t, _)| t.clone()).collect();
-    let q_texts: Vec<String> = queried.iter().map(|(t, _)| t.clone()).collect();
+    let ins_texts: Vec<&str> = inserted.iter().map(|(t, _)| t.as_str()).collect();
+    let q_texts: Vec<&str> = queried.iter().map(|(t, _)| t.as_str()).collect();
     let mut index = FlatIndex::new(embedder.out_dim());
     for e in embedder.embed_batch(&ins_texts)? {
         index.insert(&e);

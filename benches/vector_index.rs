@@ -1,15 +1,21 @@
-//! Vector-index ablation bench (DESIGN.md ablations): FLAT vs IVF_FLAT
-//! latency + recall at store sizes, nprobe sweep, eviction policy
-//! throughput, and native-Rust scan vs the compiled `cosine_scores_b4096`
-//! Pallas artifact (the L1/L3 crossover).
+//! Vector-index ablation bench (DESIGN.md ablations): the sharded/SQ8 scan
+//! matrix (f32 vs SQ8 × 1/4/8 shards at 10k/100k entries — written to
+//! `BENCH_vector_index.json` for the perf trajectory), FLAT vs IVF_FLAT
+//! latency + recall, nprobe sweep, eviction policy throughput, and
+//! native-Rust scan vs the compiled `cosine_scores_b4096` Pallas artifact
+//! (the L1/L3 crossover).
 //!
-//! `cargo bench --bench vector_index [-- --n 50000]`
+//! `cargo bench --bench vector_index [-- --n 50000 --quick]`
+
+use std::sync::Arc;
 
 use tweakllm::bench::{bench_args, load_runtime, measure, row, Table};
-use tweakllm::cache::{EvictionPolicy, FlatIndex, IvfFlatIndex, SemanticCache, VectorIndex};
+use tweakllm::cache::{
+    EvictionPolicy, FlatIndex, IndexOpts, IvfFlatIndex, Quantization, SemanticCache, VectorIndex,
+};
 use tweakllm::cache::store::IndexKind;
 use tweakllm::runtime::HostTensor;
-use tweakllm::util::{normalize, Rng};
+use tweakllm::util::{normalize, Json, Rng, ThreadPool};
 
 fn rand_unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
     let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
@@ -34,14 +40,110 @@ fn clustered(rng: &mut Rng, n: usize, dim: usize, clusters: usize) -> Vec<Vec<f3
 fn main() -> anyhow::Result<()> {
     let args = bench_args();
     let n = args.usize("n", 50_000)?;
+    let quick = args.has("quick");
     let dim = 384usize;
     let mut rng = Rng::new(99);
-    let data = clustered(&mut rng, n, dim, 64);
-    let queries: Vec<Vec<f32>> = (0..64).map(|i| data[i * (n / 64)].clone()).collect();
+
+    // ---- sharded / quantized scan matrix → BENCH_vector_index.json ----
+    // rows/sec + p50/p99 per (entries, storage mode, shard count); recall@1
+    // of SQ8 is measured against the exact f32 scan on the same data.
+    let matrix_sizes: &[usize] = if quick { &[10_000] } else { &[10_000, 100_000] };
+    let max_n = *matrix_sizes.iter().max().unwrap();
+    eprintln!("[vector_index] generating {max_n} x {dim} clustered vectors...");
+    let all_data = clustered(&mut rng, max_n, dim, 64);
+    let shard_counts = [1usize, 4, 8];
+    // Smaller-than-default segments so even the 10k tier has enough sealed
+    // segments (9) for the 8-shard rows to mean what they claim.
+    let matrix_segment_rows = 1024usize;
+    let mut matrix = Table::new(
+        "Sharded scan matrix — per-query latency & throughput (64 queries)",
+        &["entries", "storage", "shards", "mean us", "p50 us", "p99 us", "Mrows/s", "recall@1 %"],
+    );
+    let mut json_rows: Vec<Json> = Vec::new();
+    for &size in matrix_sizes {
+        let data = &all_data[..size];
+        let queries: Vec<Vec<f32>> =
+            (0..64).map(|i| data[(i * (size / 64)) % size].clone()).collect();
+        // Exact reference for recall: the f32 index at 1 shard.
+        let mut exact_top1: Vec<usize> = Vec::new();
+        for quant in [Quantization::None, Quantization::Sq8] {
+            let opts = IndexOpts {
+                quantization: quant,
+                segment_rows: matrix_segment_rows,
+                ..IndexOpts::default()
+            };
+            let mut idx = FlatIndex::with_opts(dim, opts);
+            for v in data {
+                idx.insert(v);
+            }
+            if quant == Quantization::None {
+                exact_top1 = queries.iter().map(|q| idx.search(q, 1)[0].id).collect();
+            }
+            let recall = {
+                let got: Vec<usize> = queries.iter().map(|q| idx.search(q, 1)[0].id).collect();
+                let agree = got.iter().zip(&exact_top1).filter(|(a, b)| a == b).count();
+                agree as f64 / queries.len() as f64
+            };
+            for &shards in &shard_counts {
+                if shards > 1 {
+                    idx.set_pool(Arc::new(ThreadPool::new(shards)), shards);
+                } else {
+                    // shards == 1: scan on the calling thread
+                    idx.set_pool(Arc::new(ThreadPool::new(1)), 1);
+                }
+                let lat = {
+                    let mut qi = 0;
+                    let iters = if size >= 100_000 { 20 } else { 40 };
+                    measure(3, iters, || {
+                        let _ = idx.search(&queries[qi % queries.len()], 1);
+                        qi += 1;
+                    })
+                };
+                let rows_per_sec = size as f64 / (lat.mean * 1e-6);
+                let storage = match quant {
+                    Quantization::None => "f32",
+                    Quantization::Sq8 => "sq8",
+                };
+                matrix.push(vec![
+                    size.to_string(),
+                    storage.into(),
+                    shards.to_string(),
+                    format!("{:.1}", lat.mean),
+                    format!("{:.1}", lat.p50),
+                    format!("{:.1}", lat.p99),
+                    format!("{:.2}", rows_per_sec / 1e6),
+                    format!("{:.1}", 100.0 * recall),
+                ]);
+                json_rows.push(Json::obj_from(vec![
+                    ("entries", Json::num(size as f64)),
+                    ("storage", Json::s(storage)),
+                    ("shards", Json::num(shards as f64)),
+                    ("mean_us", Json::num(lat.mean)),
+                    ("p50_us", Json::num(lat.p50)),
+                    ("p99_us", Json::num(lat.p99)),
+                    ("rows_per_sec", Json::num(rows_per_sec)),
+                    ("recall_at_1", Json::num(recall)),
+                ]));
+            }
+        }
+    }
+    println!("{}", matrix.render());
+    let report = Json::obj_from(vec![
+        ("bench", Json::s("vector_index")),
+        ("dim", Json::num(dim as f64)),
+        ("queries", Json::num(64.0)),
+        ("segment_rows", Json::num(matrix_segment_rows as f64)),
+        ("results", Json::Arr(json_rows)),
+    ]);
+    std::fs::write("BENCH_vector_index.json", report.to_string())?;
+    eprintln!("[vector_index] wrote BENCH_vector_index.json");
 
     // ---- FLAT vs IVF_FLAT search latency + recall ----
+    let data = &all_data[..n.min(max_n)];
+    let n = data.len();
+    let queries: Vec<Vec<f32>> = (0..64).map(|i| data[(i * (n / 64)) % n].clone()).collect();
     let mut flat = FlatIndex::new(dim);
-    for v in &data {
+    for v in data {
         flat.insert(v);
     }
     let mut table = Table::new(
@@ -65,7 +167,7 @@ fn main() -> anyhow::Result<()> {
 
     for nprobe in [1usize, 4, 8, 16] {
         let mut ivf = IvfFlatIndex::new(dim, 64, nprobe);
-        for v in &data {
+        for v in data {
             ivf.insert(v);
         }
         let mut hits = 0;

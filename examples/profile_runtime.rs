@@ -22,12 +22,13 @@ fn main() -> Result<()> {
     for b in [1usize, 8, 32] {
         let texts: Vec<String> =
             (0..b).map(|i| format!("why is topic {i} good for benchmarking?")).collect();
+        let views: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
         // warmup
-        embedder.embed_batch(&texts)?;
+        embedder.embed_batch(&views)?;
         let t = std::time::Instant::now();
         let reps = 5;
         for _ in 0..reps {
-            embedder.embed_batch(&texts)?;
+            embedder.embed_batch(&views)?;
         }
         let per = t.elapsed() / (reps * b as u32);
         println!("embed_b{b:<3}      per-text: {per:?}");

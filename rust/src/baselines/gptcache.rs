@@ -64,7 +64,7 @@ impl<'a> GptCacheBaseline<'a> {
 
     /// Bulk put with batched embedding.
     pub fn put_batch(&mut self, pairs: &[(String, String)]) -> Result<()> {
-        let qs: Vec<String> = pairs.iter().map(|(q, _)| q.clone()).collect();
+        let qs: Vec<&str> = pairs.iter().map(|(q, _)| q.as_str()).collect();
         let es = self.embedder.embed_batch(&qs)?;
         for ((q, r), e) in pairs.iter().zip(es) {
             self.index.insert(&e);

@@ -1,92 +1,94 @@
-//! FLAT index: exact brute-force cosine scan.
+//! FLAT index: exact brute-force cosine scan over segmented row storage.
 //!
-//! Vectors live in one contiguous row-major matrix so the scan is a single
-//! sequential sweep (cache-line friendly, no pointer chasing). The inner
-//! loop is a 4-way unrolled dot product — the L3 §Perf hot path; see
-//! EXPERIMENTS.md §Perf for the before/after of the unroll.
+//! Rows live in fixed-size segments (`cache::segment`) so the scan can fan
+//! out across the shared threadpool (one `TopK` per shard, deterministic
+//! merge) and tombstoned rows are compacted away instead of being scanned
+//! forever. With `Quantization::Sq8` the sealed segments are scanned as u8
+//! codes (~4× less memory bandwidth) and the top candidates re-ranked
+//! exactly — results remain sorted, deterministic, and shard-invariant.
 
-use super::{SearchHit, TopK, VectorIndex};
+use std::sync::Arc;
+
+use super::segment::{dot_f32, IndexOpts, SegmentedStore, Sq8Params};
+use super::{SearchHit, VectorIndex};
+use crate::util::ThreadPool;
 
 pub struct FlatIndex {
-    dim: usize,
-    data: Vec<f32>,
-    removed: Vec<bool>,
+    store: SegmentedStore,
 }
 
 impl FlatIndex {
     pub fn new(dim: usize) -> Self {
-        assert!(dim > 0);
-        FlatIndex { dim, data: Vec::new(), removed: Vec::new() }
+        Self::with_opts(dim, IndexOpts::default())
     }
 
+    pub fn with_opts(dim: usize, opts: IndexOpts) -> Self {
+        FlatIndex { store: SegmentedStore::new(dim, opts) }
+    }
+
+    /// Exact row of a live id. Panics on tombstoned/unknown ids.
     #[inline]
     pub fn row(&self, id: usize) -> &[f32] {
-        &self.data[id * self.dim..(id + 1) * self.dim]
+        self.store.row(id).expect("row(): tombstoned or unknown id")
     }
 
-    /// Vectorization-friendly dot product: `chunks_exact(8)` gives the
-    /// compiler bounds-check-free, fixed-width blocks that auto-vectorize
-    /// to AVX f32x8 under `-C target-cpu=native` (see EXPERIMENTS.md §Perf:
-    /// this form + the target-cpu flag took the 50k-row scan from ~14 ms to
-    /// sub-ms). Eight independent accumulators hide FMA latency.
+    /// The scan's dot product (see `segment::dot_f32`); kept here because
+    /// callers historically reached it as `FlatIndex::dot_unrolled`.
     #[inline]
     pub fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
-        let mut acc = [0.0f32; 8];
-        let ca = a.chunks_exact(8);
-        let cb = b.chunks_exact(8);
-        let (ra, rb) = (ca.remainder(), cb.remainder());
-        for (xa, xb) in ca.zip(cb) {
-            for k in 0..8 {
-                acc[k] += xa[k] * xb[k];
-            }
-        }
-        let mut tail = 0.0f32;
-        for (xa, xb) in ra.iter().zip(rb) {
-            tail += xa * xb;
-        }
-        acc.iter().sum::<f32>() + tail
+        dot_f32(a, b)
+    }
+
+    pub fn store(&self) -> &SegmentedStore {
+        &self.store
     }
 }
 
 impl VectorIndex for FlatIndex {
     fn insert(&mut self, v: &[f32]) -> usize {
-        assert_eq!(v.len(), self.dim, "dimension mismatch");
-        let id = self.removed.len();
-        self.data.extend_from_slice(v);
-        self.removed.push(false);
-        id
+        self.store.insert(v)
     }
 
     fn search(&self, q: &[f32], k: usize) -> Vec<SearchHit> {
-        assert_eq!(q.len(), self.dim, "dimension mismatch");
-        let mut top = TopK::new(k);
-        for id in 0..self.removed.len() {
-            if self.removed[id] {
-                continue;
-            }
-            let score = Self::dot_unrolled(self.row(id), q);
-            top.push(SearchHit { id, score });
-        }
-        top.into_vec()
+        self.store.search(q, k)
     }
 
     fn len(&self) -> usize {
-        self.removed.len()
+        self.store.len()
     }
 
     fn remove(&mut self, id: usize) {
-        if id < self.removed.len() {
-            self.removed[id] = true;
-        }
+        self.store.remove(id);
     }
 
     fn dim(&self) -> usize {
-        self.dim
+        self.store.dim()
+    }
+
+    fn insert_tombstone(&mut self) -> usize {
+        self.store.insert_tombstone()
+    }
+
+    fn live_len(&self) -> usize {
+        self.store.live_len()
+    }
+
+    fn set_pool(&mut self, pool: Arc<ThreadPool>, shards: usize) {
+        self.store.set_pool(pool, shards);
+    }
+
+    fn quant_params(&self) -> Option<Sq8Params> {
+        self.store.quant_params()
+    }
+
+    fn set_quant_params(&mut self, p: Sq8Params) {
+        self.store.set_quant_params(p);
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::segment::Quantization;
     use super::*;
     use crate::util::{normalize, Rng};
 
@@ -121,6 +123,8 @@ mod tests {
         idx.remove(id);
         let hits = idx.search(&v, 2);
         assert!(hits.iter().all(|h| h.id != id));
+        assert_eq!(idx.live_len(), 1);
+        assert_eq!(idx.len(), 2);
     }
 
     #[test]
@@ -157,5 +161,25 @@ mod tests {
         idx.insert(&rand_unit(&mut rng, 8));
         idx.insert(&rand_unit(&mut rng, 8));
         assert_eq!(idx.search(&rand_unit(&mut rng, 8), 10).len(), 2);
+    }
+
+    #[test]
+    fn sq8_flat_finds_self() {
+        let opts = IndexOpts {
+            quantization: Quantization::Sq8,
+            segment_rows: 32,
+            ..IndexOpts::default()
+        };
+        let mut idx = FlatIndex::with_opts(24, opts);
+        let mut rng = Rng::new(6);
+        let vs: Vec<Vec<f32>> = (0..200).map(|_| rand_unit(&mut rng, 24)).collect();
+        for v in &vs {
+            idx.insert(v);
+        }
+        assert!(idx.quant_params().is_some());
+        for (i, v) in vs.iter().enumerate() {
+            // exact re-rank makes self-recall exact even under quantization
+            assert_eq!(idx.search(v, 1)[0].id, i);
+        }
     }
 }

@@ -7,22 +7,30 @@
 //! vectors have arrived and retrains when the store grows by `retrain_factor`
 //! — cheap insurance against drift as the cache fills (the paper's cache is
 //! append-only and distribution-shifting by construction).
+//!
+//! Row storage is the segmented store (`cache::segment`): the untrained
+//! brute-force path inherits its sharded parallel scan, `Quantization::Sq8`
+//! makes the probe scan read u8 codes with an exact f32 re-rank (the Milvus
+//! IVF_SQ8 analog), and tombstone compaction reclaims evicted rows. Dead ids
+//! linger in the inverted lists (they are skipped at probe time) until the
+//! next retrain rebuilds the lists from live rows only.
 
-use super::{flat::FlatIndex, SearchHit, TopK, VectorIndex};
-use crate::util::Rng;
+use std::sync::Arc;
+
+use super::segment::{dot_f32, IndexOpts, SegmentedStore, Sq8Params};
+use super::{SearchHit, VectorIndex};
+use crate::util::{Rng, ThreadPool};
 
 pub struct IvfFlatIndex {
-    dim: usize,
     nlist: usize,
     nprobe: usize,
     train_after: usize,
     retrain_factor: f64,
     seed: u64,
-    // Row-major vector storage (same layout as FLAT; ids are row numbers).
-    data: Vec<f32>,
-    removed: Vec<bool>,
+    /// Segmented row storage; ids are stable slot numbers.
+    store: SegmentedStore,
     // Quantizer state. Empty until trained; until then search falls back to
-    // a brute-force scan (identical results, just slower).
+    // the store's (sharded) brute-force scan — identical results, no lists.
     centroids: Vec<f32>,
     lists: Vec<Vec<usize>>,
     assignments: Vec<u32>,
@@ -33,16 +41,18 @@ pub const UNASSIGNED: u32 = u32::MAX;
 
 impl IvfFlatIndex {
     pub fn new(dim: usize, nlist: usize, nprobe: usize) -> Self {
+        Self::with_opts(dim, nlist, nprobe, IndexOpts::default())
+    }
+
+    pub fn with_opts(dim: usize, nlist: usize, nprobe: usize, opts: IndexOpts) -> Self {
         assert!(dim > 0 && nlist > 0 && nprobe > 0);
         IvfFlatIndex {
-            dim,
             nlist,
             nprobe: nprobe.min(nlist),
             train_after: (nlist * 8).max(64),
             retrain_factor: 4.0,
             seed: 0x1ff_2025,
-            data: Vec::new(),
-            removed: Vec::new(),
+            store: SegmentedStore::new(dim, opts),
             centroids: Vec::new(),
             lists: Vec::new(),
             assignments: Vec::new(),
@@ -67,21 +77,25 @@ impl IvfFlatIndex {
         !self.centroids.is_empty()
     }
 
+    pub fn store(&self) -> &SegmentedStore {
+        &self.store
+    }
+
     #[inline]
     fn row(&self, id: usize) -> &[f32] {
-        &self.data[id * self.dim..(id + 1) * self.dim]
+        self.store.row(id).expect("live id has a row")
     }
 
     #[inline]
     fn centroid(&self, c: usize) -> &[f32] {
-        &self.centroids[c * self.dim..(c + 1) * self.dim]
+        &self.centroids[c * self.dim()..(c + 1) * self.dim()]
     }
 
     fn nearest_centroid(&self, v: &[f32]) -> usize {
         let mut best = 0usize;
         let mut best_score = f32::NEG_INFINITY;
         for c in 0..self.lists.len() {
-            let s = FlatIndex::dot_unrolled(self.centroid(c), v);
+            let s = dot_f32(self.centroid(c), v);
             if s > best_score {
                 best_score = s;
                 best = c;
@@ -94,19 +108,18 @@ impl IvfFlatIndex {
     /// round) over all live vectors. A handful of iterations is plenty for a
     /// coarse quantizer.
     fn train(&mut self) {
-        let n = self.removed.len();
-        let live: Vec<usize> = (0..n).filter(|&i| !self.removed[i]).collect();
+        let dim = self.dim();
+        let live = self.store.live_ids();
         let k = self.nlist.min(live.len().max(1));
         if live.is_empty() {
             return;
         }
-        let mut rng = Rng::new(self.seed ^ n as u64);
+        let mut rng = Rng::new(self.seed ^ self.store.len() as u64);
         // k-means++ style seeding lite: random distinct picks.
         let picks = rng.sample_indices(live.len(), k);
-        let mut centroids = vec![0.0f32; k * self.dim];
+        let mut centroids = vec![0.0f32; k * dim];
         for (c, &p) in picks.iter().enumerate() {
-            centroids[c * self.dim..(c + 1) * self.dim]
-                .copy_from_slice(self.row(live[p]));
+            centroids[c * dim..(c + 1) * dim].copy_from_slice(self.row(live[p]));
         }
         let mut assign = vec![0usize; live.len()];
         for _iter in 0..6 {
@@ -116,10 +129,7 @@ impl IvfFlatIndex {
                 let mut best = 0;
                 let mut best_s = f32::NEG_INFINITY;
                 for c in 0..k {
-                    let s = FlatIndex::dot_unrolled(
-                        &centroids[c * self.dim..(c + 1) * self.dim],
-                        v,
-                    );
+                    let s = dot_f32(&centroids[c * dim..(c + 1) * dim], v);
                     if s > best_s {
                         best_s = s;
                         best = c;
@@ -128,13 +138,13 @@ impl IvfFlatIndex {
                 assign[li] = best;
             }
             // update step
-            let mut sums = vec![0.0f32; k * self.dim];
+            let mut sums = vec![0.0f32; k * dim];
             let mut counts = vec![0usize; k];
             for (li, &id) in live.iter().enumerate() {
                 let c = assign[li];
                 counts[c] += 1;
                 let v = self.row(id);
-                let dst = &mut sums[c * self.dim..(c + 1) * self.dim];
+                let dst = &mut sums[c * dim..(c + 1) * dim];
                 for (d, &x) in dst.iter_mut().zip(v) {
                     *d += x;
                 }
@@ -143,16 +153,16 @@ impl IvfFlatIndex {
                 if counts[c] == 0 {
                     // re-seed empty cluster from a random live vector
                     let id = live[rng.usize(live.len())];
-                    sums[c * self.dim..(c + 1) * self.dim].copy_from_slice(self.row(id));
+                    sums[c * dim..(c + 1) * dim].copy_from_slice(self.row(id));
                 }
-                let cent = &mut sums[c * self.dim..(c + 1) * self.dim];
+                let cent = &mut sums[c * dim..(c + 1) * dim];
                 crate::util::normalize(cent);
             }
             centroids = sums;
         }
         self.centroids = centroids;
         self.lists = vec![Vec::new(); k];
-        self.assignments = vec![UNASSIGNED; n];
+        self.assignments = vec![UNASSIGNED; self.store.len()];
         for (li, &id) in live.iter().enumerate() {
             self.lists[assign[li]].push(id);
             self.assignments[id] = assign[li] as u32;
@@ -161,7 +171,10 @@ impl IvfFlatIndex {
     }
 
     fn maybe_train(&mut self) {
-        let n_live = self.removed.iter().filter(|r| !**r).count();
+        // O(1): the store maintains the live count incrementally (the old
+        // path recounted tombstones with a full scan on every insert,
+        // turning bulk loads O(n²)).
+        let n_live = self.store.live_len();
         if !self.is_trained() {
             if n_live >= self.train_after {
                 self.train();
@@ -171,23 +184,17 @@ impl IvfFlatIndex {
         }
     }
 
-    fn brute_force(&self, q: &[f32], k: usize) -> Vec<SearchHit> {
-        let mut top = TopK::new(k);
-        for id in 0..self.removed.len() {
-            if !self.removed[id] {
-                top.push(SearchHit { id, score: FlatIndex::dot_unrolled(self.row(id), q) });
-            }
-        }
-        top.into_vec()
+    /// Exact scan over every live row (the pre-training path and the recall
+    /// reference in tests/benches). Inherits the store's sharded fan-out.
+    pub fn brute_force(&self, q: &[f32], k: usize) -> Vec<SearchHit> {
+        self.store.search(q, k)
     }
 }
 
 impl VectorIndex for IvfFlatIndex {
     fn insert(&mut self, v: &[f32]) -> usize {
-        assert_eq!(v.len(), self.dim, "dimension mismatch");
-        let id = self.removed.len();
-        self.data.extend_from_slice(v);
-        self.removed.push(false);
+        let id = self.store.insert(v);
+        debug_assert_eq!(id, self.assignments.len());
         if self.is_trained() {
             let c = self.nearest_centroid(v);
             self.lists[c].push(id);
@@ -200,46 +207,64 @@ impl VectorIndex for IvfFlatIndex {
     }
 
     fn search(&self, q: &[f32], k: usize) -> Vec<SearchHit> {
-        assert_eq!(q.len(), self.dim, "dimension mismatch");
+        assert_eq!(q.len(), self.dim(), "dimension mismatch");
         if !self.is_trained() {
-            return self.brute_force(q, k);
+            return self.store.search(q, k);
         }
         // rank centroids, probe the top-nprobe lists
         let mut cent_scores: Vec<(usize, f32)> = (0..self.lists.len())
-            .map(|c| (c, FlatIndex::dot_unrolled(self.centroid(c), q)))
+            .map(|c| (c, dot_f32(self.centroid(c), q)))
             .collect();
         cent_scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        let mut top = TopK::new(k);
-        for &(c, _) in cent_scores.iter().take(self.nprobe) {
-            for &id in &self.lists[c] {
-                if !self.removed[id] {
-                    top.push(SearchHit {
-                        id,
-                        score: FlatIndex::dot_unrolled(self.row(id), q),
-                    });
-                }
-            }
-        }
-        top.into_vec()
+        let probe_ids = cent_scores
+            .iter()
+            .take(self.nprobe)
+            .flat_map(|&(c, _)| self.lists[c].iter().copied());
+        self.store.search_subset(q, k, probe_ids)
     }
 
     fn len(&self) -> usize {
-        self.removed.len()
+        self.store.len()
     }
 
     fn remove(&mut self, id: usize) {
-        if id < self.removed.len() {
-            self.removed[id] = true;
-        }
+        // The inverted lists keep the id (skipped at probe time) until the
+        // next retrain rebuilds them; the store reclaims the row's memory
+        // via tombstone compaction.
+        self.store.remove(id);
     }
 
     fn dim(&self) -> usize {
-        self.dim
+        self.store.dim()
+    }
+
+    fn insert_tombstone(&mut self) -> usize {
+        let id = self.store.insert_tombstone();
+        debug_assert_eq!(id, self.assignments.len());
+        self.assignments.push(UNASSIGNED);
+        id
+    }
+
+    fn live_len(&self) -> usize {
+        self.store.live_len()
+    }
+
+    fn set_pool(&mut self, pool: Arc<ThreadPool>, shards: usize) {
+        self.store.set_pool(pool, shards);
+    }
+
+    fn quant_params(&self) -> Option<Sq8Params> {
+        self.store.quant_params()
+    }
+
+    fn set_quant_params(&mut self, p: Sq8Params) {
+        self.store.set_quant_params(p);
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::segment::Quantization;
     use super::*;
     use crate::util::{normalize, Rng};
 
@@ -345,5 +370,29 @@ mod tests {
             a.iter().map(|h| h.id).collect::<Vec<_>>(),
             b.iter().map(|h| h.id).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn sq8_ivf_high_self_recall() {
+        let opts = IndexOpts {
+            quantization: Quantization::Sq8,
+            segment_rows: 128,
+            ..IndexOpts::default()
+        };
+        let mut idx = IvfFlatIndex::with_opts(16, 4, 2, opts);
+        let mut rng = Rng::new(6);
+        let vs = clustered(&mut rng, 400, 16, 4);
+        for v in &vs {
+            idx.insert(v);
+        }
+        assert!(idx.is_trained());
+        assert!(idx.quant_params().is_some());
+        let mut ok = 0;
+        for (i, v) in vs.iter().enumerate() {
+            if idx.search(v, 1)[0].id == i {
+                ok += 1;
+            }
+        }
+        assert!(ok as f64 >= vs.len() as f64 * 0.95, "self-recall={ok}/{}", vs.len());
     }
 }

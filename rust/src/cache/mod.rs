@@ -6,6 +6,12 @@
 //! nprobe) index, and supports the append-only policy the paper uses plus
 //! the eviction policies its §6.2 lists as future work.
 //!
+//! The `segment` submodule is the shared row-storage substrate under both
+//! index families: fixed-size segments scanned in parallel across shards,
+//! optional SQ8 scalar quantization (u8 codes + exact re-rank, the Milvus
+//! IVF_SQ8 analog), and tombstone compaction behind a stable-id
+//! indirection layer (see DESIGN.md "Index formats & hot path").
+//!
 //! The `persist` submodule makes the store durable: binary snapshots + an
 //! append-only WAL with crash-safe recovery, so the cache — the asset whose
 //! value accrues over millions of queries — survives process restarts.
@@ -14,13 +20,19 @@ pub mod eviction;
 pub mod flat;
 pub mod ivf;
 pub mod persist;
+pub mod segment;
 pub mod store;
 
 pub use eviction::{EvictionPolicy, EvictionStrategy};
 pub use flat::FlatIndex;
 pub use ivf::IvfFlatIndex;
 pub use persist::{PersistConfig, PersistStatus, Persistence, RecoveryReport, WalOp};
+pub use segment::{IndexOpts, Quantization, SegmentedStore, Sq8Params};
 pub use store::{CacheEntry, CacheStats, IndexKind, SemanticCache};
+
+use std::sync::Arc;
+
+use crate::util::ThreadPool;
 
 /// A scored search result.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -47,13 +59,50 @@ pub trait VectorIndex: Send {
     }
 
     /// Mark an id as removed (eviction). Removed ids never match again.
+    /// Segmented indexes reclaim the row's memory once the owning segment's
+    /// dead fraction passes `compact_tombstone_frac`.
     fn remove(&mut self, id: usize);
 
     fn dim(&self) -> usize;
+
+    /// Allocate a stable id with no live row (persistence restore of a
+    /// tombstoned slot). The default emulates it for indexes without true
+    /// tombstone support: insert a placeholder row and remove it.
+    fn insert_tombstone(&mut self) -> usize {
+        let placeholder = vec![0.0f32; self.dim()];
+        let id = self.insert(&placeholder);
+        self.remove(id);
+        id
+    }
+
+    /// Live (non-tombstoned) vectors. Defaults to `len()` for indexes that
+    /// do not track removals separately.
+    fn live_len(&self) -> usize {
+        self.len()
+    }
+
+    /// Attach the shared worker pool for sharded scans. No-op by default.
+    fn set_pool(&mut self, _pool: Arc<ThreadPool>, _shards: usize) {}
+
+    /// Trained scalar-quantization params, if this index quantizes
+    /// (persisted in snapshot format v2 so codes survive restarts).
+    fn quant_params(&self) -> Option<Sq8Params> {
+        None
+    }
+
+    /// Install recovered quantization params. Must be called on an empty
+    /// index. No-op for unquantized indexes.
+    fn set_quant_params(&mut self, _p: Sq8Params) {}
 }
 
 /// Maintain a bounded top-k set of hits (small k: linear insertion beats a
 /// heap in practice and allocates once).
+///
+/// Totally ordered by `(score desc, id asc)` — ties are broken by id, not
+/// by push order, so the retained set is identical no matter how the scan
+/// was partitioned. This is what makes the sharded scan's "1 shard ≡ N
+/// shards" contract hold even when equal scores straddle the k boundary
+/// (exact ties are common under SQ8's coarse u8 scores).
 #[derive(Debug)]
 pub struct TopK {
     k: usize,
@@ -74,15 +123,21 @@ impl TopK {
         }
     }
 
+    /// `(score desc, id asc)` ordering: does `a` rank strictly before `b`?
+    #[inline]
+    fn ranks_before(a: &SearchHit, b: &SearchHit) -> bool {
+        a.score > b.score || (a.score == b.score && a.id < b.id)
+    }
+
     #[inline]
     pub fn push(&mut self, hit: SearchHit) {
-        if hit.score <= self.threshold() {
+        if self.hits.len() == self.k && !Self::ranks_before(&hit, &self.hits[self.k - 1]) {
             return;
         }
         let pos = self
             .hits
             .iter()
-            .position(|h| h.score < hit.score)
+            .position(|h| Self::ranks_before(&hit, h))
             .unwrap_or(self.hits.len());
         self.hits.insert(pos, hit);
         self.hits.truncate(self.k);
@@ -108,6 +163,20 @@ mod tests {
         assert_eq!(v[0].id, 1);
         assert_eq!(v[1].id, 3);
         assert_eq!(v[2].id, 2);
+    }
+
+    #[test]
+    fn topk_ties_kept_by_lowest_id_regardless_of_push_order() {
+        // Five equal scores pushed in scrambled order: a TopK(3) must keep
+        // ids 0,1,2 — the property the sharded merge relies on.
+        for order in [[4usize, 0, 3, 1, 2], [2, 4, 1, 3, 0], [0, 1, 2, 3, 4]] {
+            let mut t = TopK::new(3);
+            for &id in &order {
+                t.push(SearchHit { id, score: 0.5 });
+            }
+            let ids: Vec<usize> = t.into_vec().iter().map(|h| h.id).collect();
+            assert_eq!(ids, vec![0, 1, 2], "push order {order:?}");
+        }
     }
 
     #[test]

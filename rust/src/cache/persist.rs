@@ -27,6 +27,8 @@
 //! snapshot-<gen>.snap:
 //!   "TWKS" | version u32 | generation u64 | dim u64 | tick u64
 //!   | stats (inserts, lookups, exact_hits, evictions: u64 x4)
+//!   | [version >= 2] quant flag u8 (0 = none, 1 = SQ8);
+//!       SQ8: min f32[dim] | scale f32[dim]   (each as u32 count + raw f32)
 //!   | n_slots u64
 //!   | per slot: flag u8 (0 = tombstone, 1 = live);
 //!       live: query str | response str | embedding f32[dim]
@@ -37,6 +39,13 @@
 //!   "TWKW" | version u32 | generation u64
 //!   | records: op u8 | payload_len u32 | payload | checksum u64 (op+payload)
 //! ```
+//!
+//! Version history: v1 had no quantization section. v2 (the SQ8/segmented
+//! index release) persists the trained scalar-quantization params so a
+//! restart encodes identical u8 codes and returns identical hits. Old v1
+//! snapshots and WALs still recover (the quant section defaults to none);
+//! new files are always written at the current version. The WAL *record*
+//! format is unchanged across v1/v2.
 //!
 //! Strings are `u32` length + UTF-8 bytes; embeddings are `u32` count + raw
 //! f32 little-endian. Checksums use the crate's FNV-style `hash_bytes`.
@@ -57,12 +66,15 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use super::segment::Sq8Params;
 use super::store::CacheStats;
 use crate::util::rng::hash_bytes;
 
 pub const SNAPSHOT_MAGIC: [u8; 4] = *b"TWKS";
 pub const WAL_MAGIC: [u8; 4] = *b"TWKW";
-pub const FORMAT_VERSION: u32 = 1;
+/// Current on-disk format. Readers accept `MIN_FORMAT_VERSION..=FORMAT_VERSION`.
+pub const FORMAT_VERSION: u32 = 2;
+pub const MIN_FORMAT_VERSION: u32 = 1;
 
 const OP_INSERT: u8 = 1;
 const OP_REMOVE: u8 = 2;
@@ -144,6 +156,10 @@ pub struct SnapshotState {
     pub dim: usize,
     pub tick: u64,
     pub stats: CacheStats,
+    /// Trained SQ8 params (format v2+). Restoring them before re-inserting
+    /// rows makes the rebuilt codes — and therefore every search result —
+    /// identical to the pre-restart cache.
+    pub quant: Option<Sq8Params>,
     pub entries: Vec<Option<SnapshotEntry>>,
 }
 
@@ -267,6 +283,14 @@ pub fn encode_snapshot(state: &SnapshotState, generation: u64) -> Vec<u8> {
     put_u64(&mut buf, state.stats.lookups);
     put_u64(&mut buf, state.stats.exact_hits);
     put_u64(&mut buf, state.stats.evictions);
+    match &state.quant {
+        None => buf.push(0),
+        Some(p) => {
+            buf.push(1);
+            put_f32s(&mut buf, &p.min);
+            put_f32s(&mut buf, &p.scale);
+        }
+    }
     put_u64(&mut buf, state.entries.len() as u64);
     for slot in &state.entries {
         match slot {
@@ -305,7 +329,7 @@ pub fn decode_snapshot(bytes: &[u8]) -> Result<(SnapshotState, u64)> {
         bail!("bad snapshot magic");
     }
     let version = c.u32()?;
-    if version != FORMAT_VERSION {
+    if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
         bail!("unsupported snapshot version {version}");
     }
     let generation = c.u64()?;
@@ -316,6 +340,27 @@ pub fn decode_snapshot(bytes: &[u8]) -> Result<(SnapshotState, u64)> {
         lookups: c.u64()?,
         exact_hits: c.u64()?,
         evictions: c.u64()?,
+    };
+    // v1 predates the quantization section: default to none.
+    let quant = if version >= 2 {
+        match c.u8()? {
+            0 => None,
+            1 => {
+                let min = c.f32s()?;
+                let scale = c.f32s()?;
+                if min.len() != dim || scale.len() != dim {
+                    bail!(
+                        "quant params dim {}/{} != header dim {dim}",
+                        min.len(),
+                        scale.len()
+                    );
+                }
+                Some(Sq8Params { min, scale })
+            }
+            f => bail!("bad quant flag {f}"),
+        }
+    } else {
+        None
     };
     let n = c.u64()? as usize;
     let mut entries = Vec::with_capacity(n);
@@ -350,7 +395,7 @@ pub fn decode_snapshot(bytes: &[u8]) -> Result<(SnapshotState, u64)> {
     if !c.done() {
         bail!("trailing bytes after snapshot body");
     }
-    Ok((SnapshotState { dim, tick, stats, entries }, generation))
+    Ok((SnapshotState { dim, tick, stats, quant, entries }, generation))
 }
 
 // ---------------------------------------------------------------------------
@@ -491,7 +536,7 @@ pub fn read_wal(path: &Path) -> Result<WalScan> {
     let mut c = Cursor::new(&bytes);
     c.take(4)?; // magic
     let version = c.u32()?;
-    if version != FORMAT_VERSION {
+    if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
         bail!("unsupported WAL version {version}");
     }
     let generation = c.u64()?;
@@ -862,8 +907,42 @@ mod tests {
             dim,
             tick: 2 * n as u64,
             stats: CacheStats { inserts: n as u64, lookups: 7, exact_hits: 2, evictions: 1 },
+            quant: None,
             entries,
         }
+    }
+
+    /// Hand-encode a version-1 snapshot (no quantization section) so the
+    /// backward-compat path is pinned against real v1 bytes.
+    fn encode_snapshot_v1(state: &SnapshotState, generation: u64) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&SNAPSHOT_MAGIC);
+        put_u32(&mut buf, 1);
+        put_u64(&mut buf, generation);
+        put_u64(&mut buf, state.dim as u64);
+        put_u64(&mut buf, state.tick);
+        put_u64(&mut buf, state.stats.inserts);
+        put_u64(&mut buf, state.stats.lookups);
+        put_u64(&mut buf, state.stats.exact_hits);
+        put_u64(&mut buf, state.stats.evictions);
+        put_u64(&mut buf, state.entries.len() as u64);
+        for slot in &state.entries {
+            match slot {
+                None => buf.push(0),
+                Some(e) => {
+                    buf.push(1);
+                    put_str(&mut buf, &e.query);
+                    put_str(&mut buf, &e.response);
+                    put_f32s(&mut buf, &e.embedding);
+                    put_u64(&mut buf, e.inserted_at);
+                    put_u64(&mut buf, e.last_used);
+                    put_u64(&mut buf, e.use_count);
+                }
+            }
+        }
+        let sum = hash_bytes(&buf);
+        put_u64(&mut buf, sum);
+        buf
     }
 
     #[test]
@@ -881,6 +960,29 @@ mod tests {
         assert_eq!(e.query, "query 4");
         assert_eq!(e.embedding.len(), 8);
         assert_eq!(e.last_used, 5);
+    }
+
+    #[test]
+    fn v1_snapshot_still_decodes() {
+        let s = state_with(9, 4);
+        let bytes = encode_snapshot_v1(&s, 3);
+        let (back, generation) = decode_snapshot(&bytes).unwrap();
+        assert_eq!(generation, 3);
+        assert_eq!(back.entries.len(), 9);
+        assert!(back.quant.is_none(), "v1 has no quant section");
+        assert_eq!(back.stats.inserts, s.stats.inserts);
+    }
+
+    #[test]
+    fn quant_params_roundtrip_in_v2() {
+        let mut s = state_with(5, 3);
+        s.quant = Some(Sq8Params {
+            min: vec![-0.5, -0.25, 0.0],
+            scale: vec![0.004, 0.002, 0.001],
+        });
+        let bytes = encode_snapshot(&s, 2);
+        let (back, _) = decode_snapshot(&bytes).unwrap();
+        assert_eq!(back.quant, s.quant);
     }
 
     #[test]
@@ -948,6 +1050,7 @@ mod tests {
                 dim: 1,
                 tick: 1,
                 stats: CacheStats { inserts: 1, ..Default::default() },
+                quant: None,
                 entries: vec![Some(SnapshotEntry {
                     query: "q".into(),
                     response: "r".into(),

@@ -1,0 +1,1023 @@
+//! Segmented row storage: the shared substrate under `FlatIndex` and
+//! `IvfFlatIndex`.
+//!
+//! Three capabilities the monolithic `Vec<f32>` storage could not offer:
+//!
+//! * **Sharded parallel scan** — rows live in fixed-size segments; sealed
+//!   segments are distributed round-robin over N shards and scanned on the
+//!   shared `util::ThreadPool` (per-shard `TopK`, deterministic merge), so
+//!   search scales with cores instead of pinning one.
+//! * **SQ8 quantization** — the Milvus IVF_SQ8 analog: per-dimension
+//!   min/max affine quantization to u8, trained once on the first sealed
+//!   segment and frozen. Scans score codes asymmetrically (u8 codes × f32
+//!   query, one decode fused into the dot product) which cuts scan memory
+//!   bandwidth ~4×; the top candidates are re-ranked with the exact f32
+//!   rows before results leave the store.
+//! * **Tombstone compaction** — removals mark rows dead; once a segment's
+//!   dead fraction passes `compact_tombstone_frac` the segment is rewritten
+//!   without its dead rows and the stable-id indirection table is remapped.
+//!   Ids handed to callers never change — `SemanticCache`, eviction
+//!   metadata, and the WAL/snapshot format all key on stable ids.
+//!
+//! Determinism contract (load-bearing for the persistence round-trip and
+//! the shard-invariance tests): every result set is merged by
+//! `(score desc, id asc)`, and every row's score is computed by the same
+//! function over the same bytes regardless of shard count. Hence 1 shard ≡
+//! N shards exactly. Restarts reproduce identical codes (the SQ8 params
+//! ride in snapshot format v2) and identical hits whenever the layout
+//! round-trips; a restore that compacts tombstones away can only move rows
+//! from code-scored sealed segments into the exactly-scored active tail,
+//! which never makes candidate selection worse (see DESIGN.md).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::{SearchHit, TopK};
+use crate::util::ThreadPool;
+
+/// Rows per segment. 4096 × 384 dims × 4 B ≈ 6.3 MiB of f32 (1.6 MiB of
+/// SQ8 codes): big enough that the scan stays sequential, small enough that
+/// a 10k-entry cache already has material to shard.
+pub const DEFAULT_SEGMENT_ROWS: usize = 4096;
+
+/// Exact re-rank budget for quantized search: the approximate pass keeps
+/// `max(k * SQ8_RERANK_FACTOR, SQ8_RERANK_MIN)` candidates per shard, the
+/// merged top candidates are re-scored against the f32 rows.
+pub const SQ8_RERANK_FACTOR: usize = 4;
+pub const SQ8_RERANK_MIN: usize = 32;
+
+/// Subset (IVF probe) scans below this many resolved rows stay on the
+/// calling thread — fan-out overhead would dominate.
+pub const PARALLEL_SUBSET_MIN: usize = 2048;
+
+/// Storage mode for segment rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Quantization {
+    /// Exact f32 rows (the pre-existing behavior).
+    None,
+    /// u8 scalar quantization with exact f32 re-rank.
+    Sq8,
+}
+
+impl Quantization {
+    pub fn parse(s: &str) -> Option<Quantization> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "none" | "f32" | "flat" => Quantization::None,
+            "sq8" => Quantization::Sq8,
+            _ => return None,
+        })
+    }
+}
+
+/// Construction-time knobs shared by both index families (the `[index]`
+/// config section).
+#[derive(Clone, Copy, Debug)]
+pub struct IndexOpts {
+    pub quantization: Quantization,
+    pub segment_rows: usize,
+    /// Rewrite a segment once this fraction of its rows is dead.
+    /// `<= 0` disables compaction.
+    pub compact_tombstone_frac: f32,
+}
+
+impl Default for IndexOpts {
+    fn default() -> Self {
+        IndexOpts {
+            quantization: Quantization::None,
+            segment_rows: DEFAULT_SEGMENT_ROWS,
+            compact_tombstone_frac: 0.3,
+        }
+    }
+}
+
+/// Per-dimension affine u8 quantization: `value ≈ min[d] + code * scale[d]`.
+/// Trained once (first sealed segment) and frozen so codes stay comparable
+/// across segments and across restarts; persisted in snapshot format v2.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sq8Params {
+    pub min: Vec<f32>,
+    pub scale: Vec<f32>,
+}
+
+impl Sq8Params {
+    /// Train from `data` (row-major, `data.len() % dim == 0`).
+    pub fn train(dim: usize, data: &[f32]) -> Sq8Params {
+        assert!(dim > 0 && !data.is_empty() && data.len() % dim == 0);
+        let mut min = vec![f32::INFINITY; dim];
+        let mut max = vec![f32::NEG_INFINITY; dim];
+        for row in data.chunks_exact(dim) {
+            for (d, &x) in row.iter().enumerate() {
+                if x < min[d] {
+                    min[d] = x;
+                }
+                if x > max[d] {
+                    max[d] = x;
+                }
+            }
+        }
+        let scale = min
+            .iter()
+            .zip(&max)
+            .map(|(lo, hi)| ((hi - lo) / 255.0).max(1e-9))
+            .collect();
+        Sq8Params { min, scale }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.min.len()
+    }
+
+    #[inline]
+    pub fn encode_into(&self, v: &[f32], out: &mut Vec<u8>) {
+        debug_assert_eq!(v.len(), self.dim());
+        out.reserve(v.len());
+        for d in 0..v.len() {
+            let q = (v[d] - self.min[d]) / self.scale[d];
+            out.push(q.round().clamp(0.0, 255.0) as u8);
+        }
+    }
+
+    /// Precompute the per-query scoring tables so the inner loop is a pure
+    /// `u8 × f32` dot: `score = offset + Σ code[d] * qs[d]` where
+    /// `offset = Σ min[d] * q[d]` and `qs[d] = scale[d] * q[d]`.
+    pub fn query(&self, q: &[f32]) -> Sq8Query {
+        debug_assert_eq!(q.len(), self.dim());
+        let offset = dot_f32(&self.min, q);
+        let qs = self.scale.iter().zip(q).map(|(s, x)| s * x).collect();
+        Sq8Query { offset, qs }
+    }
+}
+
+/// Per-query precomputation for asymmetric SQ8 scoring.
+#[derive(Clone, Debug)]
+pub struct Sq8Query {
+    pub offset: f32,
+    pub qs: Vec<f32>,
+}
+
+impl Sq8Query {
+    #[inline]
+    pub fn score(&self, codes: &[u8]) -> f32 {
+        self.offset + dot_u8_f32(codes, &self.qs)
+    }
+}
+
+/// Vectorization-friendly dot product: `chunks_exact(8)` gives the compiler
+/// bounds-check-free fixed-width blocks that auto-vectorize to f32x8; eight
+/// independent accumulators hide FMA latency. (Moved here from
+/// `cache::flat` when storage was segmented; see EXPERIMENTS.md §Perf.)
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for k in 0..8 {
+            acc[k] += xa[k] * xb[k];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (xa, xb) in ra.iter().zip(rb) {
+        tail += xa * xb;
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// The SQ8 scan kernel: u8 codes against the precomputed f32 table. Same
+/// 8-wide shape as `dot_f32`; the u8→f32 convert fuses into the FMA.
+#[inline]
+pub fn dot_u8_f32(codes: &[u8], qs: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let ca = codes.chunks_exact(8);
+    let cb = qs.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for k in 0..8 {
+            acc[k] += xa[k] as f32 * xb[k];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (xa, xb) in ra.iter().zip(rb) {
+        tail += *xa as f32 * xb;
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// Deterministic top-k merge: `(score desc, id asc)`, truncated to `k`.
+/// Every search path funnels through this so shard count and physical
+/// layout never change the result set.
+pub fn merge_hits(mut hits: Vec<SearchHit>, k: usize) -> Vec<SearchHit> {
+    hits.sort_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+    hits.truncate(k.max(1));
+    hits
+}
+
+// ---------------------------------------------------------------------------
+// Segment
+// ---------------------------------------------------------------------------
+
+/// One fixed-capacity block of rows. Sealed segments are immutable behind an
+/// `Arc` except for tombstone marks and compaction, both of which happen
+/// under `&mut self` of the store (no scan in flight → `Arc::get_mut`).
+#[derive(Debug)]
+pub struct Segment {
+    dim: usize,
+    /// Row-major exact vectors. Kept in every mode: the SQ8 scan never
+    /// touches them (that is the bandwidth win), but re-rank, compaction,
+    /// and k-means training read them.
+    rows: Vec<f32>,
+    /// SQ8 codes, row-major; empty until quantization params exist.
+    codes: Vec<u8>,
+    /// Stable id of each row.
+    ids: Vec<usize>,
+    live: Vec<bool>,
+    dead: usize,
+}
+
+impl Segment {
+    fn new(dim: usize) -> Segment {
+        Segment { dim, rows: Vec::new(), codes: Vec::new(), ids: Vec::new(), live: Vec::new(), dead: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.rows[r * self.dim..(r + 1) * self.dim]
+    }
+
+    #[inline]
+    fn code_row(&self, r: usize) -> &[u8] {
+        &self.codes[r * self.dim..(r + 1) * self.dim]
+    }
+
+    fn push(&mut self, id: usize, v: &[f32], params: Option<&Sq8Params>) -> usize {
+        let r = self.ids.len();
+        self.rows.extend_from_slice(v);
+        if let Some(p) = params {
+            p.encode_into(v, &mut self.codes);
+        }
+        self.ids.push(id);
+        self.live.push(true);
+        r
+    }
+
+    fn kill(&mut self, r: usize) {
+        if self.live[r] {
+            self.live[r] = false;
+            self.dead += 1;
+        }
+    }
+
+    fn dead_frac(&self) -> f32 {
+        if self.ids.is_empty() {
+            0.0
+        } else {
+            self.dead as f32 / self.ids.len() as f32
+        }
+    }
+
+    /// (Re-)encode every row — used when params arrive after rows did
+    /// (training happens at the first seal).
+    fn ensure_codes(&mut self, params: &Sq8Params) {
+        if self.codes.len() == self.ids.len() * self.dim {
+            return;
+        }
+        self.codes.clear();
+        for r in 0..self.ids.len() {
+            let row = &self.rows[r * self.dim..(r + 1) * self.dim];
+            params.encode_into(row, &mut self.codes);
+        }
+    }
+
+    /// Drop dead rows, reclaiming their memory. Stable ids are unchanged;
+    /// the caller remaps id → row through `ids`.
+    fn rewrite(&mut self, params: Option<&Sq8Params>) {
+        let n_live = self.ids.len() - self.dead;
+        let mut rows = Vec::with_capacity(n_live * self.dim);
+        let mut codes = Vec::with_capacity(if params.is_some() { n_live * self.dim } else { 0 });
+        let mut ids = Vec::with_capacity(n_live);
+        for r in 0..self.ids.len() {
+            if !self.live[r] {
+                continue;
+            }
+            let row = &self.rows[r * self.dim..(r + 1) * self.dim];
+            rows.extend_from_slice(row);
+            if let Some(p) = params {
+                p.encode_into(row, &mut codes);
+            }
+            ids.push(self.ids[r]);
+        }
+        self.rows = rows;
+        self.codes = codes;
+        self.live = vec![true; ids.len()];
+        self.ids = ids;
+        self.dead = 0;
+    }
+
+    /// Exact scan into a bounded top-k.
+    pub fn scan_f32(&self, q: &[f32], top: &mut TopK) {
+        for r in 0..self.ids.len() {
+            if self.live[r] {
+                top.push(SearchHit { id: self.ids[r], score: dot_f32(self.row(r), q) });
+            }
+        }
+    }
+
+    /// Approximate scan over u8 codes into a bounded top-k.
+    pub fn scan_sq8(&self, sq: &Sq8Query, top: &mut TopK) {
+        for r in 0..self.ids.len() {
+            if self.live[r] {
+                top.push(SearchHit { id: self.ids[r], score: sq.score(self.code_row(r)) });
+            }
+        }
+    }
+
+    /// Score one row: u8 codes when this segment has them (sealed,
+    /// quantized), exact f32 otherwise (the growing active segment).
+    #[inline]
+    fn score_row(&self, r: usize, q: &[f32], sq: Option<&Sq8Query>) -> f32 {
+        match sq {
+            Some(sq) if self.codes.len() == self.ids.len() * self.dim => {
+                sq.score(self.code_row(r))
+            }
+            _ => dot_f32(self.row(r), q),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SegmentedStore
+// ---------------------------------------------------------------------------
+
+/// id → physical location. `seg == TOMBSTONE_SEG` marks a removed id.
+#[derive(Clone, Copy, Debug)]
+struct Loc {
+    seg: u32,
+    row: u32,
+}
+
+const TOMBSTONE_SEG: u32 = u32::MAX;
+
+pub struct SegmentedStore {
+    dim: usize,
+    opts: IndexOpts,
+    params: Option<Arc<Sq8Params>>,
+    /// Immutable (post-seal) segments; the scan fans out over these.
+    sealed: Vec<Arc<Segment>>,
+    /// The growing tail segment (index `sealed.len()`), always scanned
+    /// exactly (f32) on the calling thread.
+    active: Segment,
+    /// Stable-id indirection: compaction rewrites segments and remaps rows
+    /// here; ids handed out by `insert` never change.
+    locs: Vec<Loc>,
+    live: usize,
+    pool: Option<Arc<ThreadPool>>,
+    shards: usize,
+}
+
+impl SegmentedStore {
+    pub fn new(dim: usize, opts: IndexOpts) -> SegmentedStore {
+        assert!(dim > 0);
+        assert!(opts.segment_rows > 0);
+        SegmentedStore {
+            dim,
+            opts,
+            params: None,
+            sealed: Vec::new(),
+            active: Segment::new(dim),
+            locs: Vec::new(),
+            live: 0,
+            pool: None,
+            shards: 1,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Total id slots (live + tombstoned) — ids are slot positions.
+    pub fn len(&self) -> usize {
+        self.locs.len()
+    }
+
+    /// Live rows, maintained incrementally (O(1); the old IVF train check
+    /// recounted tombstones with a full scan on every insert).
+    pub fn live_len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_live(&self, id: usize) -> bool {
+        self.locs.get(id).map_or(false, |l| l.seg != TOMBSTONE_SEG)
+    }
+
+    pub fn quantization(&self) -> Quantization {
+        self.opts.quantization
+    }
+
+    /// Trained quantization params, if any (persisted in snapshots).
+    pub fn quant_params(&self) -> Option<Sq8Params> {
+        self.params.as_ref().map(|p| (**p).clone())
+    }
+
+    /// Install previously-trained params (persistence recovery). Must run
+    /// before rows arrive so codes are identical to the pre-restart run.
+    /// Ignored when this store is not quantized: a snapshot written under
+    /// SQ8 but reopened with `quantization = "none"` must not keep encoding
+    /// (and re-persisting) codes nothing will ever read.
+    pub fn set_quant_params(&mut self, p: Sq8Params) {
+        if self.opts.quantization != Quantization::Sq8 {
+            return;
+        }
+        assert_eq!(p.dim(), self.dim, "quant params dim mismatch");
+        assert!(self.locs.is_empty(), "set_quant_params on a non-empty store");
+        self.params = Some(Arc::new(p));
+    }
+
+    /// Attach the shared worker pool; searches fan sealed segments out over
+    /// `shards` jobs. `shards <= 1` keeps the scan on the calling thread.
+    pub fn set_pool(&mut self, pool: Arc<ThreadPool>, shards: usize) {
+        self.shards = shards.max(1);
+        self.pool = if self.shards > 1 { Some(pool) } else { None };
+    }
+
+    pub fn segment_count(&self) -> usize {
+        self.sealed.len() + 1
+    }
+
+    /// Exact f32 row of a live id.
+    pub fn row(&self, id: usize) -> Option<&[f32]> {
+        let loc = self.locs.get(id)?;
+        if loc.seg == TOMBSTONE_SEG {
+            return None;
+        }
+        Some(self.segment(loc.seg as usize).row(loc.row as usize))
+    }
+
+    fn segment(&self, idx: usize) -> &Segment {
+        if idx == self.sealed.len() {
+            &self.active
+        } else {
+            &self.sealed[idx]
+        }
+    }
+
+    pub fn insert(&mut self, v: &[f32]) -> usize {
+        assert_eq!(v.len(), self.dim, "dimension mismatch");
+        if self.active.len() == self.opts.segment_rows {
+            self.seal_active();
+        }
+        let id = self.locs.len();
+        let row = self.active.push(id, v, self.params.as_deref());
+        self.locs.push(Loc { seg: self.sealed.len() as u32, row: row as u32 });
+        self.live += 1;
+        id
+    }
+
+    /// Allocate a stable id with no physical row (persistence restore of a
+    /// tombstoned slot — the old path inserted a zero placeholder row that
+    /// was scanned forever).
+    pub fn insert_tombstone(&mut self) -> usize {
+        let id = self.locs.len();
+        self.locs.push(Loc { seg: TOMBSTONE_SEG, row: 0 });
+        id
+    }
+
+    fn seal_active(&mut self) {
+        // First seal trains SQ8 (unless params were imported): the first
+        // `segment_rows` inserts are the training sample. Deterministic in
+        // insertion order, so WAL replay retrains identically.
+        if self.opts.quantization == Quantization::Sq8 && self.params.is_none() {
+            self.params = Some(Arc::new(Sq8Params::train(self.dim, &self.active.rows)));
+        }
+        let mut seg = std::mem::replace(&mut self.active, Segment::new(self.dim));
+        if let Some(p) = self.params.clone() {
+            seg.ensure_codes(&p);
+        }
+        self.sealed.push(Arc::new(seg));
+    }
+
+    pub fn remove(&mut self, id: usize) {
+        let Some(&loc) = self.locs.get(id) else { return };
+        if loc.seg == TOMBSTONE_SEG {
+            return;
+        }
+        self.locs[id] = Loc { seg: TOMBSTONE_SEG, row: 0 };
+        self.live -= 1;
+        let seg_idx = loc.seg as usize;
+        if seg_idx == self.sealed.len() {
+            self.active.kill(loc.row as usize);
+            if self.wants_compaction(self.active.dead_frac(), self.active.dead) {
+                self.compact_active();
+            }
+        } else {
+            let seg = Arc::get_mut(&mut self.sealed[seg_idx])
+                .expect("segment aliased during remove");
+            seg.kill(loc.row as usize);
+            let (frac, dead) = (seg.dead_frac(), seg.dead);
+            if self.wants_compaction(frac, dead) {
+                self.compact_segment(seg_idx);
+            }
+        }
+    }
+
+    fn wants_compaction(&self, dead_frac: f32, dead: usize) -> bool {
+        self.opts.compact_tombstone_frac > 0.0
+            && dead > 0
+            && dead_frac >= self.opts.compact_tombstone_frac
+    }
+
+    /// Rewrite one sealed segment without its dead rows and remap the
+    /// surviving ids. Stable ids are unchanged.
+    fn compact_segment(&mut self, seg_idx: usize) {
+        let params = self.params.clone();
+        {
+            let seg = Arc::get_mut(&mut self.sealed[seg_idx])
+                .expect("segment aliased during compaction");
+            seg.rewrite(params.as_deref());
+        }
+        let seg = &self.sealed[seg_idx];
+        for (row, &id) in seg.ids.iter().enumerate() {
+            self.locs[id] = Loc { seg: seg_idx as u32, row: row as u32 };
+        }
+    }
+
+    fn compact_active(&mut self) {
+        let params = self.params.clone();
+        self.active.rewrite(params.as_deref());
+        let seg_idx = self.sealed.len() as u32;
+        for row in 0..self.active.ids.len() {
+            let id = self.active.ids[row];
+            self.locs[id] = Loc { seg: seg_idx, row: row as u32 };
+        }
+    }
+
+    // -- search ------------------------------------------------------------
+
+    pub fn search(&self, q: &[f32], k: usize) -> Vec<SearchHit> {
+        assert_eq!(q.len(), self.dim, "dimension mismatch");
+        let k = k.max(1);
+        match (self.opts.quantization, self.params.clone()) {
+            (Quantization::Sq8, Some(p)) => self.search_sq8(q, k, &p),
+            // SQ8 before training (nothing sealed yet) is an exact scan.
+            _ => self.search_f32(q, k),
+        }
+    }
+
+    fn shard_groups(&self) -> Vec<Vec<Arc<Segment>>> {
+        let n = self.shards.min(self.sealed.len()).max(1);
+        let mut groups: Vec<Vec<Arc<Segment>>> = vec![Vec::new(); n];
+        for (i, seg) in self.sealed.iter().enumerate() {
+            groups[i % n].push(Arc::clone(seg));
+        }
+        groups
+    }
+
+    /// Fan the sealed segments out over the pool; each job pushes into its
+    /// own `TopK(cap)` and sends the result back. Falls back to an inline
+    /// scan without a pool. Returns the concatenated per-shard top lists
+    /// (callers merge deterministically).
+    fn scan_sealed(&self, cap: usize, q: &[f32], sq: Option<&Sq8Query>) -> Vec<SearchHit> {
+        match &self.pool {
+            Some(pool) if self.sealed.len() > 1 => {
+                let q: Arc<Vec<f32>> = Arc::new(q.to_vec());
+                let sq: Option<Arc<Sq8Query>> = sq.map(|s| Arc::new(s.clone()));
+                let (tx, rx) = mpsc::channel::<Vec<SearchHit>>();
+                let mut jobs = 0usize;
+                for group in self.shard_groups() {
+                    if group.is_empty() {
+                        continue;
+                    }
+                    let q = Arc::clone(&q);
+                    let sq = sq.clone();
+                    let tx = tx.clone();
+                    jobs += 1;
+                    pool.execute(move || {
+                        let mut top = TopK::new(cap);
+                        for seg in &group {
+                            match &sq {
+                                Some(sq) => seg.scan_sq8(sq, &mut top),
+                                None => seg.scan_f32(&q, &mut top),
+                            }
+                        }
+                        // Release the segment refs BEFORE the result becomes
+                        // observable: the caller may mutate (remove/compact)
+                        // via `Arc::get_mut` as soon as every shard reports.
+                        drop(group);
+                        let _ = tx.send(top.into_vec());
+                    });
+                }
+                drop(tx);
+                let mut hits = Vec::with_capacity(jobs * cap);
+                for _ in 0..jobs {
+                    hits.extend(rx.recv().expect("shard scan worker panicked"));
+                }
+                hits
+            }
+            _ => {
+                let mut top = TopK::new(cap);
+                for seg in &self.sealed {
+                    match sq {
+                        Some(sq) => seg.scan_sq8(sq, &mut top),
+                        None => seg.scan_f32(q, &mut top),
+                    }
+                }
+                top.into_vec()
+            }
+        }
+    }
+
+    fn search_f32(&self, q: &[f32], k: usize) -> Vec<SearchHit> {
+        let mut hits = self.scan_sealed(k, q, None);
+        let mut top = TopK::new(k);
+        self.active.scan_f32(q, &mut top);
+        hits.extend(top.into_vec());
+        merge_hits(hits, k)
+    }
+
+    fn search_sq8(&self, q: &[f32], k: usize, params: &Sq8Params) -> Vec<SearchHit> {
+        let cand_k = (k * SQ8_RERANK_FACTOR).max(SQ8_RERANK_MIN);
+        let sq = params.query(q);
+        // Approximate candidates from the sealed segments' codes…
+        let cands = merge_hits(self.scan_sealed(cand_k, q, Some(&sq)), cand_k);
+        // …re-ranked exactly against the f32 rows.
+        let mut hits: Vec<SearchHit> = cands
+            .into_iter()
+            .map(|h| SearchHit {
+                id: h.id,
+                score: dot_f32(self.row(h.id).expect("candidate row vanished"), q),
+            })
+            .collect();
+        // The active (growing) segment is always scored exactly.
+        let mut top = TopK::new(k);
+        self.active.scan_f32(q, &mut top);
+        hits.extend(top.into_vec());
+        merge_hits(hits, k)
+    }
+
+    /// Search restricted to `ids` (the IVF probe path). Dead ids are
+    /// skipped. Quantized stores score codes first and re-rank the top
+    /// candidates exactly, mirroring `search`; probes resolving to
+    /// `PARALLEL_SUBSET_MIN`+ rows fan out across the scan shards
+    /// (grouped by segment so each job touches contiguous-ish memory).
+    pub fn search_subset<I>(&self, q: &[f32], k: usize, ids: I) -> Vec<SearchHit>
+    where
+        I: IntoIterator<Item = usize>,
+    {
+        assert_eq!(q.len(), self.dim, "dimension mismatch");
+        let k = k.max(1);
+        let quant = matches!(self.opts.quantization, Quantization::Sq8) && self.params.is_some();
+        let sq = if quant {
+            Some(self.params.as_ref().expect("checked above").query(q))
+        } else {
+            None
+        };
+        // Candidate budget: quantized scans over-fetch for the exact re-rank.
+        let cap = if quant { (k * SQ8_RERANK_FACTOR).max(SQ8_RERANK_MIN) } else { k };
+
+        // Resolve live ids to (row, id) pairs grouped by segment; the last
+        // group is the active segment (scored exactly, on this thread).
+        let mut by_seg: Vec<Vec<(u32, usize)>> = vec![Vec::new(); self.sealed.len() + 1];
+        let mut sealed_rows = 0usize;
+        for id in ids {
+            if let Some(&loc) = self.locs.get(id) {
+                if loc.seg == TOMBSTONE_SEG {
+                    continue;
+                }
+                by_seg[loc.seg as usize].push((loc.row, id));
+                if (loc.seg as usize) < self.sealed.len() {
+                    sealed_rows += 1;
+                }
+            }
+        }
+        let active_rows = by_seg.pop().expect("active group");
+
+        let mut hits: Vec<SearchHit>;
+        match &self.pool {
+            Some(pool) if sealed_rows >= PARALLEL_SUBSET_MIN => {
+                let q_arc: Arc<Vec<f32>> = Arc::new(q.to_vec());
+                let sq_arc: Option<Arc<Sq8Query>> = sq.clone().map(Arc::new);
+                let mut groups: Vec<Vec<(Arc<Segment>, Vec<(u32, usize)>)>> =
+                    vec![Vec::new(); self.shards];
+                for (seg_idx, rows) in by_seg.into_iter().enumerate() {
+                    if !rows.is_empty() {
+                        groups[seg_idx % self.shards]
+                            .push((Arc::clone(&self.sealed[seg_idx]), rows));
+                    }
+                }
+                let (tx, rx) = mpsc::channel::<Vec<SearchHit>>();
+                let mut jobs = 0usize;
+                for group in groups {
+                    if group.is_empty() {
+                        continue;
+                    }
+                    let q = Arc::clone(&q_arc);
+                    let sq = sq_arc.clone();
+                    let tx = tx.clone();
+                    jobs += 1;
+                    pool.execute(move || {
+                        let mut top = TopK::new(cap);
+                        for (seg, rows) in &group {
+                            for &(row, id) in rows {
+                                let score = seg.score_row(row as usize, &q, sq.as_deref());
+                                top.push(SearchHit { id, score });
+                            }
+                        }
+                        // See scan_sealed: segment refs must die before the
+                        // result is observable (Arc::get_mut on remove).
+                        drop(group);
+                        let _ = tx.send(top.into_vec());
+                    });
+                }
+                drop(tx);
+                hits = Vec::with_capacity(jobs * cap);
+                for _ in 0..jobs {
+                    hits.extend(rx.recv().expect("subset scan worker panicked"));
+                }
+            }
+            _ => {
+                let mut top = TopK::new(cap);
+                for (seg_idx, rows) in by_seg.iter().enumerate() {
+                    let seg = &self.sealed[seg_idx];
+                    for &(row, id) in rows {
+                        let score = seg.score_row(row as usize, q, sq.as_ref());
+                        top.push(SearchHit { id, score });
+                    }
+                }
+                hits = top.into_vec();
+            }
+        }
+        if quant {
+            // Exact re-rank of the merged approximate candidates.
+            hits = merge_hits(hits, cap)
+                .into_iter()
+                .map(|h| SearchHit {
+                    id: h.id,
+                    score: dot_f32(self.row(h.id).expect("candidate row vanished"), q),
+                })
+                .collect();
+        }
+        // Active-segment rows are always scored exactly.
+        let mut top = TopK::new(k);
+        for &(row, id) in &active_rows {
+            top.push(SearchHit { id, score: dot_f32(self.active.row(row as usize), q) });
+        }
+        hits.extend(top.into_vec());
+        merge_hits(hits, k)
+    }
+
+    /// All live stable ids in ascending order (IVF training input).
+    pub fn live_ids(&self) -> Vec<usize> {
+        (0..self.locs.len()).filter(|&id| self.locs[id].seg != TOMBSTONE_SEG).collect()
+    }
+
+    /// Bytes of row payload currently held (f32 + codes), for diagnostics
+    /// and the compaction tests.
+    pub fn payload_bytes(&self) -> usize {
+        let seg_bytes =
+            |s: &Segment| s.rows.len() * std::mem::size_of::<f32>() + s.codes.len();
+        self.sealed.iter().map(|s| seg_bytes(s)).sum::<usize>() + seg_bytes(&self.active)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{normalize, Rng};
+
+    fn rand_unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        normalize(&mut v);
+        v
+    }
+
+    fn clustered(rng: &mut Rng, n: usize, dim: usize, clusters: usize) -> Vec<Vec<f32>> {
+        let centers: Vec<Vec<f32>> = (0..clusters).map(|_| rand_unit(rng, dim)).collect();
+        (0..n)
+            .map(|i| {
+                let mut v: Vec<f32> = centers[i % clusters]
+                    .iter()
+                    .map(|x| x + 0.25 * rng.normal() as f32)
+                    .collect();
+                normalize(&mut v);
+                v
+            })
+            .collect()
+    }
+
+    fn opts(quant: Quantization, segment_rows: usize) -> IndexOpts {
+        IndexOpts { quantization: quant, segment_rows, compact_tombstone_frac: 0.3 }
+    }
+
+    #[test]
+    fn dot_u8_matches_dequantized() {
+        let mut rng = Rng::new(1);
+        let dim = 48;
+        let data: Vec<f32> = (0..dim * 8).map(|_| rng.normal() as f32).collect();
+        let p = Sq8Params::train(dim, &data);
+        let q = rand_unit(&mut rng, dim);
+        let sq = p.query(&q);
+        for row in data.chunks_exact(dim) {
+            let mut codes = Vec::new();
+            p.encode_into(row, &mut codes);
+            // naive: dequantize then dot
+            let deq: Vec<f32> = codes
+                .iter()
+                .enumerate()
+                .map(|(d, &c)| p.min[d] + c as f32 * p.scale[d])
+                .collect();
+            let want = dot_f32(&deq, &q);
+            let got = sq.score(&codes);
+            assert!((want - got).abs() < 1e-3, "{want} vs {got}");
+        }
+    }
+
+    #[test]
+    fn insert_search_across_segment_boundary() {
+        let mut store = SegmentedStore::new(16, opts(Quantization::None, 8));
+        let mut rng = Rng::new(2);
+        let vs: Vec<Vec<f32>> = (0..37).map(|_| rand_unit(&mut rng, 16)).collect();
+        for v in &vs {
+            store.insert(v);
+        }
+        assert!(store.segment_count() > 2);
+        for (i, v) in vs.iter().enumerate() {
+            let hits = store.search(v, 1);
+            assert_eq!(hits[0].id, i);
+            assert!((hits[0].score - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sharded_equals_single_threaded_exactly() {
+        let mut rng = Rng::new(3);
+        let vs = clustered(&mut rng, 500, 24, 6);
+        let queries: Vec<Vec<f32>> = (0..24).map(|_| rand_unit(&mut rng, 24)).collect();
+        for quant in [Quantization::None, Quantization::Sq8] {
+            let mut single = SegmentedStore::new(24, opts(quant, 64));
+            let mut sharded = SegmentedStore::new(24, opts(quant, 64));
+            sharded.set_pool(Arc::new(ThreadPool::new(4)), 4);
+            for v in &vs {
+                single.insert(v);
+                sharded.insert(v);
+            }
+            // a few tombstones so the dead-skip path is covered
+            for id in [3usize, 77, 140, 301] {
+                single.remove(id);
+                sharded.remove(id);
+            }
+            for q in &queries {
+                let a = single.search(q, 7);
+                let b = sharded.search(q, 7);
+                assert_eq!(a, b, "shard count changed results");
+            }
+        }
+    }
+
+    #[test]
+    fn sq8_recall_vs_exact_on_clustered_data() {
+        let dim = 64;
+        let mut rng = Rng::new(4);
+        let vs = clustered(&mut rng, 3000, dim, 12);
+        let mut exact = SegmentedStore::new(dim, opts(Quantization::None, 256));
+        let mut sq8 = SegmentedStore::new(dim, opts(Quantization::Sq8, 256));
+        for v in &vs {
+            exact.insert(v);
+            sq8.insert(v);
+        }
+        let mut agree = 0;
+        let n_q = 200;
+        for i in 0..n_q {
+            let q = &vs[(i * 13) % vs.len()];
+            let a = exact.search(q, 1)[0];
+            let b = sq8.search(q, 1)[0];
+            if a.id == b.id {
+                agree += 1;
+            }
+        }
+        assert!(agree as f64 >= n_q as f64 * 0.95, "recall@1 = {agree}/{n_q}");
+    }
+
+    #[test]
+    fn compaction_reclaims_memory_and_keeps_ids() {
+        let dim = 8;
+        let mut store = SegmentedStore::new(dim, opts(Quantization::None, 32));
+        let mut rng = Rng::new(5);
+        let vs: Vec<Vec<f32>> = (0..128).map(|_| rand_unit(&mut rng, dim)).collect();
+        for v in &vs {
+            store.insert(v);
+        }
+        let before = store.payload_bytes();
+        // kill 40% of every sealed segment → each crosses the 0.3 threshold
+        let mut removed = Vec::new();
+        for id in (0..128).step_by(5) {
+            store.remove(id);
+            removed.push(id);
+        }
+        for id in (1..128).step_by(5) {
+            store.remove(id);
+            removed.push(id);
+        }
+        assert!(store.payload_bytes() < before, "compaction reclaimed nothing");
+        assert_eq!(store.live_len(), 128 - removed.len());
+        // survivors keep their stable ids and exact rows
+        for (id, v) in vs.iter().enumerate() {
+            if removed.contains(&id) {
+                assert!(store.row(id).is_none());
+                continue;
+            }
+            assert_eq!(store.row(id).unwrap(), v.as_slice(), "row moved for id {id}");
+            assert_eq!(store.search(v, 1)[0].id, id);
+        }
+        // removed ids never match again
+        for &id in &removed {
+            let hits = store.search(&vs[id], 10);
+            assert!(hits.iter().all(|h| h.id != id));
+        }
+    }
+
+    #[test]
+    fn tombstone_slots_have_no_rows() {
+        let mut store = SegmentedStore::new(4, IndexOpts::default());
+        let a = store.insert(&[1.0, 0.0, 0.0, 0.0]);
+        let t = store.insert_tombstone();
+        let b = store.insert(&[0.0, 1.0, 0.0, 0.0]);
+        assert_eq!((a, t, b), (0, 1, 2));
+        assert_eq!(store.len(), 3);
+        assert_eq!(store.live_len(), 2);
+        assert!(store.row(t).is_none());
+        let hits = store.search(&[1.0, 0.0, 0.0, 0.0], 3);
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].id, 0);
+    }
+
+    #[test]
+    fn quant_params_roundtrip_reproduces_scores() {
+        let dim = 16;
+        let mut rng = Rng::new(6);
+        let vs = clustered(&mut rng, 200, dim, 4);
+        let mut a = SegmentedStore::new(dim, opts(Quantization::Sq8, 32));
+        for v in &vs {
+            a.insert(v);
+        }
+        let params = a.quant_params().expect("trained after first seal");
+        // rebuild with imported params (the snapshot-restore path)
+        let mut b = SegmentedStore::new(dim, opts(Quantization::Sq8, 32));
+        b.set_quant_params(params);
+        for v in &vs {
+            b.insert(v);
+        }
+        let q = rand_unit(&mut rng, dim);
+        assert_eq!(a.search(&q, 5), b.search(&q, 5));
+    }
+
+    #[test]
+    fn unquantized_store_ignores_imported_params() {
+        // Migration: snapshot written under SQ8, reopened with
+        // quantization = "none" — params are dropped, no codes are built,
+        // and the next snapshot persists quant = None.
+        let dim = 8;
+        let mut rng = Rng::new(8);
+        let mut store = SegmentedStore::new(dim, opts(Quantization::None, 4));
+        store.set_quant_params(Sq8Params {
+            min: vec![-1.0; dim],
+            scale: vec![0.01; dim],
+        });
+        assert!(store.quant_params().is_none());
+        for _ in 0..12 {
+            store.insert(&rand_unit(&mut rng, dim));
+        }
+        // payload is pure f32: no code bytes accrued
+        assert_eq!(store.payload_bytes(), 12 * dim * 4);
+    }
+
+    #[test]
+    fn search_subset_filters_and_matches_full_search() {
+        let dim = 12;
+        let mut rng = Rng::new(7);
+        let vs: Vec<Vec<f32>> = (0..60).map(|_| rand_unit(&mut rng, dim)).collect();
+        let mut store = SegmentedStore::new(dim, opts(Quantization::None, 16));
+        for v in &vs {
+            store.insert(v);
+        }
+        store.remove(10);
+        let q = rand_unit(&mut rng, dim);
+        let full = store.search(&q, 5);
+        let subset = store.search_subset(&q, 5, 0..60);
+        assert_eq!(full, subset);
+        assert!(store.search_subset(&q, 5, [10usize; 1]).is_empty());
+    }
+}

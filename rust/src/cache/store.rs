@@ -3,6 +3,7 @@
 //! boxes in Figure 1.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -10,7 +11,9 @@ use super::persist::{
     PersistConfig, Persistence, PersistStatus, RecoveryReport, SnapshotEntry, SnapshotState,
     WalOp,
 };
+use super::segment::IndexOpts;
 use super::{EvictionPolicy, EvictionStrategy, FlatIndex, IvfFlatIndex, SearchHit, VectorIndex};
+use crate::util::ThreadPool;
 
 /// One cached interaction: the paper stores exactly this triple.
 #[derive(Clone, Debug)]
@@ -54,10 +57,16 @@ pub struct SemanticCache {
 
 impl SemanticCache {
     pub fn new(dim: usize, kind: IndexKind) -> Self {
+        Self::with_opts(dim, kind, IndexOpts::default())
+    }
+
+    /// Build with explicit index tuning (`[index]` section: quantization,
+    /// segment size, tombstone-compaction threshold).
+    pub fn with_opts(dim: usize, kind: IndexKind, opts: IndexOpts) -> Self {
         let index: Box<dyn VectorIndex> = match kind {
-            IndexKind::Flat => Box::new(FlatIndex::new(dim)),
+            IndexKind::Flat => Box::new(FlatIndex::with_opts(dim, opts)),
             IndexKind::IvfFlat { nlist, nprobe } => {
-                Box::new(IvfFlatIndex::new(dim, nlist, nprobe))
+                Box::new(IvfFlatIndex::with_opts(dim, nlist, nprobe, opts))
             }
         };
         SemanticCache {
@@ -82,8 +91,29 @@ impl SemanticCache {
         exact_enabled: bool,
         cfg: &PersistConfig,
     ) -> Result<(SemanticCache, RecoveryReport)> {
+        Self::open_persistent_with(
+            dim,
+            kind,
+            IndexOpts::default(),
+            policy,
+            capacity,
+            exact_enabled,
+            cfg,
+        )
+    }
+
+    /// `open_persistent` with explicit index tuning (the Router path).
+    pub fn open_persistent_with(
+        dim: usize,
+        kind: IndexKind,
+        opts: IndexOpts,
+        policy: EvictionPolicy,
+        capacity: usize,
+        exact_enabled: bool,
+        cfg: &PersistConfig,
+    ) -> Result<(SemanticCache, RecoveryReport)> {
         let (persistence, snapshot, ops, mut report) = Persistence::open(cfg)?;
-        let mut cache = SemanticCache::new(dim, kind)
+        let mut cache = SemanticCache::with_opts(dim, kind, opts)
             .with_eviction(policy, capacity)
             .with_exact_match(exact_enabled);
         if let Some(state) = snapshot {
@@ -111,6 +141,12 @@ impl SemanticCache {
     pub fn with_exact_match(mut self, enabled: bool) -> Self {
         self.exact_enabled = enabled;
         self
+    }
+
+    /// Hand the shared worker pool to the index: searches fan the sealed
+    /// segments out over `shards` scan jobs (1 = stay single-threaded).
+    pub fn set_pool(&mut self, pool: Arc<ThreadPool>, shards: usize) {
+        self.index.set_pool(pool, shards);
     }
 
     fn text_key(text: &str) -> u64 {
@@ -273,18 +309,24 @@ impl SemanticCache {
             dim: self.index.dim(),
             tick: self.tick,
             stats: self.stats,
+            quant: self.index.quant_params(),
             entries,
         }
     }
 
     /// Rebuild state from a snapshot. Only valid on a freshly-built cache.
-    /// Tombstoned slots are re-created (as removed index rows) so that ids
-    /// keep their pre-crash values.
+    /// Tombstoned slots keep their pre-crash ids via true index tombstones
+    /// (no placeholder rows — their memory is never allocated, let alone
+    /// scanned). Quantization params are installed *before* any row so the
+    /// rebuilt codes — and every search result — match the pre-restart run.
     fn restore(&mut self, state: SnapshotState) {
         assert!(
             self.entries.is_empty(),
             "restore() requires an empty cache"
         );
+        if let Some(p) = state.quant {
+            self.index.set_quant_params(p);
+        }
         for (id, slot) in state.entries.into_iter().enumerate() {
             match slot {
                 Some(e) => {
@@ -301,10 +343,8 @@ impl SemanticCache {
                     }));
                 }
                 None => {
-                    let placeholder = vec![0.0f32; self.index.dim()];
-                    let got = self.index.insert(&placeholder);
+                    let got = self.index.insert_tombstone();
                     debug_assert_eq!(got, id);
-                    self.index.remove(id);
                     self.entries.push(None);
                 }
             }

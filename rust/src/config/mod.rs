@@ -8,7 +8,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::cache::{EvictionPolicy, IndexKind, PersistConfig};
+use crate::cache::{EvictionPolicy, IndexKind, IndexOpts, PersistConfig, Quantization};
 
 /// Routing + cache + model configuration (Fig 1 + Table 1).
 #[derive(Clone, Debug)]
@@ -46,6 +46,13 @@ pub struct IndexConfig {
     pub kind: IndexKindConfig,
     pub nlist: usize,
     pub nprobe: usize,
+    /// Parallel scan shards (worker threads); 1 = single-threaded scan.
+    pub shards: usize,
+    /// Row storage mode: exact f32 or SQ8 (u8 codes + exact re-rank).
+    pub quantization: Quantization,
+    /// Rewrite a segment once this fraction of its rows is tombstoned
+    /// (reclaims evicted rows' memory); `<= 0` disables compaction.
+    pub compact_tombstone_frac: f32,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -104,6 +111,9 @@ impl Config {
                 kind: IndexKindConfig::IvfFlat,
                 nlist: 64,
                 nprobe: 8,
+                shards: 1,
+                quantization: Quantization::None,
+                compact_tombstone_frac: 0.3,
             },
             eviction: EvictionConfig {
                 policy: EvictionPolicy::None,
@@ -144,6 +154,15 @@ impl Config {
         }
     }
 
+    /// Index storage tuning derived from the `[index]` section.
+    pub fn index_opts(&self) -> IndexOpts {
+        IndexOpts {
+            quantization: self.index.quantization,
+            compact_tombstone_frac: self.index.compact_tombstone_frac,
+            ..IndexOpts::default()
+        }
+    }
+
     /// Load from a TOML-subset file and apply on top of the paper preset.
     pub fn from_file(path: &str) -> Result<Config> {
         let text = std::fs::read_to_string(path)
@@ -180,6 +199,24 @@ impl Config {
             }
             "index.nlist" => self.index.nlist = u()?,
             "index.nprobe" => self.index.nprobe = u()?,
+            "index.shards" => {
+                let n = u()?;
+                if n == 0 {
+                    bail!("index.shards must be >= 1");
+                }
+                self.index.shards = n;
+            }
+            "index.quantization" => {
+                self.index.quantization = Quantization::parse(val)
+                    .ok_or_else(|| anyhow!("unknown quantization (none|sq8)"))?
+            }
+            "index.compact_tombstone_frac" => {
+                let frac = f()? as f32;
+                if frac > 1.0 {
+                    bail!("compact_tombstone_frac must be <= 1.0");
+                }
+                self.index.compact_tombstone_frac = frac;
+            }
             "eviction.policy" => {
                 self.eviction.policy = EvictionPolicy::parse(val)
                     .ok_or_else(|| anyhow!("unknown eviction policy"))?
@@ -213,9 +250,16 @@ impl Config {
             ("Big LLM".into(), format!("substrate decoder 'big' (temp {}, top-k {}, max {} tok)", self.big_llm.temperature, self.big_llm.top_k, self.big_llm.max_new_tokens)),
             ("Small LLM".into(), format!("substrate decoder 'small' (temp {}, top-k {}, max {} tok; {:.0}x cheaper/ tok)", self.small_llm.temperature, self.small_llm.top_k, self.small_llm.max_new_tokens, self.cost.big_per_mtok / self.cost.small_per_mtok)),
             ("Embedding Model".into(), "substrate encoder, 384-dim, L2-normalized".into()),
-            ("Vector Database".into(), match self.index.kind {
-                IndexKindConfig::Flat => "in-process FLAT (exact scan)".into(),
-                IndexKindConfig::IvfFlat => format!("in-process IVF_FLAT (nlist {}, nprobe {})", self.index.nlist, self.index.nprobe),
+            ("Vector Database".into(), {
+                let base = match self.index.kind {
+                    IndexKindConfig::Flat => "in-process FLAT (exact scan)".to_string(),
+                    IndexKindConfig::IvfFlat => format!("in-process IVF_FLAT (nlist {}, nprobe {})", self.index.nlist, self.index.nprobe),
+                };
+                let quant = match self.index.quantization {
+                    Quantization::None => "f32",
+                    Quantization::Sq8 => "SQ8 + exact re-rank",
+                };
+                format!("{base}, {quant}, {} scan shard{}", self.index.shards, if self.index.shards == 1 { "" } else { "s" })
             }),
             ("Similarity Threshold".into(), format!("{}", self.similarity_threshold)),
             ("Eviction".into(), format!("{:?} (capacity {})", self.eviction.policy, if self.eviction.capacity == usize::MAX { "unbounded".into() } else { self.eviction.capacity.to_string() })),
@@ -305,6 +349,26 @@ mod tests {
         assert_eq!(c.persist.compact_bytes, 1_048_576);
         let rows = c.table();
         assert!(rows.iter().any(|(k, v)| k == "Persistence" && v.contains("/tmp/cache")));
+    }
+
+    #[test]
+    fn index_section_applies() {
+        let mut c = Config::paper();
+        let mut kv = BTreeMap::new();
+        kv.insert("index.shards".to_string(), "8".to_string());
+        kv.insert("index.quantization".to_string(), "sq8".to_string());
+        kv.insert("index.compact_tombstone_frac".to_string(), "0.25".to_string());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.index.shards, 8);
+        assert_eq!(c.index.quantization, Quantization::Sq8);
+        assert!((c.index.compact_tombstone_frac - 0.25).abs() < 1e-6);
+        let opts = c.index_opts();
+        assert_eq!(opts.quantization, Quantization::Sq8);
+        assert!(c.set("index.shards", "0").is_err());
+        assert!(c.set("index.quantization", "pq").is_err());
+        assert!(c.set("index.compact_tombstone_frac", "1.5").is_err());
+        let rows = c.table();
+        assert!(rows.iter().any(|(k, v)| k == "Vector Database" && v.contains("SQ8")));
     }
 
     #[test]

@@ -218,7 +218,8 @@ impl Engine {
         if to_embed.is_empty() {
             return;
         }
-        let queries: Vec<String> = to_embed.iter().map(|(q, _)| q.clone()).collect();
+        // Borrowed views only — embedding a batch must not copy every query.
+        let queries: Vec<&str> = to_embed.iter().map(|(q, _)| q.as_str()).collect();
         match router.embedder().embed_batch(&queries) {
             Ok(embeddings) => {
                 for ((query, reply), emb) in to_embed.into_iter().zip(embeddings) {

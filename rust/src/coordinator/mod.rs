@@ -14,6 +14,8 @@ pub mod engine;
 pub use batcher::Batcher;
 pub use engine::{Engine, EngineHandle, EngineStats, SnapshotReport};
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::cache::persist::RecoveryReport;
@@ -23,6 +25,7 @@ use crate::cost::{CostLedger, ModelRole, TokenUsage};
 use crate::llm::{LanguageModel, TweakPrompt};
 use crate::metrics::{Counters, LatencyRecorder};
 use crate::runtime::{Embedder, Runtime, SamplingParams, TextEmbedder};
+use crate::util::ThreadPool;
 
 /// Which pathway served a request.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -62,6 +65,10 @@ pub struct Router {
     pub counters: Counters,
     /// What crash recovery found on startup (None: persistence disabled).
     pub recovery: Option<RecoveryReport>,
+    /// Shared scan workers for the sharded vector search (`index.shards`
+    /// > 1). Kept here so `enable_persistence` can re-attach it to the
+    /// replacement cache.
+    scan_pool: Option<Arc<ThreadPool>>,
 }
 
 impl Router {
@@ -100,9 +107,24 @@ impl Router {
         small: Box<dyn LanguageModel>,
         config: Config,
     ) -> Router {
-        let cache = SemanticCache::new(embedder.out_dim(), config.index_kind())
-            .with_eviction(config.eviction.policy, config.eviction.capacity)
-            .with_exact_match(config.exact_match_fast_path);
+        let mut cache = SemanticCache::with_opts(
+            embedder.out_dim(),
+            config.index_kind(),
+            config.index_opts(),
+        )
+        .with_eviction(config.eviction.policy, config.eviction.capacity)
+        .with_exact_match(config.exact_match_fast_path);
+        // The engine/router side owns the scan workers; the cache only
+        // borrows them for fan-out, so one pool serves every cache this
+        // router ever builds (including a persistence-recovered one).
+        let scan_pool = if config.index.shards > 1 {
+            Some(Arc::new(ThreadPool::new(config.index.shards)))
+        } else {
+            None
+        };
+        if let Some(pool) = &scan_pool {
+            cache.set_pool(Arc::clone(pool), config.index.shards);
+        }
         Router {
             config,
             embedder,
@@ -113,6 +135,7 @@ impl Router {
             latency: LatencyRecorder::new(),
             counters: Counters::default(),
             recovery: None,
+            scan_pool,
         }
     }
 
@@ -124,14 +147,18 @@ impl Router {
         if !self.config.persist.enabled() {
             return Ok(None);
         }
-        let (cache, report) = SemanticCache::open_persistent(
+        let (mut cache, report) = SemanticCache::open_persistent_with(
             self.embedder.out_dim(),
             self.config.index_kind(),
+            self.config.index_opts(),
             self.config.eviction.policy,
             self.config.eviction.capacity,
             self.config.exact_match_fast_path,
             &self.config.persist,
         )?;
+        if let Some(pool) = &self.scan_pool {
+            cache.set_pool(Arc::clone(pool), self.config.index.shards);
+        }
         self.cache = cache;
         self.recovery = Some(report.clone());
         Ok(Some(report))
@@ -153,7 +180,7 @@ impl Router {
 
     /// Pre-populate the cache (dataset warm-up in the eval protocols).
     pub fn warm(&mut self, pairs: &[(String, String)]) -> Result<()> {
-        let queries: Vec<String> = pairs.iter().map(|(q, _)| q.clone()).collect();
+        let queries: Vec<&str> = pairs.iter().map(|(q, _)| q.as_str()).collect();
         let embeddings = self.embedder.embed_batch(&queries)?;
         for ((q, r), e) in pairs.iter().zip(embeddings) {
             self.cache.insert(q, r, e);

@@ -61,11 +61,11 @@ pub fn run(
     embedder: &dyn TextEmbedder,
 ) -> Result<HitRateCurve> {
     let mut index = FlatIndex::new(embedder.out_dim());
-    let insert_texts: Vec<String> = insert.iter().map(|q| q.text.clone()).collect();
+    let insert_texts: Vec<&str> = insert.iter().map(|q| q.text.as_str()).collect();
     for e in embedder.embed_batch(&insert_texts)? {
         index.insert(&e);
     }
-    let query_texts: Vec<String> = query.iter().map(|q| q.text.clone()).collect();
+    let query_texts: Vec<&str> = query.iter().map(|q| q.text.as_str()).collect();
     let mut similarities = Vec::with_capacity(query.len());
     for e in embedder.embed_batch(&query_texts)? {
         let top = index.search(&e, 1);

@@ -23,12 +23,14 @@ use crate::tokenizer::Tokenizer;
 // handles (`Rc` internally). The engine thread constructs and owns it.
 pub trait TextEmbedder {
     fn out_dim(&self) -> usize;
-    fn embed_batch(&self, texts: &[String]) -> Result<Vec<Vec<f32>>>;
+
+    /// Embed a batch of borrowed texts. `&[&str]` (not `&[String]`) so hot
+    /// callers — `Engine::flush` re-embeds every queued query each batch —
+    /// never clone the query strings just to build the argument.
+    fn embed_batch(&self, texts: &[&str]) -> Result<Vec<Vec<f32>>>;
 
     fn embed(&self, text: &str) -> Result<Vec<f32>> {
-        Ok(self
-            .embed_batch(std::slice::from_ref(&text.to_string()))?
-            .remove(0))
+        Ok(self.embed_batch(&[text])?.remove(0))
     }
 }
 
@@ -73,7 +75,7 @@ impl Embedder {
         &self.tokenizer
     }
 
-    fn embed_chunk(&self, texts: &[String]) -> Result<Vec<Vec<f32>>> {
+    fn embed_chunk(&self, texts: &[&str]) -> Result<Vec<Vec<f32>>> {
         let (batch, exe) = self
             .variants
             .iter()
@@ -83,7 +85,7 @@ impl Embedder {
         let mut tokens = Vec::with_capacity(batch * self.max_seq);
         let mut lengths = Vec::with_capacity(batch);
         for i in 0..batch {
-            let text = texts.get(i).map(|s| s.as_str()).unwrap_or("");
+            let text = texts.get(i).copied().unwrap_or("");
             let (ids, len) = self.tokenizer.encode_padded(text, self.max_seq);
             tokens.extend(ids);
             lengths.push(len as i32);
@@ -108,7 +110,7 @@ impl TextEmbedder for Embedder {
 
     /// Embed up to `max_batch()` texts per executable call; larger slices
     /// are chunked.
-    fn embed_batch(&self, texts: &[String]) -> Result<Vec<Vec<f32>>> {
+    fn embed_batch(&self, texts: &[&str]) -> Result<Vec<Vec<f32>>> {
         let mut out = Vec::with_capacity(texts.len());
         for chunk in texts.chunks(self.max_batch()) {
             out.extend(self.embed_chunk(chunk)?);
@@ -147,7 +149,7 @@ impl TextEmbedder for NativeBowEmbedder {
         self.dim
     }
 
-    fn embed_batch(&self, texts: &[String]) -> Result<Vec<Vec<f32>>> {
+    fn embed_batch(&self, texts: &[&str]) -> Result<Vec<Vec<f32>>> {
         Ok(texts
             .iter()
             .map(|t| {

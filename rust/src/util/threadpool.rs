@@ -1,10 +1,14 @@
 //! Fixed-size threadpool substrate (tokio is unavailable offline).
 //!
-//! The coordinator's event loop is channel-based: the server front-end and
-//! the bench harnesses submit closures; worker threads execute them. This is
-//! deliberately simple — the PJRT CPU client serializes compute anyway, so
-//! the pool's job is overlapping tokenization/search/bookkeeping with
-//! generation, not data-parallel scaling.
+//! The coordinator's event loop is channel-based: the server front-end, the
+//! bench harnesses, and the sharded vector scan (`cache::segment`) submit
+//! closures; worker threads execute them. Model compute stays serialized on
+//! the PJRT CPU client; the pool's job is data-parallel scan fan-out plus
+//! overlapping tokenization/search/bookkeeping with generation.
+//!
+//! The submit side is a `Mutex<Sender>` so the pool is `Sync`: the vector
+//! index holds it behind an `Arc` and must stay `Send` (`VectorIndex: Send`),
+//! which a bare `mpsc::Sender` field would break.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -13,7 +17,7 @@ use std::thread;
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
+    tx: Option<Mutex<mpsc::Sender<Job>>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
 
@@ -38,13 +42,20 @@ impl ThreadPool {
                     .expect("spawn worker"),
             );
         }
-        ThreadPool { tx: Some(tx), workers }
+        ThreadPool { tx: Some(Mutex::new(tx)), workers }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.tx
             .as_ref()
             .expect("pool shut down")
+            .lock()
+            .expect("pool submit lock poisoned")
             .send(Box::new(f))
             .expect("worker channel closed");
     }

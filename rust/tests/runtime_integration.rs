@@ -50,8 +50,9 @@ fn embedder_batch_variants_agree() {
     let texts: Vec<String> = (0..5)
         .map(|i| format!("question number {i} about topic {i}"))
         .collect();
+    let views: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
     // batch of 5 routes through the b8 variant; singles through b1
-    let batched = e.embed_batch(&texts).unwrap();
+    let batched = e.embed_batch(&views).unwrap();
     for (i, t) in texts.iter().enumerate() {
         let single = e.embed(t).unwrap();
         let cos = dot(&single, &batched[i]);
