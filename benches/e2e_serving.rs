@@ -1,94 +1,236 @@
-//! End-to-end serving benchmark: the full three-layer stack under load —
-//! compiled embedder + vector DB + threshold routing + compiled Big/Small
-//! decoders — measuring latency and throughput per pathway and the live
-//! cost ratio. This is the paper's system running for real, not an
-//! analytic model.
+//! End-to-end serving benchmark, two tiers:
 //!
-//! `cargo bench --bench e2e_serving [-- --requests 48 --max-new 16]`
+//! * **Mock tier** (always runs, incl. CI): the full engine — dynamic
+//!   batcher + router + vector DB — under concurrent client threads, with
+//!   `NativeBowEmbedder` + `MockLlm` standing in for the compiled models.
+//!   Measures per-pathway latency (from each request's enqueue instant),
+//!   throughput, and batching effectiveness.
+//! * **Substrate tier** (when `artifacts/` exists): the compiled stack —
+//!   embedder + Big/Small decoders — serving a trace through the router,
+//!   plus decode tokens/sec for the literal vs device-resident transports.
+//!
+//! Results land in `BENCH_e2e_serving.json` (uploaded from CI) so the repo
+//! has an end-to-end serving trajectory alongside BENCH_vector_index.json.
+//!
+//! `cargo bench --bench e2e_serving [-- --requests 256 --threads 4 --max-new 16]`
 
+use std::time::Instant;
+
+use tweakllm::baselines::MockLlm;
 use tweakllm::bench::{bench_args, load_runtime, Table};
-use tweakllm::config::Config;
-use tweakllm::coordinator::{Pathway, Router};
+use tweakllm::config::{Config, IndexKindConfig};
+use tweakllm::coordinator::{Engine, Pathway, Router};
 use tweakllm::datasets::{ChatTrace, TraceProfile};
-use tweakllm::util::Summary;
+use tweakllm::runtime::{Generator, NativeBowEmbedder, SamplingParams, TextEmbedder};
+use tweakllm::server::pathway_str;
+use tweakllm::util::{Json, Rng, Summary};
 
-fn main() -> anyhow::Result<()> {
-    let args = bench_args();
-    let n_requests = args.usize("requests", 48)?;
-    let max_new = args.usize("max-new", 16)?;
-    let threshold = args.f64("threshold", 0.7)? as f32;
-
-    eprintln!("[e2e] loading artifacts (all models)...");
-    let rt = load_runtime()?;
-    let mut cfg = Config::paper();
-    cfg.similarity_threshold = threshold;
-    cfg.big_llm.max_new_tokens = max_new;
-    cfg.small_llm.max_new_tokens = max_new;
-    cfg.exact_match_fast_path = true;
-    let mut router = Router::from_runtime(&rt, cfg)?;
-
-    let trace = ChatTrace::generate(TraceProfile::lmsys(), n_requests, 20250923);
-    eprintln!("[e2e] serving {} requests (max_new={})...", n_requests, max_new);
-
-    let mut lat_by_path: std::collections::HashMap<&'static str, Vec<f64>> =
-        Default::default();
-    let t_all = std::time::Instant::now();
-    for q in &trace.queries {
-        let r = router.handle(&q.text)?;
-        let path = match r.pathway {
-            Pathway::ExactHit => "exact_hit",
-            Pathway::TweakHit => "tweak_hit",
-            Pathway::Miss => "miss",
-        };
-        lat_by_path.entry(path).or_default().push(r.total_micros as f64 / 1000.0);
-    }
-    let wall = t_all.elapsed();
-
-    let mut table = Table::new(
-        "E2E serving — per-pathway latency (ms)",
-        &["pathway", "n", "mean", "p50", "p99"],
-    );
+/// Render + serialize one per-pathway latency table (samples in ms).
+fn pathway_report(
+    title: &str,
+    lat_by_path: &std::collections::HashMap<&'static str, Vec<f64>>,
+) -> (Table, Vec<Json>) {
+    let mut table = Table::new(title, &["pathway", "n", "mean", "p50", "p99"]);
+    let mut rows = Vec::new();
     for path in ["exact_hit", "tweak_hit", "miss"] {
         if let Some(samples) = lat_by_path.get(path) {
             let s = Summary::of(samples);
             table.push(vec![
                 path.to_string(),
                 s.n.to_string(),
-                format!("{:.1}", s.mean),
-                format!("{:.1}", s.p50),
-                format!("{:.1}", s.p99),
+                format!("{:.2}", s.mean),
+                format!("{:.2}", s.p50),
+                format!("{:.2}", s.p99),
             ]);
+            rows.push(Json::obj_from(vec![
+                ("pathway", Json::s(path)),
+                ("n", Json::num(s.n as f64)),
+                ("mean_ms", Json::num(s.mean)),
+                ("p50_ms", Json::num(s.p50)),
+                ("p99_ms", Json::num(s.p99)),
+            ]));
         }
     }
+    (table, rows)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let n_requests = args.usize("requests", 256)?;
+    let threads = args.usize("threads", 4)?.max(1);
+    let max_new = args.usize("max-new", 16)?;
+    let threshold = args.f64("threshold", 0.7)? as f32;
+
+    let trace = ChatTrace::generate(TraceProfile::lmsys(), n_requests, 20250923);
+    let texts: Vec<String> = trace.queries.iter().map(|q| q.text.clone()).collect();
+
+    // ---- mock tier: engine + batcher under concurrent clients ----
+    eprintln!("[e2e] mock tier: {n_requests} requests over {threads} client threads...");
+    let mut cfg = Config::paper();
+    cfg.index.kind = IndexKindConfig::Flat;
+    cfg.similarity_threshold = threshold;
+    cfg.exact_match_fast_path = true;
+    let cfg_engine = cfg.clone();
+    let (engine, handle) = Engine::start(move || {
+        let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+        Ok(Router::with_models(
+            embedder,
+            Box::new(MockLlm::new("big")),
+            Box::new(MockLlm::new("small")),
+            cfg_engine,
+        ))
+    })?;
+    let t_all = Instant::now();
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let h = handle.clone();
+        let chunk: Vec<String> = texts.iter().skip(t).step_by(threads).cloned().collect();
+        joins.push(std::thread::spawn(move || -> anyhow::Result<Vec<(Pathway, u128)>> {
+            let mut out = Vec::with_capacity(chunk.len());
+            for q in &chunk {
+                let r = h.request(q)?;
+                out.push((r.pathway, r.total_micros));
+            }
+            Ok(out)
+        }));
+    }
+    let mut lat_by_path: std::collections::HashMap<&'static str, Vec<f64>> =
+        Default::default();
+    for j in joins {
+        for (p, us) in j.join().expect("client thread panicked")? {
+            lat_by_path.entry(pathway_str(p)).or_default().push(us as f64 / 1000.0);
+        }
+    }
+    let wall = t_all.elapsed();
+    let stats = handle.stats()?;
+    engine.shutdown();
+    let qps = n_requests as f64 / wall.as_secs_f64();
+
+    let (table, mock_rows) = pathway_report(
+        "E2E serving, mock tier (engine + batcher) — per-pathway latency (ms)",
+        &lat_by_path,
+    );
     println!("{}", table.render());
-
-    let cost = router.ledger.dollars(&router.config.cost);
-    let base = router.ledger.baseline_dollars(&router.config.cost);
     println!(
-        "throughput: {:.2} req/s  |  hit rate: {:.1}%  |  cache: {} entries",
-        n_requests as f64 / wall.as_secs_f64(),
-        router.hit_rate() * 100.0,
-        router.cache().len(),
+        "mock tier: {qps:.1} req/s  |  mean batch size: {:.2}",
+        stats.mean_batch_size
     );
-    println!(
-        "cost: ${:.6} vs all-big ${:.6}  ->  {:.1}% of baseline",
-        cost,
-        base,
-        100.0 * cost / base.max(1e-12)
-    );
-    println!("\nstage latency:\n{}", router.latency.table());
 
-    // paper's qualitative claims, enforced
-    let tweak_mean = lat_by_path.get("tweak_hit").map(|v| Summary::of(v).mean);
-    let miss_mean = lat_by_path.get("miss").map(|v| Summary::of(v).mean);
-    if let (Some(t), Some(m)) = (tweak_mean, miss_mean) {
-        assert!(
-            t < m,
-            "hit pathway must be faster than miss pathway: tweak {t:.1}ms vs miss {m:.1}ms"
-        );
+    // ---- substrate tier: compiled artifacts (skipped when absent) ----
+    let mut substrate_json: Option<Json> = None;
+    match load_runtime() {
+        Ok(rt) => {
+            eprintln!("[e2e] substrate tier: serving {n_requests} requests...");
+            let mut cfg = Config::paper();
+            cfg.similarity_threshold = threshold;
+            cfg.big_llm.max_new_tokens = max_new;
+            cfg.small_llm.max_new_tokens = max_new;
+            cfg.exact_match_fast_path = true;
+            let mut router = Router::from_runtime(&rt, cfg)?;
+            let mut lat: std::collections::HashMap<&'static str, Vec<f64>> =
+                Default::default();
+            let t_sub = Instant::now();
+            for q in &texts {
+                let r = router.handle(q)?;
+                lat.entry(pathway_str(r.pathway))
+                    .or_default()
+                    .push(r.total_micros as f64 / 1000.0);
+            }
+            let sub_wall = t_sub.elapsed();
+            let (table, sub_rows) = pathway_report(
+                "E2E serving, substrate tier (compiled models) — per-pathway latency (ms)",
+                &lat,
+            );
+            println!("{}", table.render());
+            let cost = router.ledger.dollars(&router.config.cost);
+            let base = router.ledger.baseline_dollars(&router.config.cost);
+            println!(
+                "substrate tier: {:.2} req/s  |  hit rate: {:.1}%  |  cache: {} entries",
+                n_requests as f64 / sub_wall.as_secs_f64(),
+                router.hit_rate() * 100.0,
+                router.cache().len(),
+            );
+            println!(
+                "cost: ${:.6} vs all-big ${:.6}  ->  {:.1}% of baseline",
+                cost,
+                base,
+                100.0 * cost / base.max(1e-12)
+            );
+            println!("\nstage latency:\n{}", router.latency.table());
+
+            // paper's qualitative claims, enforced on the real stack
+            let tweak_mean = lat.get("tweak_hit").map(|v| Summary::of(v).mean);
+            let miss_mean = lat.get("miss").map(|v| Summary::of(v).mean);
+            if let (Some(t), Some(m)) = (tweak_mean, miss_mean) {
+                assert!(
+                    t < m,
+                    "hit pathway must be faster than miss: tweak {t:.1}ms vs miss {m:.1}ms"
+                );
+            }
+            if base > 0.0 {
+                assert!(cost < base, "caching must reduce cost");
+            }
+
+            // decode transports: literal vs device-resident tokens/sec
+            let mut decode_rows = Vec::new();
+            for model in ["small", "big"] {
+                let g = Generator::new(&rt, model)?;
+                for (label, resident) in [("literal", false), ("resident", true)] {
+                    if resident && !g.resident_available() {
+                        eprintln!("[e2e] {model}: no resident artifacts, skipping");
+                        continue;
+                    }
+                    let params =
+                        SamplingParams { max_new_tokens: max_new, ..Default::default() };
+                    let mut rng = Rng::new(1);
+                    // warmup, then a timed run on the same token stream
+                    g.generate_on(&["warm the caches up"], &params, &mut rng, resident)?;
+                    let mut rng = Rng::new(1);
+                    let gen = g.generate_on(
+                        &["profile this prompt please"],
+                        &params,
+                        &mut rng,
+                        resident,
+                    )?;
+                    let decode_s = gen.stats.decode_micros as f64 / 1e6;
+                    let tok_per_s = if decode_s > 0.0 {
+                        gen.stats.generated_tokens as f64 / decode_s
+                    } else {
+                        0.0
+                    };
+                    println!("decode {model} [{label}]: {tok_per_s:.1} tok/s");
+                    decode_rows.push(Json::obj_from(vec![
+                        ("model", Json::s(model)),
+                        ("path", Json::s(label)),
+                        ("tok_per_sec", Json::num(tok_per_s)),
+                        ("decode_micros", Json::num(gen.stats.decode_micros as f64)),
+                        ("tokens", Json::num(gen.stats.generated_tokens as f64)),
+                    ]));
+                }
+            }
+            substrate_json = Some(Json::obj_from(vec![
+                ("qps", Json::num(n_requests as f64 / sub_wall.as_secs_f64())),
+                ("pathways", Json::Arr(sub_rows)),
+                ("decode", Json::Arr(decode_rows)),
+            ]));
+        }
+        Err(e) => eprintln!("[e2e] substrate tier skipped (no artifacts): {e}"),
     }
-    if base > 0.0 {
-        assert!(cost < base, "caching must reduce cost");
+
+    // ---- BENCH_e2e_serving.json ----
+    let mut top = vec![
+        ("bench", Json::s("e2e_serving")),
+        ("requests", Json::num(n_requests as f64)),
+        ("threads", Json::num(threads as f64)),
+        ("max_new", Json::num(max_new as f64)),
+        ("qps_mock", Json::num(qps)),
+        ("mean_batch_size", Json::num(stats.mean_batch_size)),
+        ("pathways_mock", Json::Arr(mock_rows)),
+    ];
+    if let Some(s) = substrate_json {
+        top.push(("substrate", s));
     }
+    std::fs::write("BENCH_e2e_serving.json", Json::obj_from(top).to_string())?;
+    eprintln!("[e2e] wrote BENCH_e2e_serving.json");
     Ok(())
 }

@@ -85,20 +85,39 @@ fn main() -> Result<()> {
         );
     }
 
-    // --- full generate through the facade ---
-    let mut rng = tweakllm::util::Rng::new(1);
+    // --- full generate through the facade: literal vs device-resident ---
+    // Same seed per transport so the token streams (and thus the work done)
+    // are identical; only the KV transport differs.
     for model in ["small", "big"] {
         let g = tweakllm::runtime::Generator::new(&rt, model)?;
         let params = SamplingParams { max_new_tokens: steps, ..Default::default() };
-        let t = std::time::Instant::now();
-        let gen = g.generate(&["profile this prompt please"], &params, &mut rng)?;
-        println!(
-            "{model} generate  {} tok in {:?}  (prefill {}us, decode {}us)",
-            gen.stats.generated_tokens,
-            t.elapsed(),
-            gen.stats.prefill_micros,
-            gen.stats.decode_micros
-        );
+        for (label, resident) in [("literal ", false), ("resident", true)] {
+            if resident && !g.resident_available() {
+                println!(
+                    "{model} generate [resident] skipped: artifact set predates \
+                     device-resident decode (re-run `make artifacts`)"
+                );
+                continue;
+            }
+            let mut rng = tweakllm::util::Rng::new(1);
+            let t = std::time::Instant::now();
+            let gen =
+                g.generate_on(&["profile this prompt please"], &params, &mut rng, resident)?;
+            let decode_s = gen.stats.decode_micros as f64 / 1e6;
+            let tok_per_s = if decode_s > 0.0 {
+                gen.stats.generated_tokens as f64 / decode_s
+            } else {
+                0.0
+            };
+            println!(
+                "{model} generate [{label}] {} tok in {:?}  (prefill {}us, decode {}us, {:.1} tok/s)",
+                gen.stats.generated_tokens,
+                t.elapsed(),
+                gen.stats.prefill_micros,
+                gen.stats.decode_micros,
+                tok_per_s
+            );
+        }
     }
     Ok(())
 }

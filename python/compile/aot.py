@@ -29,10 +29,14 @@ from . import configs, model, params
 from .kernels.cosine_topk import cosine_scores as kernel_cosine_scores
 
 
-def to_hlo_text(lowered) -> str:
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    """``return_tuple=False`` (single-output artifacts only) leaves the HLO
+    root as the bare output array: PJRT then hands back a plain device
+    buffer that the Rust runtime can feed straight into the next call — the
+    device-resident decode convention (manifest ``"untupled": true``)."""
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
     )
     return comp.as_hlo_text()
 
@@ -146,7 +150,10 @@ def build_artifacts(out_dir: str, verbose: bool = True) -> dict:
             _spec(tuple(e["shape"]), jnp.dtype(e["dtype"])) for e in input_entries
         ]
         lowered = jax.jit(fn).lower(*arg_specs)
-        text = to_hlo_text(lowered)
+        # Single-output artifacts skip the tuple wrapper so their result is
+        # a feed-back-able device buffer (and a single untupled fetch).
+        untupled = len(output_entries) == 1
+        text = to_hlo_text(lowered, return_tuple=not untupled)
         fname = f"{name}.hlo.txt"
         with open(os.path.join(out_dir, fname), "w") as f:
             f.write(text)
@@ -158,6 +165,7 @@ def build_artifacts(out_dir: str, verbose: bool = True) -> dict:
                 "n_weight_args": len(weight_specs),
                 "inputs": input_entries,
                 "outputs": output_entries,
+                "untupled": untupled,
             }
         )
         log(f"lowered {name}: {len(text)} chars in {time.time() - t0:.1f}s")
@@ -260,6 +268,93 @@ def build_artifacts(out_dir: str, verbose: bool = True) -> dict:
                 _io_entry("v_cache", kv_shape, "float32"),
             ],
             mname,
+        )
+
+        # Device-resident variants (DESIGN.md §Perf L2): the same
+        # computations behind the packed single-root convention, plus the
+        # weight-free peek slicers. These are what let the Rust runtime keep
+        # the KV cache on device across the whole decode loop.
+        slen = model.state_len(cfg)
+
+        def prefill_res_fn(*args, _cfg=cfg, _names=names):
+            plist = list(args[: len(_names)])
+            tokens, length = args[len(_names) :]
+            return model.prefill_resident(_cfg, plist, _names, tokens, length)
+
+        lower_artifact(
+            f"{mname}_prefill_res",
+            prefill_res_fn,
+            specs,
+            [
+                _io_entry("tokens", (cfg.max_prefill,), "int32"),
+                _io_entry("length", (1,), "int32"),
+            ],
+            [_io_entry("state", (slen,), "float32")],
+            mname,
+        )
+
+        def decode_res_fn(*args, _cfg=cfg, _names=names):
+            plist = list(args[: len(_names)])
+            token, pos, state = args[len(_names) :]
+            return model.decode_step_resident(_cfg, plist, _names, token, pos, state)
+
+        lower_artifact(
+            f"{mname}_decode_res",
+            decode_res_fn,
+            specs,
+            [
+                _io_entry("token", (1,), "int32"),
+                _io_entry("pos", (1,), "int32"),
+                _io_entry("state", (slen,), "float32"),
+            ],
+            [_io_entry("state", (slen,), "float32")],
+            mname,
+        )
+
+        def span_res_fn(*args, _cfg=cfg, _names=names):
+            plist = list(args[: len(_names)])
+            token, pos, state, u, temp = args[len(_names) :]
+            return model.decode_span_resident(
+                _cfg, plist, _names, token, pos, state, u, temp
+            )
+
+        lower_artifact(
+            f"{mname}_decode{span}_res",
+            span_res_fn,
+            specs,
+            [
+                _io_entry("token", (1,), "int32"),
+                _io_entry("pos", (1,), "int32"),
+                _io_entry("state", (slen,), "float32"),
+                _io_entry("u", (span,), "float32"),
+                _io_entry("temperature", (1,), "float32"),
+            ],
+            [_io_entry("state", (slen,), "float32")],
+            mname,
+        )
+
+        def peek_logits_fn(state, _cfg=cfg):
+            return model.peek_logits(_cfg, state)
+
+        lower_artifact(
+            f"{mname}_peek_logits",
+            peek_logits_fn,
+            [],
+            [_io_entry("state", (slen,), "float32")],
+            [_io_entry("logits", (cfg.vocab_size,), "float32")],
+            None,
+        )
+
+        def peek_tokens_fn(state, _cfg=cfg, _span=span):
+            return model.peek_tokens(_cfg, state, _span)
+
+        lower_artifact(
+            f"{mname}_peek_tokens{span}",
+            peek_tokens_fn,
+            [],
+            [_io_entry("state", (slen,), "float32")],
+            [_io_entry("tokens", (span,), "int32")],
+            None,
         )
 
     # ----- compiled cosine scorer -------------------------------------------

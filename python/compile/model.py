@@ -320,3 +320,78 @@ def decode_span(
         tokens.append(nxt)
         tok = nxt[None]
     return jnp.stack(tokens), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Device-resident decode (DESIGN.md §Perf L2): the same computations with a
+# *packed single-root* calling convention. All decode state — both KV caches
+# plus a vocab-wide "tail" carrying the step's logits (or the span's sampled
+# token ids) — is one flat f32 array, and each executable returns exactly one
+# array (lowered with return_tuple=False, manifest "untupled": true). A
+# single-root output comes back from PJRT as a plain device buffer that the
+# Rust runtime feeds straight into the next step (`ExecArg::Device`), so the
+# KV cache never crosses the host boundary; tiny `peek_*` executables slice
+# out the logits / token ids, making the per-step fetch O(vocab) / O(span).
+#
+# The packing is pure reshape/concat/slice around the UNCHANGED step
+# functions above, so the resident and literal transports compute the same
+# math — the Rust integration test gates bit-identical token streams.
+# ---------------------------------------------------------------------------
+
+
+def _kv_numel(cfg: DecoderConfig) -> int:
+    return cfg.n_layers * cfg.n_heads * cfg.max_seq * cfg.head_dim
+
+
+def state_len(cfg: DecoderConfig) -> int:
+    """Packed decode-state width: k_cache ‖ v_cache ‖ tail[vocab_size]."""
+    return 2 * _kv_numel(cfg) + cfg.vocab_size
+
+
+def _pack_state(cfg: DecoderConfig, k_cache, v_cache, tail):
+    pad = cfg.vocab_size - tail.shape[0]
+    if pad:
+        tail = jnp.concatenate([tail, jnp.zeros((pad,), tail.dtype)])
+    return jnp.concatenate([k_cache.reshape(-1), v_cache.reshape(-1), tail])
+
+
+def _unpack_kv(cfg: DecoderConfig, state):
+    n = _kv_numel(cfg)
+    shape = (cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    return state[:n].reshape(shape), state[n : 2 * n].reshape(shape)
+
+
+def prefill_resident(cfg, plist, names, tokens, length, use_kernels=True):
+    """``prefill`` with the packed convention: -> state [state_len]."""
+    logits, k, v = prefill(cfg, plist, names, tokens, length, use_kernels)
+    return _pack_state(cfg, k, v, logits)
+
+
+def decode_step_resident(cfg, plist, names, token, pos, state, use_kernels=True):
+    """``decode_step`` with the packed convention: state -> state'."""
+    k, v = _unpack_kv(cfg, state)
+    logits, k, v = decode_step(cfg, plist, names, token, pos, k, v, use_kernels)
+    return _pack_state(cfg, k, v, logits)
+
+
+def decode_span_resident(
+    cfg, plist, names, token, pos, state, u, temperature, use_kernels=True
+):
+    """``decode_span`` with the packed convention: the sampled ids ride in
+    the tail as exact small-integer f32s (vocab_size << 2**24)."""
+    k, v = _unpack_kv(cfg, state)
+    tokens, k, v = decode_span(
+        cfg, plist, names, token, pos, k, v, u, temperature, use_kernels
+    )
+    return _pack_state(cfg, k, v, tokens.astype(jnp.float32))
+
+
+def peek_logits(cfg: DecoderConfig, state):
+    """Slice the logits tail out of a packed state: -> [vocab_size]."""
+    return state[2 * _kv_numel(cfg) :]
+
+
+def peek_tokens(cfg: DecoderConfig, state, span: int):
+    """Slice the span's sampled token ids out of a packed state: -> [span]."""
+    off = 2 * _kv_numel(cfg)
+    return jnp.round(state[off : off + span]).astype(jnp.int32)

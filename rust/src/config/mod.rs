@@ -37,6 +37,11 @@ pub struct Config {
     pub persist: PersistConfig,
     /// Artifact directory.
     pub artifact_dir: String,
+    /// Keep decode state (KV caches) on device between steps, fetching only
+    /// logits / span tokens per step (DESIGN.md §Perf L2). Automatically
+    /// falls back to the literal transport when the artifact set predates
+    /// the packed-state convention; `false` pins the literal path.
+    pub device_resident: bool,
     /// Master seed for all deterministic randomness.
     pub seed: u64,
 }
@@ -131,6 +136,7 @@ impl Config {
             },
             persist: PersistConfig::default(),
             artifact_dir: "artifacts".to_string(),
+            device_resident: true,
             seed: 20250923,
         }
     }
@@ -238,6 +244,7 @@ impl Config {
             "persist.wal_fsync" => self.persist.wal_fsync = b()?,
             "persist.compact_bytes" => self.persist.compact_bytes = u()? as u64,
             "runtime.artifact_dir" => self.artifact_dir = val.to_string(),
+            "runtime.device_resident" => self.device_resident = b()?,
             "runtime.seed" => self.seed = val.parse()?,
             _ => bail!("unknown config key"),
         }
@@ -267,6 +274,11 @@ impl Config {
                 format!("WAL+snapshots in {} (fsync {}, compact at {} MiB)", self.persist.data_dir, self.persist.wal_fsync, self.persist.compact_bytes / (1024 * 1024))
             } else {
                 "disabled (ephemeral, as in the paper)".into()
+            }),
+            ("Decode transport".into(), if self.device_resident {
+                "device-resident KV (literal fallback for old artifact sets)".into()
+            } else {
+                "host literals (KV round-trips every step)".into()
             }),
         ]
     }
@@ -369,6 +381,17 @@ mod tests {
         assert!(c.set("index.compact_tombstone_frac", "1.5").is_err());
         let rows = c.table();
         assert!(rows.iter().any(|(k, v)| k == "Vector Database" && v.contains("SQ8")));
+    }
+
+    #[test]
+    fn runtime_device_resident_applies() {
+        let mut c = Config::paper();
+        assert!(c.device_resident);
+        c.set("runtime.device_resident", "false").unwrap();
+        assert!(!c.device_resident);
+        assert!(c.set("runtime.device_resident", "maybe").is_err());
+        let rows = c.table();
+        assert!(rows.iter().any(|(k, v)| k == "Decode transport" && v.contains("literal")));
     }
 
     #[test]

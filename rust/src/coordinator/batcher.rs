@@ -10,10 +10,17 @@ use std::time::{Duration, Instant};
 
 use crate::config::BatcherConfig;
 
-/// A queued item: opaque payload + arrival time.
+/// A queued item: opaque payload + its two timestamps. `enqueued` is when
+/// the request entered the submission pipeline (drives latency reporting);
+/// `arrived` is when the batcher picked it up (drives the batch-deadline
+/// policy). Keeping them separate matters: stamping the deadline from
+/// `enqueued` would make any backlog that built up behind a slow
+/// generation instantly past-deadline, collapsing those requests into
+/// singleton batches exactly when batching matters most.
 #[derive(Debug)]
 pub struct Pending<T> {
     pub payload: T,
+    pub enqueued: Instant,
     pub arrived: Instant,
 }
 
@@ -38,7 +45,17 @@ impl<T> Batcher<T> {
     }
 
     pub fn push(&mut self, payload: T) {
-        self.queue.push_back(Pending { payload, arrived: Instant::now() });
+        self.push_at(payload, Instant::now());
+    }
+
+    /// Queue with an explicit enqueue stamp. The engine passes the instant
+    /// a request entered the submission channel, so the latency reported
+    /// for that request covers the full queueing delay (channel wait while
+    /// the engine is busy generating + batcher wait). The batch deadline
+    /// still counts from pickup (`arrived` = now), so a drained backlog
+    /// gets its `max_wait` window to coalesce into one batch.
+    pub fn push_at(&mut self, payload: T, enqueued: Instant) {
+        self.queue.push_back(Pending { payload, enqueued, arrived: Instant::now() });
     }
 
     pub fn len(&self) -> usize {
@@ -68,15 +85,21 @@ impl<T> Batcher<T> {
         })
     }
 
-    /// Drain up to `max_batch` items.
-    pub fn drain(&mut self) -> Vec<T> {
+    /// Drain up to `max_batch` items with their arrival stamps (the engine
+    /// computes per-request total latency from these).
+    pub fn drain_pending(&mut self) -> Vec<Pending<T>> {
         let n = self.queue.len().min(self.max_batch);
-        let batch: Vec<T> = self.queue.drain(..n).map(|p| p.payload).collect();
+        let batch: Vec<Pending<T>> = self.queue.drain(..n).collect();
         if !batch.is_empty() {
             self.batches_emitted += 1;
             self.items_emitted += batch.len() as u64;
         }
         batch
+    }
+
+    /// Drain up to `max_batch` payloads.
+    pub fn drain(&mut self) -> Vec<T> {
+        self.drain_pending().into_iter().map(|p| p.payload).collect()
     }
 
     /// Mean batch size so far (batching effectiveness metric).
@@ -151,5 +174,21 @@ mod tests {
         let b: Batcher<u32> = Batcher::new(cfg(1, 0));
         assert!(!b.ready(Instant::now()));
         assert!(b.time_to_deadline(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn push_at_preserves_enqueue_stamp_without_expiring_deadline() {
+        let mut b = Batcher::new(cfg(4, 100_000));
+        let early = Instant::now() - Duration::from_millis(250);
+        b.push_at(7u32, early);
+        // The batch deadline counts from pickup, NOT from the (old) enqueue
+        // stamp — a drained backlog must still get its coalescing window.
+        assert!(!b.ready(Instant::now()));
+        let pending = b.drain_pending();
+        assert_eq!(pending.len(), 1);
+        assert_eq!(pending[0].payload, 7);
+        // ...while the enqueue stamp survives for latency reporting.
+        assert_eq!(pending[0].enqueued, early);
+        assert!(pending[0].arrived > early);
     }
 }

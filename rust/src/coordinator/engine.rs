@@ -19,6 +19,10 @@ enum Msg {
     Request {
         query: String,
         reply: mpsc::Sender<Result<RoutedResponse>>,
+        /// Stamped by `EngineHandle::request` before the channel send, so
+        /// reported latency includes time spent queued behind whatever the
+        /// engine was doing (e.g. a slow Big-LLM generation).
+        enqueued: Instant,
     },
     Stats {
         reply: mpsc::Sender<EngineStats>,
@@ -72,7 +76,11 @@ impl EngineHandle {
     pub fn request(&self, query: &str) -> Result<RoutedResponse> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Msg::Request { query: query.to_string(), reply })
+            .send(Msg::Request {
+                query: query.to_string(),
+                reply,
+                enqueued: Instant::now(),
+            })
             .map_err(|_| anyhow!("engine is down"))?;
         rx.recv().map_err(|_| anyhow!("engine dropped the request"))?
     }
@@ -143,7 +151,9 @@ impl Engine {
                             let _ = reply.send(Self::do_snapshot(&mut router));
                             continue;
                         }
-                        Msg::Request { query, reply } => batcher.push((query, reply)),
+                        Msg::Request { query, reply, enqueued } => {
+                            batcher.push_at((query, reply), enqueued)
+                        }
                     }
                     // Greedy drain: accept more requests until ready.
                     loop {
@@ -155,8 +165,8 @@ impl Engine {
                             .time_to_deadline(now)
                             .unwrap_or_default();
                         match rx.recv_timeout(timeout) {
-                            Ok(Msg::Request { query, reply }) => {
-                                batcher.push((query, reply))
+                            Ok(Msg::Request { query, reply, enqueued }) => {
+                                batcher.push_at((query, reply), enqueued)
                             }
                             Ok(Msg::Stats { reply }) => {
                                 let _ = reply
@@ -195,41 +205,44 @@ impl Engine {
 
     /// Embed the whole micro-batch in one artifact call, then route each
     /// request sequentially (generation is inherently sequential on the
-    /// single PJRT CPU device).
+    /// single PJRT CPU device). Each request's latency is measured from its
+    /// own enqueue instant — NOT from the drain — so queue wait behind a
+    /// slow generation shows up in `total_micros`.
     fn flush(
         router: &mut Router,
         batcher: &mut Batcher<(String, mpsc::Sender<Result<RoutedResponse>>)>,
     ) {
-        let batch = batcher.drain();
+        let batch = batcher.drain_pending();
         if batch.is_empty() {
             return;
         }
-        let t_start = Instant::now();
         // Exact-match fast path first: those don't need embeddings.
-        let mut to_embed: Vec<(String, mpsc::Sender<Result<RoutedResponse>>)> =
+        let mut to_embed: Vec<(String, mpsc::Sender<Result<RoutedResponse>>, Instant)> =
             Vec::with_capacity(batch.len());
-        for (query, reply) in batch {
-            if let Some(resp) = router.try_exact(&query, t_start) {
+        for pending in batch {
+            let enqueued = pending.enqueued;
+            let (query, reply) = pending.payload;
+            if let Some(resp) = router.try_exact(&query, enqueued) {
                 let _ = reply.send(Ok(resp));
             } else {
-                to_embed.push((query, reply));
+                to_embed.push((query, reply, enqueued));
             }
         }
         if to_embed.is_empty() {
             return;
         }
         // Borrowed views only — embedding a batch must not copy every query.
-        let queries: Vec<&str> = to_embed.iter().map(|(q, _)| q.as_str()).collect();
+        let queries: Vec<&str> = to_embed.iter().map(|(q, _, _)| q.as_str()).collect();
         match router.embedder().embed_batch(&queries) {
             Ok(embeddings) => {
-                for ((query, reply), emb) in to_embed.into_iter().zip(embeddings) {
-                    let resp = router.handle_embedded(&query, emb, t_start);
+                for ((query, reply, enqueued), emb) in to_embed.into_iter().zip(embeddings) {
+                    let resp = router.handle_embedded(&query, emb, enqueued);
                     let _ = reply.send(resp);
                 }
             }
             Err(e) => {
                 let msg = format!("batched embed failed: {e}");
-                for (_, reply) in to_embed {
+                for (_, reply, _) in to_embed {
                     let _ = reply.send(Err(anyhow!("{msg}")));
                 }
             }

@@ -72,10 +72,12 @@ pub struct Router {
 }
 
 impl Router {
-    /// Build from compiled artifacts (the production path).
+    /// Build from compiled artifacts (the production path). Decode runs
+    /// device-resident when `config.device_resident` and the artifact set
+    /// carries the packed-state executables (literal fallback otherwise).
     pub fn from_runtime(rt: &Runtime, config: Config) -> Result<Router> {
         let embedder: Box<dyn TextEmbedder> = Box::new(Embedder::new(rt)?);
-        let big = Box::new(crate::llm::SubstrateLlm::new(
+        let big = Box::new(crate::llm::SubstrateLlm::new_with(
             rt,
             "big",
             SamplingParams {
@@ -84,8 +86,9 @@ impl Router {
                 max_new_tokens: config.big_llm.max_new_tokens,
             },
             config.seed,
+            config.device_resident,
         )?);
-        let small = Box::new(crate::llm::SubstrateLlm::new(
+        let small = Box::new(crate::llm::SubstrateLlm::new_with(
             rt,
             "small",
             SamplingParams {
@@ -94,6 +97,7 @@ impl Router {
                 max_new_tokens: config.small_llm.max_new_tokens,
             },
             config.seed,
+            config.device_resident,
         )?);
         let mut router = Self::with_models(embedder, big, small, config);
         router.enable_persistence()?;

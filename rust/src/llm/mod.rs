@@ -43,8 +43,21 @@ pub struct SubstrateLlm {
 
 impl SubstrateLlm {
     pub fn new(rt: &Runtime, model: &str, params: SamplingParams, seed: u64) -> Result<Self> {
+        Self::new_with(rt, model, params, seed, true)
+    }
+
+    /// `device_resident = false` pins the literal KV transport
+    /// (`[runtime] device_resident` in the config); `true` uses the
+    /// device-resident decode path when its artifacts are compiled.
+    pub fn new_with(
+        rt: &Runtime,
+        model: &str,
+        params: SamplingParams,
+        seed: u64,
+        device_resident: bool,
+    ) -> Result<Self> {
         Ok(SubstrateLlm {
-            gen: Generator::new(rt, model)?,
+            gen: Generator::with_mode(rt, model, device_resident)?,
             params,
             rng: Rng::substream(seed, &format!("llm/{model}")),
         })

@@ -8,7 +8,7 @@
 
 use anyhow::{bail, Result};
 
-use super::{to_f32_vec, Executable, HostTensor, Runtime};
+use super::{to_f32_vec, ExecArg, Executable, Runtime};
 use crate::tokenizer::Tokenizer;
 
 /// Anything that maps text to a fixed-dim L2-normalized vector.
@@ -39,6 +39,11 @@ pub struct Embedder {
     tokenizer: Tokenizer,
     max_seq: usize,
     out_dim: usize,
+    /// Reusable upload staging for the token/length tensors — the batcher
+    /// calls `embed_batch` on every flush, so the per-chunk `Vec` churn is
+    /// hot-path allocation (same treatment as the decode scratch).
+    tok_scratch: std::cell::RefCell<Vec<i32>>,
+    len_scratch: std::cell::RefCell<Vec<i32>>,
 }
 
 impl Embedder {
@@ -64,6 +69,8 @@ impl Embedder {
             tokenizer: Tokenizer::new(rt.manifest.vocab_size),
             max_seq,
             out_dim,
+            tok_scratch: std::cell::RefCell::new(Vec::new()),
+            len_scratch: std::cell::RefCell::new(Vec::new()),
         })
     }
 
@@ -82,17 +89,22 @@ impl Embedder {
             .find(|(b, _)| *b >= texts.len())
             .unwrap_or_else(|| self.variants.last().unwrap());
         let batch = *batch;
-        let mut tokens = Vec::with_capacity(batch * self.max_seq);
-        let mut lengths = Vec::with_capacity(batch);
+        let mut tokens = self.tok_scratch.borrow_mut();
+        let mut lengths = self.len_scratch.borrow_mut();
+        tokens.clear();
+        lengths.clear();
+        tokens.reserve(batch * self.max_seq);
         for i in 0..batch {
             let text = texts.get(i).copied().unwrap_or("");
             let (ids, len) = self.tokenizer.encode_padded(text, self.max_seq);
             tokens.extend(ids);
             lengths.push(len as i32);
         }
-        let tok_t = HostTensor::i32(tokens, &[batch, self.max_seq]);
-        let len_t = HostTensor::i32(lengths, &[batch]);
-        let outputs = exe.run(&[tok_t, len_t])?;
+        // Buffer-level execution with a single fetch of the embeddings
+        // output (the decode hot path's logits-only treatment: untupled
+        // artifacts skip the host-side tuple decomposition entirely).
+        let outs = exe.run_raw(&[ExecArg::I32(&tokens), ExecArg::I32(&lengths)])?;
+        let outputs = exe.fetch_outputs(&outs)?;
         let flat = to_f32_vec(&outputs[0])?;
         debug_assert_eq!(flat.len(), batch * self.out_dim);
         Ok(texts

@@ -82,6 +82,12 @@ pub struct ArtifactSpec {
     pub n_weight_args: usize,
     pub inputs: Vec<IoSpec>,
     pub outputs: Vec<IoSpec>,
+    /// Single-output artifacts lowered without the tuple wrapper
+    /// (`return_tuple=False` in aot.py): the HLO root IS the output array,
+    /// so a buffer-level execution can feed it straight back as an input —
+    /// the device-resident decode convention. Absent in pre-resident
+    /// manifests (defaults to false: tuple root).
+    pub untupled: bool,
 }
 
 #[derive(Debug)]
@@ -162,6 +168,11 @@ impl Manifest {
                     .iter()
                     .map(IoSpec::parse)
                     .collect::<Result<_>>()?,
+                untupled: a
+                    .opt("untupled")
+                    .map(|v| v.bool())
+                    .transpose()?
+                    .unwrap_or(false),
             };
             artifacts.insert(spec.name.clone(), spec);
         }
@@ -204,6 +215,10 @@ mod tests {
                 "artifacts":[{"name":"a","file":"a.hlo.txt","weight_set":"m",
                   "n_weight_args":1,
                   "inputs":[{"name":"x","shape":[4],"dtype":"int32"}],
+                  "outputs":[{"name":"y","shape":[4],"dtype":"float32"}]},
+                 {"name":"b","file":"b.hlo.txt","weight_set":"m",
+                  "n_weight_args":1,"untupled":true,
+                  "inputs":[{"name":"x","shape":[4],"dtype":"int32"}],
                   "outputs":[{"name":"y","shape":[4],"dtype":"float32"}]}]}"#,
         )
         .unwrap();
@@ -212,6 +227,9 @@ mod tests {
         let a = m.artifact("a").unwrap();
         assert_eq!(a.inputs[0].dtype, Dtype::I32);
         assert_eq!(a.outputs[0].numel(), 4);
+        // tuple-ness: absent -> tuple root; "untupled": true -> bare root
+        assert!(!a.untupled);
+        assert!(m.artifact("b").unwrap().untupled);
         assert_eq!(m.model("m").unwrap().cfg("d_model").unwrap(), 128);
         assert!(m.artifact("nope").is_err());
         std::fs::remove_dir_all(&dir).ok();

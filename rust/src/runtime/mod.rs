@@ -8,8 +8,10 @@
 //! that xla_extension 0.5.1 rejects.
 //!
 //! Calling convention (manifest): HLO params = [weights..., inputs...] and
-//! the result is a tuple. Weights are loaded once per model and shared
-//! across that model's executables.
+//! the result is a tuple — except `untupled` artifacts (single output, bare
+//! root), whose result buffer feeds straight back into the next execution:
+//! the device-resident decode convention (DESIGN.md §Perf L2). Weights are
+//! loaded once per model and shared across that model's executables.
 
 pub mod embedder;
 pub mod generator;
@@ -23,7 +25,10 @@ use anyhow::{bail, Context, Result};
 
 pub use embedder::{Embedder, NativeBowEmbedder, TextEmbedder};
 pub use generator::Generation;
-pub use generator::{Generator, SamplingParams};
+pub use generator::{
+    sample_token, sample_token_with, DecodeBackend, DecodeSession, Generator,
+    GenerationStats, SampleScratch, SamplingParams,
+};
 pub use manifest::{ArtifactSpec, Dtype, IoSpec, Manifest};
 
 /// A compiled artifact plus its resident (on-device) weight arguments.
@@ -64,22 +69,32 @@ impl HostTensor {
     }
 
     /// Convert a fetched output literal back into a host tensor so it can
-    /// be re-fed as an input (the KV-cache decode loop).
+    /// be re-fed as an input (the literal-path KV-cache decode loop).
     pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<HostTensor> {
         Ok(match spec.dtype {
             Dtype::F32 => HostTensor::f32(lit.to_vec::<f32>()?, &spec.shape),
             Dtype::I32 => HostTensor::i32(lit.to_vec::<i32>()?, &spec.shape),
         })
     }
+}
 
-    fn upload(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
-        match self {
-            HostTensor::F32 { data, dims } => {
-                Ok(client.buffer_from_host_buffer(data, dims, None)?)
-            }
-            HostTensor::I32 { data, dims } => {
-                Ok(client.buffer_from_host_buffer(data, dims, None)?)
-            }
+/// One argument to a buffer-level execution (`Executable::run_raw`): either
+/// a tensor already resident on device (an output buffer fed back, the
+/// decode hot path) or a borrowed host slice uploaded at call time with the
+/// manifest input shape. Host variants borrow — callers reuse stack arrays
+/// or scratch `Vec`s across steps instead of allocating per call.
+#[derive(Clone, Copy)]
+pub enum ExecArg<'a> {
+    Device(&'a xla::PjRtBuffer),
+    I32(&'a [i32]),
+    F32(&'a [f32]),
+}
+
+impl<'a> From<&'a HostTensor> for ExecArg<'a> {
+    fn from(t: &'a HostTensor) -> ExecArg<'a> {
+        match t {
+            HostTensor::F32 { data, .. } => ExecArg::F32(data),
+            HostTensor::I32 { data, .. } => ExecArg::I32(data),
         }
     }
 }
@@ -97,49 +112,99 @@ pub struct Executable {
 }
 
 impl Executable {
-    /// Execute with the given non-weight inputs; returns the output tuple
-    /// decomposed into one `Literal` per manifest output.
+    /// Literal-level execution: upload the host tensors, run, fetch every
+    /// manifest output back to the host. The compatibility path — benches,
+    /// tests, and the literal decode fallback all go through here.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<xla::Literal>> {
-        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
-            if t.numel() != spec.numel() {
-                bail!(
-                    "{}: input {} has {} elements, expected {}",
-                    self.spec.name,
-                    spec.name,
-                    t.numel(),
-                    spec.numel()
-                );
-            }
-        }
-        let bufs: Vec<xla::PjRtBuffer> = inputs
-            .iter()
-            .map(|t| t.upload(&self.client))
-            .collect::<Result<_>>()
-            .with_context(|| format!("uploading inputs for {}", self.spec.name))?;
-        self.run_b(&bufs)
+        let args: Vec<ExecArg> = inputs.iter().map(ExecArg::from).collect();
+        let outs = self.run_raw(&args)?;
+        self.fetch_outputs(&outs)
     }
 
-    /// Execute with pre-uploaded input buffers (the zero-copy hot path).
-    pub fn run_b(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
-        if inputs.len() != self.spec.inputs.len() {
+    /// Buffer-level execution (the §Perf L2 hot path): uploads only the
+    /// host-slice arguments, feeds `Device` arguments zero-copy, and
+    /// returns the raw output buffers with NO device→host transfer. For a
+    /// tuple-rooted artifact the result is a single tuple buffer (which
+    /// this wrapper cannot untuple on device — fetch via `fetch_outputs`);
+    /// for an `untupled` artifact it is the output array itself, which can
+    /// be fed straight back into the next `run_raw` as `ExecArg::Device`.
+    pub fn run_raw(&self, args: &[ExecArg]) -> Result<Vec<xla::PjRtBuffer>> {
+        if args.len() != self.spec.inputs.len() {
             bail!(
                 "{}: expected {} inputs, got {}",
                 self.spec.name,
                 self.spec.inputs.len(),
-                inputs.len()
+                args.len()
             );
         }
-        let mut args: Vec<&xla::PjRtBuffer> =
-            Vec::with_capacity(self.weights.device.len() + inputs.len());
-        args.extend(self.weights.device.iter());
-        args.extend(inputs.iter());
-        let outs = self
+        // Upload pass. `buffer_from_host_buffer` is the only safe upload in
+        // this xla_extension build (synchronous copy; see HostTensor docs).
+        let mut uploaded: Vec<xla::PjRtBuffer> = Vec::new();
+        for (arg, spec) in args.iter().zip(&self.spec.inputs) {
+            let buf = match *arg {
+                ExecArg::Device(_) => continue,
+                ExecArg::I32(d) => {
+                    self.check_input(spec, d.len(), Dtype::I32)?;
+                    self.client.buffer_from_host_buffer(d, &spec.shape, None)
+                }
+                ExecArg::F32(d) => {
+                    self.check_input(spec, d.len(), Dtype::F32)?;
+                    self.client.buffer_from_host_buffer(d, &spec.shape, None)
+                }
+            }
+            .with_context(|| format!("uploading {} for {}", spec.name, self.spec.name))?;
+            uploaded.push(buf);
+        }
+        // Assemble [weights..., inputs...] in manifest order.
+        let mut refs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.weights.device.len() + args.len());
+        refs.extend(self.weights.device.iter());
+        let mut up = uploaded.iter();
+        for arg in args {
+            match *arg {
+                ExecArg::Device(b) => refs.push(b),
+                _ => refs.push(up.next().expect("uploaded host arg")),
+            }
+        }
+        let mut outs = self
             .exe
-            .execute_b::<&xla::PjRtBuffer>(&args)
+            .execute_b::<&xla::PjRtBuffer>(&refs)
             .with_context(|| format!("executing {}", self.spec.name))?;
-        let result = outs[0][0]
+        if outs.is_empty() {
+            bail!("{}: empty execution result", self.spec.name);
+        }
+        Ok(outs.remove(0))
+    }
+
+    /// Validate one host argument against its manifest input spec.
+    fn check_input(&self, spec: &IoSpec, got_len: usize, got_dtype: Dtype) -> Result<()> {
+        if got_dtype != spec.dtype || got_len != spec.numel() {
+            bail!(
+                "{}: input {} has {} {:?} elements, expected {:?}[{}]",
+                self.spec.name,
+                spec.name,
+                got_len,
+                got_dtype,
+                spec.dtype,
+                spec.numel()
+            );
+        }
+        Ok(())
+    }
+
+    /// Fetch every manifest output of a `run_raw` result to the host —
+    /// tuple-aware: decomposes tuple roots, passes untupled roots through.
+    pub fn fetch_outputs(&self, outs: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let result = outs
+            .first()
+            .with_context(|| format!("{}: no output buffer", self.spec.name))?
             .to_literal_sync()
             .with_context(|| format!("fetching {} output", self.spec.name))?;
+        if self.spec.untupled {
+            // Single-output artifact without the tuple wrapper: the fetched
+            // literal IS the output array.
+            return Ok(vec![result]);
+        }
         let parts = result
             .to_tuple()
             .with_context(|| format!("untupling {} output", self.spec.name))?;
@@ -194,6 +259,12 @@ impl Runtime {
             return Ok(());
         }
         let spec = self.manifest.artifact(name)?.clone();
+        if spec.untupled && spec.outputs.len() != 1 {
+            bail!(
+                "{name}: untupled artifacts must have exactly one output, manifest lists {}",
+                spec.outputs.len()
+            );
+        }
         let weights = match &spec.weight_set {
             Some(model) => self.model_weights(model)?,
             None => Arc::new(WeightSet { device: Vec::new() }),

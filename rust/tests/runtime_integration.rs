@@ -103,6 +103,60 @@ fn generator_greedy_is_sampling_free() {
 }
 
 #[test]
+fn device_resident_matches_literal_token_stream() {
+    // The device-resident transport is a pure transport optimization: for
+    // greedy AND seeded top-k sampling it must emit bit-identical token
+    // streams (and stats) to the literal path, through the span, tail, and
+    // single-step phases alike.
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir, &[]).unwrap();
+    let g = Generator::new(&rt, "small").unwrap();
+    if !g.resident_available() {
+        eprintln!("SKIP: artifact set predates device-resident decode");
+        return;
+    }
+    let cases = [
+        SamplingParams::greedy(40),
+        SamplingParams { temperature: 1.0, top_k: 40, max_new_tokens: 40 },
+        // non-span-eligible params exercise the pure single-step path
+        SamplingParams { temperature: 0.9, top_k: 7, max_new_tokens: 12 },
+    ];
+    for params in cases {
+        let lit = g
+            .generate_on(&["compare the decode transports"], &params, &mut Rng::new(11), false)
+            .unwrap();
+        let res = g
+            .generate_on(&["compare the decode transports"], &params, &mut Rng::new(11), true)
+            .unwrap();
+        assert_eq!(
+            lit.token_ids, res.token_ids,
+            "transports diverged at temp={} top_k={}",
+            params.temperature, params.top_k
+        );
+        assert_eq!(lit.stats.generated_tokens, res.stats.generated_tokens);
+        assert_eq!(lit.text, res.text);
+        assert!(!lit.stats.device_resident);
+        assert!(res.stats.device_resident);
+    }
+}
+
+#[test]
+fn device_resident_determinism_and_repeatability() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir, &[]).unwrap();
+    let g = Generator::new(&rt, "small").unwrap();
+    if !g.resident_available() {
+        eprintln!("SKIP: artifact set predates device-resident decode");
+        return;
+    }
+    let params = SamplingParams { temperature: 1.0, top_k: 40, max_new_tokens: 24 };
+    let a = g.generate(&["tell me about rust"], &params, &mut Rng::new(5)).unwrap();
+    let b = g.generate(&["tell me about rust"], &params, &mut Rng::new(5)).unwrap();
+    assert_eq!(a.token_ids, b.token_ids, "resident decode must be deterministic");
+    assert!(a.stats.device_resident, "resident artifacts present but not used");
+}
+
+#[test]
 fn artifact_router_full_pipeline() {
     let dir = require_artifacts!();
     let rt = Runtime::load(&dir, &[]).unwrap();

@@ -200,6 +200,92 @@ fn concurrent_clients_all_served() {
 }
 
 #[test]
+fn total_micros_includes_queue_wait_behind_slow_generation() {
+    // Regression: `Engine::flush` used to stamp t_start *after*
+    // `Batcher::drain`, so a request that sat in the channel behind a slow
+    // Big-LLM generation reported ~0us (exact hits especially). Latency is
+    // now measured from each request's enqueue instant.
+    use std::time::{Duration, Instant};
+    use tweakllm::coordinator::Pathway;
+    use tweakllm::llm::{LanguageModel, LlmResponse, TweakPrompt};
+
+    /// Mock Big LLM that holds the engine thread for a fixed wall time and
+    /// signals the instant each generation starts (so the test can submit
+    /// a request guaranteed to queue behind one — no scheduling races).
+    struct SlowLlm {
+        inner: MockLlm,
+        delay: Duration,
+        generating: std::sync::mpsc::Sender<()>,
+    }
+    impl LanguageModel for SlowLlm {
+        fn name(&self) -> &str {
+            self.inner.name()
+        }
+        fn respond(&mut self, query: &str) -> anyhow::Result<LlmResponse> {
+            let _ = self.generating.send(());
+            std::thread::sleep(self.delay);
+            self.inner.respond(query)
+        }
+        fn tweak(&mut self, prompt: &TweakPrompt) -> anyhow::Result<LlmResponse> {
+            let _ = self.generating.send(());
+            std::thread::sleep(self.delay);
+            self.inner.tweak(prompt)
+        }
+    }
+
+    let (gen_tx, gen_rx) = std::sync::mpsc::channel::<()>();
+    let (_engine, handle) = Engine::start(move || {
+        let mut cfg = Config::paper();
+        cfg.index.kind = IndexKindConfig::Flat;
+        cfg.exact_match_fast_path = true;
+        let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+        Ok(Router::with_models(
+            embedder,
+            Box::new(SlowLlm {
+                inner: MockLlm::new("big"),
+                delay: Duration::from_millis(80),
+                generating: gen_tx,
+            }),
+            Box::new(MockLlm::new("small")),
+            cfg,
+        ))
+    })
+    .expect("engine start");
+
+    // Prime the cache so the later repeat is an exact hit (consume the
+    // prime generation's start signal).
+    handle.request("what is a mutex in rust").unwrap();
+    gen_rx.recv().expect("prime generation signal");
+
+    // Occupy the engine with a slow miss, then submit an exact-hit repeat
+    // that has to wait in the channel behind it.
+    let h2 = handle.clone();
+    let slow = std::thread::spawn(move || h2.request("explain reader writer locks").unwrap());
+    // Block until the engine is provably INSIDE the slow generation (the
+    // signal fires just before its 80ms sleep), then queue the exact hit.
+    gen_rx.recv().expect("slow generation signal");
+    let t0 = Instant::now();
+    let exact = handle.request("what is a mutex in rust").unwrap();
+    let wall = t0.elapsed().as_micros();
+    let slow_resp = slow.join().unwrap();
+    assert_eq!(slow_resp.pathway, Pathway::Miss);
+
+    assert_eq!(exact.pathway, Pathway::ExactHit);
+    assert!(
+        exact.total_micros >= 40_000,
+        "exact hit must report its queue wait, got {}us",
+        exact.total_micros
+    );
+    // sanity: the report can't exceed what the client actually observed
+    assert!(
+        exact.total_micros <= wall + 10_000,
+        "reported {}us > observed {}us",
+        exact.total_micros,
+        wall
+    );
+}
+
+#[test]
 fn engine_in_process_handle_works_alongside_tcp() {
     let (_engine, handle, _addr, stop, _join) = start_stack();
     let r = handle.request("direct in-process request").unwrap();
