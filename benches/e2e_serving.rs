@@ -12,9 +12,16 @@
 //! Results land in `BENCH_e2e_serving.json` (uploaded from CI) so the repo
 //! has an end-to-end serving trajectory alongside BENCH_vector_index.json.
 //!
+//! The mock tier additionally runs a **mixed hit/miss concurrent workload**
+//! twice — decode scheduler on vs off — over a slow mock Big LLM, reporting
+//! per-pathway p50/p99 for both. With the scheduler off every tweak-hit
+//! queues behind in-flight Big-LLM generations (head-of-line blocking);
+//! with it on, tweak sessions interleave and overtake. The run asserts the
+//! tweak-hit p99 drops.
+//!
 //! `cargo bench --bench e2e_serving [-- --requests 256 --threads 4 --max-new 16]`
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use tweakllm::baselines::MockLlm;
 use tweakllm::bench::{bench_args, load_runtime, Table};
@@ -52,6 +59,78 @@ fn pathway_report(
         }
     }
     (table, rows)
+}
+
+/// Mixed workload, one engine run: sequential primes, then `n_requests`
+/// concurrent requests (~50% tweak-hit paraphrases, ~20% exact repeats,
+/// ~30% fresh misses) against a slow mock Big LLM (16 × 1ms decode units —
+/// wide enough that run-to-completion head-of-line blocking dominates any
+/// CI scheduling noise) and a fast Small LLM. Returns per-pathway latency
+/// samples (ms) + qps.
+fn run_mixed(
+    scheduler_on: bool,
+    n_requests: usize,
+    threads: usize,
+) -> anyhow::Result<(std::collections::HashMap<&'static str, Vec<f64>>, f64)> {
+    let mut cfg = Config::paper();
+    cfg.index.kind = IndexKindConfig::Flat;
+    cfg.exact_match_fast_path = true;
+    cfg.scheduler.enabled = scheduler_on;
+    let cfg_engine = cfg.clone();
+    let (engine, handle) = Engine::start(move || {
+        let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+        let mut big = MockLlm::new("big");
+        big.steps = 16;
+        big.step_delay = Duration::from_millis(1);
+        let mut small = MockLlm::new("small");
+        small.step_delay = Duration::from_micros(100);
+        Ok(Router::with_models(embedder, Box::new(big), Box::new(small), cfg_engine))
+    })?;
+    // Primes: one cache entry per topic; topic word-sets are disjoint so
+    // entries never tweak each other.
+    let topics = 8;
+    for i in 0..topics {
+        handle.request(&format!("mix{i}a mix{i}b mix{i}c mix{i}d mix{i}e mix{i}f"))?;
+    }
+    // Deterministic mixed trace (same for the on and off runs).
+    let mut rng = Rng::new(42);
+    let queries: Vec<String> = (0..n_requests)
+        .map(|j| {
+            let i = rng.range(0, topics);
+            match rng.range(0, 10) {
+                0..=4 => {
+                    // paraphrase: 5/6 words shared with its prime -> tweak
+                    format!("mix{i}a mix{i}b mix{i}c mix{i}d mix{i}e vary{j}")
+                }
+                5..=6 => format!("mix{i}a mix{i}b mix{i}c mix{i}d mix{i}e mix{i}f"),
+                _ => format!("fresh{j}a fresh{j}b fresh{j}c fresh{j}d fresh{j}e"),
+            }
+        })
+        .collect();
+    let t_all = Instant::now();
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let h = handle.clone();
+        let chunk: Vec<String> = queries.iter().skip(t).step_by(threads).cloned().collect();
+        joins.push(std::thread::spawn(move || -> anyhow::Result<Vec<(Pathway, u128)>> {
+            let mut out = Vec::with_capacity(chunk.len());
+            for q in &chunk {
+                let r = h.request(q)?;
+                out.push((r.pathway, r.total_micros));
+            }
+            Ok(out)
+        }));
+    }
+    let mut lat_by_path: std::collections::HashMap<&'static str, Vec<f64>> =
+        Default::default();
+    for j in joins {
+        for (p, us) in j.join().expect("client thread panicked")? {
+            lat_by_path.entry(pathway_str(p)).or_default().push(us as f64 / 1000.0);
+        }
+    }
+    let qps = n_requests as f64 / t_all.elapsed().as_secs_f64();
+    engine.shutdown();
+    Ok((lat_by_path, qps))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -115,6 +194,38 @@ fn main() -> anyhow::Result<()> {
         "mock tier: {qps:.1} req/s  |  mean batch size: {:.2}",
         stats.mean_batch_size
     );
+
+    // ---- mixed hit/miss workload: decode scheduler on vs off ----
+    eprintln!("[e2e] mixed workload: {n_requests} requests, scheduler on vs off...");
+    let (mixed_on, qps_on) = run_mixed(true, n_requests, threads)?;
+    let (mixed_off, qps_off) = run_mixed(false, n_requests, threads)?;
+    let (table_on, rows_on) = pathway_report(
+        "Mixed workload, scheduler ON (interleaved decode) — latency (ms)",
+        &mixed_on,
+    );
+    let (table_off, rows_off) = pathway_report(
+        "Mixed workload, scheduler OFF (run-to-completion) — latency (ms)",
+        &mixed_off,
+    );
+    println!("{}", table_on.render());
+    println!("{}", table_off.render());
+    println!("mixed: {qps_on:.1} req/s (scheduler on)  vs  {qps_off:.1} req/s (off)");
+    let tweak_p99_on = mixed_on.get("tweak_hit").map(|v| Summary::of(v).p99);
+    let tweak_p99_off = mixed_off.get("tweak_hit").map(|v| Summary::of(v).p99);
+    if let (Some(on), Some(off)) = (tweak_p99_on, tweak_p99_off) {
+        println!(
+            "tweak-hit p99: {on:.2}ms (scheduler on) vs {off:.2}ms (off)  ->  {:.1}x",
+            off / on.max(1e-9)
+        );
+        // The acceptance gate: interleaving removes head-of-line blocking,
+        // so hit latency must drop under mixed concurrent load.
+        assert!(on < off, "scheduler must cut tweak-hit p99: on {on:.2}ms vs off {off:.2}ms");
+    }
+    let on_obj =
+        Json::obj_from(vec![("qps", Json::num(qps_on)), ("pathways", Json::Arr(rows_on))]);
+    let off_obj =
+        Json::obj_from(vec![("qps", Json::num(qps_off)), ("pathways", Json::Arr(rows_off))]);
+    let mixed_json = Json::obj_from(vec![("scheduler_on", on_obj), ("scheduler_off", off_obj)]);
 
     // ---- substrate tier: compiled artifacts (skipped when absent) ----
     let mut substrate_json: Option<Json> = None;
@@ -226,6 +337,7 @@ fn main() -> anyhow::Result<()> {
         ("qps_mock", Json::num(qps)),
         ("mean_batch_size", Json::num(stats.mean_batch_size)),
         ("pathways_mock", Json::Arr(mock_rows)),
+        ("mixed", mixed_json),
     ];
     if let Some(s) = substrate_json {
         top.push(("substrate", s));

@@ -1,20 +1,32 @@
 //! Mock language models for unit tests and quality-model-driven evals:
 //! deterministic, artifact-free, and instrumented.
 
+use std::time::Duration;
+
 use anyhow::Result;
 
 use crate::cost::TokenUsage;
-use crate::llm::{LanguageModel, LlmResponse, TweakPrompt};
+use crate::llm::{LanguageModel, LlmResponse, LlmSession, TweakPrompt};
 use crate::tokenizer::Tokenizer;
 
 /// Echo-style mock: responds with a deterministic transform of the prompt;
 /// records every call.
+///
+/// The session API is honored step-wise: a generation takes `steps`
+/// `advance()` units, each costing `step_delay` of wall time. The defaults
+/// (1 step, zero delay) keep the mock instantaneous; scheduler tests and
+/// the serving bench raise them to model a slow Big LLM whose decode can be
+/// overtaken by interleaved tweak generations.
 pub struct MockLlm {
     name: String,
     pub respond_calls: Vec<String>,
     pub tweak_calls: Vec<TweakPrompt>,
     /// Fixed number of output tokens to report.
     pub output_tokens: usize,
+    /// `advance()` units per generation (>= 1).
+    pub steps: usize,
+    /// Wall time burned by each `advance()` unit.
+    pub step_delay: Duration,
 }
 
 impl MockLlm {
@@ -24,7 +36,78 @@ impl MockLlm {
             respond_calls: Vec::new(),
             tweak_calls: Vec::new(),
             output_tokens: 16,
+            steps: 1,
+            step_delay: Duration::ZERO,
         }
+    }
+
+    /// Builder-style pacing override: `steps` decode units of `step_delay`
+    /// each per generation.
+    pub fn with_pace(mut self, steps: usize, step_delay: Duration) -> MockLlm {
+        self.steps = steps.max(1);
+        self.step_delay = step_delay;
+        self
+    }
+
+    fn fresh_response(&self, query: &str) -> LlmResponse {
+        let input_tokens = Tokenizer::words(query).len();
+        LlmResponse {
+            text: format!("[{}-fresh] answer about: {}", self.name, query),
+            usage: TokenUsage { input_tokens, output_tokens: self.output_tokens },
+            prefill_micros: 0,
+            decode_micros: 0,
+        }
+    }
+
+    fn tweak_response(&self, prompt: &TweakPrompt) -> LlmResponse {
+        let input_tokens = Tokenizer::words(&prompt.new_query).len()
+            + Tokenizer::words(&prompt.cached_query).len()
+            + Tokenizer::words(&prompt.cached_response).len();
+        LlmResponse {
+            text: format!(
+                "[{}-tweaked] {} (basis: {})",
+                self.name, prompt.new_query, prompt.cached_response
+            ),
+            usage: TokenUsage { input_tokens, output_tokens: self.output_tokens },
+            prefill_micros: 0,
+            decode_micros: 0,
+        }
+    }
+
+    fn session(&self, resp: LlmResponse) -> Box<dyn LlmSession> {
+        Box::new(MockSession {
+            resp,
+            remaining: self.steps.max(1),
+            step_delay: self.step_delay,
+        })
+    }
+}
+
+/// Scripted session: the response text is fixed at `begin` time (the mock is
+/// deterministic); `advance()` just paces it out.
+struct MockSession {
+    resp: LlmResponse,
+    remaining: usize,
+    step_delay: Duration,
+}
+
+impl LlmSession for MockSession {
+    fn advance(&mut self) -> Result<bool> {
+        if self.remaining > 0 {
+            if !self.step_delay.is_zero() {
+                std::thread::sleep(self.step_delay);
+            }
+            self.remaining -= 1;
+        }
+        Ok(self.remaining > 0)
+    }
+
+    fn is_done(&self) -> bool {
+        self.remaining == 0
+    }
+
+    fn finish(self: Box<Self>) -> Result<LlmResponse> {
+        Ok(self.resp)
     }
 }
 
@@ -35,29 +118,22 @@ impl LanguageModel for MockLlm {
 
     fn respond(&mut self, query: &str) -> Result<LlmResponse> {
         self.respond_calls.push(query.to_string());
-        let input_tokens = Tokenizer::words(query).len();
-        Ok(LlmResponse {
-            text: format!("[{}-fresh] answer about: {}", self.name, query),
-            usage: TokenUsage { input_tokens, output_tokens: self.output_tokens },
-            prefill_micros: 0,
-            decode_micros: 0,
-        })
+        Ok(self.fresh_response(query))
     }
 
     fn tweak(&mut self, prompt: &TweakPrompt) -> Result<LlmResponse> {
         self.tweak_calls.push(prompt.clone());
-        let input_tokens = Tokenizer::words(&prompt.new_query).len()
-            + Tokenizer::words(&prompt.cached_query).len()
-            + Tokenizer::words(&prompt.cached_response).len();
-        Ok(LlmResponse {
-            text: format!(
-                "[{}-tweaked] {} (basis: {})",
-                self.name, prompt.new_query, prompt.cached_response
-            ),
-            usage: TokenUsage { input_tokens, output_tokens: self.output_tokens },
-            prefill_micros: 0,
-            decode_micros: 0,
-        })
+        Ok(self.tweak_response(prompt))
+    }
+
+    fn begin_respond(&mut self, query: &str) -> Result<Box<dyn LlmSession>> {
+        self.respond_calls.push(query.to_string());
+        Ok(self.session(self.fresh_response(query)))
+    }
+
+    fn begin_tweak(&mut self, prompt: &TweakPrompt) -> Result<Box<dyn LlmSession>> {
+        self.tweak_calls.push(prompt.clone());
+        Ok(self.session(self.tweak_response(prompt)))
     }
 }
 
@@ -90,5 +166,19 @@ mod tests {
             })
             .unwrap();
         assert_eq!(r.usage.input_tokens, 6);
+    }
+
+    #[test]
+    fn session_paces_and_matches_blocking_text() {
+        let mut m = MockLlm::new("big").with_pace(3, Duration::ZERO);
+        let blocking = m.respond("what is a monad").unwrap();
+        let mut s = m.begin_respond("what is a monad").unwrap();
+        assert!(!s.is_done());
+        assert!(s.advance().unwrap()); // 1/3
+        assert!(s.advance().unwrap()); // 2/3
+        assert!(!s.advance().unwrap()); // 3/3 -> done
+        assert!(s.is_done());
+        assert_eq!(s.finish().unwrap().text, blocking.text);
+        assert_eq!(m.respond_calls.len(), 2); // both shapes recorded
     }
 }

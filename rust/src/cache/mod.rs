@@ -28,7 +28,7 @@ pub use flat::FlatIndex;
 pub use ivf::IvfFlatIndex;
 pub use persist::{PersistConfig, PersistStatus, Persistence, RecoveryReport, WalOp};
 pub use segment::{IndexOpts, Quantization, SegmentedStore, Sq8Params};
-pub use store::{CacheEntry, CacheStats, IndexKind, SemanticCache};
+pub use store::{query_key, CacheEntry, CacheStats, IndexKind, SemanticCache};
 
 use std::sync::Arc;
 

@@ -40,6 +40,14 @@ pub enum IndexKind {
     IvfFlat { nlist: usize, nprobe: usize },
 }
 
+/// Normalized exact-match key: whitespace-collapsed, case-folded hash.
+/// Shared by the cache's exact fast path and the scheduler's in-flight miss
+/// dedup so "the same query" means the same thing in both places.
+pub fn query_key(text: &str) -> u64 {
+    let norm: String = text.split_whitespace().collect::<Vec<_>>().join(" ");
+    crate::util::rng::hash_bytes(norm.to_lowercase().as_bytes())
+}
+
 pub struct SemanticCache {
     entries: Vec<Option<CacheEntry>>,
     index: Box<dyn VectorIndex>,
@@ -150,9 +158,7 @@ impl SemanticCache {
     }
 
     fn text_key(text: &str) -> u64 {
-        // Normalize whitespace + case so trivially-reformatted duplicates hit.
-        let norm: String = text.split_whitespace().collect::<Vec<_>>().join(" ");
-        crate::util::rng::hash_bytes(norm.to_lowercase().as_bytes())
+        query_key(text)
     }
 
     /// Insert a (query, response, embedding) triple; returns the entry id.
@@ -219,8 +225,15 @@ impl SemanticCache {
         self.index.search(embedding, k)
     }
 
-    /// Record that a search hit was *used* (feeds LRU/LFU).
+    /// Record that a search hit was *used* (feeds LRU/LFU). No-op when the
+    /// entry is gone: scheduler completions touch at session EOS, and the
+    /// basis entry may have been evicted while the generation was in
+    /// flight — reviving a dead id in the eviction maps (or journaling a
+    /// Touch for a removed entry) must not happen.
     pub fn touch(&mut self, id: usize) {
+        if self.entries.get(id).map_or(true, |e| e.is_none()) {
+            return;
+        }
         self.tick += 1;
         self.eviction.on_hit(id, self.tick);
         let tick = self.tick;

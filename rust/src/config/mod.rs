@@ -26,6 +26,10 @@ pub struct Config {
     pub eviction: EvictionConfig,
     /// Dynamic batcher.
     pub batcher: BatcherConfig,
+    /// Interleaved decode scheduler (continuous batching on the engine
+    /// thread): live generations advance round-robin so tweak-hits complete
+    /// while Big-LLM misses are still decoding.
+    pub scheduler: SchedulerConfig,
     /// Generation settings per model role.
     pub big_llm: GenConfig,
     pub small_llm: GenConfig,
@@ -82,6 +86,22 @@ pub struct BatcherConfig {
 }
 
 #[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// `false` restores run-to-completion routing: each drained request
+    /// finishes its whole generation before the next starts (head-of-line
+    /// blocking; the pre-scheduler behavior, kept for A/B benchmarking).
+    pub enabled: bool,
+    /// Sessions decoding concurrently on the engine thread; admissions
+    /// beyond this queue (FIFO) until a slot frees. Bounds resident decode
+    /// state held at once.
+    pub max_concurrent_sessions: usize,
+    /// Decode units (`LlmSession::advance` calls) each live session gets
+    /// per round-robin turn. 1 = fully fair interleave; larger values trade
+    /// tweak-hit latency for fewer cross-session switches.
+    pub fairness_steps: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
 pub struct GenConfig {
     pub temperature: f32,
     pub top_k: usize,
@@ -126,6 +146,11 @@ impl Config {
                 ttl_ticks: u64::MAX,
             },
             batcher: BatcherConfig { max_batch: 32, max_wait_micros: 2_000 },
+            scheduler: SchedulerConfig {
+                enabled: true,
+                max_concurrent_sessions: 8,
+                fairness_steps: 1,
+            },
             big_llm: GenConfig { temperature: 1.0, top_k: 40, max_new_tokens: 48 },
             small_llm: GenConfig { temperature: 1.0, top_k: 40, max_new_tokens: 48 },
             cost: CostConfig {
@@ -231,6 +256,21 @@ impl Config {
             "eviction.ttl_ticks" => self.eviction.ttl_ticks = u()? as u64,
             "batcher.max_batch" => self.batcher.max_batch = u()?,
             "batcher.max_wait_micros" => self.batcher.max_wait_micros = u()? as u64,
+            "scheduler.enabled" => self.scheduler.enabled = b()?,
+            "scheduler.max_concurrent_sessions" => {
+                let n = u()?;
+                if n == 0 {
+                    bail!("scheduler.max_concurrent_sessions must be >= 1");
+                }
+                self.scheduler.max_concurrent_sessions = n;
+            }
+            "scheduler.fairness_steps" => {
+                let n = u()?;
+                if n == 0 {
+                    bail!("scheduler.fairness_steps must be >= 1");
+                }
+                self.scheduler.fairness_steps = n;
+            }
             "big_llm.temperature" => self.big_llm.temperature = f()? as f32,
             "big_llm.top_k" => self.big_llm.top_k = u()?,
             "big_llm.max_new_tokens" => self.big_llm.max_new_tokens = u()?,
@@ -274,6 +314,11 @@ impl Config {
                 format!("WAL+snapshots in {} (fsync {}, compact at {} MiB)", self.persist.data_dir, self.persist.wal_fsync, self.persist.compact_bytes / (1024 * 1024))
             } else {
                 "disabled (ephemeral, as in the paper)".into()
+            }),
+            ("Decode scheduler".into(), if self.scheduler.enabled {
+                format!("interleaved ({} concurrent sessions, {} step{}/turn)", self.scheduler.max_concurrent_sessions, self.scheduler.fairness_steps, if self.scheduler.fairness_steps == 1 { "" } else { "s" })
+            } else {
+                "run-to-completion (head-of-line blocking)".into()
             }),
             ("Decode transport".into(), if self.device_resident {
                 "device-resident KV (literal fallback for old artifact sets)".into()
@@ -381,6 +426,35 @@ mod tests {
         assert!(c.set("index.compact_tombstone_frac", "1.5").is_err());
         let rows = c.table();
         assert!(rows.iter().any(|(k, v)| k == "Vector Database" && v.contains("SQ8")));
+    }
+
+    #[test]
+    fn scheduler_section_applies() {
+        let mut c = Config::paper();
+        assert!(c.scheduler.enabled);
+        assert_eq!(c.scheduler.max_concurrent_sessions, 8);
+        assert_eq!(c.scheduler.fairness_steps, 1);
+        let mut kv = BTreeMap::new();
+        kv.insert("scheduler.enabled".to_string(), "false".to_string());
+        kv.insert("scheduler.max_concurrent_sessions".to_string(), "4".to_string());
+        kv.insert("scheduler.fairness_steps".to_string(), "2".to_string());
+        c.apply(&kv).unwrap();
+        assert!(!c.scheduler.enabled);
+        assert_eq!(c.scheduler.max_concurrent_sessions, 4);
+        assert_eq!(c.scheduler.fairness_steps, 2);
+        assert!(c.set("scheduler.max_concurrent_sessions", "0").is_err());
+        assert!(c.set("scheduler.fairness_steps", "0").is_err());
+        let row = |c: &Config| -> String {
+            for (k, v) in c.table() {
+                if k == "Decode scheduler" {
+                    return v;
+                }
+            }
+            panic!("missing Decode scheduler row");
+        };
+        assert!(row(&c).contains("run-to-completion"));
+        c.set("scheduler.enabled", "true").unwrap();
+        assert!(row(&c).contains("4 concurrent"));
     }
 
     #[test]

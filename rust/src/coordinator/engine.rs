@@ -1,11 +1,26 @@
 //! The serving engine: a dedicated thread that owns the `Router` (and with
 //! it the PJRT client) and consumes requests from a channel, batching the
-//! embed stage.
+//! embed stage and interleaving decode via the [`Scheduler`].
 //!
 //! Leader/worker shape: the engine thread is the single worker for model
 //! compute (the CPU PJRT client serializes execution anyway); front-ends
 //! (TCP server, in-process clients, bench harnesses) are leaders that
 //! submit `Request` messages and block on a rendezvous channel.
+//!
+//! The serve loop alternates three duties, never blocking while any
+//! session is in flight:
+//! 1. **ingest** — drain the submission channel into the batcher (blocking
+//!    only when there is truly nothing to do);
+//! 2. **flush** — when the batcher is ready, embed the micro-batch, route
+//!    each request, and hand the resulting decode jobs to the scheduler
+//!    (or run them to completion in place when the scheduler is disabled);
+//! 3. **advance** — give every live session one fairness round, replying
+//!    to front-ends as sessions reach EOS.
+//!
+//! Flushing loops while the batcher remains ready — and, on shutdown,
+//! until it is empty — so a burst larger than `max_batch` can never strand
+//! leftovers (the old loop flushed once and went back to a blocking
+//! `recv`, parking any remainder forever on a then-idle connection).
 
 use std::sync::mpsc;
 use std::thread;
@@ -13,12 +28,14 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use super::{Batcher, RoutedResponse, Router};
+use super::scheduler::{Job, JobKind, Scheduler};
+use super::{Batcher, ReplyTx, RouteDecision, RoutedResponse, Router};
+use crate::cache::query_key;
 
 enum Msg {
     Request {
         query: String,
-        reply: mpsc::Sender<Result<RoutedResponse>>,
+        reply: ReplyTx,
         /// Stamped by `EngineHandle::request` before the channel send, so
         /// reported latency includes time spent queued behind whatever the
         /// engine was doing (e.g. a slow Big-LLM generation).
@@ -44,6 +61,13 @@ pub struct EngineStats {
     pub latency_table: String,
     pub cost_dollars: f64,
     pub baseline_dollars: f64,
+    // ---- decode scheduler ----
+    /// Sessions decoding right now (0 when the scheduler is disabled).
+    pub active_sessions: usize,
+    /// Routed jobs waiting for a session slot.
+    pub waiting_sessions: usize,
+    /// Requests served by coalescing onto an identical in-flight miss.
+    pub coalesced: u64,
     // ---- persistence (all zero when the [persist] section is disabled) ----
     pub persist_enabled: bool,
     pub persist_generation: u64,
@@ -132,62 +156,7 @@ impl Engine {
                         return;
                     }
                 };
-                let mut batcher: Batcher<(String, mpsc::Sender<Result<RoutedResponse>>)> =
-                    Batcher::new(router.config.batcher);
-                'serve: loop {
-                    // Block for the first message, then drain greedily up to
-                    // the batch deadline.
-                    let first = match rx.recv() {
-                        Ok(m) => m,
-                        Err(_) => break 'serve,
-                    };
-                    match first {
-                        Msg::Shutdown => break 'serve,
-                        Msg::Stats { reply } => {
-                            let _ = reply.send(Self::collect_stats(&router, &batcher));
-                            continue;
-                        }
-                        Msg::Snapshot { reply } => {
-                            let _ = reply.send(Self::do_snapshot(&mut router));
-                            continue;
-                        }
-                        Msg::Request { query, reply, enqueued } => {
-                            batcher.push_at((query, reply), enqueued)
-                        }
-                    }
-                    // Greedy drain: accept more requests until ready.
-                    loop {
-                        let now = Instant::now();
-                        if batcher.ready(now) {
-                            break;
-                        }
-                        let timeout = batcher
-                            .time_to_deadline(now)
-                            .unwrap_or_default();
-                        match rx.recv_timeout(timeout) {
-                            Ok(Msg::Request { query, reply, enqueued }) => {
-                                batcher.push_at((query, reply), enqueued)
-                            }
-                            Ok(Msg::Stats { reply }) => {
-                                let _ = reply
-                                    .send(Self::collect_stats(&router, &batcher));
-                            }
-                            Ok(Msg::Snapshot { reply }) => {
-                                let _ = reply.send(Self::do_snapshot(&mut router));
-                            }
-                            Ok(Msg::Shutdown) => {
-                                Self::flush(&mut router, &mut batcher);
-                                break 'serve;
-                            }
-                            Err(mpsc::RecvTimeoutError::Timeout) => break,
-                            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                                Self::flush(&mut router, &mut batcher);
-                                break 'serve;
-                            }
-                        }
-                    }
-                    Self::flush(&mut router, &mut batcher);
-                }
+                Self::serve(&mut router, rx);
                 // Graceful shutdown: fold the WAL into a final snapshot so
                 // the next start replays nothing. Crash recovery does not
                 // depend on this — it is an optimization, not a correctness
@@ -203,22 +172,110 @@ impl Engine {
         Ok((Engine { tx: tx.clone(), thread: Some(thread) }, EngineHandle { tx }))
     }
 
-    /// Embed the whole micro-batch in one artifact call, then route each
-    /// request sequentially (generation is inherently sequential on the
-    /// single PJRT CPU device). Each request's latency is measured from its
-    /// own enqueue instant — NOT from the drain — so queue wait behind a
-    /// slow generation shows up in `total_micros`.
+    /// The engine thread's serve loop (see the module docs for the shape).
+    fn serve(router: &mut Router, rx: mpsc::Receiver<Msg>) {
+        let mut batcher: Batcher<(String, ReplyTx)> = Batcher::new(router.config.batcher);
+        let mut sched = Scheduler::new(router.config.scheduler);
+        let sched_on = router.config.scheduler.enabled;
+        let mut shutdown = false;
+        loop {
+            // ---- 1) ingest ----
+            // Block for work only when fully idle; a live session must
+            // keep advancing, so otherwise the channel is polled.
+            if !shutdown && sched.is_idle() && batcher.is_empty() {
+                match rx.recv() {
+                    Ok(m) => shutdown = Self::on_msg(m, router, &mut batcher, &sched),
+                    Err(_) => shutdown = true,
+                }
+            }
+            if !shutdown {
+                loop {
+                    match rx.try_recv() {
+                        Ok(m) => {
+                            if Self::on_msg(m, router, &mut batcher, &sched) {
+                                shutdown = true;
+                                break;
+                            }
+                        }
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            shutdown = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            // A sub-batch waiting out its coalescing window with no session
+            // in flight: sleep until the deadline instead of spinning.
+            if !shutdown && sched.is_idle() && !batcher.is_empty() {
+                let now = Instant::now();
+                if !batcher.ready(now) {
+                    let timeout = batcher.time_to_deadline(now).unwrap_or_default();
+                    match rx.recv_timeout(timeout) {
+                        Ok(m) => shutdown = Self::on_msg(m, router, &mut batcher, &sched),
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
+                    }
+                }
+            }
+            // ---- 2) flush (keep going: no stranded leftovers) ----
+            loop {
+                let now = Instant::now();
+                if !(batcher.ready(now) || (shutdown && !batcher.is_empty())) {
+                    break;
+                }
+                Self::flush(router, &mut batcher, sched_on.then_some(&mut sched));
+            }
+            // ---- 3) advance live sessions one fairness round ----
+            sched.step(router);
+            // Exit only once every accepted request has been answered.
+            if shutdown && sched.is_idle() && batcher.is_empty() {
+                break;
+            }
+        }
+    }
+
+    /// Process one control message; returns `true` on a shutdown request.
+    fn on_msg(
+        msg: Msg,
+        router: &mut Router,
+        batcher: &mut Batcher<(String, ReplyTx)>,
+        sched: &Scheduler,
+    ) -> bool {
+        match msg {
+            Msg::Request { query, reply, enqueued } => {
+                batcher.push_at((query, reply), enqueued);
+                false
+            }
+            Msg::Stats { reply } => {
+                let _ = reply.send(Self::collect_stats(router, batcher, sched));
+                false
+            }
+            Msg::Snapshot { reply } => {
+                let _ = reply.send(Self::do_snapshot(router));
+                false
+            }
+            Msg::Shutdown => true,
+        }
+    }
+
+    /// Embed the whole micro-batch in one artifact call, route each
+    /// request, and dispatch the decode work. With the scheduler the jobs
+    /// join the live interleave; without it each runs to completion here in
+    /// routing order (the pre-scheduler behavior). Each request's latency
+    /// is measured from its own enqueue instant — NOT from the drain — so
+    /// queue wait behind a slow generation shows up in `total_micros`.
     fn flush(
         router: &mut Router,
-        batcher: &mut Batcher<(String, mpsc::Sender<Result<RoutedResponse>>)>,
+        batcher: &mut Batcher<(String, ReplyTx)>,
+        mut sched: Option<&mut Scheduler>,
     ) {
         let batch = batcher.drain_pending();
         if batch.is_empty() {
             return;
         }
         // Exact-match fast path first: those don't need embeddings.
-        let mut to_embed: Vec<(String, mpsc::Sender<Result<RoutedResponse>>, Instant)> =
-            Vec::with_capacity(batch.len());
+        let mut to_embed: Vec<(String, ReplyTx, Instant)> = Vec::with_capacity(batch.len());
         for pending in batch {
             let enqueued = pending.enqueued;
             let (query, reply) = pending.payload;
@@ -236,8 +293,26 @@ impl Engine {
         match router.embedder().embed_batch(&queries) {
             Ok(embeddings) => {
                 for ((query, reply, enqueued), emb) in to_embed.into_iter().zip(embeddings) {
-                    let resp = router.handle_embedded(&query, emb, enqueued);
-                    let _ = reply.send(resp);
+                    match &mut sched {
+                        Some(s) => match router.route(&query, emb, enqueued) {
+                            RouteDecision::Exact(resp) => {
+                                let _ = reply.send(Ok(resp));
+                            }
+                            RouteDecision::Tweak(t) => {
+                                let job = Job::new(JobKind::Tweak(t), reply, enqueued);
+                                s.submit(job, router);
+                            }
+                            RouteDecision::Miss(m) => {
+                                let key = query_key(&m.query);
+                                let kind = JobKind::Miss { job: m, key };
+                                s.submit(Job::new(kind, reply, enqueued), router);
+                            }
+                        },
+                        None => {
+                            let resp = router.handle_embedded(&query, emb, enqueued);
+                            let _ = reply.send(resp);
+                        }
+                    }
                 }
             }
             Err(e) => {
@@ -267,7 +342,8 @@ impl Engine {
 
     fn collect_stats(
         router: &Router,
-        batcher: &Batcher<(String, mpsc::Sender<Result<RoutedResponse>>)>,
+        batcher: &Batcher<(String, ReplyTx)>,
+        sched: &Scheduler,
     ) -> EngineStats {
         let persist = router.cache().persist_status();
         EngineStats {
@@ -280,6 +356,9 @@ impl Engine {
             latency_table: router.latency.table(),
             cost_dollars: router.ledger.dollars(&router.config.cost),
             baseline_dollars: router.ledger.baseline_dollars(&router.config.cost),
+            active_sessions: sched.active_sessions(),
+            waiting_sessions: sched.waiting_jobs(),
+            coalesced: sched.coalesced(),
             persist_enabled: persist.is_some(),
             persist_generation: persist.map_or(0, |p| p.generation),
             wal_bytes: persist.map_or(0, |p| p.wal_bytes),

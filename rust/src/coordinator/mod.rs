@@ -10,9 +10,11 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod scheduler;
 
 pub use batcher::Batcher;
 pub use engine::{Engine, EngineHandle, EngineStats, SnapshotReport};
+pub use scheduler::{Job, JobKind, Scheduler};
 
 use std::sync::Arc;
 
@@ -22,10 +24,14 @@ use crate::cache::persist::RecoveryReport;
 use crate::cache::SemanticCache;
 use crate::config::Config;
 use crate::cost::{CostLedger, ModelRole, TokenUsage};
-use crate::llm::{LanguageModel, TweakPrompt};
+use crate::llm::{LanguageModel, LlmResponse, LlmSession, TweakPrompt};
 use crate::metrics::{Counters, LatencyRecorder};
 use crate::runtime::{Embedder, Runtime, SamplingParams, TextEmbedder};
 use crate::util::ThreadPool;
+
+/// Where a request's response is delivered (front-ends block on the
+/// receiving end). One definition shared by the engine and the scheduler.
+pub type ReplyTx = std::sync::mpsc::Sender<Result<RoutedResponse>>;
 
 /// Which pathway served a request.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -36,6 +42,39 @@ pub enum Pathway {
     TweakHit,
     /// Miss — Big LLM generated fresh (and the cache was updated).
     Miss,
+}
+
+/// Outcome of the route stage alone — the threshold decision with every
+/// snapshot the generation will need, but no generation work yet. Splitting
+/// route-decision from generation is what lets the engine enqueue the
+/// resulting sessions on the decode scheduler instead of running each to
+/// completion in routing order.
+pub enum RouteDecision {
+    /// Resolved immediately by the exact-match fast path (re-checked at
+    /// route time: an earlier request in the same drain may have inserted
+    /// this very query).
+    Exact(RoutedResponse),
+    /// Hit pathway: Small LLM tweak over a snapshot of the cache entry.
+    Tweak(TweakJob),
+    /// Miss pathway: Big LLM generation, cache insert at completion.
+    Miss(MissJob),
+}
+
+/// Everything a tweak generation needs, snapshotted at route time (the
+/// cache entry may be evicted while the session is in flight).
+pub struct TweakJob {
+    pub prompt: TweakPrompt,
+    pub hit_id: usize,
+    pub score: f32,
+}
+
+/// Everything a miss generation needs to complete (the embedding is kept
+/// for the cache insert at EOS).
+pub struct MissJob {
+    pub query: String,
+    pub embedding: Vec<f32>,
+    /// Top-1 similarity that fell below the threshold (None: empty cache).
+    pub top_score: Option<f32>,
 }
 
 #[derive(Clone, Debug)]
@@ -241,74 +280,180 @@ impl Router {
     }
 
     /// Route a query whose embedding was already computed (batched front).
+    /// Blocking shape: route → begin session → drive to EOS → complete.
+    /// Exactly the staged pipeline the scheduler runs, collapsed in place —
+    /// so a request costs the same work whether the scheduler is on or off.
     pub fn handle_embedded(
         &mut self,
         query: &str,
         embedding: Vec<f32>,
         t_start: std::time::Instant,
     ) -> Result<RoutedResponse> {
+        match self.route(query, embedding, t_start) {
+            RouteDecision::Exact(resp) => Ok(resp),
+            RouteDecision::Tweak(job) => {
+                let t = std::time::Instant::now();
+                let mut session = self.begin_tweak_session(&job)?;
+                while session.advance()? {}
+                let resp = session.finish()?;
+                Ok(self.complete_tweak(&job, resp, t_start, t.elapsed().as_micros()))
+            }
+            RouteDecision::Miss(job) => {
+                let t = std::time::Instant::now();
+                let mut session = self.begin_miss_session(&job)?;
+                while session.advance()? {}
+                let resp = session.finish()?;
+                Ok(self.complete_miss(job, resp, t_start, t.elapsed().as_micros()))
+            }
+        }
+    }
+
+    /// Stage 1: the threshold decision (Figure 1) with no generation work.
+    /// Everything the generation needs later is snapshotted into the job.
+    pub fn route(
+        &mut self,
+        query: &str,
+        embedding: Vec<f32>,
+        t_start: std::time::Instant,
+    ) -> RouteDecision {
+        // Exact-match re-check: the batched front runs `try_exact` before
+        // embedding, but an identical query routed earlier in this same
+        // drain may have inserted its response since.
+        if let Some(resp) = self.try_exact(query, t_start) {
+            return RouteDecision::Exact(resp);
+        }
         self.counters.inc("requests");
-        // 2) cache lookup
         let t = std::time::Instant::now();
         let hits = self.cache.search(&embedding, self.config.top_k);
         self.latency.record_duration("search", t.elapsed());
         let top = hits.first().copied();
-
-        // 3) threshold routing
         let threshold = self.config.similarity_threshold;
         match top {
             Some(hit) if hit.score >= threshold => {
-                // ---- hit pathway: tweak via Small LLM ----
                 let entry = self
                     .cache
                     .entry(hit.id)
                     .expect("search returned tombstoned id");
-                let prompt = TweakPrompt {
-                    new_query: query.to_string(),
-                    cached_query: entry.query_text.clone(),
-                    cached_response: entry.response_text.clone(),
-                };
-                let cached_query = entry.query_text.clone();
-                let t = std::time::Instant::now();
-                let resp = self.small.tweak(&prompt)?;
-                self.latency.record_duration("tweak_generate", t.elapsed());
-                self.cache.touch(hit.id);
-                self.ledger.record(ModelRole::Small, resp.usage);
-                self.counters.inc("tweak_hits");
-                let total_micros = t_start.elapsed().as_micros();
-                self.latency.record("total", total_micros as f64);
-                Ok(RoutedResponse {
-                    text: resp.text,
-                    pathway: Pathway::TweakHit,
-                    similarity: Some(hit.score),
-                    cached_query: Some(cached_query),
-                    cache_entry: Some(hit.id),
-                    usage: resp.usage,
-                    total_micros,
+                RouteDecision::Tweak(TweakJob {
+                    prompt: TweakPrompt {
+                        new_query: query.to_string(),
+                        cached_query: entry.query_text.clone(),
+                        cached_response: entry.response_text.clone(),
+                    },
+                    hit_id: hit.id,
+                    score: hit.score,
                 })
             }
-            top => {
-                // ---- miss pathway: Big LLM + cache update ----
-                let t = std::time::Instant::now();
-                let resp = self.big.respond(query)?;
-                self.latency.record_duration("big_generate", t.elapsed());
-                let t = std::time::Instant::now();
-                let id = self.cache.insert(query, &resp.text, embedding);
-                self.latency.record_duration("cache_insert", t.elapsed());
-                self.ledger.record(ModelRole::Big, resp.usage);
-                self.counters.inc("misses");
-                let total_micros = t_start.elapsed().as_micros();
-                self.latency.record("total", total_micros as f64);
-                Ok(RoutedResponse {
-                    text: resp.text,
-                    pathway: Pathway::Miss,
-                    similarity: top.map(|h| h.score),
-                    cached_query: None,
-                    cache_entry: Some(id),
-                    usage: resp.usage,
-                    total_micros,
-                })
-            }
+            top => RouteDecision::Miss(MissJob {
+                query: query.to_string(),
+                embedding,
+                top_score: top.map(|h| h.score),
+            }),
+        }
+    }
+
+    /// Stage 2 (hit pathway): start the Small-LLM tweak session.
+    pub fn begin_tweak_session(&mut self, job: &TweakJob) -> Result<Box<dyn LlmSession>> {
+        self.small.begin_tweak(&job.prompt)
+    }
+
+    /// Stage 2 (miss pathway): start the Big-LLM generation session.
+    pub fn begin_miss_session(&mut self, job: &MissJob) -> Result<Box<dyn LlmSession>> {
+        self.big.begin_respond(&job.query)
+    }
+
+    /// Stage 3 (hit pathway): account a finished tweak and build the reply.
+    /// `gen_micros` is the session's begin→EOS wall time — under the
+    /// scheduler that is occupancy (interleaved sessions overlap), not
+    /// exclusive compute.
+    pub fn complete_tweak(
+        &mut self,
+        job: &TweakJob,
+        resp: LlmResponse,
+        t_start: std::time::Instant,
+        gen_micros: u128,
+    ) -> RoutedResponse {
+        self.latency.record("tweak_generate", gen_micros as f64);
+        self.cache.touch(job.hit_id);
+        self.ledger.record(ModelRole::Small, resp.usage);
+        self.counters.inc("tweak_hits");
+        let total_micros = t_start.elapsed().as_micros();
+        self.latency.record("total", total_micros as f64);
+        RoutedResponse {
+            text: resp.text,
+            pathway: Pathway::TweakHit,
+            similarity: Some(job.score),
+            cached_query: Some(job.prompt.cached_query.clone()),
+            cache_entry: Some(job.hit_id),
+            usage: resp.usage,
+            total_micros,
+        }
+    }
+
+    /// Stage 3 (miss pathway): cache insert + accounting at session EOS.
+    pub fn complete_miss(
+        &mut self,
+        job: MissJob,
+        resp: LlmResponse,
+        t_start: std::time::Instant,
+        gen_micros: u128,
+    ) -> RoutedResponse {
+        self.latency.record("big_generate", gen_micros as f64);
+        let t = std::time::Instant::now();
+        let id = self.cache.insert(&job.query, &resp.text, job.embedding);
+        self.latency.record_duration("cache_insert", t.elapsed());
+        self.ledger.record(ModelRole::Big, resp.usage);
+        self.counters.inc("misses");
+        let total_micros = t_start.elapsed().as_micros();
+        self.latency.record("total", total_micros as f64);
+        RoutedResponse {
+            text: resp.text,
+            pathway: Pathway::Miss,
+            similarity: job.top_score,
+            cached_query: None,
+            cache_entry: Some(id),
+            usage: resp.usage,
+            total_micros,
+        }
+    }
+
+    /// Account a request served by attaching to an identical in-flight miss
+    /// (duplicate coalescing): zero model cost, one shared generation. With
+    /// the exact fast path on this is reported as an exact hit — it is
+    /// exactly what re-checking after the leader's insert would yield; with
+    /// it off (paper config) it stays a miss, served free.
+    pub fn complete_follower(
+        &mut self,
+        leader_query: &str,
+        leader: &RoutedResponse,
+        enqueued: std::time::Instant,
+    ) -> RoutedResponse {
+        // NB: "requests" was already counted when this request was routed;
+        // only the pathway partition is settled here. (Coalescing itself is
+        // counted by the scheduler, at attach time.)
+        self.ledger.record_free();
+        // The follower *used* the freshly-inserted entry: feed LRU/LFU just
+        // like the exact fast path would have.
+        if let Some(id) = leader.cache_entry {
+            self.cache.touch(id);
+        }
+        let pathway = if self.config.exact_match_fast_path {
+            self.counters.inc("exact_hits");
+            Pathway::ExactHit
+        } else {
+            self.counters.inc("misses");
+            Pathway::Miss
+        };
+        let total_micros = enqueued.elapsed().as_micros();
+        self.latency.record("total", total_micros as f64);
+        RoutedResponse {
+            text: leader.text.clone(),
+            pathway,
+            similarity: Some(1.0),
+            cached_query: Some(leader_query.to_string()),
+            cache_entry: leader.cache_entry,
+            usage: TokenUsage::default(),
+            total_micros,
         }
     }
 

@@ -1,0 +1,366 @@
+//! Continuous-batching decode scheduler: the engine's answer to
+//! head-of-line blocking.
+//!
+//! Before this module, `Engine::flush` ran every drained request to
+//! completion in routing order, so one Big-LLM miss stalled every tweak-hit
+//! queued behind it and the paper's hit-latency advantage evaporated under
+//! concurrent load. The scheduler instead holds each routed request as a
+//! live [`LlmSession`] — Big-LLM miss generations and Small-LLM tweak
+//! generations side by side — and round-robins `advance()` across all of
+//! them, replying to each front-end the moment its session reaches EOS.
+//! Tweak-hits (a handful of decode units) overtake in-flight misses
+//! (dozens), newly-drained requests are admitted mid-flight, and per-session
+//! RNG keeps every token stream bit-identical to a sequential run.
+//!
+//! Duplicate coalescing rides on the same structure: a miss whose
+//! normalized query matches an in-flight (or queued) miss attaches to that
+//! leader as a *follower* instead of starting a second generation, and the
+//! leader's response is fanned out to every follower at completion. This
+//! closes the duplicate-in-batch bug where two identical queries in one
+//! micro-batch both paid a Big-LLM generation and inserted duplicate cache
+//! rows.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::{MissJob, ReplyTx, Router, TweakJob};
+use crate::config::SchedulerConfig;
+use crate::llm::LlmSession;
+
+/// Which generation a routed request needs.
+pub enum JobKind {
+    Tweak(TweakJob),
+    /// `key` is the normalized query key (`cache::query_key`) used for
+    /// in-flight duplicate coalescing.
+    Miss { job: MissJob, key: u64 },
+}
+
+/// A routed request: the decision snapshot plus everything needed to reply.
+pub struct Job {
+    pub kind: JobKind,
+    pub reply: ReplyTx,
+    /// When the request entered the submission pipeline (drives reported
+    /// latency, exactly as in the sequential path).
+    pub enqueued: Instant,
+}
+
+impl Job {
+    pub fn new(kind: JobKind, reply: ReplyTx, enqueued: Instant) -> Job {
+        Job { kind, reply, enqueued }
+    }
+}
+
+/// A job whose session is live (prefill done, decode in progress).
+struct Active {
+    job: Job,
+    session: Box<dyn LlmSession>,
+    /// Session begin time — completion reports begin→EOS occupancy.
+    started: Instant,
+}
+
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    /// Round-robin ring of live sessions.
+    active: VecDeque<Active>,
+    /// Admitted jobs waiting for a session slot (FIFO).
+    waiting: VecDeque<Job>,
+    /// Followers per in-flight (active or waiting) miss, by normalized
+    /// query key: O(1) duplicate coalescing regardless of backlog size.
+    /// An entry exists exactly while its leader is in flight.
+    followers: HashMap<u64, Vec<(ReplyTx, Instant)>>,
+    /// Requests served by attaching to an in-flight duplicate (lifetime).
+    coalesced: u64,
+    /// Sessions completed (lifetime).
+    completed: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler {
+            cfg,
+            active: VecDeque::new(),
+            waiting: VecDeque::new(),
+            followers: HashMap::new(),
+            coalesced: 0,
+            completed: 0,
+        }
+    }
+
+    /// No sessions live and none waiting.
+    pub fn is_idle(&self) -> bool {
+        self.active.is_empty() && self.waiting.is_empty()
+    }
+
+    pub fn active_sessions(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn waiting_jobs(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Admit a routed request: coalesce onto an identical in-flight miss,
+    /// start its session if a slot is free, or queue it.
+    pub fn submit(&mut self, job: Job, router: &mut Router) {
+        if let JobKind::Miss { key, .. } = &job.kind {
+            if let Some(flw) = self.followers.get_mut(key) {
+                flw.push((job.reply, job.enqueued));
+                self.coalesced += 1;
+                return;
+            }
+            // This job is now the in-flight leader for its key.
+            self.followers.insert(*key, Vec::new());
+        }
+        if self.active.len() < self.cfg.max_concurrent_sessions.max(1) {
+            self.start(job, router);
+        } else {
+            self.waiting.push_back(job);
+        }
+    }
+
+    /// One fairness round: every live session gets up to
+    /// `fairness_steps` decode units, completed sessions reply (leader +
+    /// followers) and free their slot for waiting jobs. Returns how many
+    /// sessions completed this round.
+    pub fn step(&mut self, router: &mut Router) -> usize {
+        let mut finished = 0;
+        for _ in 0..self.active.len() {
+            let mut act = match self.active.pop_front() {
+                Some(a) => a,
+                None => break,
+            };
+            match Self::advance_some(&mut act, self.cfg.fairness_steps.max(1)) {
+                Ok(false) => self.active.push_back(act),
+                Ok(true) => {
+                    self.complete(act, router);
+                    finished += 1;
+                }
+                Err(e) => {
+                    self.fail(act.job, &e);
+                    finished += 1;
+                }
+            }
+        }
+        self.admit(router);
+        finished
+    }
+
+    /// Drive everything to completion (graceful shutdown).
+    pub fn drain(&mut self, router: &mut Router) {
+        while !self.is_idle() {
+            self.step(router);
+        }
+    }
+
+    /// Up to `steps` decode units on one session; Ok(true) when it is done.
+    fn advance_some(act: &mut Active, steps: usize) -> Result<bool> {
+        for _ in 0..steps {
+            if act.session.is_done() {
+                return Ok(true);
+            }
+            if !act.session.advance()? {
+                return Ok(true);
+            }
+        }
+        Ok(act.session.is_done())
+    }
+
+    /// Fill free session slots from the waiting queue (FIFO).
+    fn admit(&mut self, router: &mut Router) {
+        while self.active.len() < self.cfg.max_concurrent_sessions.max(1) {
+            let job = match self.waiting.pop_front() {
+                Some(j) => j,
+                None => break,
+            };
+            self.start(job, router);
+        }
+    }
+
+    /// Start a job's session (runs the prefill); replies with the error on
+    /// failure instead of poisoning the ring.
+    fn start(&mut self, job: Job, router: &mut Router) {
+        let started = Instant::now();
+        let session = match &job.kind {
+            JobKind::Tweak(t) => router.begin_tweak_session(t),
+            JobKind::Miss { job: m, .. } => router.begin_miss_session(m),
+        };
+        match session {
+            Ok(session) => self.active.push_back(Active { job, session, started }),
+            Err(e) => self.fail(job, &e),
+        }
+    }
+
+    /// Session reached EOS: account it on the router, reply to the leader
+    /// and fan the response out to coalesced followers.
+    fn complete(&mut self, act: Active, router: &mut Router) {
+        let gen_micros = act.started.elapsed().as_micros();
+        let Active { job, session, .. } = act;
+        let resp = match session.finish() {
+            Ok(r) => r,
+            Err(e) => {
+                self.fail(job, &e);
+                return;
+            }
+        };
+        self.completed += 1;
+        let (routed, leader_query, followers) = match job.kind {
+            JobKind::Tweak(t) => {
+                let routed = router.complete_tweak(&t, resp, job.enqueued, gen_micros);
+                (routed, t.prompt.new_query, Vec::new())
+            }
+            JobKind::Miss { job: m, key } => {
+                let query = m.query.clone();
+                let routed = router.complete_miss(m, resp, job.enqueued, gen_micros);
+                let flw = self.followers.remove(&key).unwrap_or_default();
+                (routed, query, flw)
+            }
+        };
+        for (tx, enqueued) in followers {
+            let fan = router.complete_follower(&leader_query, &routed, enqueued);
+            let _ = tx.send(Ok(fan));
+        }
+        let _ = job.reply.send(Ok(routed));
+    }
+
+    /// Propagate a session failure to the leader and every coalesced
+    /// follower (the followers entry must be drained, or later duplicates
+    /// would attach to a leader that no longer exists and never hear back).
+    fn fail(&mut self, job: Job, e: &anyhow::Error) {
+        if let JobKind::Miss { key, .. } = &job.kind {
+            for (tx, _) in self.followers.remove(key).unwrap_or_default() {
+                let _ = tx.send(Err(anyhow!("generation failed: {e:#}")));
+            }
+        }
+        let _ = job.reply.send(Err(anyhow!("generation failed: {e:#}")));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc;
+
+    use super::*;
+    use crate::baselines::MockLlm;
+    use crate::cache::query_key;
+    use crate::config::{Config, IndexKindConfig, SchedulerConfig};
+    use crate::coordinator::{Pathway, RouteDecision, RoutedResponse};
+    use crate::runtime::{NativeBowEmbedder, TextEmbedder};
+
+    fn test_router(sched: SchedulerConfig) -> Router {
+        let mut cfg = Config::paper();
+        cfg.index.kind = IndexKindConfig::Flat;
+        cfg.exact_match_fast_path = true;
+        cfg.scheduler = sched;
+        let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+        Router::with_models(
+            embedder,
+            Box::new(MockLlm::new("big").with_pace(4, std::time::Duration::ZERO)),
+            Box::new(MockLlm::new("small")),
+            cfg,
+        )
+    }
+
+    fn sched_cfg(max: usize, fairness: usize) -> SchedulerConfig {
+        SchedulerConfig {
+            enabled: true,
+            max_concurrent_sessions: max,
+            fairness_steps: fairness,
+        }
+    }
+
+    /// Route a query through the router and submit the outcome; returns the
+    /// reply receiver (panics on an exact hit — tests route fresh queries).
+    fn submit_query(
+        sched: &mut Scheduler,
+        router: &mut Router,
+        query: &str,
+    ) -> mpsc::Receiver<Result<RoutedResponse>> {
+        let (tx, rx) = mpsc::channel();
+        let emb = router.embedder().embed(query).unwrap();
+        let kind = match router.route(query, emb, Instant::now()) {
+            RouteDecision::Exact(resp) => {
+                tx.send(Ok(resp)).unwrap();
+                return rx;
+            }
+            RouteDecision::Tweak(t) => JobKind::Tweak(t),
+            RouteDecision::Miss(m) => {
+                let key = query_key(&m.query);
+                JobKind::Miss { job: m, key }
+            }
+        };
+        sched.submit(Job::new(kind, tx, Instant::now()), router);
+        rx
+    }
+
+    #[test]
+    fn tweak_session_overtakes_slow_miss() {
+        let mut router = test_router(sched_cfg(4, 1));
+        let mut sched = Scheduler::new(router.config.scheduler);
+        // Prime an entry so a paraphrase routes to the (1-step) tweak path.
+        let prime = submit_query(&mut sched, &mut router, "why is coffee good for health?");
+        sched.drain(&mut router);
+        assert_eq!(prime.recv().unwrap().unwrap().pathway, Pathway::Miss);
+        // A slow 4-step miss, then a 1-step tweak behind it.
+        let miss = submit_query(&mut sched, &mut router, "write a poem about glaciers");
+        let tweak = submit_query(&mut sched, &mut router, "why is coffee great for health?");
+        assert_eq!(sched.active_sessions(), 2);
+        // Round 1 completes the tweak (1 unit) while the miss still runs.
+        sched.step(&mut router);
+        let t = tweak.recv().unwrap().unwrap();
+        assert_eq!(t.pathway, Pathway::TweakHit);
+        assert!(
+            miss.try_recv().is_err(),
+            "miss must still be in flight after round 1"
+        );
+        sched.drain(&mut router);
+        assert_eq!(miss.recv().unwrap().unwrap().pathway, Pathway::Miss);
+    }
+
+    #[test]
+    fn duplicate_misses_coalesce_onto_one_generation() {
+        let mut router = test_router(sched_cfg(4, 1));
+        let mut sched = Scheduler::new(router.config.scheduler);
+        let a = submit_query(&mut sched, &mut router, "what is a b-tree exactly");
+        let b = submit_query(&mut sched, &mut router, "what is a  B-TREE exactly");
+        assert_eq!(sched.active_sessions(), 1, "dup must not start a session");
+        assert_eq!(sched.coalesced(), 1);
+        sched.drain(&mut router);
+        let ra = a.recv().unwrap().unwrap();
+        let rb = b.recv().unwrap().unwrap();
+        assert_eq!(ra.pathway, Pathway::Miss);
+        assert_eq!(rb.pathway, Pathway::ExactHit); // fast path on
+        assert_eq!(ra.text, rb.text);
+        assert_eq!(ra.cache_entry, rb.cache_entry);
+        assert_eq!(router.counters.get("misses"), 1);
+        assert_eq!(router.cache().len(), 1, "one insert, no stale duplicate row");
+    }
+
+    #[test]
+    fn admission_cap_queues_and_backfills() {
+        let mut router = test_router(sched_cfg(2, 1));
+        let mut sched = Scheduler::new(router.config.scheduler);
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let q = format!("topic {i} alpha beta gamma");
+            rxs.push(submit_query(&mut sched, &mut router, &q));
+        }
+        assert_eq!(sched.active_sessions(), 2);
+        assert_eq!(sched.waiting_jobs(), 3);
+        sched.drain(&mut router);
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().unwrap().pathway, Pathway::Miss);
+        }
+        assert_eq!(sched.completed(), 5);
+        assert!(sched.is_idle());
+    }
+}

@@ -1,10 +1,23 @@
 //! LLM facades: the Big and Small models behind a common interface, plus
 //! the tweak-prompt template (paper Appendix A).
+//!
+//! Two call shapes per model:
+//! * the **blocking** API (`respond`/`tweak`) drives a generation to
+//!   completion in place;
+//! * the **session** API (`begin_respond`/`begin_tweak`) returns a live
+//!   [`LlmSession`] whose `advance()` performs one unit of decode work, so
+//!   the coordinator's scheduler can interleave many generations (Big-LLM
+//!   misses next to Small-LLM tweaks) on the engine thread.
+//!
+//! The blocking API is implemented *on top of* the session API, so a
+//! request costs exactly the same work — and, for the substrate models,
+//! consumes exactly the same RNG stream — whichever shape serves it.
 
 use anyhow::Result;
 
 use crate::cost::TokenUsage;
-use crate::runtime::{Generation, Generator, Runtime, SamplingParams};
+use crate::runtime::{GenSession, Generator, Runtime, SamplingParams};
+use crate::util::rng::hash_bytes;
 use crate::util::Rng;
 
 pub mod prompts;
@@ -24,6 +37,51 @@ pub trait LanguageModel {
 
     /// Tweak a cached response for a new query (Appendix A pathway).
     fn tweak(&mut self, prompt: &TweakPrompt) -> Result<LlmResponse>;
+
+    /// Begin a resumable generation for a raw query. The default wraps the
+    /// blocking call (the whole generation happens at `begin` time), which
+    /// preserves semantics for implementations that cannot pause; models
+    /// that can decode step-wise override this to return a live session.
+    fn begin_respond(&mut self, query: &str) -> Result<Box<dyn LlmSession>> {
+        Ok(Box::new(EagerSession(self.respond(query)?)))
+    }
+
+    /// Begin a resumable tweak generation; see [`Self::begin_respond`].
+    fn begin_tweak(&mut self, prompt: &TweakPrompt) -> Result<Box<dyn LlmSession>> {
+        Ok(Box::new(EagerSession(self.tweak(prompt)?)))
+    }
+}
+
+/// A live generation owned by the caller (the decode scheduler): each
+/// `advance()` performs one unit of decode work. Sessions are independent —
+/// they own their RNG, sampling scratch, and decode state — so any number
+/// can be interleaved without changing any of their token streams.
+pub trait LlmSession {
+    /// One unit of work; `true` while more remains.
+    fn advance(&mut self) -> Result<bool>;
+
+    fn is_done(&self) -> bool;
+
+    /// Consume the session into the finished response.
+    fn finish(self: Box<Self>) -> Result<LlmResponse>;
+}
+
+/// Fallback session for models without step-wise decode: the response was
+/// fully computed at `begin` time.
+pub struct EagerSession(pub LlmResponse);
+
+impl LlmSession for EagerSession {
+    fn advance(&mut self) -> Result<bool> {
+        Ok(false)
+    }
+
+    fn is_done(&self) -> bool {
+        true
+    }
+
+    fn finish(self: Box<Self>) -> Result<LlmResponse> {
+        Ok(self.0)
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -38,7 +96,12 @@ pub struct LlmResponse {
 pub struct SubstrateLlm {
     gen: Generator,
     params: SamplingParams,
-    rng: Rng,
+    /// Master seed: every request derives an independent RNG substream from
+    /// (seed, model, prompt), so a generation's token stream depends only on
+    /// its own request — never on how many generations ran before it or how
+    /// they were interleaved. This is what makes scheduler-interleaved
+    /// decoding bit-identical to sequential serving.
+    seed: u64,
 }
 
 impl SubstrateLlm {
@@ -59,12 +122,51 @@ impl SubstrateLlm {
         Ok(SubstrateLlm {
             gen: Generator::with_mode(rt, model, device_resident)?,
             params,
-            rng: Rng::substream(seed, &format!("llm/{model}")),
+            seed,
         })
     }
 
+    /// Per-request RNG substream; a pure function of (seed, model, prompt).
+    fn session_rng(&self, segments: &[&str]) -> Rng {
+        let mut bytes = Vec::new();
+        for seg in segments {
+            bytes.extend_from_slice(seg.as_bytes());
+            bytes.push(0x1f); // unit separator: ["ab","c"] != ["a","bc"]
+        }
+        let tag = format!("llm/{}/{:016x}", self.gen.model_name, hash_bytes(&bytes));
+        Rng::substream(self.seed, &tag)
+    }
+
+    fn begin(&mut self, segments: &[&str]) -> Result<Box<dyn LlmSession>> {
+        let rng = self.session_rng(segments);
+        let session = self.gen.begin_session(segments, &self.params, rng)?;
+        Ok(Box::new(SubstrateSession { session }))
+    }
+
     fn run(&mut self, segments: &[&str]) -> Result<LlmResponse> {
-        let g: Generation = self.gen.generate(segments, &self.params, &mut self.rng)?;
+        let mut session = self.begin(segments)?;
+        while session.advance()? {}
+        session.finish()
+    }
+}
+
+/// Substrate decode session: a [`GenSession`] rendered to an [`LlmResponse`]
+/// at completion.
+struct SubstrateSession {
+    session: GenSession,
+}
+
+impl LlmSession for SubstrateSession {
+    fn advance(&mut self) -> Result<bool> {
+        self.session.advance()
+    }
+
+    fn is_done(&self) -> bool {
+        self.session.is_done()
+    }
+
+    fn finish(self: Box<Self>) -> Result<LlmResponse> {
+        let g = self.session.finish();
         Ok(LlmResponse {
             text: g.text,
             usage: TokenUsage {
@@ -90,6 +192,15 @@ impl LanguageModel for SubstrateLlm {
         let segs = prompt.segments();
         self.run(&segs.iter().map(|s| s.as_str()).collect::<Vec<_>>())
     }
+
+    fn begin_respond(&mut self, query: &str) -> Result<Box<dyn LlmSession>> {
+        self.begin(&[query])
+    }
+
+    fn begin_tweak(&mut self, prompt: &TweakPrompt) -> Result<Box<dyn LlmSession>> {
+        let segs = prompt.segments();
+        self.begin(&segs.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+    }
 }
 
 #[cfg(test)]
@@ -106,5 +217,45 @@ mod tests {
         let segs = p.segments();
         assert_eq!(segs[0], "why is rust fast?");
         assert_eq!(segs.len(), 3);
+    }
+
+    #[test]
+    fn eager_session_yields_response() {
+        let resp = LlmResponse {
+            text: "canned".into(),
+            usage: TokenUsage::default(),
+            prefill_micros: 1,
+            decode_micros: 2,
+        };
+        let mut s: Box<dyn LlmSession> = Box::new(EagerSession(resp));
+        assert!(s.is_done());
+        assert!(!s.advance().unwrap());
+        assert_eq!(s.finish().unwrap().text, "canned");
+    }
+
+    #[test]
+    fn default_begin_wraps_blocking_call() {
+        // A session-unaware model still works through the session API.
+        struct Plain;
+        impl LanguageModel for Plain {
+            fn name(&self) -> &str {
+                "plain"
+            }
+            fn respond(&mut self, query: &str) -> Result<LlmResponse> {
+                Ok(LlmResponse {
+                    text: format!("re: {query}"),
+                    usage: TokenUsage::default(),
+                    prefill_micros: 0,
+                    decode_micros: 0,
+                })
+            }
+            fn tweak(&mut self, prompt: &TweakPrompt) -> Result<LlmResponse> {
+                self.respond(&prompt.new_query)
+            }
+        }
+        let mut m = Plain;
+        let mut s = m.begin_respond("hello").unwrap();
+        while s.advance().unwrap() {}
+        assert_eq!(s.finish().unwrap().text, "re: hello");
     }
 }

@@ -307,12 +307,16 @@ pub struct ResidentSet {
 /// buffer that is fed straight back into the next step. Per-step host
 /// traffic is the scalar inputs up and the logits (or span ids) down; the
 /// KV cache never crosses.
-pub struct ResidentBackend<'a> {
-    set: &'a ResidentSet,
+///
+/// The backend *owns* its state buffer (the executables are shared via
+/// `Arc`), so any number of resident sessions can be in flight at once —
+/// the decode scheduler interleaves them on the engine thread.
+pub struct ResidentBackend {
+    set: Arc<ResidentSet>,
     state: Option<xla::PjRtBuffer>,
 }
 
-impl ResidentBackend<'_> {
+impl ResidentBackend {
     fn take_output(&mut self, mut outs: Vec<xla::PjRtBuffer>, what: &str) -> Result<()> {
         if outs.is_empty() {
             bail!("{what} produced no output buffer");
@@ -331,7 +335,7 @@ impl ResidentBackend<'_> {
     }
 }
 
-impl DecodeBackend for ResidentBackend<'_> {
+impl DecodeBackend for ResidentBackend {
     fn span_n(&self) -> Option<usize> {
         self.set.span.as_ref().map(|s| s.n)
     }
@@ -541,7 +545,8 @@ pub struct Generator {
     span: Option<(usize, Arc<Executable>)>,
     /// Device-resident artifact set; `None` when the artifacts predate the
     /// packed-state convention or `[runtime] device_resident = false`.
-    resident: Option<ResidentSet>,
+    /// `Arc` so every live session shares one set while owning its state.
+    resident: Option<Arc<ResidentSet>>,
     kv_spec: IoSpec,
     tokenizer: Tokenizer,
     pub model_name: String,
@@ -634,7 +639,7 @@ impl Generator {
             // tolerate selective loading (tests compile only a subset)
             .and_then(|(n, name)| rt.executable(&name).ok().map(|e| (n, e)));
         let resident = if device_resident {
-            discover_resident(rt, model, span.as_ref().map(|(n, _)| *n))
+            discover_resident(rt, model, span.as_ref().map(|(n, _)| *n)).map(Arc::new)
         } else {
             None
         };
@@ -692,19 +697,47 @@ impl Generator {
         rng: &mut Rng,
         resident: bool,
     ) -> Result<Generation> {
+        let mut session = self.begin_session_on(segments, params, rng.clone(), resident)?;
+        while session.advance()? {}
+        // Hand the advanced stream back so sequential callers see exactly
+        // the pre-session RNG consumption.
+        *rng = session.rng.clone();
+        Ok(session.finish())
+    }
+
+    /// Start a resumable generation that *owns* everything it needs (RNG,
+    /// sampling scratch, decode state buffers); the executables stay shared
+    /// behind `Arc`s. Any number of sessions can be live at once — this is
+    /// the substrate hook for the coordinator's decode scheduler.
+    pub fn begin_session(
+        &self,
+        segments: &[&str],
+        params: &SamplingParams,
+        rng: Rng,
+    ) -> Result<GenSession> {
+        self.begin_session_on(segments, params, rng, self.resident.is_some())
+    }
+
+    /// `begin_session` forcing a specific transport.
+    pub fn begin_session_on(
+        &self,
+        segments: &[&str],
+        params: &SamplingParams,
+        rng: Rng,
+        resident: bool,
+    ) -> Result<GenSession> {
         let (ids, len) = self.tokenizer.encode_prompt(segments, self.max_prefill);
         if len == 0 {
             bail!("empty prompt");
         }
-        let (token_ids, stats) = if resident {
+        let inner = if resident {
             let set = self
                 .resident
                 .as_ref()
                 .context("device-resident artifacts not compiled")?;
-            let backend = ResidentBackend { set, state: None };
-            let mut session = DecodeSession::start(backend, *params, &ids, len, self.max_seq)?;
-            session.run(rng)?;
-            session.finish()
+            let backend = ResidentBackend { set: Arc::clone(set), state: None };
+            let s = DecodeSession::start(backend, *params, &ids, len, self.max_seq)?;
+            SessionInner::Resident(s)
         } else {
             let backend = LiteralBackend {
                 prefill: Arc::clone(&self.prefill),
@@ -714,15 +747,56 @@ impl Generator {
                 k: None,
                 v: None,
             };
-            let mut session = DecodeSession::start(backend, *params, &ids, len, self.max_seq)?;
-            session.run(rng)?;
-            session.finish()
+            let s = DecodeSession::start(backend, *params, &ids, len, self.max_seq)?;
+            SessionInner::Literal(s)
         };
-        Ok(Generation {
+        Ok(GenSession { inner, rng, tokenizer: self.tokenizer.clone() })
+    }
+}
+
+/// Which transport a [`GenSession`] runs on (the session owns it either way).
+enum SessionInner {
+    Literal(DecodeSession<LiteralBackend>),
+    Resident(DecodeSession<ResidentBackend>),
+}
+
+/// A live, owned, resumable generation: [`DecodeSession`] + its private RNG
+/// + the tokenizer needed to render the final text. One `advance()` call is
+/// one unit of backend work, so a scheduler can round-robin many sessions
+/// on the engine thread without any cross-session state.
+pub struct GenSession {
+    inner: SessionInner,
+    rng: Rng,
+    tokenizer: Tokenizer,
+}
+
+impl GenSession {
+    /// One unit of decode work; `true` while work remains.
+    pub fn advance(&mut self) -> Result<bool> {
+        match &mut self.inner {
+            SessionInner::Literal(s) => s.advance(&mut self.rng),
+            SessionInner::Resident(s) => s.advance(&mut self.rng),
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        match &self.inner {
+            SessionInner::Literal(s) => s.is_done(),
+            SessionInner::Resident(s) => s.is_done(),
+        }
+    }
+
+    /// Consume the session into the finished generation.
+    pub fn finish(self) -> Generation {
+        let (token_ids, stats) = match self.inner {
+            SessionInner::Literal(s) => s.finish(),
+            SessionInner::Resident(s) => s.finish(),
+        };
+        Generation {
             text: self.tokenizer.decode(&token_ids),
             token_ids,
             stats,
-        })
+        }
     }
 }
 
@@ -958,6 +1032,53 @@ mod tests {
         let (with_span, _) = drive(spanned, SamplingParams::greedy(8));
         let (without, _) = drive(FakeBackend::new(None, script), SamplingParams::greedy(8));
         assert_eq!(with_span, without);
+    }
+
+    #[test]
+    fn interleaved_sessions_match_sequential_streams() {
+        // The scheduler contract: with per-session RNGs, round-robin
+        // advancing N live sessions yields bit-identical token streams to
+        // running each session to completion on its own.
+        let params = SamplingParams { temperature: 1.0, top_k: 7, max_new_tokens: 6 };
+        let scripts: [Vec<i32>; 3] = [
+            vec![10, 11, 12, 13, 14, 15],
+            vec![20, 21, EOS_ID, 9, 9, 9],
+            vec![5, 6, 7, 8, EOS_ID, 9],
+        ];
+        let sequential: Vec<Vec<i32>> = scripts
+            .iter()
+            .enumerate()
+            .map(|(i, script)| {
+                let b = FakeBackend::new(None, script.clone());
+                let ids = [1, 1, 1];
+                let mut s = DecodeSession::start(b, params, &ids, 3, 64).unwrap();
+                let mut rng = Rng::substream(7, &format!("session/{i}"));
+                s.run(&mut rng).unwrap();
+                s.finish().0
+            })
+            .collect();
+        // Same sessions, interleaved one advance() at a time.
+        let ids = [1, 1, 1];
+        let mut live: Vec<(DecodeSession<FakeBackend>, Rng)> = scripts
+            .iter()
+            .enumerate()
+            .map(|(i, script)| {
+                let b = FakeBackend::new(None, script.clone());
+                (
+                    DecodeSession::start(b, params, &ids, 3, 64).unwrap(),
+                    Rng::substream(7, &format!("session/{i}")),
+                )
+            })
+            .collect();
+        while live.iter().any(|(s, _)| !s.is_done()) {
+            for (s, rng) in &mut live {
+                if !s.is_done() {
+                    s.advance(rng).unwrap();
+                }
+            }
+        }
+        let interleaved: Vec<Vec<i32>> = live.into_iter().map(|(s, _)| s.finish().0).collect();
+        assert_eq!(interleaved, sequential);
     }
 
     #[test]

@@ -26,7 +26,7 @@ use anyhow::{bail, Context, Result};
 pub use embedder::{Embedder, NativeBowEmbedder, TextEmbedder};
 pub use generator::Generation;
 pub use generator::{
-    sample_token, sample_token_with, DecodeBackend, DecodeSession, Generator,
+    sample_token, sample_token_with, DecodeBackend, DecodeSession, GenSession, Generator,
     GenerationStats, SampleScratch, SamplingParams,
 };
 pub use manifest::{ArtifactSpec, Dtype, IoSpec, Manifest};

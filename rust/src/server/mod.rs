@@ -139,6 +139,9 @@ fn process_line(line: &str, handle: &EngineHandle) -> Json {
                 ("misses", Json::num(s.misses as f64)),
                 ("cache_size", Json::num(s.cache_size as f64)),
                 ("mean_batch_size", Json::num(s.mean_batch_size)),
+                ("active_sessions", Json::num(s.active_sessions as f64)),
+                ("waiting_sessions", Json::num(s.waiting_sessions as f64)),
+                ("coalesced", Json::num(s.coalesced as f64)),
                 ("cost_dollars", Json::num(s.cost_dollars)),
                 ("baseline_dollars", Json::num(s.baseline_dollars)),
                 ("latency_table", Json::s(s.latency_table)),

@@ -1,0 +1,301 @@
+//! Decode-scheduler integration tests over the real engine + batcher (no
+//! artifacts needed): the two PR-4 bug regressions (batch-leftover
+//! starvation, duplicate-in-batch double generation), head-of-line
+//! unblocking, and the scheduler-on == scheduler-off response-identity
+//! gate.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use tweakllm::baselines::MockLlm;
+use tweakllm::config::{Config, IndexKindConfig};
+use tweakllm::coordinator::{Engine, EngineHandle, Pathway, Router};
+use tweakllm::cost::TokenUsage;
+use tweakllm::llm::{LanguageModel, LlmResponse, LlmSession, TweakPrompt};
+use tweakllm::runtime::{NativeBowEmbedder, TextEmbedder};
+use tweakllm::util::Rng;
+
+fn base_config() -> Config {
+    let mut cfg = Config::paper();
+    cfg.index.kind = IndexKindConfig::Flat;
+    cfg.exact_match_fast_path = true;
+    cfg
+}
+
+fn start_engine(cfg: Config, big: MockLlm, small: MockLlm) -> (Engine, EngineHandle) {
+    Engine::start(move || {
+        let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+        Ok(Router::with_models(embedder, Box::new(big), Box::new(small), cfg))
+    })
+    .expect("engine start")
+}
+
+/// Regression (batch-leftover starvation): a burst larger than `max_batch`
+/// followed by silence must complete in full. The old serve loop flushed at
+/// most `max_batch` drained requests and then parked on a blocking `recv`,
+/// stranding any leftovers in the batcher forever. Both engine modes are
+/// gated — the run-to-completion (scheduler-off) path had the same bug.
+fn burst_completes(scheduler_on: bool) {
+    let mut cfg = base_config();
+    cfg.batcher.max_batch = 2;
+    cfg.scheduler.enabled = scheduler_on;
+    // A slow Big LLM keeps the engine busy so the burst piles up in the
+    // channel and gets ingested into the batcher well past max_batch.
+    let big = MockLlm::new("big").with_pace(5, Duration::from_millis(2));
+    let (_engine, handle) = start_engine(cfg, big, MockLlm::new("small"));
+
+    let n = 7;
+    let (done_tx, done_rx) = mpsc::channel();
+    for i in 0..n {
+        let h = handle.clone();
+        let done = done_tx.clone();
+        std::thread::spawn(move || {
+            let r = h.request(&format!("burst{i}a burst{i}b burst{i}c burst{i}d"));
+            let _ = done.send((i, r));
+        });
+    }
+    drop(done_tx);
+    let mut served = 0;
+    for _ in 0..n {
+        let (i, r) = done_rx
+            .recv_timeout(Duration::from_secs(20))
+            .unwrap_or_else(|_| panic!("request stranded after {served}/{n} replies"));
+        let resp = r.unwrap_or_else(|e| panic!("request {i} failed: {e}"));
+        assert_eq!(resp.pathway, Pathway::Miss);
+        served += 1;
+    }
+    assert_eq!(served, n);
+}
+
+#[test]
+fn burst_larger_than_max_batch_completes() {
+    burst_completes(true);
+}
+
+#[test]
+fn burst_larger_than_max_batch_completes_scheduler_off() {
+    burst_completes(false);
+}
+
+/// Regression (duplicate queries inside one micro-batch): two identical
+/// missed queries must pay ONE Big-LLM generation and insert ONE cache row.
+/// The old flush ran the exact-match check once for the whole batch before
+/// any routing, so both paid a generation and the first insert became an
+/// unreachable stale row.
+#[test]
+fn duplicate_in_batch_pays_one_generation() {
+    let cfg = base_config();
+    // Slow misses (~120ms): the duplicate pair is guaranteed to be routed
+    // while the leader's generation is still in flight.
+    let big = MockLlm::new("big").with_pace(60, Duration::from_millis(2));
+    let (_engine, handle) = start_engine(cfg, big, MockLlm::new("small"));
+
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(2));
+    let (done_tx, done_rx) = mpsc::channel();
+    for _ in 0..2 {
+        let h = handle.clone();
+        let done = done_tx.clone();
+        let barrier = std::sync::Arc::clone(&barrier);
+        std::thread::spawn(move || {
+            barrier.wait();
+            // Same normalized text (whitespace + case fold) on both.
+            let _ = done.send(h.request("what is a  B-TREE exactly"));
+        });
+    }
+    let a = done_rx.recv_timeout(Duration::from_secs(20)).unwrap();
+    let b = done_rx.recv_timeout(Duration::from_secs(20)).unwrap();
+    let (a, b) = (a.unwrap(), b.unwrap());
+    assert_eq!(a.text, b.text, "duplicates must share one generation");
+    assert_eq!(a.cache_entry, b.cache_entry);
+
+    let stats = handle.stats().unwrap();
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.misses, 1, "exactly one Big-LLM generation");
+    assert_eq!(stats.exact_hits, 1, "the duplicate reports as an exact hit");
+    assert_eq!(stats.cache_size, 1, "no duplicate cache row");
+    assert_eq!(stats.coalesced, 1, "second dup coalesced onto the in-flight miss");
+}
+
+/// The tentpole behavior: a tweak-hit completes while a slow Big-LLM miss
+/// is still decoding (no head-of-line blocking).
+#[test]
+fn tweak_hit_overtakes_inflight_miss() {
+    let cfg = base_config();
+    let big = MockLlm::new("big").with_pace(40, Duration::from_millis(2));
+    let (_engine, handle) = start_engine(cfg, big, MockLlm::new("small"));
+
+    // Prime an entry for the tweak path (pays one slow generation).
+    let prime = handle.request("why is coffee good for health?").unwrap();
+    assert_eq!(prime.pathway, Pathway::Miss);
+
+    // Start a slow miss, then a tweak-hit 15ms behind it.
+    let h = handle.clone();
+    let miss = std::thread::spawn(move || {
+        let r = h.request("write a poem about glaciers").unwrap();
+        (r, Instant::now())
+    });
+    std::thread::sleep(Duration::from_millis(15));
+    let tweak = handle.request("why is coffee great for health?").unwrap();
+    let tweak_done = Instant::now();
+    let (miss_resp, miss_done) = miss.join().unwrap();
+
+    assert_eq!(tweak.pathway, Pathway::TweakHit);
+    assert_eq!(miss_resp.pathway, Pathway::Miss);
+    assert!(tweak_done < miss_done, "tweak-hit must overtake the in-flight miss");
+}
+
+// ---------------------------------------------------------------------------
+// Response-identity gate: scheduler-interleaved == sequential, bit for bit.
+// ---------------------------------------------------------------------------
+
+/// A mock whose output is drawn from a per-session RNG substream keyed on
+/// the full prompt — the same contract `SubstrateLlm` honors. If sessions
+/// leaked RNG state across each other, the concurrent (interleaved) run
+/// below would diverge from the sequential one.
+struct SeededLlm {
+    name: String,
+    seed: u64,
+    steps: usize,
+}
+
+struct SeededSession {
+    rng: Rng,
+    prefix: String,
+    steps: usize,
+    emitted: Vec<String>,
+}
+
+impl LlmSession for SeededSession {
+    fn advance(&mut self) -> Result<bool> {
+        if self.emitted.len() < self.steps {
+            self.emitted.push(format!("t{}", self.rng.range(0, 10_000)));
+        }
+        Ok(self.emitted.len() < self.steps)
+    }
+
+    fn is_done(&self) -> bool {
+        self.emitted.len() >= self.steps
+    }
+
+    fn finish(self: Box<Self>) -> Result<LlmResponse> {
+        Ok(LlmResponse {
+            text: format!("[{}] {}", self.prefix, self.emitted.join(" ")),
+            usage: TokenUsage { input_tokens: 1, output_tokens: self.steps },
+            prefill_micros: 0,
+            decode_micros: 0,
+        })
+    }
+}
+
+impl SeededLlm {
+    fn begin(&self, segments: &[&str]) -> Box<dyn LlmSession> {
+        let tag = format!("{}/{}", self.name, segments.join("\u{1f}"));
+        Box::new(SeededSession {
+            rng: Rng::substream(self.seed, &tag),
+            prefix: segments[0].to_string(),
+            steps: self.steps,
+            emitted: Vec::new(),
+        })
+    }
+}
+
+impl LanguageModel for SeededLlm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn respond(&mut self, query: &str) -> Result<LlmResponse> {
+        let mut s = self.begin(&[query]);
+        while s.advance()? {}
+        s.finish()
+    }
+
+    fn tweak(&mut self, prompt: &TweakPrompt) -> Result<LlmResponse> {
+        let segs = prompt.segments();
+        let mut s = self.begin(&segs.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        while s.advance()? {}
+        s.finish()
+    }
+
+    fn begin_respond(&mut self, query: &str) -> Result<Box<dyn LlmSession>> {
+        Ok(self.begin(&[query]))
+    }
+
+    fn begin_tweak(&mut self, prompt: &TweakPrompt) -> Result<Box<dyn LlmSession>> {
+        let segs = prompt.segments();
+        Ok(self.begin(&segs.iter().map(|s| s.as_str()).collect::<Vec<_>>()))
+    }
+}
+
+/// Run the two-phase workload (sequential primes, then a concurrent mix of
+/// tweak-hit paraphrases and fresh misses) and collect query -> (pathway,
+/// text).
+fn run_workload(scheduler_on: bool) -> Vec<(String, String)> {
+    let mut cfg = base_config();
+    cfg.scheduler.enabled = scheduler_on;
+    cfg.exact_match_fast_path = false; // repeats must exercise the tweak path
+    let (engine, handle) = Engine::start(move || {
+        let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+        Ok(Router::with_models(
+            embedder,
+            Box::new(SeededLlm { name: "big".into(), seed: 11, steps: 12 }),
+            Box::new(SeededLlm { name: "small".into(), seed: 13, steps: 3 }),
+            cfg,
+        ))
+    })
+    .expect("engine start");
+
+    // Phase 1: sequential primes — identical cache in both runs. Topic
+    // word-sets are mutually disjoint so primes never tweak each other.
+    for i in 0..4 {
+        let q = format!("p{i}a p{i}b p{i}c p{i}d p{i}e p{i}f");
+        let r = handle.request(&q).unwrap();
+        assert_eq!(r.pathway, Pathway::Miss, "prime {q} must miss");
+    }
+    // Phase 2: concurrent mix — paraphrases (5/6 words shared with their
+    // prime -> tweak-hit) interleaved with fresh disjoint misses.
+    let mut queries = Vec::new();
+    for i in 0..4 {
+        queries.push(format!("p{i}a p{i}b p{i}c p{i}d p{i}e p{i}g"));
+        queries.push(format!("m{i}a m{i}b m{i}c m{i}d m{i}e m{i}f"));
+    }
+    let mut joins = Vec::new();
+    for (t, chunk) in queries.chunks(2).enumerate() {
+        let h = handle.clone();
+        let chunk: Vec<String> = chunk.to_vec();
+        joins.push(std::thread::spawn(move || {
+            let mut out = Vec::new();
+            for q in chunk {
+                let r = h.request(&q).unwrap();
+                out.push((q, r.pathway, r.text));
+            }
+            (t, out)
+        }));
+    }
+    let mut results = Vec::new();
+    for j in joins {
+        let (_, out) = j.join().unwrap();
+        for (q, pathway, text) in out {
+            if q.starts_with('p') {
+                assert_eq!(pathway, Pathway::TweakHit, "paraphrase {q} must tweak");
+            } else {
+                assert_eq!(pathway, Pathway::Miss, "fresh {q} must miss");
+            }
+            results.push((q, text));
+        }
+    }
+    engine.shutdown();
+    results.sort();
+    results
+}
+
+/// N concurrent sessions must produce responses bit-identical to sequential
+/// runs: the per-session RNG contract, gated end-to-end through the engine.
+#[test]
+fn scheduler_streams_match_sequential() {
+    let interleaved = run_workload(true);
+    let sequential = run_workload(false);
+    assert_eq!(interleaved, sequential);
+}
