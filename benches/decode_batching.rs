@@ -1,0 +1,214 @@
+//! Slot-batched decode benchmark: aggregate decode throughput and
+//! per-session latency as active-session count grows, batched (collective
+//! slot pool, one paced dispatch per fairness round) vs per-session
+//! dispatch (one paced unit per session per round).
+//!
+//! Mock tier (always runs, incl. CI): the scheduler drives S concurrent
+//! Big-LLM miss generations over `MockLlm` paced at `--delay-us` per
+//! dispatch. Per-session mode pays the delay once per session per round —
+//! aggregate tok/s stays flat as S grows. Batched mode pays it once per
+//! ROUND regardless of S — aggregate tok/s scales with S. That is exactly
+//! the hardware economics the `{m}_decode_batch{B}_res` artifacts buy on
+//! the substrate (one kernel launch amortized over B slots), modeled with
+//! sleeps so the trajectory is CI-measurable without artifacts.
+//!
+//! Results land in `BENCH_decode_batching.json` (uploaded from CI).
+//!
+//! `cargo bench --bench decode_batching [-- --steps 32 --delay-us 500 --iters 3]`
+
+use std::time::Instant;
+
+use tweakllm::baselines::MockLlm;
+use tweakllm::bench::{bench_args, Table};
+use tweakllm::cache::query_key;
+use tweakllm::config::{Config, IndexKindConfig, SchedulerConfig};
+use tweakllm::coordinator::{Job, JobKind, Pathway, RouteDecision, Router, Scheduler};
+use tweakllm::runtime::{NativeBowEmbedder, TextEmbedder};
+use tweakllm::util::{Json, Summary};
+
+const SESSIONS: [usize; 4] = [1, 2, 4, 8];
+
+struct Cell {
+    mode: &'static str,
+    sessions: usize,
+    tok_per_sec: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    batched_steps: u64,
+    mean_active: f64,
+}
+
+/// One measured run: S concurrent misses driven to completion by the
+/// scheduler's fairness rounds. Returns (wall seconds, per-session latency
+/// samples in ms, pool dispatches, mean occupancy).
+fn run_once(
+    batched: bool,
+    sessions: usize,
+    steps: usize,
+    delay: std::time::Duration,
+    iter: usize,
+) -> anyhow::Result<(f64, Vec<f64>, u64, f64)> {
+    let mut cfg = Config::paper();
+    cfg.index.kind = IndexKindConfig::Flat;
+    cfg.exact_match_fast_path = true;
+    cfg.scheduler = SchedulerConfig {
+        enabled: true,
+        max_concurrent_sessions: sessions.max(1),
+        fairness_steps: 1,
+        decode_batch: if batched { 8 } else { 0 },
+    };
+    let mut big = MockLlm::new("big").with_pace(steps, delay);
+    if batched {
+        big = big.with_batch(8);
+    }
+    let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+    let mut router =
+        Router::with_models(embedder, Box::new(big), Box::new(MockLlm::new("small")), cfg);
+    let mut sched = Scheduler::new(router.config.scheduler);
+
+    let mut rxs = Vec::with_capacity(sessions);
+    let t0 = Instant::now();
+    for i in 0..sessions {
+        // disjoint word sets: every query is a fresh miss
+        let q = format!("s{iter}x{i}a s{iter}x{i}b s{iter}x{i}c s{iter}x{i}d");
+        let (tx, rx) = std::sync::mpsc::channel();
+        let emb = router.embedder().embed(&q)?;
+        match router.route(&q, emb, Instant::now()) {
+            RouteDecision::Miss(m) => {
+                let key = query_key(&m.query);
+                let job = Job::new(JobKind::Miss { job: m, key }, tx, Instant::now());
+                sched.submit(job, &mut router);
+            }
+            _ => anyhow::bail!("bench queries must be misses"),
+        }
+        rxs.push(rx);
+    }
+    sched.drain(&mut router);
+    let wall = t0.elapsed().as_secs_f64();
+    let mut lat = Vec::with_capacity(sessions);
+    for rx in rxs {
+        let r = rx.recv()??;
+        assert_eq!(r.pathway, Pathway::Miss);
+        lat.push(r.total_micros as f64 / 1000.0);
+    }
+    let (dispatches, mean_active) = router
+        .batch_stats()
+        .map(|b| {
+            let mean = if b.dispatches == 0 {
+                0.0
+            } else {
+                b.active_slot_sum as f64 / b.dispatches as f64
+            };
+            (b.dispatches, mean)
+        })
+        .unwrap_or((0, 0.0));
+    Ok((wall, lat, dispatches, mean_active))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let steps = args.usize("steps", 32)?;
+    let delay_us = args.u64("delay-us", 500)?;
+    let iters = args.usize("iters", 3)?.max(1);
+    let delay = std::time::Duration::from_micros(delay_us);
+
+    let mut cells: Vec<Cell> = Vec::new();
+    for &mode in &["per_session", "batched"] {
+        let batched = mode == "batched";
+        for &s in &SESSIONS {
+            let mut walls = Vec::new();
+            let mut lat = Vec::new();
+            let mut dispatches = 0u64;
+            let mut mean_active = 0.0;
+            for iter in 0..iters {
+                let (w, mut l, d, m) = run_once(batched, s, steps, delay, iter)?;
+                walls.push(w);
+                lat.append(&mut l);
+                dispatches += d;
+                mean_active += m / iters as f64;
+            }
+            let mean_wall = walls.iter().sum::<f64>() / walls.len() as f64;
+            let summary = Summary::of(&lat);
+            cells.push(Cell {
+                mode,
+                sessions: s,
+                tok_per_sec: (s * steps) as f64 / mean_wall.max(1e-12),
+                p50_ms: summary.p50,
+                p99_ms: summary.p99,
+                batched_steps: dispatches,
+                mean_active,
+            });
+        }
+    }
+
+    let mut table = Table::new(
+        "Decode batching (mock tier) — aggregate tok/s and per-session latency",
+        &["mode", "sessions", "tok/s", "p50 ms", "p99 ms", "dispatches", "occupancy"],
+    );
+    for c in &cells {
+        table.push(vec![
+            c.mode.to_string(),
+            c.sessions.to_string(),
+            format!("{:.0}", c.tok_per_sec),
+            format!("{:.2}", c.p50_ms),
+            format!("{:.2}", c.p99_ms),
+            c.batched_steps.to_string(),
+            format!("{:.2}", c.mean_active),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let get = |mode: &str, s: usize| -> &Cell {
+        cells
+            .iter()
+            .find(|c| c.mode == mode && c.sessions == s)
+            .expect("cell")
+    };
+    let b1 = get("batched", 1).tok_per_sec;
+    let b8 = get("batched", 8).tok_per_sec;
+    let p8 = get("per_session", 8).tok_per_sec;
+    println!(
+        "batched 8-session aggregate: {:.0} tok/s vs {:.0} at 1 session ({:.1}x) \
+         and {:.0} per-session-dispatch ({:.1}x)",
+        b8,
+        b1,
+        b8 / b1.max(1e-9),
+        p8,
+        b8 / p8.max(1e-9)
+    );
+    // The acceptance gates: batching must scale aggregate throughput with
+    // concurrency while per-session dispatch stays flat.
+    assert!(
+        b8 > 2.0 * b1,
+        "batched aggregate must grow with sessions: 8s {b8:.0} vs 1s {b1:.0} tok/s"
+    );
+    assert!(
+        b8 > 2.0 * p8,
+        "batched must beat per-session dispatch at 8 sessions: {b8:.0} vs {p8:.0} tok/s"
+    );
+
+    let rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj_from(vec![
+                ("mode", Json::s(c.mode)),
+                ("sessions", Json::num(c.sessions as f64)),
+                ("tok_per_sec", Json::num(c.tok_per_sec)),
+                ("p50_ms", Json::num(c.p50_ms)),
+                ("p99_ms", Json::num(c.p99_ms)),
+                ("batched_steps", Json::num(c.batched_steps as f64)),
+                ("mean_active_slots", Json::num(c.mean_active)),
+            ])
+        })
+        .collect();
+    let top = vec![
+        ("bench", Json::s("decode_batching")),
+        ("steps", Json::num(steps as f64)),
+        ("delay_us", Json::num(delay_us as f64)),
+        ("iters", Json::num(iters as f64)),
+        ("rows", Json::Arr(rows)),
+    ];
+    std::fs::write("BENCH_decode_batching.json", Json::obj_from(top).to_string())?;
+    eprintln!("[decode_batching] wrote BENCH_decode_batching.json");
+    Ok(())
+}

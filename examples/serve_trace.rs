@@ -8,7 +8,6 @@
 //!
 //! Run: `cargo run --release --example serve_trace -- --requests 64 --clients 4`
 
-use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
 use tweakllm::config::Config;
@@ -38,7 +37,7 @@ fn main() -> anyhow::Result<()> {
     })?;
     let server = Server::bind("127.0.0.1:0", handle.clone())?;
     let addr = server.local_addr()?.to_string();
-    let stop = server.stop_flag();
+    let stop = server.shutdown_handle()?;
     let server_thread = std::thread::spawn(move || server.serve());
     eprintln!("[serve_trace] listening on {addr}");
 
@@ -120,7 +119,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!("\nengine stage latency:\n{}", stats.latency_table);
 
-    stop.store(true, Ordering::Relaxed);
+    stop.signal();
     let _ = server_thread.join();
     engine.shutdown();
     Ok(())

@@ -357,6 +357,67 @@ def build_artifacts(out_dir: str, verbose: bool = True) -> dict:
             None,
         )
 
+        # Slot-based batched resident decode: for each compiled slot-count
+        # bucket, a prefill-scatter entry point (claim a slot), a batched
+        # masked decode step (advance every active slot in ONE call), and a
+        # batched logits peek (the only per-round fetch, O(B * vocab)).
+        for bsz in configs.DECODE_BATCH_SIZES:
+            bslen = model.batch_state_len(cfg, bsz)
+
+            def scatter_fn(*args, _cfg=cfg, _names=names):
+                plist = list(args[: len(_names)])
+                tokens, length, slot, state = args[len(_names) :]
+                return model.prefill_scatter(
+                    _cfg, plist, _names, tokens, length, slot, state
+                )
+
+            lower_artifact(
+                f"{mname}_prefill_scatter{bsz}",
+                scatter_fn,
+                specs,
+                [
+                    _io_entry("tokens", (cfg.max_prefill,), "int32"),
+                    _io_entry("length", (1,), "int32"),
+                    _io_entry("slot", (1,), "int32"),
+                    _io_entry("state", (bslen,), "float32"),
+                ],
+                [_io_entry("state", (bslen,), "float32")],
+                mname,
+            )
+
+            def batch_fn(*args, _cfg=cfg, _names=names):
+                plist = list(args[: len(_names)])
+                tokens, pos, active, state = args[len(_names) :]
+                return model.decode_batch_resident(
+                    _cfg, plist, _names, tokens, pos, active, state
+                )
+
+            lower_artifact(
+                f"{mname}_decode_batch{bsz}_res",
+                batch_fn,
+                specs,
+                [
+                    _io_entry("tokens", (bsz,), "int32"),
+                    _io_entry("pos", (bsz,), "int32"),
+                    _io_entry("active", (bsz,), "int32"),
+                    _io_entry("state", (bslen,), "float32"),
+                ],
+                [_io_entry("state", (bslen,), "float32")],
+                mname,
+            )
+
+            def peek_batch_fn(state, _cfg=cfg, _bsz=bsz):
+                return model.peek_logits_batch(_cfg, state, _bsz)
+
+            lower_artifact(
+                f"{mname}_peek_logits_batch{bsz}",
+                peek_batch_fn,
+                [],
+                [_io_entry("state", (bslen,), "float32")],
+                [_io_entry("logits", (bsz, cfg.vocab_size), "float32")],
+                None,
+            )
+
     # ----- compiled cosine scorer -------------------------------------------
     n_block = configs.COSINE_DB_BLOCK
 

@@ -88,6 +88,13 @@ COSINE_DB_BLOCK = 4096
 # artifact's input shapes, so only aot.py hard-codes it).
 DECODE_SPAN = 8
 
+# Slot counts compiled for the batched resident decode path (one
+# `{model}_decode_batch{B}_res` executable advances all B slots per call).
+# The Rust runtime picks the largest compiled bucket that fits
+# `[scheduler] decode_batch`; absent artifacts fall back to per-session
+# dispatch automatically.
+DECODE_BATCH_SIZES = (4, 8)
+
 RNG_SEED = 20250923  # paper's date line; fixed for reproducibility
 
 # Function words whose token-embedding rows are scaled down in the encoder

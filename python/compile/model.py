@@ -395,3 +395,75 @@ def peek_tokens(cfg: DecoderConfig, state, span: int):
     """Slice the span's sampled token ids out of a packed state: -> [span]."""
     off = 2 * _kv_numel(cfg)
     return jnp.round(state[off : off + span]).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Slot-based batched resident decode (vLLM/Orca-style continuous batching,
+# adapted to the packed-state convention above). A batched state is simply B
+# packed slot states laid out back to back: state[B * state_len]. Sessions
+# claim a slot at prefill time (``prefill_scatter`` writes one packed
+# k ‖ v ‖ tail into its slot), and ONE ``decode_batch_resident`` call per
+# fairness round advances every *active* slot together — per-slot
+# ``tokens[B]`` / ``pos[B]`` inputs plus an ``active[B]`` mask that passes
+# inactive slots through untouched. The per-slot math is literally
+# ``decode_step_resident`` applied to that slot's sub-state, so a batched
+# step is bit-identical to B independent single steps (test-gated below and
+# on the Rust side).
+# ---------------------------------------------------------------------------
+
+
+def batch_state_len(cfg: DecoderConfig, batch: int) -> int:
+    """Packed batched decode-state width: ``batch`` back-to-back slots."""
+    return batch * state_len(cfg)
+
+
+def prefill_scatter(
+    cfg, plist, names, tokens, length, slot, batch_state, use_kernels=True
+):
+    """``prefill_resident`` scattered into slot ``slot`` of a batched state.
+
+    tokens: [max_prefill] int32 (one prompt), length: [1] int32,
+    slot: [1] int32, batch_state: [B * state_len]. Returns the batched state
+    with the slot's sub-state replaced; every other slot is untouched.
+    """
+    one = prefill_resident(cfg, plist, names, tokens, length, use_kernels)
+    off = slot[0] * state_len(cfg)
+    return jax.lax.dynamic_update_slice(batch_state, one, (off,))
+
+
+def decode_batch_resident(
+    cfg, plist, names, tokens, pos, active, batch_state, use_kernels=True
+):
+    """One decode step for every active slot, in one executable call.
+
+    tokens: [B] int32 (per-slot input token), pos: [B] int32 (per-slot write
+    position), active: [B] int32 (1 = advance, 0 = pass through),
+    batch_state: [B * state_len]. Inactive slots still compute a (masked
+    out) step — the batch shape is static — but their state rides through
+    unchanged, so freed/unclaimed slots can hold garbage safely.
+    """
+    sl = state_len(cfg)
+    batch = tokens.shape[0]
+    outs = []
+    for b in range(batch):
+        st = batch_state[b * sl : (b + 1) * sl]
+        new = decode_step_resident(
+            cfg, plist, names, tokens[b : b + 1], pos[b : b + 1], st, use_kernels
+        )
+        outs.append(jnp.where(active[b] > 0, new, st))
+    return jnp.concatenate(outs)
+
+
+def peek_logits_batch(cfg: DecoderConfig, batch_state, batch: int):
+    """Slice every slot's logits tail out of a batched state: -> [B, vocab].
+
+    The only per-round fetch of the batched decode loop: O(B * vocab)
+    regardless of the KV bytes resident on device.
+    """
+    sl = state_len(cfg)
+    off = 2 * _kv_numel(cfg)
+    rows = [
+        batch_state[b * sl + off : b * sl + off + cfg.vocab_size]
+        for b in range(batch)
+    ]
+    return jnp.stack(rows)

@@ -2,6 +2,7 @@
 semantic properties the TweakLLM cache depends on (paraphrase similarity,
 prefill/decode consistency)."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -150,6 +151,127 @@ class TestDecoder:
         lg, _, _ = model.prefill(cfg, plist, names, toks, ln, True)
         assert np.isfinite(np.asarray(lg)).all()
         assert float(jnp.std(lg)) > 0.1  # not collapsed
+
+
+class TestBatchedDecode:
+    """The slot-based batched decode convention must be pure layout around
+    the unchanged single-slot computations: scatter places one packed state,
+    a batched step equals B independent resident steps, and inactive slots
+    ride through bit-for-bit."""
+
+    B = 3
+
+    def _prompt(self, cfg, n, seed=0):
+        rng = np.random.default_rng(seed)
+        toks = np.zeros((cfg.max_prefill,), np.int32)
+        toks[:n] = rng.integers(configs.FIRST_WORD_ID, cfg.vocab_size, n)
+        return jnp.asarray(toks), jnp.asarray([n], jnp.int32)
+
+    def _garbage_state(self, cfg, seed=42):
+        rng = np.random.default_rng(seed)
+        return jnp.asarray(
+            rng.normal(size=(model.batch_state_len(cfg, self.B),)).astype(
+                np.float32
+            )
+        )
+
+    def test_prefill_scatter_places_one_slot(self, small_llm):
+        cfg, plist, names = small_llm
+        sl = model.state_len(cfg)
+        toks, ln = self._prompt(cfg, 7)
+        batch = self._garbage_state(cfg)
+        out = model.prefill_scatter(
+            cfg, plist, names, toks, ln, jnp.asarray([1], jnp.int32), batch,
+            use_kernels=False,
+        )
+        one = model.prefill_resident(cfg, plist, names, toks, ln, use_kernels=False)
+        np.testing.assert_array_equal(out[sl : 2 * sl], one)
+        np.testing.assert_array_equal(out[:sl], batch[:sl])
+        np.testing.assert_array_equal(out[2 * sl :], batch[2 * sl :])
+
+    def test_batched_step_equals_independent_steps(self, small_llm):
+        cfg, plist, names = small_llm
+        sl = model.state_len(cfg)
+        batch = self._garbage_state(cfg)
+        for slot, (n, seed) in enumerate([(7, 0), (11, 1), (5, 2)]):
+            toks, ln = self._prompt(cfg, n, seed)
+            batch = model.prefill_scatter(
+                cfg, plist, names, toks, ln,
+                jnp.asarray([slot], jnp.int32), batch, use_kernels=False,
+            )
+        tokens = jnp.asarray([70, 71, 72], jnp.int32)
+        pos = jnp.asarray([7, 11, 5], jnp.int32)
+        active = jnp.asarray([1, 0, 1], jnp.int32)
+        out = model.decode_batch_resident(
+            cfg, plist, names, tokens, pos, active, batch, use_kernels=False
+        )
+        for slot in (0, 2):
+            want = model.decode_step_resident(
+                cfg, plist, names,
+                tokens[slot : slot + 1], pos[slot : slot + 1],
+                batch[slot * sl : (slot + 1) * sl], use_kernels=False,
+            )
+            np.testing.assert_array_equal(out[slot * sl : (slot + 1) * sl], want)
+        # the masked slot is untouched, bit for bit
+        np.testing.assert_array_equal(out[sl : 2 * sl], batch[sl : 2 * sl])
+
+    def test_peek_logits_batch_slices_tails(self, small_llm):
+        cfg, plist, names = small_llm
+        sl = model.state_len(cfg)
+        batch = self._garbage_state(cfg, seed=9)
+        rows = model.peek_logits_batch(cfg, batch, self.B)
+        assert rows.shape == (self.B, cfg.vocab_size)
+        for slot in range(self.B):
+            want = model.peek_logits(cfg, batch[slot * sl : (slot + 1) * sl])
+            np.testing.assert_array_equal(rows[slot], want)
+
+    def test_jitted_chained_rounds_match_single_slot_loop(self, small_llm):
+        # The Rust runtime's exact calling pattern, three rounds deep and
+        # jit-compiled: batched rounds must reproduce the per-slot resident
+        # loop bit-for-bit (this is the substrate half of the batched ≡
+        # sequential identity gate).
+        cfg, plist, names = small_llm
+        sl = model.state_len(cfg)
+
+        step_one = jax.jit(
+            lambda t, p, s: model.decode_step_resident(
+                cfg, plist, names, t, p, s, use_kernels=False
+            )
+        )
+        step_batch = jax.jit(
+            lambda t, p, a, s: model.decode_batch_resident(
+                cfg, plist, names, t, p, a, s, use_kernels=False
+            )
+        )
+
+        batch = self._garbage_state(cfg, seed=5)
+        singles = []
+        lens = [(6, 3), (9, 4)]
+        for slot, (n, seed) in enumerate(lens):
+            toks, ln = self._prompt(cfg, n, seed)
+            batch = model.prefill_scatter(
+                cfg, plist, names, toks, ln,
+                jnp.asarray([slot], jnp.int32), batch, use_kernels=False,
+            )
+            singles.append(batch[slot * sl : (slot + 1) * sl])
+        active = jnp.asarray([1, 1, 0], jnp.int32)
+        for r in range(3):
+            tokens = jnp.asarray([40 + r, 50 + r, 0], jnp.int32)
+            pos = jnp.asarray([lens[0][0] + r, lens[1][0] + r, 0], jnp.int32)
+            batch = step_batch(tokens, pos, active, batch)
+            for slot in range(2):
+                singles[slot] = step_one(
+                    tokens[slot : slot + 1], pos[slot : slot + 1], singles[slot]
+                )
+        for slot in range(2):
+            np.testing.assert_array_equal(
+                batch[slot * sl : (slot + 1) * sl], singles[slot]
+            )
+        rows = model.peek_logits_batch(cfg, batch, self.B)
+        for slot in range(2):
+            np.testing.assert_array_equal(
+                rows[slot], model.peek_logits(cfg, singles[slot])
+            )
 
 
 class TestParams:

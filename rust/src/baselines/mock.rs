@@ -1,12 +1,13 @@
 //! Mock language models for unit tests and quality-model-driven evals:
 //! deterministic, artifact-free, and instrumented.
 
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::cost::TokenUsage;
-use crate::llm::{LanguageModel, LlmResponse, LlmSession, TweakPrompt};
+use crate::llm::{BatchDecodeStats, LanguageModel, LlmResponse, LlmSession, TweakPrompt};
 use crate::tokenizer::Tokenizer;
 
 /// Echo-style mock: responds with a deterministic transform of the prompt;
@@ -27,6 +28,127 @@ pub struct MockLlm {
     pub steps: usize,
     /// Wall time burned by each `advance()` unit.
     pub step_delay: Duration,
+    /// Collective-advance slot pool (`with_batch`): sessions claim slots and
+    /// one "dispatch" per fairness round advances every live slot, paying
+    /// `step_delay` ONCE per round instead of once per session — the mock
+    /// twin of the substrate's batched decode, so the scheduler's batched
+    /// path (and its O(1)-dispatch economics) is exercisable in CI.
+    batch: Option<Arc<Mutex<MockPool>>>,
+}
+
+/// Shared slot pool behind `MockLlm::with_batch`. Mirrors the credit
+/// protocol of `runtime::BatchedDecode`: the first session of a sweep to
+/// advance runs one collective round; its peers consume banked credits.
+struct MockPool {
+    slots: Vec<Option<MockSlot>>,
+    /// Wall time per collective ROUND (not per slot).
+    step_delay: Duration,
+    dispatches: u64,
+    active_slot_sum: u64,
+}
+
+struct MockSlot {
+    remaining: usize,
+    credits: u32,
+}
+
+impl MockPool {
+    fn new(slots: usize, step_delay: Duration) -> MockPool {
+        MockPool {
+            slots: (0..slots.max(1)).map(|_| None).collect(),
+            step_delay,
+            dispatches: 0,
+            active_slot_sum: 0,
+        }
+    }
+
+    fn admit(&mut self, steps: usize) -> Option<usize> {
+        let slot = self.slots.iter().position(|s| s.is_none())?;
+        self.slots[slot] = Some(MockSlot { remaining: steps.max(1), credits: 0 });
+        Some(slot)
+    }
+
+    fn is_done(&self, slot: usize) -> bool {
+        match self.slots.get(slot).and_then(|s| s.as_ref()) {
+            Some(s) => s.remaining == 0,
+            None => true,
+        }
+    }
+
+    fn advance(&mut self, slot: usize) -> bool {
+        {
+            let s = self.slots[slot].as_mut().expect("advance on a free mock slot");
+            if s.remaining == 0 {
+                return false;
+            }
+            if s.credits > 0 {
+                s.credits -= 1;
+                return s.remaining > 0;
+            }
+        }
+        // Collective round: one paced "dispatch" advances every live slot.
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        let mut n_active = 0u64;
+        for s in self.slots.iter_mut().flatten() {
+            if s.remaining > 0 {
+                s.remaining -= 1;
+                s.credits += 1;
+                n_active += 1;
+            }
+        }
+        self.dispatches += 1;
+        self.active_slot_sum += n_active;
+        let s = self.slots[slot].as_mut().expect("slot vanished mid-round");
+        if s.credits > 0 {
+            s.credits -= 1;
+        }
+        s.remaining > 0
+    }
+
+    fn release(&mut self, slot: usize) {
+        if let Some(s) = self.slots.get_mut(slot) {
+            *s = None;
+        }
+    }
+}
+
+/// A claimed slot of the mock pool, behind the standard session protocol.
+struct MockBatchedSession {
+    pool: Arc<Mutex<MockPool>>,
+    slot: Option<usize>,
+    resp: LlmResponse,
+}
+
+impl LlmSession for MockBatchedSession {
+    fn advance(&mut self) -> Result<bool> {
+        let slot = self.slot.expect("advance after finish");
+        Ok(self.pool.lock().unwrap().advance(slot))
+    }
+
+    fn is_done(&self) -> bool {
+        match self.slot {
+            Some(slot) => self.pool.lock().unwrap().is_done(slot),
+            None => true,
+        }
+    }
+
+    fn finish(mut self: Box<Self>) -> Result<LlmResponse> {
+        if let Some(slot) = self.slot.take() {
+            self.pool.lock().unwrap().release(slot);
+        }
+        // clone: `Drop` forbids moving fields out of `self`
+        Ok(self.resp.clone())
+    }
+}
+
+impl Drop for MockBatchedSession {
+    fn drop(&mut self) {
+        if let Some(slot) = self.slot.take() {
+            self.pool.lock().unwrap().release(slot);
+        }
+    }
 }
 
 impl MockLlm {
@@ -38,14 +160,25 @@ impl MockLlm {
             output_tokens: 16,
             steps: 1,
             step_delay: Duration::ZERO,
+            batch: None,
         }
     }
 
     /// Builder-style pacing override: `steps` decode units of `step_delay`
-    /// each per generation.
+    /// each per generation. Call before `with_batch` — the pool snapshots
+    /// the round delay when it is built.
     pub fn with_pace(mut self, steps: usize, step_delay: Duration) -> MockLlm {
         self.steps = steps.max(1);
         self.step_delay = step_delay;
+        self
+    }
+
+    /// Enable the collective-advance slot pool: up to `slots` sessions
+    /// advance together, one `step_delay` per round regardless of how many
+    /// ride it. Overflow sessions fall back to independent pacing, exactly
+    /// like the substrate model.
+    pub fn with_batch(mut self, slots: usize) -> MockLlm {
+        self.batch = Some(Arc::new(Mutex::new(MockPool::new(slots, self.step_delay))));
         self
     }
 
@@ -75,6 +208,16 @@ impl MockLlm {
     }
 
     fn session(&self, resp: LlmResponse) -> Box<dyn LlmSession> {
+        if let Some(pool) = &self.batch {
+            if let Some(slot) = pool.lock().unwrap().admit(self.steps) {
+                return Box::new(MockBatchedSession {
+                    pool: Arc::clone(pool),
+                    slot: Some(slot),
+                    resp,
+                });
+            }
+            // pool full: overflow onto an independent per-session mock
+        }
         Box::new(MockSession {
             resp,
             remaining: self.steps.max(1),
@@ -135,6 +278,17 @@ impl LanguageModel for MockLlm {
         self.tweak_calls.push(prompt.clone());
         Ok(self.session(self.tweak_response(prompt)))
     }
+
+    fn batch_stats(&self) -> Option<BatchDecodeStats> {
+        self.batch.as_ref().map(|pool| {
+            let pool = pool.lock().unwrap();
+            BatchDecodeStats {
+                dispatches: pool.dispatches,
+                active_slot_sum: pool.active_slot_sum,
+                slots: pool.slots.len(),
+            }
+        })
+    }
 }
 
 #[cfg(test)]
@@ -166,6 +320,56 @@ mod tests {
             })
             .unwrap();
         assert_eq!(r.usage.input_tokens, 6);
+    }
+
+    #[test]
+    fn batched_mock_sessions_advance_collectively() {
+        let mut m = MockLlm::new("big").with_pace(4, Duration::ZERO).with_batch(2);
+        let mut a = m.begin_respond("query a").unwrap();
+        let mut b = m.begin_respond("query b").unwrap();
+        // Round-robin like the scheduler: each sweep must cost ONE pool
+        // dispatch for both sessions together.
+        while !a.is_done() || !b.is_done() {
+            if !a.is_done() {
+                a.advance().unwrap();
+            }
+            if !b.is_done() {
+                b.advance().unwrap();
+            }
+        }
+        let stats = m.batch_stats().unwrap();
+        assert_eq!(stats.dispatches, 4, "one dispatch per sweep, not per session");
+        assert_eq!(stats.active_slot_sum, 8);
+        assert_eq!(stats.slots, 2);
+        let ra = a.finish().unwrap();
+        assert!(ra.text.contains("big-fresh"));
+        assert_eq!(ra.text, b.finish().unwrap().text.replace("query b", "query a"));
+    }
+
+    #[test]
+    fn batched_mock_pool_overflow_and_reuse() {
+        let mut m = MockLlm::new("big").with_pace(2, Duration::ZERO).with_batch(1);
+        let mut a = m.begin_respond("one").unwrap();
+        let mut b = m.begin_respond("two").unwrap(); // pool full → independent
+        while b.advance().unwrap() {}
+        assert_eq!(
+            m.batch_stats().unwrap().dispatches,
+            0,
+            "overflow sessions must not dispatch the pool"
+        );
+        while a.advance().unwrap() {}
+        assert_eq!(m.batch_stats().unwrap().dispatches, 2);
+        a.finish().unwrap(); // frees the slot
+        let mut c = m.begin_respond("three").unwrap();
+        while c.advance().unwrap() {}
+        assert_eq!(
+            m.batch_stats().unwrap().dispatches,
+            4,
+            "freed slot must be reused by the pool"
+        );
+        drop(c); // dropping an unfinished batched session releases its slot
+        let d = m.begin_respond("four").unwrap();
+        assert!(!d.is_done());
     }
 
     #[test]

@@ -99,6 +99,16 @@ pub struct SchedulerConfig {
     /// per round-robin turn. 1 = fully fair interleave; larger values trade
     /// tweak-hit latency for fewer cross-session switches.
     pub fairness_steps: usize,
+    /// Slot budget for batched resident decode (per model): sessions claim
+    /// slots in a shared device buffer and ONE masked dispatch per fairness
+    /// round advances all of them. The runtime picks the largest compiled
+    /// `{m}_decode_batch{B}_res` bucket with `B <= decode_batch`; 0 — or an
+    /// artifact set predating batched decode — falls back to per-session
+    /// dispatch. When the artifact set CAN batch at this budget, span
+    /// fusion is pinned off (the batched sampling path is single-step;
+    /// responses must not depend on slot placement); pre-batched artifact
+    /// dirs keep span fusion and today's outputs.
+    pub decode_batch: usize,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -150,6 +160,7 @@ impl Config {
                 enabled: true,
                 max_concurrent_sessions: 8,
                 fairness_steps: 1,
+                decode_batch: 8,
             },
             big_llm: GenConfig { temperature: 1.0, top_k: 40, max_new_tokens: 48 },
             small_llm: GenConfig { temperature: 1.0, top_k: 40, max_new_tokens: 48 },
@@ -271,6 +282,8 @@ impl Config {
                 }
                 self.scheduler.fairness_steps = n;
             }
+            // 0 = per-session dispatch (batched decode off)
+            "scheduler.decode_batch" => self.scheduler.decode_batch = u()?,
             "big_llm.temperature" => self.big_llm.temperature = f()? as f32,
             "big_llm.top_k" => self.big_llm.top_k = u()?,
             "big_llm.max_new_tokens" => self.big_llm.max_new_tokens = u()?,
@@ -316,7 +329,12 @@ impl Config {
                 "disabled (ephemeral, as in the paper)".into()
             }),
             ("Decode scheduler".into(), if self.scheduler.enabled {
-                format!("interleaved ({} concurrent sessions, {} step{}/turn)", self.scheduler.max_concurrent_sessions, self.scheduler.fairness_steps, if self.scheduler.fairness_steps == 1 { "" } else { "s" })
+                let batch = if self.scheduler.decode_batch > 0 {
+                    format!(", batched decode ≤ {} slots", self.scheduler.decode_batch)
+                } else {
+                    ", per-session dispatch".into()
+                };
+                format!("interleaved ({} concurrent sessions, {} step{}/turn{batch})", self.scheduler.max_concurrent_sessions, self.scheduler.fairness_steps, if self.scheduler.fairness_steps == 1 { "" } else { "s" })
             } else {
                 "run-to-completion (head-of-line blocking)".into()
             }),
@@ -434,14 +452,17 @@ mod tests {
         assert!(c.scheduler.enabled);
         assert_eq!(c.scheduler.max_concurrent_sessions, 8);
         assert_eq!(c.scheduler.fairness_steps, 1);
+        assert_eq!(c.scheduler.decode_batch, 8);
         let mut kv = BTreeMap::new();
         kv.insert("scheduler.enabled".to_string(), "false".to_string());
         kv.insert("scheduler.max_concurrent_sessions".to_string(), "4".to_string());
         kv.insert("scheduler.fairness_steps".to_string(), "2".to_string());
+        kv.insert("scheduler.decode_batch".to_string(), "0".to_string());
         c.apply(&kv).unwrap();
         assert!(!c.scheduler.enabled);
         assert_eq!(c.scheduler.max_concurrent_sessions, 4);
         assert_eq!(c.scheduler.fairness_steps, 2);
+        assert_eq!(c.scheduler.decode_batch, 0, "0 must be accepted (disable)");
         assert!(c.set("scheduler.max_concurrent_sessions", "0").is_err());
         assert!(c.set("scheduler.fairness_steps", "0").is_err());
         let row = |c: &Config| -> String {
@@ -455,6 +476,9 @@ mod tests {
         assert!(row(&c).contains("run-to-completion"));
         c.set("scheduler.enabled", "true").unwrap();
         assert!(row(&c).contains("4 concurrent"));
+        assert!(row(&c).contains("per-session dispatch"));
+        c.set("scheduler.decode_batch", "4").unwrap();
+        assert!(row(&c).contains("batched decode ≤ 4 slots"));
     }
 
     #[test]

@@ -68,6 +68,13 @@ pub struct EngineStats {
     pub waiting_sessions: usize,
     /// Requests served by coalescing onto an identical in-flight miss.
     pub coalesced: u64,
+    /// Batched decode dispatches issued across both models' slot pools
+    /// (each advances every active slot in one device call); 0 when
+    /// batched decode is off or unavailable.
+    pub batched_steps: u64,
+    /// Mean active slots per batched dispatch (batch occupancy); 0.0 when
+    /// no batched dispatch has run.
+    pub mean_active_slots: f64,
     // ---- persistence (all zero when the [persist] section is disabled) ----
     pub persist_enabled: bool,
     pub persist_generation: u64,
@@ -346,6 +353,7 @@ impl Engine {
         sched: &Scheduler,
     ) -> EngineStats {
         let persist = router.cache().persist_status();
+        let batch = router.batch_stats();
         EngineStats {
             requests: router.counters.get("requests"),
             tweak_hits: router.counters.get("tweak_hits"),
@@ -359,6 +367,14 @@ impl Engine {
             active_sessions: sched.active_sessions(),
             waiting_sessions: sched.waiting_jobs(),
             coalesced: sched.coalesced(),
+            batched_steps: batch.map_or(0, |b| b.dispatches),
+            mean_active_slots: batch.map_or(0.0, |b| {
+                if b.dispatches == 0 {
+                    0.0
+                } else {
+                    b.active_slot_sum as f64 / b.dispatches as f64
+                }
+            }),
             persist_enabled: persist.is_some(),
             persist_generation: persist.map_or(0, |p| p.generation),
             wal_bytes: persist.map_or(0, |p| p.wal_bytes),

@@ -24,7 +24,7 @@ use crate::cache::persist::RecoveryReport;
 use crate::cache::SemanticCache;
 use crate::config::Config;
 use crate::cost::{CostLedger, ModelRole, TokenUsage};
-use crate::llm::{LanguageModel, LlmResponse, LlmSession, TweakPrompt};
+use crate::llm::{BatchDecodeStats, LanguageModel, LlmResponse, LlmSession, TweakPrompt};
 use crate::metrics::{Counters, LatencyRecorder};
 use crate::runtime::{Embedder, Runtime, SamplingParams, TextEmbedder};
 use crate::util::ThreadPool;
@@ -116,28 +116,43 @@ impl Router {
     /// carries the packed-state executables (literal fallback otherwise).
     pub fn from_runtime(rt: &Runtime, config: Config) -> Result<Router> {
         let embedder: Box<dyn TextEmbedder> = Box::new(Embedder::new(rt)?);
-        let big = Box::new(crate::llm::SubstrateLlm::new_with(
-            rt,
-            "big",
-            SamplingParams {
-                temperature: config.big_llm.temperature,
-                top_k: config.big_llm.top_k,
-                max_new_tokens: config.big_llm.max_new_tokens,
-            },
-            config.seed,
-            config.device_resident,
-        )?);
-        let small = Box::new(crate::llm::SubstrateLlm::new_with(
-            rt,
-            "small",
-            SamplingParams {
-                temperature: config.small_llm.temperature,
-                top_k: config.small_llm.top_k,
-                max_new_tokens: config.small_llm.max_new_tokens,
-            },
-            config.seed,
-            config.device_resident,
-        )?);
+        // Batched decode slots are claimed by the scheduler's concurrent
+        // sessions; with the scheduler off (run-to-completion) the pool is
+        // not built — it would only ever hold one live slot while paying
+        // the full batch-width compute. Span gating stays capability-based
+        // either way (see `with_decode_batch_opts`), so responses are
+        // identical across the scheduler A/B for a fixed config + artifact
+        // set, and pre-batched artifact dirs keep their span fusion.
+        let slots = config.scheduler.decode_batch;
+        let build_pool = config.scheduler.enabled;
+        let big = Box::new(
+            crate::llm::SubstrateLlm::new_with(
+                rt,
+                "big",
+                SamplingParams {
+                    temperature: config.big_llm.temperature,
+                    top_k: config.big_llm.top_k,
+                    max_new_tokens: config.big_llm.max_new_tokens,
+                },
+                config.seed,
+                config.device_resident,
+            )?
+            .with_decode_batch_opts(slots, build_pool),
+        );
+        let small = Box::new(
+            crate::llm::SubstrateLlm::new_with(
+                rt,
+                "small",
+                SamplingParams {
+                    temperature: config.small_llm.temperature,
+                    top_k: config.small_llm.top_k,
+                    max_new_tokens: config.small_llm.max_new_tokens,
+                },
+                config.seed,
+                config.device_resident,
+            )?
+            .with_decode_batch_opts(slots, build_pool),
+        );
         let mut router = Self::with_models(embedder, big, small, config);
         router.enable_persistence()?;
         Ok(router)
@@ -219,6 +234,12 @@ impl Router {
 
     pub fn embedder(&self) -> &dyn TextEmbedder {
         self.embedder.as_ref()
+    }
+
+    /// Combined batched-decode occupancy counters of both models' slot
+    /// pools (`None` when neither model decodes batched).
+    pub fn batch_stats(&self) -> Option<BatchDecodeStats> {
+        BatchDecodeStats::merge(self.big.batch_stats(), self.small.batch_stats())
     }
 
     /// Pre-populate the cache (dataset warm-up in the eval protocols).

@@ -19,6 +19,19 @@
 //! closes the duplicate-in-batch bug where two identical queries in one
 //! micro-batch both paid a Big-LLM generation and inserted duplicate cache
 //! rows.
+//!
+//! **Batched decode (PR 5).** With `[scheduler] decode_batch > 0` and
+//! batched artifacts compiled, the sessions this ring advances share a
+//! slot-batched decode pool per model (`runtime::BatchedDecode` via
+//! `llm::SubstrateLlm`, or `MockLlm::with_batch` in tests). The fairness
+//! round below then *is* "one batched step for everyone": the first
+//! session's `advance()` triggers a single masked device dispatch that
+//! moves every live slot one token, and each peer's `advance()` consumes
+//! the round credit its slot banked — O(1) dispatches per round instead of
+//! O(S), with mid-flight admission claiming freed slots at `start` time.
+//! The scheduler itself needs no batching-specific path; occupancy is
+//! surfaced through `Router::batch_stats` (`batched_steps` /
+//! `mean_active_slots` in engine stats and the TCP `stats` verb).
 
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
@@ -256,17 +269,19 @@ mod tests {
     use crate::coordinator::{Pathway, RouteDecision, RoutedResponse};
     use crate::runtime::{NativeBowEmbedder, TextEmbedder};
 
-    fn test_router(sched: SchedulerConfig) -> Router {
+    fn test_router_with(sched: SchedulerConfig, big: MockLlm) -> Router {
         let mut cfg = Config::paper();
         cfg.index.kind = IndexKindConfig::Flat;
         cfg.exact_match_fast_path = true;
         cfg.scheduler = sched;
         let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
-        Router::with_models(
-            embedder,
-            Box::new(MockLlm::new("big").with_pace(4, std::time::Duration::ZERO)),
-            Box::new(MockLlm::new("small")),
-            cfg,
+        Router::with_models(embedder, Box::new(big), Box::new(MockLlm::new("small")), cfg)
+    }
+
+    fn test_router(sched: SchedulerConfig) -> Router {
+        test_router_with(
+            sched,
+            MockLlm::new("big").with_pace(4, std::time::Duration::ZERO),
         )
     }
 
@@ -275,6 +290,7 @@ mod tests {
             enabled: true,
             max_concurrent_sessions: max,
             fairness_steps: fairness,
+            decode_batch: 0,
         }
     }
 
@@ -343,6 +359,66 @@ mod tests {
         assert_eq!(ra.cache_entry, rb.cache_entry);
         assert_eq!(router.counters.get("misses"), 1);
         assert_eq!(router.cache().len(), 1, "one insert, no stale duplicate row");
+    }
+
+    #[test]
+    fn batched_sessions_cost_one_dispatch_per_round() {
+        // The tentpole economics at the scheduler level: S active batched
+        // sessions advance through O(1) pool dispatches per fairness round
+        // — asserted via the dispatch-counting mock pool.
+        let mut router = test_router_with(
+            sched_cfg(8, 1),
+            MockLlm::new("big")
+                .with_pace(6, std::time::Duration::ZERO)
+                .with_batch(4),
+        );
+        let mut sched = Scheduler::new(router.config.scheduler);
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let q = format!("batchtopic{i}a batchtopic{i}b batchtopic{i}c");
+            rxs.push(submit_query(&mut sched, &mut router, &q));
+        }
+        assert_eq!(sched.active_sessions(), 4);
+        sched.drain(&mut router);
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().unwrap().pathway, Pathway::Miss);
+        }
+        let stats = router.batch_stats().expect("batched pool live");
+        assert_eq!(
+            stats.dispatches, 6,
+            "6-step sessions must cost 6 rounds, not 4 sessions × 6 steps"
+        );
+        assert_eq!(stats.active_slot_sum, 24, "all four slots rode every round");
+        assert_eq!(stats.slots, 4);
+    }
+
+    #[test]
+    fn batched_pool_overflow_queues_into_free_slots() {
+        // 5 concurrent misses over a 2-slot pool: three overflow onto
+        // per-session mocks, everyone completes, and the pool sees
+        // multi-slot occupancy throughout.
+        let mut router = test_router_with(
+            sched_cfg(8, 1),
+            MockLlm::new("big")
+                .with_pace(3, std::time::Duration::ZERO)
+                .with_batch(2),
+        );
+        let mut sched = Scheduler::new(router.config.scheduler);
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let q = format!("ovf{i}a ovf{i}b ovf{i}c ovf{i}d");
+            rxs.push(submit_query(&mut sched, &mut router, &q));
+        }
+        sched.drain(&mut router);
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().unwrap().pathway, Pathway::Miss);
+        }
+        let stats = router.batch_stats().expect("batched pool live");
+        assert!(stats.dispatches > 0);
+        assert!(
+            stats.active_slot_sum > stats.dispatches,
+            "both slots must have been occupied at once: {stats:?}"
+        );
     }
 
     #[test]

@@ -12,11 +12,22 @@
 //! The blocking API is implemented *on top of* the session API, so a
 //! request costs exactly the same work — and, for the substrate models,
 //! consumes exactly the same RNG stream — whichever shape serves it.
+//!
+//! With slot-batched decode artifacts compiled (`decode_batch > 0`),
+//! sessions of one model *advance collectively*: they claim slots in a
+//! shared [`SubstrateBatch`] pool, and one masked device dispatch per
+//! fairness round moves every live slot one token — the scheduler's
+//! round-robin costs O(1) dispatches per round instead of O(S). Overflow
+//! sessions (pool full) fall back to the per-session backend with span
+//! fusion disabled, so a response never depends on which path served it.
 
-use anyhow::Result;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
 
 use crate::cost::TokenUsage;
-use crate::runtime::{GenSession, Generator, Runtime, SamplingParams};
+use crate::runtime::{GenSession, Generator, Runtime, SamplingParams, SubstrateBatch};
 use crate::util::rng::hash_bytes;
 use crate::util::Rng;
 
@@ -49,6 +60,39 @@ pub trait LanguageModel {
     /// Begin a resumable tweak generation; see [`Self::begin_respond`].
     fn begin_tweak(&mut self, prompt: &TweakPrompt) -> Result<Box<dyn LlmSession>> {
         Ok(Box::new(EagerSession(self.tweak(prompt)?)))
+    }
+
+    /// Lifetime counters of this model's collective (slot-batched) decode
+    /// pool; `None` for models without one. Feeds the engine's
+    /// `batched_steps` / `mean_active_slots` observability.
+    fn batch_stats(&self) -> Option<BatchDecodeStats> {
+        None
+    }
+}
+
+/// Occupancy counters of a slot-batched decode pool (per model, lifetime).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchDecodeStats {
+    /// Batched decode dispatches issued (each advances every active slot).
+    pub dispatches: u64,
+    /// Sum of active slot counts over those dispatches;
+    /// `active_slot_sum / dispatches` = mean batch occupancy.
+    pub active_slot_sum: u64,
+    /// Slot count of the pool.
+    pub slots: usize,
+}
+
+impl BatchDecodeStats {
+    /// Merge counters across models (big + small pools).
+    pub fn merge(a: Option<BatchDecodeStats>, b: Option<BatchDecodeStats>) -> Option<Self> {
+        match (a, b) {
+            (None, x) | (x, None) => x,
+            (Some(a), Some(b)) => Some(BatchDecodeStats {
+                dispatches: a.dispatches + b.dispatches,
+                active_slot_sum: a.active_slot_sum + b.active_slot_sum,
+                slots: a.slots + b.slots,
+            }),
+        }
     }
 }
 
@@ -102,6 +146,16 @@ pub struct SubstrateLlm {
     /// they were interleaved. This is what makes scheduler-interleaved
     /// decoding bit-identical to sequential serving.
     seed: u64,
+    /// Slot-batched decode pool shared by this model's sessions (`None`:
+    /// per-session dispatch — batched artifacts absent or `decode_batch`
+    /// disabled). `Rc` because every live slot session holds the pool too;
+    /// everything stays on the engine thread (the model is !Send anyway).
+    batch: Option<Rc<RefCell<SubstrateBatch>>>,
+    /// Span fusion permission for per-session backends. Pinned `false` in
+    /// batched deployments: the batched path samples single-step, and span
+    /// fusion consumes the RNG differently — a request's response must not
+    /// depend on whether it decoded in a slot or in the overflow path.
+    allow_span: bool,
 }
 
 impl SubstrateLlm {
@@ -123,7 +177,53 @@ impl SubstrateLlm {
             gen: Generator::with_mode(rt, model, device_resident)?,
             params,
             seed,
+            batch: None,
+            allow_span: true,
         })
+    }
+
+    /// Enable slot-batched decode with up to `max_slots` concurrent slots
+    /// (`[scheduler] decode_batch`). Builds a pool from the largest compiled
+    /// batch bucket that fits; falls back to per-session dispatch (with a
+    /// notice) when the artifact set predates batched decode.
+    pub fn with_decode_batch(self, max_slots: usize) -> Self {
+        self.with_decode_batch_opts(max_slots, true)
+    }
+
+    /// [`Self::with_decode_batch`] with pool construction optionally
+    /// suppressed (`build_pool = false`: the router's scheduler-off A/B
+    /// configuration, where a pool would only ever hold one live slot
+    /// while paying the full batch-width compute).
+    ///
+    /// Span fusion is pinned off whenever the artifact set CAN batch at
+    /// this slot budget — pool built or not — because the batched sampling
+    /// path is single-step and span fusion consumes the RNG differently: a
+    /// response must not depend on slot placement or on the scheduler A/B.
+    /// Artifact sets with no batch buckets keep span fusion (and today's
+    /// outputs) untouched — outputs already track compiled capabilities.
+    pub fn with_decode_batch_opts(mut self, max_slots: usize, build_pool: bool) -> Self {
+        if max_slots == 0 {
+            return self;
+        }
+        if !self.gen.batch_sizes().iter().any(|&b| b <= max_slots) {
+            eprintln!(
+                "[llm] {}: no batched decode artifacts ≤ {max_slots} slots \
+                 (run `make artifacts`); keeping per-session dispatch + span fusion",
+                self.gen.model_name
+            );
+            return self;
+        }
+        self.allow_span = false;
+        if build_pool {
+            let pool = self.gen.begin_batch(max_slots).expect("bucket fits");
+            self.batch = Some(Rc::new(RefCell::new(pool)));
+        }
+        self
+    }
+
+    /// Whether the slot-batched decode pool is live.
+    pub fn batched(&self) -> bool {
+        self.batch.is_some()
     }
 
     /// Per-request RNG substream; a pure function of (seed, model, prompt).
@@ -139,7 +239,37 @@ impl SubstrateLlm {
 
     fn begin(&mut self, segments: &[&str]) -> Result<Box<dyn LlmSession>> {
         let rng = self.session_rng(segments);
-        let session = self.gen.begin_session(segments, &self.params, rng)?;
+        if let Some(pool) = &self.batch {
+            // Only encode for the pool when a slot is actually free; a full
+            // pool overflows below without paying the tokenization twice.
+            if pool.borrow().free_slots() > 0 {
+                let (ids, len) = self
+                    .gen
+                    .tokenizer()
+                    .encode_prompt(segments, self.gen.max_prefill());
+                if len == 0 {
+                    bail!("empty prompt");
+                }
+                let slot = pool
+                    .borrow_mut()
+                    .admit(&ids, len, self.params, rng.clone())?
+                    .expect("a free slot was just observed");
+                return Ok(Box::new(BatchedLlmSession {
+                    pool: Rc::clone(pool),
+                    slot: Some(slot),
+                    tokenizer: self.gen.tokenizer().clone(),
+                }));
+            }
+            // Every slot occupied: overflow onto a per-session backend
+            // (single-step, same sampling path as the pool).
+        }
+        let session = self.gen.begin_session_opts(
+            segments,
+            &self.params,
+            rng,
+            self.gen.resident_available(),
+            self.allow_span,
+        )?;
         Ok(Box::new(SubstrateSession { session }))
     }
 
@@ -147,6 +277,54 @@ impl SubstrateLlm {
         let mut session = self.begin(segments)?;
         while session.advance()? {}
         session.finish()
+    }
+}
+
+/// A slot of the model's shared [`SubstrateBatch`] pool, behind the same
+/// per-session `advance()` protocol the scheduler already drives: the first
+/// session of a fairness round to advance triggers ONE masked batch
+/// dispatch for every live slot; its peers' `advance` calls consume the
+/// round credit for free. Dropping an unfinished session frees its slot.
+struct BatchedLlmSession {
+    pool: Rc<RefCell<SubstrateBatch>>,
+    /// `None` once finished (so Drop doesn't free a re-admitted slot).
+    slot: Option<usize>,
+    tokenizer: crate::tokenizer::Tokenizer,
+}
+
+impl LlmSession for BatchedLlmSession {
+    fn advance(&mut self) -> Result<bool> {
+        let slot = self.slot.expect("advance after finish");
+        self.pool.borrow_mut().advance(slot)
+    }
+
+    fn is_done(&self) -> bool {
+        match self.slot {
+            Some(slot) => self.pool.borrow().is_done(slot),
+            None => true,
+        }
+    }
+
+    fn finish(mut self: Box<Self>) -> Result<LlmResponse> {
+        let slot = self.slot.take().expect("finish twice");
+        let (token_ids, stats) = self.pool.borrow_mut().finish(slot)?;
+        Ok(LlmResponse {
+            text: self.tokenizer.decode(&token_ids),
+            usage: TokenUsage {
+                input_tokens: stats.prompt_tokens,
+                output_tokens: stats.generated_tokens,
+            },
+            prefill_micros: stats.prefill_micros,
+            decode_micros: stats.decode_micros,
+        })
+    }
+}
+
+impl Drop for BatchedLlmSession {
+    fn drop(&mut self) {
+        if let Some(slot) = self.slot.take() {
+            self.pool.borrow_mut().release(slot);
+        }
     }
 }
 
@@ -200,6 +378,17 @@ impl LanguageModel for SubstrateLlm {
     fn begin_tweak(&mut self, prompt: &TweakPrompt) -> Result<Box<dyn LlmSession>> {
         let segs = prompt.segments();
         self.begin(&segs.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+    }
+
+    fn batch_stats(&self) -> Option<BatchDecodeStats> {
+        self.batch.as_ref().map(|pool| {
+            let pool = pool.borrow();
+            BatchDecodeStats {
+                dispatches: pool.dispatches(),
+                active_slot_sum: pool.active_slot_sum(),
+                slots: pool.slot_count(),
+            }
+        })
     }
 }
 

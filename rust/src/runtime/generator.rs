@@ -386,6 +386,379 @@ impl DecodeBackend for ResidentBackend {
 }
 
 // ---------------------------------------------------------------------------
+// Slot-based batched resident decode (vLLM/Orca-style continuous batching).
+//
+// A [`BatchedDecode`] pool owns ONE device buffer `state[B * state_len]`
+// carved into B slots. Sessions claim a slot at prefill time (the
+// `{m}_prefill_scatter{B}` artifact writes their packed k ‖ v ‖ tail into
+// the slot) and free it at EOS; one `{m}_decode_batch{B}_res` call per
+// fairness round consumes per-slot `tokens[B]` / `pos[B]` plus an
+// `active[B]` mask and advances every live slot together — O(1) device
+// dispatches per round instead of O(S).
+//
+// The collective advance hides behind the per-session `advance()` protocol
+// via *round credits*: the first session of a scheduler sweep to call
+// `advance` triggers one batched round (host-sample every slot's pending
+// logits, one masked batch dispatch, one O(B·vocab) logits fetch) and
+// every other advanced slot banks a credit; peers' `advance` calls then
+// consume their credit for free. The scheduler needs no batching-specific
+// code path — its existing round-robin emerges as one dispatch per round.
+// ---------------------------------------------------------------------------
+
+/// The device transport behind a [`BatchedDecode`] pool: claim-slot prefill,
+/// one masked step for all slots, and the batched logits fetch. Implemented
+/// by [`PjrtBatchEngine`] over compiled artifacts and by fakes in tests
+/// (which is also how dispatch counts are asserted).
+pub trait BatchEngine {
+    /// Number of slots (the compiled batch width B).
+    fn slots(&self) -> usize;
+
+    /// Run one prompt through prefill and scatter its packed state into
+    /// `slot`. Every other slot's state is untouched.
+    fn prefill(&mut self, slot: usize, ids: &[i32], len: usize) -> Result<()>;
+
+    /// One masked decode step: slot `i` consumes `tokens[i]` at `pos[i]`
+    /// when `active[i] != 0`, and rides through unchanged otherwise.
+    fn step(&mut self, tokens: &[i32], pos: &[i32], active: &[i32]) -> Result<()>;
+
+    /// Fetch every slot's logits tail: `[slots * vocab]`, slot-major.
+    fn peek(&mut self) -> Result<Vec<f32>>;
+}
+
+/// The compiled artifact set for one batch-width bucket.
+pub struct BatchArtifacts {
+    /// Slot count B baked into the artifacts.
+    pub batch: usize,
+    /// Packed per-slot state width (k ‖ v ‖ tail).
+    pub state_len: usize,
+    /// Vocab width of the peeked logits rows.
+    pub vocab: usize,
+    prefill_scatter: Arc<Executable>,
+    decode: Arc<Executable>,
+    peek: Arc<Executable>,
+}
+
+/// PJRT-backed [`BatchEngine`]: the batched state lives in one device
+/// buffer fed straight back into the next call; per-round host traffic is
+/// the scalar slot inputs up and `B * vocab` logits down.
+pub struct PjrtBatchEngine {
+    set: Arc<BatchArtifacts>,
+    state: Option<xla::PjRtBuffer>,
+}
+
+impl PjrtBatchEngine {
+    fn store(&mut self, mut outs: Vec<xla::PjRtBuffer>, what: &str) -> Result<()> {
+        if outs.is_empty() {
+            bail!("{what} produced no output buffer");
+        }
+        self.state = Some(outs.remove(0));
+        Ok(())
+    }
+}
+
+impl BatchEngine for PjrtBatchEngine {
+    fn slots(&self) -> usize {
+        self.set.batch
+    }
+
+    fn prefill(&mut self, slot: usize, ids: &[i32], len: usize) -> Result<()> {
+        let len_in = [len as i32];
+        let slot_in = [slot as i32];
+        let outs = match self.state.take() {
+            Some(state) => self.set.prefill_scatter.run_raw(&[
+                ExecArg::I32(ids),
+                ExecArg::I32(&len_in),
+                ExecArg::I32(&slot_in),
+                ExecArg::Device(&state),
+            ])?,
+            None => {
+                // First claim ever: seed the batched state with zeros. One
+                // host upload for the pool's lifetime — every later call
+                // feeds the previous output buffer back.
+                let zeros = vec![0.0f32; self.set.batch * self.set.state_len];
+                self.set.prefill_scatter.run_raw(&[
+                    ExecArg::I32(ids),
+                    ExecArg::I32(&len_in),
+                    ExecArg::I32(&slot_in),
+                    ExecArg::F32(&zeros),
+                ])?
+            }
+        };
+        self.store(outs, "prefill_scatter")
+    }
+
+    fn step(&mut self, tokens: &[i32], pos: &[i32], active: &[i32]) -> Result<()> {
+        let state = self.state.take().context("batched step before any prefill")?;
+        let outs = self.set.decode.run_raw(&[
+            ExecArg::I32(tokens),
+            ExecArg::I32(pos),
+            ExecArg::I32(active),
+            ExecArg::Device(&state),
+        ])?;
+        self.store(outs, "decode_batch")
+    }
+
+    fn peek(&mut self) -> Result<Vec<f32>> {
+        let state = self.state.as_ref().context("no batched decode state")?;
+        let outs = self.set.peek.run_raw(&[ExecArg::Device(state)])?;
+        let lit = outs
+            .first()
+            .context("peek_logits_batch produced no output")?
+            .to_literal_sync()?;
+        to_f32_vec(&lit)
+    }
+}
+
+/// One live slot of a [`BatchedDecode`] pool. Sampling state is fully
+/// per-slot (own RNG, own scratch), so the token stream stays a pure
+/// function of the request — batched ≡ sequential bit for bit.
+struct SlotState {
+    params: SamplingParams,
+    rng: Rng,
+    scratch: SampleScratch,
+    prompt_len: usize,
+    max_new: usize,
+    generated: Vec<i32>,
+    /// Logits awaiting a host-side sample (from prefill or the last round).
+    pending: Option<Vec<f32>>,
+    /// Rounds this slot was advanced in that its owner has not yet
+    /// observed via `advance()` — the collective-advance bookkeeping.
+    credits: u32,
+    done: bool,
+    stats: GenerationStats,
+}
+
+/// Slot pool driving B concurrent single-step decodes through one
+/// [`BatchEngine`]. Sessions admit into a free slot, the owner (one
+/// [`crate::llm::LlmSession`] per slot) calls `advance(slot)` round-robin,
+/// and the pool turns each sweep into exactly one masked batch dispatch.
+pub struct BatchedDecode<E: BatchEngine> {
+    engine: E,
+    vocab: usize,
+    max_seq: usize,
+    slots: Vec<Option<SlotState>>,
+    tokens: Vec<i32>,
+    pos: Vec<i32>,
+    active: Vec<i32>,
+    /// Lifetime batched decode dispatches (the `batched_steps` stat).
+    dispatches: u64,
+    /// Sum of active slot counts over all dispatches (mean occupancy).
+    active_slot_sum: u64,
+}
+
+impl<E: BatchEngine> BatchedDecode<E> {
+    pub fn new(engine: E, vocab: usize, max_seq: usize) -> BatchedDecode<E> {
+        let b = engine.slots();
+        BatchedDecode {
+            engine,
+            vocab,
+            max_seq,
+            slots: (0..b).map(|_| None).collect(),
+            tokens: vec![0; b],
+            pos: vec![0; b],
+            active: vec![0; b],
+            dispatches: 0,
+            active_slot_sum: 0,
+        }
+    }
+
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches
+    }
+
+    pub fn active_slot_sum(&self) -> u64 {
+        self.active_slot_sum
+    }
+
+    /// The transport behind this pool (dispatch-count assertions in tests).
+    pub fn engine(&self) -> &E {
+        &self.engine
+    }
+
+    /// Claim a free slot and run the prompt through the scatter prefill.
+    /// Returns `None` when every slot is occupied (callers fall back to a
+    /// per-session backend); admission into a freed slot can happen at any
+    /// time — the next round simply includes it (mid-flight admission).
+    pub fn admit(
+        &mut self,
+        ids: &[i32],
+        prompt_len: usize,
+        params: SamplingParams,
+        rng: Rng,
+    ) -> Result<Option<usize>> {
+        if prompt_len == 0 {
+            bail!("empty prompt");
+        }
+        let slot = match self.slots.iter().position(|s| s.is_none()) {
+            Some(s) => s,
+            None => return Ok(None),
+        };
+        let t0 = std::time::Instant::now();
+        self.engine.prefill(slot, ids, prompt_len)?;
+        let all = self.engine.peek()?;
+        let logits = all[slot * self.vocab..(slot + 1) * self.vocab].to_vec();
+        let max_new = params.max_new_tokens.min(self.max_seq.saturating_sub(prompt_len));
+        let stats = GenerationStats {
+            prompt_tokens: prompt_len,
+            prefill_micros: t0.elapsed().as_micros(),
+            device_resident: true,
+            ..Default::default()
+        };
+        self.slots[slot] = Some(SlotState {
+            params,
+            rng,
+            scratch: SampleScratch::default(),
+            prompt_len,
+            max_new,
+            generated: Vec::with_capacity(max_new),
+            pending: (max_new > 0).then_some(logits),
+            credits: 0,
+            done: max_new == 0,
+            stats,
+        });
+        Ok(Some(slot))
+    }
+
+    fn slot_mut(&mut self, slot: usize) -> Result<&mut SlotState> {
+        self.slots
+            .get_mut(slot)
+            .and_then(|s| s.as_mut())
+            .with_context(|| format!("slot {slot} is not live"))
+    }
+
+    /// One unit of decode work for `slot`; `true` while work remains.
+    ///
+    /// If the slot was already advanced by a round a peer triggered this
+    /// sweep, the banked credit is consumed for free; otherwise one
+    /// collective round runs — every live slot gets sampled and stepped in
+    /// a single batch dispatch.
+    pub fn advance(&mut self, slot: usize) -> Result<bool> {
+        {
+            let s = self.slot_mut(slot)?;
+            if s.done {
+                return Ok(false);
+            }
+            if s.credits > 0 {
+                s.credits -= 1;
+                return Ok(true);
+            }
+        }
+        self.run_round()?;
+        let s = self.slot_mut(slot)?;
+        // The triggering slot's share of the round is this very call.
+        if s.credits > 0 {
+            s.credits -= 1;
+        }
+        Ok(!s.done)
+    }
+
+    /// One collective round: host-sample every slot holding fresh logits,
+    /// then advance all still-live slots in ONE masked batch dispatch and
+    /// ONE batched logits fetch.
+    fn run_round(&mut self) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        // 1) sample phase (host, per-slot RNG — order-independent)
+        for s in self.slots.iter_mut().flatten() {
+            if s.done {
+                continue;
+            }
+            let logits = match s.pending.take() {
+                Some(l) => l,
+                None => continue,
+            };
+            let tok = sample_token_with(&logits, &s.params, &mut s.rng, &mut s.scratch);
+            s.generated.push(tok);
+            if tok == EOS_ID || s.generated.len() >= s.max_new {
+                s.done = true;
+            }
+        }
+        // 2) gather every still-live slot into the masked step inputs
+        for i in 0..self.slots.len() {
+            self.tokens[i] = 0;
+            self.pos[i] = 0;
+            self.active[i] = 0;
+        }
+        let mut n_active = 0u64;
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(s) = s {
+                if !s.done {
+                    self.tokens[i] = *s.generated.last().expect("live slot has a token");
+                    self.pos[i] = (s.prompt_len + s.generated.len() - 1) as i32;
+                    self.active[i] = 1;
+                    n_active += 1;
+                }
+            }
+        }
+        if n_active == 0 {
+            return Ok(());
+        }
+        // 3) one dispatch + one fetch for everyone
+        self.engine.step(&self.tokens, &self.pos, &self.active)?;
+        let all = self.engine.peek()?;
+        self.dispatches += 1;
+        self.active_slot_sum += n_active;
+        let round_micros = t0.elapsed().as_micros();
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if self.active[i] == 0 {
+                continue;
+            }
+            let s = s.as_mut().expect("active slot is live");
+            s.pending = Some(all[i * self.vocab..(i + 1) * self.vocab].to_vec());
+            s.credits += 1;
+            // Occupancy semantics (like the scheduler's gen_micros): each
+            // participant shared this round's wall time.
+            s.stats.decode_micros += round_micros;
+        }
+        Ok(())
+    }
+
+    pub fn is_done(&self, slot: usize) -> bool {
+        match self.slots.get(slot).and_then(|s| s.as_ref()) {
+            Some(s) => s.done,
+            None => true, // free slots have no work left
+        }
+    }
+
+    /// Tokens generated so far in `slot`.
+    pub fn tokens(&self, slot: usize) -> &[i32] {
+        match self.slots.get(slot).and_then(|s| s.as_ref()) {
+            Some(s) => &s.generated,
+            None => &[],
+        }
+    }
+
+    /// Consume the slot into its finished stream + stats, freeing it for
+    /// the next admission.
+    pub fn finish(&mut self, slot: usize) -> Result<(Vec<i32>, GenerationStats)> {
+        let mut s = self
+            .slots
+            .get_mut(slot)
+            .and_then(|s| s.take())
+            .with_context(|| format!("slot {slot} is not live"))?;
+        s.stats.generated_tokens = s.generated.len();
+        Ok((s.generated, s.stats))
+    }
+
+    /// Free a slot without collecting its stream (abandoned session).
+    pub fn release(&mut self, slot: usize) {
+        if let Some(s) = self.slots.get_mut(slot) {
+            *s = None;
+        }
+    }
+}
+
+/// The substrate-backed pool type the LLM layer holds.
+pub type SubstrateBatch = BatchedDecode<PjrtBatchEngine>;
+
+// ---------------------------------------------------------------------------
 // Decode session (the transport-independent state machine)
 // ---------------------------------------------------------------------------
 
@@ -423,11 +796,27 @@ impl<B: DecodeBackend> DecodeSession<B> {
     /// top-k (greedy works too: temperature ~ 0 collapses the in-graph
     /// softmax onto the argmax).
     pub fn start(
+        backend: B,
+        params: SamplingParams,
+        ids: &[i32],
+        prompt_len: usize,
+        max_seq: usize,
+    ) -> Result<Self> {
+        Self::start_opts(backend, params, ids, prompt_len, max_seq, true)
+    }
+
+    /// [`Self::start`] with span fusion optionally disabled. Batched-decode
+    /// deployments pin `allow_span = false` on their per-session overflow
+    /// sessions: the batched path is single-step by construction, and span
+    /// vs single-step consume the RNG differently, so mixing them would
+    /// make a response depend on which path happened to serve it.
+    pub fn start_opts(
         mut backend: B,
         params: SamplingParams,
         ids: &[i32],
         prompt_len: usize,
         max_seq: usize,
+        allow_span: bool,
     ) -> Result<Self> {
         if prompt_len == 0 {
             bail!("empty prompt");
@@ -441,10 +830,13 @@ impl<B: DecodeBackend> DecodeSession<B> {
             ..Default::default()
         };
         let max_new = params.max_new_tokens.min(max_seq.saturating_sub(prompt_len));
-        let use_span = backend
-            .span_n()
-            .map(|n| max_new >= n && (params.top_k == SPAN_TOP_K || params.temperature <= 0.0))
-            .unwrap_or(false);
+        let use_span = allow_span
+            && backend
+                .span_n()
+                .map(|n| {
+                    max_new >= n && (params.top_k == SPAN_TOP_K || params.temperature <= 0.0)
+                })
+                .unwrap_or(false);
         let phase = if max_new == 0 { Phase::Done } else { Phase::Sample { logits } };
         Ok(DecodeSession {
             backend,
@@ -547,6 +939,9 @@ pub struct Generator {
     /// packed-state convention or `[runtime] device_resident = false`.
     /// `Arc` so every live session shares one set while owning its state.
     resident: Option<Arc<ResidentSet>>,
+    /// Slot-batched decode buckets (ascending batch width); empty when the
+    /// artifact set predates batched decode or resident mode is pinned off.
+    batched: Vec<Arc<BatchArtifacts>>,
     kv_spec: IoSpec,
     tokenizer: Tokenizer,
     pub model_name: String,
@@ -612,6 +1007,58 @@ fn discover_resident(
     Some(ResidentSet { prefill, decode, peek_logits, span })
 }
 
+/// Discover the `{model}_prefill_scatter{B}` / `{model}_decode_batch{B}_res`
+/// / `{model}_peek_logits_batch{B}` bucket sets, validating that each bucket
+/// agrees on the batched state width and the logits row width. Inconsistent
+/// or incomplete buckets are skipped (with a notice) rather than failing —
+/// pre-batched artifact dirs simply yield an empty list and the per-session
+/// path keeps serving.
+fn discover_batched(rt: &Runtime, model: &str, vocab: usize) -> Vec<Arc<BatchArtifacts>> {
+    let mut out = Vec::new();
+    for b in rt.manifest.batch_buckets(model) {
+        let decode = rt.executable(&format!("{model}_decode_batch{b}_res")).ok();
+        let scatter = rt.executable(&format!("{model}_prefill_scatter{b}")).ok();
+        let peek = rt.executable(&format!("{model}_peek_logits_batch{b}")).ok();
+        let (decode, scatter, peek) = match (decode, scatter, peek) {
+            (Some(d), Some(s), Some(p)) => (d, s, p),
+            // tolerate selective loading (tests compile only a subset)
+            _ => continue,
+        };
+        let batch_numel = decode.spec.inputs.last().map_or(0, |i| i.numel());
+        let consistent = decode.spec.untupled
+            && scatter.spec.untupled
+            && peek.spec.untupled
+            && decode.spec.inputs.len() == 4
+            && batch_numel > 0
+            && batch_numel % b == 0
+            && decode.spec.inputs[0].numel() == b
+            && decode.spec.inputs[1].numel() == b
+            && decode.spec.inputs[2].numel() == b
+            && decode.spec.outputs.first().map(|o| o.numel()) == Some(batch_numel)
+            && scatter.spec.inputs.len() == 4
+            && scatter.spec.inputs[3].numel() == batch_numel
+            && scatter.spec.outputs.first().map(|o| o.numel()) == Some(batch_numel)
+            && peek.spec.inputs.first().map(|i| i.numel()) == Some(batch_numel)
+            && peek.spec.outputs.first().map(|o| o.numel()) == Some(b * vocab);
+        if !consistent {
+            eprintln!(
+                "[runtime] {model}: batch{b} artifacts inconsistent; bucket skipped"
+            );
+            continue;
+        }
+        out.push(Arc::new(BatchArtifacts {
+            batch: b,
+            state_len: batch_numel / b,
+            vocab,
+            prefill_scatter: scatter,
+            decode,
+            peek,
+        }));
+    }
+    out.sort_by_key(|a| a.batch);
+    out
+}
+
 impl Generator {
     /// `model` is "small" or "big" (manifest model names). Prefers the
     /// device-resident transport when its artifacts are compiled.
@@ -638,10 +1085,13 @@ impl Generator {
             .max_by_key(|(n, _)| *n)
             // tolerate selective loading (tests compile only a subset)
             .and_then(|(n, name)| rt.executable(&name).ok().map(|e| (n, e)));
-        let resident = if device_resident {
-            discover_resident(rt, model, span.as_ref().map(|(n, _)| *n)).map(Arc::new)
+        let (resident, batched) = if device_resident {
+            (
+                discover_resident(rt, model, span.as_ref().map(|(n, _)| *n)).map(Arc::new),
+                discover_batched(rt, model, rt.manifest.vocab_size),
+            )
         } else {
-            None
+            (None, Vec::new())
         };
         let decode = rt.executable(&format!("{model}_decode"))?;
         let kv_spec = decode.spec.inputs[2].clone();
@@ -650,6 +1100,7 @@ impl Generator {
             decode,
             span,
             resident,
+            batched,
             kv_spec,
             tokenizer: Tokenizer::new(rt.manifest.vocab_size),
             model_name: model.to_string(),
@@ -673,6 +1124,26 @@ impl Generator {
     /// Whether the device-resident transport is available.
     pub fn resident_available(&self) -> bool {
         self.resident.is_some()
+    }
+
+    /// Compiled batched-decode buckets (slot counts), ascending. Empty when
+    /// the artifact dir predates batched decode (per-session fallback).
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.batched.iter().map(|a| a.batch).collect()
+    }
+
+    /// Build a slot-batched decode pool using the largest compiled bucket
+    /// that fits `max_slots` (`[scheduler] decode_batch`). `None` when no
+    /// bucket fits or batched artifacts are absent — callers keep serving
+    /// through per-session dispatch.
+    pub fn begin_batch(&self, max_slots: usize) -> Option<SubstrateBatch> {
+        let set = self
+            .batched
+            .iter()
+            .filter(|a| a.batch <= max_slots)
+            .max_by_key(|a| a.batch)?;
+        let engine = PjrtBatchEngine { set: Arc::clone(set), state: None };
+        Some(BatchedDecode::new(engine, set.vocab, self.max_seq))
     }
 
     /// Generate a completion for a prompt built from `segments`
@@ -726,6 +1197,21 @@ impl Generator {
         rng: Rng,
         resident: bool,
     ) -> Result<GenSession> {
+        self.begin_session_opts(segments, params, rng, resident, true)
+    }
+
+    /// `begin_session_on` with span fusion optionally disabled
+    /// (`allow_span = false`): the per-session overflow path of a batched
+    /// deployment, where every stream must take the single-step sampling
+    /// path the batch pool takes.
+    pub fn begin_session_opts(
+        &self,
+        segments: &[&str],
+        params: &SamplingParams,
+        rng: Rng,
+        resident: bool,
+        allow_span: bool,
+    ) -> Result<GenSession> {
         let (ids, len) = self.tokenizer.encode_prompt(segments, self.max_prefill);
         if len == 0 {
             bail!("empty prompt");
@@ -736,7 +1222,14 @@ impl Generator {
                 .as_ref()
                 .context("device-resident artifacts not compiled")?;
             let backend = ResidentBackend { set: Arc::clone(set), state: None };
-            let s = DecodeSession::start(backend, *params, &ids, len, self.max_seq)?;
+            let s = DecodeSession::start_opts(
+                backend,
+                *params,
+                &ids,
+                len,
+                self.max_seq,
+                allow_span,
+            )?;
             SessionInner::Resident(s)
         } else {
             let backend = LiteralBackend {
@@ -747,7 +1240,14 @@ impl Generator {
                 k: None,
                 v: None,
             };
-            let s = DecodeSession::start(backend, *params, &ids, len, self.max_seq)?;
+            let s = DecodeSession::start_opts(
+                backend,
+                *params,
+                &ids,
+                len,
+                self.max_seq,
+                allow_span,
+            )?;
             SessionInner::Literal(s)
         };
         Ok(GenSession { inner, rng, tokenizer: self.tokenizer.clone() })
@@ -920,7 +1420,10 @@ mod tests {
             let tok = self.script[self.emitted];
             self.emitted += 1;
             let mut l = vec![0.0f32; self.vocab];
-            l[tok as usize] = 10.0;
+            // Spike tall enough that top-k temperature sampling is always
+            // on-script (exp(-200) underflows to 0), so scripted fakes with
+            // different transports stay token-for-token comparable.
+            l[tok as usize] = 200.0;
             l
         }
     }
@@ -1079,6 +1582,230 @@ mod tests {
         }
         let interleaved: Vec<Vec<i32>> = live.into_iter().map(|(s, _)| s.finish().0).collect();
         assert_eq!(interleaved, sequential);
+    }
+
+    // -----------------------------------------------------------------------
+    // BatchedDecode slot pool over a scripted fake engine: the collective
+    // advance protocol (credits), O(1) dispatches per fairness round, slot
+    // reuse / mid-flight admission, and batched ≡ per-session bit-identity.
+    // -----------------------------------------------------------------------
+
+    struct FakeBatchEngine {
+        slots: usize,
+        vocab: usize,
+        /// Scripts handed out to admissions, in order.
+        queue: std::collections::VecDeque<Vec<i32>>,
+        scripts: Vec<Vec<i32>>,
+        emitted: Vec<usize>,
+        staged: Vec<f32>,
+        dispatches: u64,
+        prefills: u64,
+    }
+
+    impl FakeBatchEngine {
+        fn new(slots: usize, scripts: Vec<Vec<i32>>) -> FakeBatchEngine {
+            FakeBatchEngine {
+                slots,
+                vocab: 32,
+                queue: scripts.into(),
+                scripts: vec![Vec::new(); slots],
+                emitted: vec![0; slots],
+                staged: vec![0.0; slots * 32],
+                dispatches: 0,
+                prefills: 0,
+            }
+        }
+
+        /// Stage the slot's next scripted token as a dominant logit spike
+        /// (same 200.0 convention as `FakeBackend`).
+        fn stage(&mut self, slot: usize) {
+            let tok = self.scripts[slot]
+                .get(self.emitted[slot])
+                .copied()
+                .unwrap_or(EOS_ID);
+            let row = &mut self.staged[slot * self.vocab..(slot + 1) * self.vocab];
+            row.fill(0.0);
+            row[tok as usize] = 200.0;
+        }
+    }
+
+    impl BatchEngine for FakeBatchEngine {
+        fn slots(&self) -> usize {
+            self.slots
+        }
+
+        fn prefill(&mut self, slot: usize, ids: &[i32], len: usize) -> Result<()> {
+            assert!(ids.len() >= len && len > 0);
+            self.prefills += 1;
+            self.scripts[slot] = self.queue.pop_front().expect("a script per admission");
+            self.emitted[slot] = 0;
+            self.stage(slot);
+            Ok(())
+        }
+
+        fn step(&mut self, tokens: &[i32], pos: &[i32], active: &[i32]) -> Result<()> {
+            assert_eq!(tokens.len(), self.slots);
+            self.dispatches += 1;
+            for i in 0..self.slots {
+                if active[i] == 0 {
+                    continue;
+                }
+                assert_eq!(
+                    tokens[i], self.scripts[i][self.emitted[i]],
+                    "slot {i} echoed a token off its script"
+                );
+                assert!(pos[i] >= 0);
+                self.emitted[i] += 1;
+                self.stage(i);
+            }
+            Ok(())
+        }
+
+        fn peek(&mut self) -> Result<Vec<f32>> {
+            Ok(self.staged.clone())
+        }
+    }
+
+    /// Drive live slots the way the scheduler does: one `advance` per live
+    /// slot per sweep, until everything is done.
+    fn sweep_until_done(pool: &mut BatchedDecode<FakeBatchEngine>, slots: &[usize]) {
+        while slots.iter().any(|&s| !pool.is_done(s)) {
+            for &s in slots {
+                if !pool.is_done(s) {
+                    pool.advance(s).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_pool_matches_per_session_streams() {
+        // The tentpole identity gate in miniature: S slots advanced
+        // collectively must emit bit-identical streams to S independent
+        // single-step sessions with the same per-session RNG substreams.
+        let params = SamplingParams { temperature: 1.0, top_k: 7, max_new_tokens: 6 };
+        let scripts: [Vec<i32>; 3] = [
+            vec![10, 11, 12, 13, 14, 15],
+            vec![20, 21, EOS_ID, 9, 9, 9],
+            vec![5, 6, 7, 8, EOS_ID, 9],
+        ];
+        let ids = [1, 1, 1];
+        let sequential: Vec<Vec<i32>> = scripts
+            .iter()
+            .enumerate()
+            .map(|(i, script)| {
+                let b = FakeBackend::new(None, script.clone());
+                let mut s = DecodeSession::start(b, params, &ids, 3, 64).unwrap();
+                s.run(&mut Rng::substream(7, &format!("session/{i}"))).unwrap();
+                s.finish().0
+            })
+            .collect();
+        let mut pool = BatchedDecode::new(FakeBatchEngine::new(4, scripts.to_vec()), 32, 64);
+        let slots: Vec<usize> = (0..scripts.len())
+            .map(|i| {
+                pool.admit(&ids, 3, params, Rng::substream(7, &format!("session/{i}")))
+                    .unwrap()
+                    .expect("free slot")
+            })
+            .collect();
+        sweep_until_done(&mut pool, &slots);
+        let batched: Vec<Vec<i32>> = slots.iter().map(|&s| pool.finish(s).unwrap().0).collect();
+        assert_eq!(batched, sequential);
+    }
+
+    #[test]
+    fn fairness_round_is_one_dispatch() {
+        // 4 live slots, equal-length scripts: each scheduler sweep must cost
+        // exactly ONE batch dispatch — O(1), not O(slots × steps).
+        // distinct per-slot token scripts, all inside the fake's 32-vocab
+        let scripts: Vec<Vec<i32>> = (0..4)
+            .map(|s| (0..6).map(|i| 4 + s * 6 + i).collect())
+            .collect();
+        let mut pool = BatchedDecode::new(FakeBatchEngine::new(4, scripts), 32, 64);
+        let ids = [1, 1, 1];
+        let slots: Vec<usize> = (0..4)
+            .map(|i| {
+                pool.admit(&ids, 3, SamplingParams::greedy(6), Rng::new(i))
+                    .unwrap()
+                    .expect("free slot")
+            })
+            .collect();
+        sweep_until_done(&mut pool, &slots);
+        for &s in &slots {
+            assert_eq!(pool.tokens(s).len(), 6);
+        }
+        // 6 sampled tokens per slot = 5 steps; one dispatch per round, all
+        // four slots riding each one.
+        assert_eq!(pool.dispatches(), 5, "rounds, not slots × steps (= 20)");
+        assert_eq!(pool.active_slot_sum(), 20);
+        assert_eq!(pool.engine().prefills, 4);
+    }
+
+    #[test]
+    fn slot_reuse_and_midflight_admission() {
+        // A mid-batch EOS frees its slot; a third session admits into it
+        // while the other slot is still decoding, and every stream is
+        // exactly its script.
+        let scripts = vec![
+            vec![10, EOS_ID],
+            vec![20, 21, 22, 23, 24, 25, 26, 27],
+            vec![30, 31, EOS_ID],
+        ];
+        let mut pool = BatchedDecode::new(FakeBatchEngine::new(2, scripts), 32, 64);
+        let ids = [1, 1, 1];
+        let p = SamplingParams::greedy(8);
+        let a = pool.admit(&ids, 3, p, Rng::new(1)).unwrap().expect("slot");
+        let b = pool.admit(&ids, 3, p, Rng::new(2)).unwrap().expect("slot");
+        assert_eq!(pool.free_slots(), 0);
+        assert!(pool.admit(&ids, 3, p, Rng::new(3)).unwrap().is_none(), "pool full");
+        while !pool.is_done(a) {
+            pool.advance(a).unwrap();
+            pool.advance(b).unwrap();
+        }
+        let (tok_a, stats_a) = pool.finish(a).unwrap();
+        assert_eq!(tok_a, vec![10, EOS_ID]);
+        assert_eq!(stats_a.generated_tokens, 2);
+        assert!(stats_a.device_resident);
+        let c = pool.admit(&ids, 3, p, Rng::new(3)).unwrap().expect("freed slot");
+        assert_eq!(c, a, "mid-batch EOS must free its slot for reuse");
+        sweep_until_done(&mut pool, &[b, c]);
+        let (tok_b, _) = pool.finish(b).unwrap();
+        let (tok_c, _) = pool.finish(c).unwrap();
+        assert_eq!(tok_b, vec![20, 21, 22, 23, 24, 25, 26, 27]);
+        assert_eq!(tok_c, vec![30, 31, EOS_ID]);
+        assert_eq!(pool.free_slots(), 2);
+    }
+
+    #[test]
+    fn batched_pool_edge_cases() {
+        let mut pool = BatchedDecode::new(
+            FakeBatchEngine::new(2, vec![vec![5, 6, 7]]),
+            32,
+            8, // max_seq
+        );
+        let ids8 = [1, 1, 1, 1, 1, 1, 1, 1];
+        assert!(
+            pool.admit(&ids8, 0, SamplingParams::greedy(4), Rng::new(1)).is_err(),
+            "empty prompt must error"
+        );
+        // prompt_len == max_seq → zero token budget: done at admission, no
+        // decode dispatch ever issued.
+        let s = pool
+            .admit(&ids8, 8, SamplingParams::greedy(4), Rng::new(1))
+            .unwrap()
+            .expect("slot");
+        assert!(pool.is_done(s));
+        assert!(!pool.advance(s).unwrap());
+        let (toks, stats) = pool.finish(s).unwrap();
+        assert!(toks.is_empty());
+        assert_eq!(stats.generated_tokens, 0);
+        assert_eq!(pool.dispatches(), 0);
+        // operating on a free slot is an error / no-op
+        assert!(pool.advance(s).is_err());
+        assert!(pool.finish(s).is_err());
+        assert!(pool.is_done(s), "free slots report done");
+        pool.release(s); // idempotent
+        assert_eq!(pool.free_slots(), 2);
     }
 
     #[test]

@@ -192,6 +192,22 @@ impl Manifest {
             .with_context(|| format!("artifact {name:?} not in manifest"))
     }
 
+    /// Slot-batched decode bucket sizes compiled for `model` (ascending):
+    /// every `B` with a `{model}_decode_batch{B}_res` manifest entry. Empty
+    /// for pre-batched artifact sets — callers fall back to per-session
+    /// decode dispatch.
+    pub fn batch_buckets(&self, model: &str) -> Vec<usize> {
+        let prefix = format!("{model}_decode_batch");
+        let mut out: Vec<usize> = self
+            .artifacts
+            .keys()
+            .filter_map(|name| name.strip_prefix(&prefix)?.strip_suffix("_res")?.parse().ok())
+            .filter(|&b| b > 0)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
     pub fn model(&self, name: &str) -> Result<&ModelSpec> {
         self.models
             .get(name)
@@ -232,6 +248,37 @@ mod tests {
         assert!(m.artifact("b").unwrap().untupled);
         assert_eq!(m.model("m").unwrap().cfg("d_model").unwrap(), 128);
         assert!(m.artifact("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_buckets_enumerates_batched_decode_sizes() {
+        let dir =
+            std::env::temp_dir().join(format!("twk-man-bb-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let art = |name: &str| {
+            format!(
+                r#"{{"name":"{name}","file":"{name}.hlo.txt",
+                    "n_weight_args":0,"untupled":true,
+                    "inputs":[{{"name":"x","shape":[4],"dtype":"float32"}}],
+                    "outputs":[{{"name":"y","shape":[4],"dtype":"float32"}}]}}"#
+            )
+        };
+        std::fs::write(
+            dir.join("manifest.json"),
+            format!(
+                r#"{{"format":"hlo-text-v1","vocab_size":8,"embed_dim":4,
+                    "models":{{}},"artifacts":[{},{},{},{}]}}"#,
+                art("m_decode_batch8_res"),
+                art("m_decode_batch4_res"),
+                art("m_decode_batchx_res"), // unparsable size: skipped
+                art("m_decode"),            // per-session artifact: skipped
+            ),
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch_buckets("m"), vec![4, 8]);
+        assert!(m.batch_buckets("other").is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

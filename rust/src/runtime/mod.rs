@@ -12,6 +12,11 @@
 //! root), whose result buffer feeds straight back into the next execution:
 //! the device-resident decode convention (DESIGN.md §Perf L2). Weights are
 //! loaded once per model and shared across that model's executables.
+//!
+//! The slot-batched decode artifacts (`{m}_prefill_scatter{B}` /
+//! `{m}_decode_batch{B}_res` / `{m}_peek_logits_batch{B}`) extend the same
+//! convention to a `B * state_len` buffer carved into B slots; see
+//! [`generator::BatchedDecode`].
 
 pub mod embedder;
 pub mod generator;
@@ -26,8 +31,9 @@ use anyhow::{bail, Context, Result};
 pub use embedder::{Embedder, NativeBowEmbedder, TextEmbedder};
 pub use generator::Generation;
 pub use generator::{
-    sample_token, sample_token_with, DecodeBackend, DecodeSession, GenSession, Generator,
-    GenerationStats, SampleScratch, SamplingParams,
+    sample_token, sample_token_with, BatchEngine, BatchedDecode, DecodeBackend, DecodeSession,
+    GenSession, Generator, GenerationStats, PjrtBatchEngine, SampleScratch, SamplingParams,
+    SubstrateBatch,
 };
 pub use manifest::{ArtifactSpec, Dtype, IoSpec, Manifest};
 

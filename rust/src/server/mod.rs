@@ -13,12 +13,19 @@
 //! PJRT client and does the batching). Connection reads carry a short
 //! timeout so idle connections observe the stop flag instead of pinning
 //! their thread in a blocking read forever.
+//!
+//! The accept loop itself runs BLOCKING: the pre-PR-5 loop used nonblocking
+//! `accept` + a 5 ms sleep poll, which quantized every cold connect by up
+//! to 5 ms of added latency. Connections are now accepted the instant they
+//! arrive; shutdown wakes the blocked `accept` with a self-connect
+//! ([`Shutdown::signal`]).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -39,6 +46,41 @@ pub struct Server {
     stop: Arc<AtomicBool>,
 }
 
+/// Stop handle for a serving [`Server`]: raises the stop flag AND wakes the
+/// blocked `accept` with a self-connect, so shutdown is immediate without
+/// the accept loop ever polling.
+#[derive(Clone)]
+pub struct Shutdown {
+    stop: Arc<AtomicBool>,
+    addr: std::net::SocketAddr,
+}
+
+impl Shutdown {
+    /// Ask the server to stop serving. Idempotent; returns once the wake
+    /// connection has been issued (the serve loop exits on observing it).
+    pub fn signal(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake the blocking accept with a self-connect. A wildcard bind
+        // address (0.0.0.0 / ::) is not portably connectable — rewrite it
+        // to the matching loopback. A failure (listener already closed)
+        // means the loop is past accepting — nothing to wake.
+        let mut addr = self.addr;
+        if addr.ip().is_unspecified() {
+            match addr {
+                std::net::SocketAddr::V4(_) => {
+                    addr.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST))
+                }
+                std::net::SocketAddr::V6(_) => {
+                    addr.set_ip(std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST))
+                }
+            }
+        }
+        if let Ok(s) = TcpStream::connect_timeout(&addr, Duration::from_secs(1)) {
+            drop(s);
+        }
+    }
+}
+
 impl Server {
     pub fn bind(addr: &str, handle: EngineHandle) -> Result<Server> {
         let listener =
@@ -50,29 +92,35 @@ impl Server {
         Ok(self.listener.local_addr()?)
     }
 
-    pub fn stop_flag(&self) -> Arc<AtomicBool> {
-        Arc::clone(&self.stop)
+    /// Handle that stops a running `serve` loop (flag + accept wake).
+    pub fn shutdown_handle(&self) -> Result<Shutdown> {
+        Ok(Shutdown { stop: Arc::clone(&self.stop), addr: self.listener.local_addr()? })
     }
 
-    /// Serve until the stop flag is raised. Blocks the calling thread.
+    /// Serve until [`Shutdown::signal`]. Blocks the calling thread; every
+    /// connect is accepted the moment it arrives (blocking accept — no
+    /// poll-interval quantization on cold-connect latency).
     pub fn serve(&self) -> Result<()> {
-        self.listener.set_nonblocking(true)?;
         loop {
-            if self.stop.load(Ordering::Relaxed) {
-                return Ok(());
-            }
             match self.listener.accept() {
                 Ok((stream, _)) => {
+                    // Check AFTER accept too: the shutdown wake arrives as a
+                    // connection; it (and any connect racing it) is dropped.
+                    if self.stop.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
                     let handle = self.handle.clone();
                     let stop = Arc::clone(&self.stop);
                     thread::spawn(move || {
                         let _ = handle_connection(stream, handle, stop);
                     });
                 }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    thread::sleep(std::time::Duration::from_millis(5));
+                Err(e) => {
+                    if self.stop.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
+                    return Err(e.into());
                 }
-                Err(e) => return Err(e.into()),
             }
         }
     }
@@ -142,6 +190,8 @@ fn process_line(line: &str, handle: &EngineHandle) -> Json {
                 ("active_sessions", Json::num(s.active_sessions as f64)),
                 ("waiting_sessions", Json::num(s.waiting_sessions as f64)),
                 ("coalesced", Json::num(s.coalesced as f64)),
+                ("batched_steps", Json::num(s.batched_steps as f64)),
+                ("mean_active_slots", Json::num(s.mean_active_slots)),
                 ("cost_dollars", Json::num(s.cost_dollars)),
                 ("baseline_dollars", Json::num(s.baseline_dollars)),
                 ("latency_table", Json::s(s.latency_table)),

@@ -154,10 +154,127 @@ fn tweak_hit_overtakes_inflight_miss() {
 /// the full prompt — the same contract `SubstrateLlm` honors. If sessions
 /// leaked RNG state across each other, the concurrent (interleaved) run
 /// below would diverge from the sequential one.
+///
+/// With `pool` set, sessions claim slots in a shared collective-advance
+/// pool (the credit protocol of `runtime::BatchedDecode`): one "dispatch"
+/// per fairness round emits a token for every live slot from its own RNG,
+/// and overflow sessions fall back to independent pacing — the mock twin of
+/// the batched substrate path, so batched ≡ per-session response identity
+/// is gateable end-to-end through the engine.
 struct SeededLlm {
     name: String,
     seed: u64,
     steps: usize,
+    pool: Option<std::sync::Arc<std::sync::Mutex<SeededBatchPool>>>,
+}
+
+struct SeededBatchPool {
+    slots: Vec<Option<SeededSlot>>,
+    dispatches: u64,
+}
+
+struct SeededSlot {
+    rng: Rng,
+    steps: usize,
+    emitted: Vec<String>,
+    credits: u32,
+}
+
+impl SeededBatchPool {
+    fn new(slots: usize) -> SeededBatchPool {
+        SeededBatchPool { slots: (0..slots).map(|_| None).collect(), dispatches: 0 }
+    }
+
+    fn admit(&mut self, rng: Rng, steps: usize) -> Option<usize> {
+        let slot = self.slots.iter().position(|s| s.is_none())?;
+        self.slots[slot] =
+            Some(SeededSlot { rng, steps, emitted: Vec::new(), credits: 0 });
+        Some(slot)
+    }
+
+    fn is_done(&self, slot: usize) -> bool {
+        match self.slots.get(slot).and_then(|s| s.as_ref()) {
+            Some(s) => s.emitted.len() >= s.steps,
+            None => true,
+        }
+    }
+
+    fn advance(&mut self, slot: usize) -> bool {
+        {
+            let s = self.slots[slot].as_mut().expect("advance on a free slot");
+            if s.emitted.len() >= s.steps {
+                return false;
+            }
+            if s.credits > 0 {
+                s.credits -= 1;
+                return s.emitted.len() < s.steps;
+            }
+        }
+        // collective round: every live slot emits one token from its own rng
+        self.dispatches += 1;
+        for s in self.slots.iter_mut().flatten() {
+            if s.emitted.len() < s.steps {
+                let t = format!("t{}", s.rng.range(0, 10_000));
+                s.emitted.push(t);
+                s.credits += 1;
+            }
+        }
+        let s = self.slots[slot].as_mut().expect("slot vanished mid-round");
+        if s.credits > 0 {
+            s.credits -= 1;
+        }
+        s.emitted.len() < s.steps
+    }
+
+    fn take(&mut self, slot: usize) -> SeededSlot {
+        self.slots[slot].take().expect("take on a free slot")
+    }
+
+    fn release(&mut self, slot: usize) {
+        if let Some(s) = self.slots.get_mut(slot) {
+            *s = None;
+        }
+    }
+}
+
+struct SeededBatchSession {
+    pool: std::sync::Arc<std::sync::Mutex<SeededBatchPool>>,
+    slot: Option<usize>,
+    prefix: String,
+    steps: usize,
+}
+
+impl LlmSession for SeededBatchSession {
+    fn advance(&mut self) -> Result<bool> {
+        let slot = self.slot.expect("advance after finish");
+        Ok(self.pool.lock().unwrap().advance(slot))
+    }
+
+    fn is_done(&self) -> bool {
+        match self.slot {
+            Some(slot) => self.pool.lock().unwrap().is_done(slot),
+            None => true,
+        }
+    }
+
+    fn finish(mut self: Box<Self>) -> Result<LlmResponse> {
+        let slot = self.slot.take().expect("finish twice");
+        let s = self.pool.lock().unwrap().take(slot);
+        Ok(LlmResponse {
+            text: format!("[{}] {}", self.prefix, s.emitted.join(" ")),
+            usage: TokenUsage { input_tokens: 1, output_tokens: self.steps },
+            prefill_micros: 0,
+            decode_micros: 0,
+        })
+    }
+}
+
+impl Drop for SeededBatchSession {
+    fn drop(&mut self) {
+        if let Some(slot) = self.slot.take() {
+            self.pool.lock().unwrap().release(slot);
+        }
+    }
 }
 
 struct SeededSession {
@@ -190,14 +307,35 @@ impl LlmSession for SeededSession {
 }
 
 impl SeededLlm {
+    fn new(name: &str, seed: u64, steps: usize) -> SeededLlm {
+        SeededLlm { name: name.to_string(), seed, steps, pool: None }
+    }
+
+    /// Enable the collective slot pool (the batched mode).
+    fn with_batch(mut self, slots: usize) -> SeededLlm {
+        self.pool = Some(std::sync::Arc::new(std::sync::Mutex::new(
+            SeededBatchPool::new(slots),
+        )));
+        self
+    }
+
     fn begin(&self, segments: &[&str]) -> Box<dyn LlmSession> {
         let tag = format!("{}/{}", self.name, segments.join("\u{1f}"));
-        Box::new(SeededSession {
-            rng: Rng::substream(self.seed, &tag),
-            prefix: segments[0].to_string(),
-            steps: self.steps,
-            emitted: Vec::new(),
-        })
+        let rng = Rng::substream(self.seed, &tag);
+        let prefix = segments[0].to_string();
+        if let Some(pool) = &self.pool {
+            if let Some(slot) = pool.lock().unwrap().admit(rng.clone(), self.steps) {
+                return Box::new(SeededBatchSession {
+                    pool: std::sync::Arc::clone(pool),
+                    slot: Some(slot),
+                    prefix,
+                    steps: self.steps,
+                });
+            }
+            // pool full: overflow onto an independent session — emission is
+            // a pure function of (seed, prompt), so streams are unchanged
+        }
+        Box::new(SeededSession { rng, prefix, steps: self.steps, emitted: Vec::new() })
     }
 }
 
@@ -231,19 +369,21 @@ impl LanguageModel for SeededLlm {
 
 /// Run the two-phase workload (sequential primes, then a concurrent mix of
 /// tweak-hit paraphrases and fresh misses) and collect query -> (pathway,
-/// text).
-fn run_workload(scheduler_on: bool) -> Vec<(String, String)> {
+/// text). `batch_slots > 0` puts each model behind a collective-advance
+/// slot pool of that size (the batched decode mode).
+fn run_workload(scheduler_on: bool, batch_slots: usize) -> Vec<(String, String)> {
     let mut cfg = base_config();
     cfg.scheduler.enabled = scheduler_on;
     cfg.exact_match_fast_path = false; // repeats must exercise the tweak path
     let (engine, handle) = Engine::start(move || {
         let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
-        Ok(Router::with_models(
-            embedder,
-            Box::new(SeededLlm { name: "big".into(), seed: 11, steps: 12 }),
-            Box::new(SeededLlm { name: "small".into(), seed: 13, steps: 3 }),
-            cfg,
-        ))
+        let mut big = SeededLlm::new("big", 11, 12);
+        let mut small = SeededLlm::new("small", 13, 3);
+        if batch_slots > 0 {
+            big = big.with_batch(batch_slots);
+            small = small.with_batch(batch_slots);
+        }
+        Ok(Router::with_models(embedder, Box::new(big), Box::new(small), cfg))
     })
     .expect("engine start");
 
@@ -295,7 +435,57 @@ fn run_workload(scheduler_on: bool) -> Vec<(String, String)> {
 /// runs: the per-session RNG contract, gated end-to-end through the engine.
 #[test]
 fn scheduler_streams_match_sequential() {
-    let interleaved = run_workload(true);
-    let sequential = run_workload(false);
+    let interleaved = run_workload(true, 0);
+    let sequential = run_workload(false, 0);
     assert_eq!(interleaved, sequential);
+}
+
+/// The batched-decode identity gate: a mixed tweak/miss workload served
+/// through collective slot pools (including overflow past the 3 slots) must
+/// produce responses bit-identical to the per-session path.
+#[test]
+fn batched_decode_streams_match_per_session() {
+    let batched = run_workload(true, 3);
+    let per_session = run_workload(true, 0);
+    assert_eq!(batched, per_session);
+}
+
+/// Engine-level occupancy observability: concurrent batched sessions must
+/// show up as few dispatches with multi-slot occupancy in `EngineStats`.
+#[test]
+fn engine_stats_report_batch_occupancy() {
+    let cfg = base_config();
+    let big = MockLlm::new("big")
+        .with_pace(10, Duration::from_millis(3))
+        .with_batch(4);
+    let (_engine, handle) = start_engine(cfg, big, MockLlm::new("small"));
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(4));
+    let (done_tx, done_rx) = mpsc::channel();
+    for i in 0..4 {
+        let h = handle.clone();
+        let done = done_tx.clone();
+        let barrier = std::sync::Arc::clone(&barrier);
+        std::thread::spawn(move || {
+            barrier.wait();
+            let _ = done.send(h.request(&format!("occ{i}a occ{i}b occ{i}c occ{i}d")));
+        });
+    }
+    for _ in 0..4 {
+        let r = done_rx.recv_timeout(Duration::from_secs(20)).unwrap().unwrap();
+        assert_eq!(r.pathway, Pathway::Miss);
+    }
+    let stats = handle.stats().unwrap();
+    // 4 sessions × 10 steps through per-session dispatch would be 40; the
+    // pool must have shared rounds (some stagger between arrivals is fine).
+    assert!(stats.batched_steps >= 10, "stats: {}", stats.batched_steps);
+    assert!(
+        stats.batched_steps <= 20,
+        "dispatches must be shared across sessions, got {}",
+        stats.batched_steps
+    );
+    assert!(
+        stats.mean_active_slots >= 2.0,
+        "mean occupancy must reflect concurrent slots, got {}",
+        stats.mean_active_slots
+    );
 }

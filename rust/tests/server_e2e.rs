@@ -1,15 +1,13 @@
 //! Engine + TCP server end-to-end over mock models (no artifacts needed):
 //! real sockets, real engine thread, real dynamic batching.
 
-use std::sync::atomic::Ordering;
-
 use tweakllm::baselines::MockLlm;
 use tweakllm::config::{Config, IndexKindConfig};
 use tweakllm::coordinator::{Engine, EngineHandle, Router};
 use tweakllm::runtime::{NativeBowEmbedder, TextEmbedder};
-use tweakllm::server::{Client, Server};
+use tweakllm::server::{Client, Server, Shutdown};
 
-fn start_stack() -> (tweakllm::coordinator::Engine, EngineHandle, String, std::sync::Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<anyhow::Result<()>>) {
+fn start_stack() -> (tweakllm::coordinator::Engine, EngineHandle, String, Shutdown, std::thread::JoinHandle<anyhow::Result<()>>) {
     let (engine, handle) = Engine::start(|| {
         let mut cfg = Config::paper();
         cfg.index.kind = IndexKindConfig::Flat;
@@ -25,7 +23,7 @@ fn start_stack() -> (tweakllm::coordinator::Engine, EngineHandle, String, std::s
     .expect("engine start");
     let server = Server::bind("127.0.0.1:0", handle.clone()).expect("bind");
     let addr = server.local_addr().unwrap().to_string();
-    let stop = server.stop_flag();
+    let stop = server.shutdown_handle().unwrap();
     let join = std::thread::spawn(move || server.serve());
     (engine, handle, addr, stop, join)
 }
@@ -47,7 +45,7 @@ fn query_roundtrip_over_tcp() {
     let r3 = client.query("why is coffee good for health?").unwrap();
     assert_eq!(r3.get("pathway").unwrap().str().unwrap(), "exact_hit");
 
-    stop.store(true, Ordering::Relaxed);
+    stop.signal();
     drop(client);
     let _ = join.join().unwrap();
 }
@@ -64,7 +62,7 @@ fn stats_endpoint_reports_counters() {
     let hits = stats.get("tweak_hits").unwrap().f64().unwrap()
         + stats.get("exact_hits").unwrap().f64().unwrap();
     assert_eq!(hits as u64, 1);
-    stop.store(true, Ordering::Relaxed);
+    stop.signal();
     drop(client);
     let _ = join.join().unwrap();
 }
@@ -80,10 +78,14 @@ fn stats_surfaces_latency_table_and_persist_fields() {
     assert!(table.contains("stage"), "missing header: {table}");
     assert!(table.contains("total"), "missing total row: {table}");
     // Persistence is disabled in this stack: fields present, zeroed.
+    // Batch occupancy fields are surfaced even when batched decode is off
+    // (mocks without a pool): present and zeroed.
+    assert_eq!(stats.get("batched_steps").unwrap().f64().unwrap() as u64, 0);
+    assert_eq!(stats.get("mean_active_slots").unwrap().f64().unwrap(), 0.0);
     assert!(!stats.get("persist_enabled").unwrap().bool().unwrap());
     assert_eq!(stats.get("wal_bytes").unwrap().f64().unwrap() as u64, 0);
     assert_eq!(stats.get("recovered_entries").unwrap().f64().unwrap() as u64, 0);
-    stop.store(true, Ordering::Relaxed);
+    stop.signal();
     drop(client);
     let _ = join.join().unwrap();
 }
@@ -105,7 +107,7 @@ fn admin_snapshot_verb_answers_on_ephemeral_stack() {
         )]))
         .unwrap();
     assert!(resp.opt("error").is_some(), "unknown admin verbs must error");
-    stop.store(true, Ordering::Relaxed);
+    stop.signal();
     drop(client);
     let _ = join.join().unwrap();
 }
@@ -129,7 +131,7 @@ fn slow_writer_survives_read_timeouts() {
     BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
     let resp = tweakllm::util::Json::parse(&line).unwrap();
     assert_eq!(resp.get("pathway").unwrap().str().unwrap(), "miss");
-    stop.store(true, Ordering::Relaxed);
+    stop.signal();
     drop(stream);
     let _ = join.join().unwrap();
 }
@@ -142,7 +144,7 @@ fn idle_connection_does_not_block_stop() {
     let stream = std::net::TcpStream::connect(&addr).unwrap();
     // Never send anything; raise stop while the connection is idle.
     std::thread::sleep(std::time::Duration::from_millis(50));
-    stop.store(true, Ordering::Relaxed);
+    stop.signal();
     let _ = join.join().unwrap(); // accept loop exits
     // The connection thread exits on its next poll tick; the server closing
     // our socket (EOF) is observable within a couple of poll intervals.
@@ -155,6 +157,36 @@ fn idle_connection_does_not_block_stop() {
         Ok(_) => panic!("unexpected data on idle connection"),
         Err(e) => panic!("expected EOF after stop, got {e}"),
     }
+}
+
+#[test]
+fn shutdown_wakes_blocking_accept_without_clients() {
+    // The accept loop now blocks in `accept` (no 5ms sleep poll quantizing
+    // cold-connect latency); `Shutdown::signal` must wake it with a
+    // self-connect even when no client ever connected.
+    let (_engine, _handle, _addr, stop, join) = start_stack();
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    let t0 = std::time::Instant::now();
+    stop.signal();
+    join.join().unwrap().unwrap();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(2),
+        "signal must wake the blocked accept promptly"
+    );
+}
+
+#[test]
+fn cold_connects_each_get_served() {
+    // Every fresh connection must be accepted and served the moment it
+    // arrives (connect → response works back to back, no stranded accepts).
+    let (_engine, _handle, addr, stop, join) = start_stack();
+    for i in 0..10 {
+        let mut client = Client::connect(&addr).unwrap();
+        let r = client.query(&format!("cold connect probe {i}")).unwrap();
+        assert!(r.opt("pathway").is_some(), "{}", r.to_string());
+    }
+    stop.signal();
+    let _ = join.join().unwrap();
 }
 
 #[test]
@@ -171,7 +203,7 @@ fn malformed_request_reports_error_not_crash() {
     // server still alive afterwards
     let ok = client.query("hello there").unwrap();
     assert!(ok.opt("pathway").is_some());
-    stop.store(true, Ordering::Relaxed);
+    stop.signal();
     drop(client);
     let _ = join.join().unwrap();
 }
@@ -195,7 +227,7 @@ fn concurrent_clients_all_served() {
     }
     let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
     assert_eq!(total, 40);
-    stop.store(true, Ordering::Relaxed);
+    stop.signal();
     let _ = join.join().unwrap();
 }
 
@@ -292,5 +324,5 @@ fn engine_in_process_handle_works_alongside_tcp() {
     assert!(!r.text.is_empty());
     let stats = handle.stats().unwrap();
     assert!(stats.requests >= 1);
-    stop.store(true, Ordering::Relaxed);
+    stop.signal();
 }
