@@ -24,6 +24,7 @@ use tweakllm::cache::query_key;
 use tweakllm::config::{Config, IndexKindConfig, SchedulerConfig};
 use tweakllm::coordinator::{Job, JobKind, Pathway, RouteDecision, Router, Scheduler};
 use tweakllm::runtime::{NativeBowEmbedder, TextEmbedder};
+use tweakllm::trace::TraceBuilder;
 use tweakllm::util::{Json, Summary};
 
 const SESSIONS: [usize; 4] = [1, 2, 4, 8];
@@ -73,7 +74,7 @@ fn run_once(
         let q = format!("s{iter}x{i}a s{iter}x{i}b s{iter}x{i}c s{iter}x{i}d");
         let (tx, rx) = std::sync::mpsc::channel();
         let emb = router.embedder().embed(&q)?;
-        match router.route(&q, emb, Instant::now()) {
+        match router.route(&q, emb, Instant::now(), &mut TraceBuilder::disabled()) {
             RouteDecision::Miss(m) => {
                 let key = query_key(&m.query);
                 let job = Job::new(JobKind::Miss { job: m, key }, tx, Instant::now());

@@ -1,0 +1,231 @@
+//! Span-tracing overhead benchmark (mock tier, always runs, incl. CI).
+//!
+//! Runs the same mixed hit/tweak/miss concurrent workload as `e2e_serving`'s
+//! mixed tier — full engine, dynamic batcher, decode scheduler, paced
+//! `MockLlm`s — three times: tracing off, tracing on, tracing on with JSONL
+//! export. Reports per-pathway p50/p99 for each mode plus the on-vs-off
+//! deltas, and asserts the tracing-on pooled p50 overhead stays within the
+//! budget (≤ 2%, plus a small absolute floor for CI scheduling noise —
+//! the pacing sleeps dominate, so a real regression shows up clearly).
+//!
+//! Results land in `BENCH_trace_overhead.json` (uploaded from CI).
+//!
+//! `cargo bench --bench trace_overhead [-- --requests 192 --threads 4]`
+
+use std::time::{Duration, Instant};
+
+use tweakllm::baselines::MockLlm;
+use tweakllm::bench::{bench_args, Table};
+use tweakllm::config::{Config, IndexKindConfig};
+use tweakllm::coordinator::{Engine, Pathway, Router};
+use tweakllm::runtime::{NativeBowEmbedder, TextEmbedder};
+use tweakllm::server::pathway_str;
+use tweakllm::util::{Json, Rng, Summary};
+
+/// Tracing-on p50 overhead budget vs tracing-off, as a fraction.
+const P50_BUDGET: f64 = 0.02;
+/// Absolute slack (ms) absorbing CI scheduling noise on top of the budget.
+const NOISE_FLOOR_MS: f64 = 0.25;
+
+struct ModeResult {
+    lat_by_path: std::collections::HashMap<&'static str, Vec<f64>>,
+    pooled: Vec<f64>,
+    qps: f64,
+}
+
+/// One engine run of the mixed workload (identical trace across modes).
+fn run_mode(
+    trace_on: bool,
+    export_dir: Option<&str>,
+    n_requests: usize,
+    threads: usize,
+) -> anyhow::Result<ModeResult> {
+    let mut cfg = Config::paper();
+    cfg.index.kind = IndexKindConfig::Flat;
+    cfg.exact_match_fast_path = true;
+    cfg.scheduler.enabled = true;
+    cfg.trace.enabled = trace_on;
+    if let Some(dir) = export_dir {
+        cfg.trace.export_dir = dir.to_string();
+    }
+    let cfg_engine = cfg.clone();
+    let (engine, handle) = Engine::start(move || {
+        let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+        let mut big = MockLlm::new("big");
+        big.steps = 16;
+        big.step_delay = Duration::from_millis(1);
+        let mut small = MockLlm::new("small");
+        small.step_delay = Duration::from_micros(100);
+        Ok(Router::with_models(embedder, Box::new(big), Box::new(small), cfg_engine))
+    })?;
+    let topics = 8;
+    for i in 0..topics {
+        handle.request(&format!("mix{i}a mix{i}b mix{i}c mix{i}d mix{i}e mix{i}f"))?;
+    }
+    // Same deterministic mix as e2e_serving: ~50% paraphrase (tweak), ~20%
+    // exact repeat, ~30% fresh miss.
+    let mut rng = Rng::new(42);
+    let queries: Vec<String> = (0..n_requests)
+        .map(|j| {
+            let i = rng.range(0, topics);
+            match rng.range(0, 10) {
+                0..=4 => format!("mix{i}a mix{i}b mix{i}c mix{i}d mix{i}e vary{j}"),
+                5..=6 => format!("mix{i}a mix{i}b mix{i}c mix{i}d mix{i}e mix{i}f"),
+                _ => format!("fresh{j}a fresh{j}b fresh{j}c fresh{j}d fresh{j}e"),
+            }
+        })
+        .collect();
+    let t_all = Instant::now();
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let h = handle.clone();
+        let chunk: Vec<String> = queries.iter().skip(t).step_by(threads).cloned().collect();
+        joins.push(std::thread::spawn(move || -> anyhow::Result<Vec<(Pathway, u128)>> {
+            let mut out = Vec::with_capacity(chunk.len());
+            for q in &chunk {
+                let r = h.request(q)?;
+                out.push((r.pathway, r.total_micros));
+            }
+            Ok(out)
+        }));
+    }
+    let mut lat_by_path: std::collections::HashMap<&'static str, Vec<f64>> = Default::default();
+    let mut pooled = Vec::with_capacity(n_requests);
+    for j in joins {
+        for (p, us) in j.join().expect("client thread panicked")? {
+            let ms = us as f64 / 1000.0;
+            lat_by_path.entry(pathway_str(p)).or_default().push(ms);
+            pooled.push(ms);
+        }
+    }
+    let qps = n_requests as f64 / t_all.elapsed().as_secs_f64();
+    if trace_on {
+        // sanity: every request (and the primes) must have finished a trace
+        let stats = handle.stats()?;
+        assert!(
+            stats.traces_finished >= (n_requests + topics) as u64,
+            "tracing on but only {} traces finished for {} requests",
+            stats.traces_finished,
+            n_requests + topics
+        );
+    }
+    engine.shutdown();
+    Ok(ModeResult { lat_by_path, pooled, qps })
+}
+
+fn pathway_rows(m: &ModeResult) -> Vec<Json> {
+    let mut rows = Vec::new();
+    for path in ["exact_hit", "tweak_hit", "miss"] {
+        if let Some(samples) = m.lat_by_path.get(path) {
+            let s = Summary::of(samples);
+            rows.push(Json::obj_from(vec![
+                ("pathway", Json::s(path)),
+                ("n", Json::num(s.n as f64)),
+                ("mean_ms", Json::num(s.mean)),
+                ("p50_ms", Json::num(s.p50)),
+                ("p99_ms", Json::num(s.p99)),
+            ]));
+        }
+    }
+    rows
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let n_requests = args.usize("requests", 192)?;
+    let threads = args.usize("threads", 4)?.max(1);
+
+    let export_dir =
+        std::env::temp_dir().join(format!("tweakllm_trace_overhead_{}", std::process::id()));
+    let export_str = export_dir.to_string_lossy().into_owned();
+
+    eprintln!("[trace_overhead] {n_requests} requests x {threads} threads, tracing off...");
+    let off = run_mode(false, None, n_requests, threads)?;
+    eprintln!("[trace_overhead] tracing on...");
+    let on = run_mode(true, None, n_requests, threads)?;
+    eprintln!("[trace_overhead] tracing on + JSONL export...");
+    let export = run_mode(true, Some(&export_str), n_requests, threads)?;
+    let exported_lines = std::fs::read_to_string(export_dir.join("traces.jsonl"))
+        .map(|t| t.lines().count())
+        .unwrap_or(0);
+    let _ = std::fs::remove_dir_all(&export_dir);
+    assert!(
+        exported_lines >= n_requests,
+        "export mode wrote {exported_lines} JSONL lines for {n_requests} requests"
+    );
+
+    let mut table = Table::new(
+        "Span-tracing overhead — mixed workload latency (ms)",
+        &["mode", "pathway", "n", "p50", "p99"],
+    );
+    for (mode, m) in [("off", &off), ("on", &on), ("on+export", &export)] {
+        for path in ["exact_hit", "tweak_hit", "miss"] {
+            if let Some(samples) = m.lat_by_path.get(path) {
+                let s = Summary::of(samples);
+                table.push(vec![
+                    mode.to_string(),
+                    path.to_string(),
+                    s.n.to_string(),
+                    format!("{:.3}", s.p50),
+                    format!("{:.3}", s.p99),
+                ]);
+            }
+        }
+    }
+    println!("{}", table.render());
+
+    let off_s = Summary::of(&off.pooled);
+    let on_s = Summary::of(&on.pooled);
+    let export_s = Summary::of(&export.pooled);
+    let pct = |a: f64, b: f64| if b > 0.0 { 100.0 * (a - b) / b } else { 0.0 };
+    println!(
+        "pooled p50: off {:.3}ms  on {:.3}ms ({:+.2}%)  on+export {:.3}ms ({:+.2}%)",
+        off_s.p50,
+        on_s.p50,
+        pct(on_s.p50, off_s.p50),
+        export_s.p50,
+        pct(export_s.p50, off_s.p50),
+    );
+    println!(
+        "pooled p99: off {:.3}ms  on {:.3}ms ({:+.2}%)",
+        off_s.p99,
+        on_s.p99,
+        pct(on_s.p99, off_s.p99),
+    );
+    println!("qps: off {:.1}  on {:.1}  on+export {:.1}", off.qps, on.qps, export.qps);
+
+    // The overhead budget gate (DESIGN.md "Observability").
+    let ceiling = off_s.p50 * (1.0 + P50_BUDGET) + NOISE_FLOOR_MS;
+    assert!(
+        on_s.p50 <= ceiling,
+        "tracing-on pooled p50 {:.3}ms exceeds budget {:.3}ms (off p50 {:.3}ms)",
+        on_s.p50,
+        ceiling,
+        off_s.p50
+    );
+
+    let mode_json = |m: &ModeResult, s: &Summary| {
+        Json::obj_from(vec![
+            ("qps", Json::num(m.qps)),
+            ("pooled_p50_ms", Json::num(s.p50)),
+            ("pooled_p99_ms", Json::num(s.p99)),
+            ("pathways", Json::Arr(pathway_rows(m))),
+        ])
+    };
+    let report = Json::obj_from(vec![
+        ("bench", Json::s("trace_overhead")),
+        ("requests", Json::num(n_requests as f64)),
+        ("threads", Json::num(threads as f64)),
+        ("off", mode_json(&off, &off_s)),
+        ("on", mode_json(&on, &on_s)),
+        ("on_export", mode_json(&export, &export_s)),
+        ("p50_overhead_pct", Json::num(pct(on_s.p50, off_s.p50))),
+        ("p99_overhead_pct", Json::num(pct(on_s.p99, off_s.p99))),
+        ("export_overhead_pct", Json::num(pct(export_s.p50, off_s.p50))),
+        ("p50_budget_pct", Json::num(100.0 * P50_BUDGET)),
+        ("exported_lines", Json::num(exported_lines as f64)),
+    ]);
+    std::fs::write("BENCH_trace_overhead.json", report.to_string())?;
+    eprintln!("[trace_overhead] wrote BENCH_trace_overhead.json");
+    Ok(())
+}

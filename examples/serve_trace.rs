@@ -7,6 +7,8 @@
 //! L1 Pallas kernels inside the L2 HLO programs, driven by the L3 router.
 //!
 //! Run: `cargo run --release --example serve_trace -- --requests 64 --clients 4`
+//! `--show-traces N` (default 4) prints per-request stage waterfalls pulled
+//! from the server's `{"admin": "trace"}` verb after the run.
 
 use std::sync::{Arc, Mutex};
 
@@ -16,6 +18,57 @@ use tweakllm::datasets::{ChatTrace, TraceProfile};
 use tweakllm::runtime::Runtime;
 use tweakllm::server::{Client, Server};
 use tweakllm::util::{Args, Summary};
+
+/// Render one trace (the `trace` verb's JSON) as an aligned stage waterfall:
+/// one row per span, bar offset/width proportional to its slice of total_us.
+fn print_waterfall(t: &tweakllm::util::Json) {
+    const COLS: usize = 48;
+    let f = |key: &str| t.opt(key).and_then(|v| v.f64().ok()).unwrap_or(0.0);
+    let total = f("total_us").max(1.0);
+    let query = t.opt("query").and_then(|q| q.str().ok()).unwrap_or("?");
+    let pathway = t.opt("pathway").and_then(|p| p.str().ok()).unwrap_or("?");
+    let sim = t
+        .opt("similarity")
+        .and_then(|s| s.f64().ok())
+        .map(|s| format!("{s:.3}"))
+        .unwrap_or_else(|| "-".into());
+    println!(
+        "  #{} {pathway} sim={sim} total={:.1}ms rounds={} \"{}\"",
+        f("id"),
+        total / 1e3,
+        f("decode_rounds"),
+        &query[..query.len().min(48)]
+    );
+    let spans = match t.opt("spans").and_then(|s| s.arr().ok()) {
+        Some(s) => s,
+        None => return,
+    };
+    let mut rounds_shown = 0usize;
+    for s in spans {
+        let stage = s.opt("stage").and_then(|v| v.str().ok()).unwrap_or("?");
+        if stage == "decode_round" {
+            // one sample row is enough; the rest would swamp the waterfall
+            rounds_shown += 1;
+            if rounds_shown > 1 {
+                continue;
+            }
+        }
+        let start = s.opt("start_us").and_then(|v| v.f64().ok()).unwrap_or(0.0);
+        let end = s.opt("end_us").and_then(|v| v.f64().ok()).unwrap_or(start);
+        let lo = ((start / total) * COLS as f64) as usize;
+        let hi = (((end / total) * COLS as f64).ceil() as usize).clamp(lo + 1, COLS);
+        let mut bar = String::with_capacity(COLS);
+        for i in 0..COLS {
+            bar.push(if i >= lo && i < hi { '#' } else { '.' });
+        }
+        let indent = if stage == "decode_round" { "  " } else { "" };
+        println!(
+            "    {indent}{:<14} |{bar}| {:>9.1}us",
+            stage,
+            end - start
+        );
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -118,6 +171,22 @@ fn main() -> anyhow::Result<()> {
         100.0 * stats.cost_dollars / stats.baseline_dollars.max(1e-12)
     );
     println!("\nengine stage latency:\n{}", stats.latency_table);
+
+    // --- per-request stage waterfalls from the trace verb ---
+    let n_show = args.usize("show-traces", 4)?;
+    if n_show > 0 {
+        let mut client = Client::connect(&addr)?;
+        let report = client.trace(n_show)?;
+        println!(
+            "\nper-request span traces (last {n_show} of {} finished):",
+            report.opt("finished").and_then(|v| v.f64().ok()).unwrap_or(0.0)
+        );
+        if let Some(traces) = report.opt("traces").and_then(|t| t.arr().ok()) {
+            for t in traces {
+                print_waterfall(t);
+            }
+        }
+    }
 
     stop.signal();
     let _ = server_thread.join();

@@ -39,6 +39,9 @@ pub struct Config {
     /// (the paper's deployment is ephemeral); set `persist.data_dir` to
     /// enable warm restarts.
     pub persist: PersistConfig,
+    /// Per-request span tracing (ring buffer, slow-request list, per-stage
+    /// histograms; surfaced via the `trace`/`stats` server verbs).
+    pub trace: TraceConfig,
     /// Artifact directory.
     pub artifact_dir: String,
     /// Keep decode state (KV caches) on device between steps, fetching only
@@ -111,6 +114,32 @@ pub struct SchedulerConfig {
     pub decode_batch: usize,
 }
 
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Collect per-request span traces. Off = zero per-request tracing work
+    /// (disabled builders are no-ops and nothing is retained).
+    pub enabled: bool,
+    /// Completed traces kept in the in-memory ring buffer.
+    pub ring_capacity: usize,
+    /// Requests with total latency at or above this land in the slow-request
+    /// retention list (survives ring eviction); `<= 0` disables the list.
+    pub slow_threshold_ms: f64,
+    /// When non-empty, completed traces are appended as JSONL to
+    /// `<export_dir>/traces.jsonl` (`serve --trace-dir`).
+    pub export_dir: String,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            enabled: true,
+            ring_capacity: 256,
+            slow_threshold_ms: 250.0,
+            export_dir: String::new(),
+        }
+    }
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct GenConfig {
     pub temperature: f32,
@@ -171,6 +200,7 @@ impl Config {
                 input_frac: 0.25,
             },
             persist: PersistConfig::default(),
+            trace: TraceConfig::default(),
             artifact_dir: "artifacts".to_string(),
             device_resident: true,
             seed: 20250923,
@@ -293,6 +323,16 @@ impl Config {
             "cost.big_per_mtok" => self.cost.big_per_mtok = f()?,
             "cost.small_per_mtok" => self.cost.small_per_mtok = f()?,
             "cost.input_frac" => self.cost.input_frac = f()?,
+            "trace.enabled" => self.trace.enabled = b()?,
+            "trace.ring_capacity" => {
+                let n = u()?;
+                if n == 0 {
+                    bail!("trace.ring_capacity must be >= 1");
+                }
+                self.trace.ring_capacity = n;
+            }
+            "trace.slow_threshold_ms" => self.trace.slow_threshold_ms = f()?,
+            "trace.export_dir" => self.trace.export_dir = val.to_string(),
             "persist.data_dir" => self.persist.data_dir = val.to_string(),
             "persist.wal_fsync" => self.persist.wal_fsync = b()?,
             "persist.compact_bytes" => self.persist.compact_bytes = u()? as u64,
@@ -337,6 +377,16 @@ impl Config {
                 format!("interleaved ({} concurrent sessions, {} step{}/turn{batch})", self.scheduler.max_concurrent_sessions, self.scheduler.fairness_steps, if self.scheduler.fairness_steps == 1 { "" } else { "s" })
             } else {
                 "run-to-completion (head-of-line blocking)".into()
+            }),
+            ("Tracing".into(), if self.trace.enabled {
+                let export = if self.trace.export_dir.is_empty() {
+                    String::new()
+                } else {
+                    format!(", JSONL export to {}", self.trace.export_dir)
+                };
+                format!("per-request spans, ring {} (slow ≥ {} ms{export})", self.trace.ring_capacity, self.trace.slow_threshold_ms)
+            } else {
+                "disabled".into()
             }),
             ("Decode transport".into(), if self.device_resident {
                 "device-resident KV (literal fallback for old artifact sets)".into()
@@ -490,6 +540,30 @@ mod tests {
         assert!(c.set("runtime.device_resident", "maybe").is_err());
         let rows = c.table();
         assert!(rows.iter().any(|(k, v)| k == "Decode transport" && v.contains("literal")));
+    }
+
+    #[test]
+    fn trace_section_applies() {
+        let mut c = Config::paper();
+        assert!(c.trace.enabled);
+        assert_eq!(c.trace.ring_capacity, 256);
+        assert!(c.trace.export_dir.is_empty());
+        let mut kv = BTreeMap::new();
+        kv.insert("trace.enabled".to_string(), "false".to_string());
+        kv.insert("trace.ring_capacity".to_string(), "64".to_string());
+        kv.insert("trace.slow_threshold_ms".to_string(), "50".to_string());
+        kv.insert("trace.export_dir".to_string(), "/tmp/traces".to_string());
+        c.apply(&kv).unwrap();
+        assert!(!c.trace.enabled);
+        assert_eq!(c.trace.ring_capacity, 64);
+        assert!((c.trace.slow_threshold_ms - 50.0).abs() < 1e-9);
+        assert_eq!(c.trace.export_dir, "/tmp/traces");
+        assert!(c.set("trace.ring_capacity", "0").is_err());
+        let rows = c.table();
+        assert!(rows.iter().any(|(k, v)| k == "Tracing" && v.contains("disabled")));
+        c.set("trace.enabled", "true").unwrap();
+        let rows = c.table();
+        assert!(rows.iter().any(|(k, v)| k == "Tracing" && v.contains("/tmp/traces")));
     }
 
     #[test]

@@ -31,6 +31,11 @@ use anyhow::{anyhow, Result};
 use super::scheduler::{Job, JobKind, Scheduler};
 use super::{Batcher, ReplyTx, RouteDecision, RoutedResponse, Router};
 use crate::cache::query_key;
+use crate::trace::{Stage, StageSummary, TraceBuilder, TraceReport};
+
+/// What rides through the batcher per request: the query, the rendezvous
+/// reply channel, and the request's span-trace arena.
+type BatchItem = (String, ReplyTx, TraceBuilder);
 
 enum Msg {
     Request {
@@ -43,6 +48,10 @@ enum Msg {
     },
     Stats {
         reply: mpsc::Sender<EngineStats>,
+    },
+    Trace {
+        n: usize,
+        reply: mpsc::Sender<TraceReport>,
     },
     Snapshot {
         reply: mpsc::Sender<Result<SnapshotReport>>,
@@ -84,6 +93,12 @@ pub struct EngineStats {
     pub last_compaction_unix: u64,
     /// Live entries recovered from snapshot + WAL at startup.
     pub recovered_entries: u64,
+    // ---- tracing ----
+    /// Per-stage × per-pathway latency quantiles from the trace histograms
+    /// (empty when tracing is disabled).
+    pub stage_latency: Vec<StageSummary>,
+    /// Traces completed since startup (ring + evicted).
+    pub traces_finished: u64,
 }
 
 /// Result of an explicit `{"admin": "snapshot"}` request.
@@ -122,6 +137,15 @@ impl EngineHandle {
             .send(Msg::Stats { reply })
             .map_err(|_| anyhow!("engine is down"))?;
         rx.recv().map_err(|_| anyhow!("engine dropped the stats request"))
+    }
+
+    /// Fetch the last `n` completed traces + the slow-request list.
+    pub fn traces(&self, n: usize) -> Result<TraceReport> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Trace { n, reply })
+            .map_err(|_| anyhow!("engine is down"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped the trace request"))
     }
 
     /// Force a cache snapshot + WAL rotation (the admin protocol verb).
@@ -181,7 +205,7 @@ impl Engine {
 
     /// The engine thread's serve loop (see the module docs for the shape).
     fn serve(router: &mut Router, rx: mpsc::Receiver<Msg>) {
-        let mut batcher: Batcher<(String, ReplyTx)> = Batcher::new(router.config.batcher);
+        let mut batcher: Batcher<BatchItem> = Batcher::new(router.config.batcher);
         let mut sched = Scheduler::new(router.config.scheduler);
         let sched_on = router.config.scheduler.enabled;
         let mut shutdown = false;
@@ -246,16 +270,23 @@ impl Engine {
     fn on_msg(
         msg: Msg,
         router: &mut Router,
-        batcher: &mut Batcher<(String, ReplyTx)>,
+        batcher: &mut Batcher<BatchItem>,
         sched: &Scheduler,
     ) -> bool {
         match msg {
             Msg::Request { query, reply, enqueued } => {
-                batcher.push_at((query, reply), enqueued);
+                let mut trace = router.traces.begin(&query, enqueued);
+                // Channel transit: enqueue stamp → engine-thread pickup.
+                trace.span_from(Stage::Ingest, enqueued);
+                batcher.push_at((query, reply, trace), enqueued);
                 false
             }
             Msg::Stats { reply } => {
                 let _ = reply.send(Self::collect_stats(router, batcher, sched));
+                false
+            }
+            Msg::Trace { n, reply } => {
+                let _ = reply.send(router.traces.report(n));
                 false
             }
             Msg::Snapshot { reply } => {
@@ -274,49 +305,64 @@ impl Engine {
     /// queue wait behind a slow generation shows up in `total_micros`.
     fn flush(
         router: &mut Router,
-        batcher: &mut Batcher<(String, ReplyTx)>,
+        batcher: &mut Batcher<BatchItem>,
         mut sched: Option<&mut Scheduler>,
     ) {
         let batch = batcher.drain_pending();
         if batch.is_empty() {
             return;
         }
+        let drained = Instant::now();
         // Exact-match fast path first: those don't need embeddings.
-        let mut to_embed: Vec<(String, ReplyTx, Instant)> = Vec::with_capacity(batch.len());
+        let mut to_embed: Vec<(String, ReplyTx, Instant, TraceBuilder)> =
+            Vec::with_capacity(batch.len());
         for pending in batch {
             let enqueued = pending.enqueued;
-            let (query, reply) = pending.payload;
-            if let Some(resp) = router.try_exact(&query, enqueued) {
+            let arrived = pending.arrived;
+            let (query, reply, mut trace) = pending.payload;
+            trace.span_at(Stage::BatcherWait, arrived, drained, f32::NAN);
+            if let Some(resp) = router.try_exact(&query, enqueued, &mut trace) {
                 let _ = reply.send(Ok(resp));
             } else {
-                to_embed.push((query, reply, enqueued));
+                to_embed.push((query, reply, enqueued, trace));
             }
         }
         if to_embed.is_empty() {
             return;
         }
         // Borrowed views only — embedding a batch must not copy every query.
-        let queries: Vec<&str> = to_embed.iter().map(|(q, _, _)| q.as_str()).collect();
+        let queries: Vec<&str> = to_embed.iter().map(|(q, _, _, _)| q.as_str()).collect();
+        let t_embed = Instant::now();
         match router.embedder().embed_batch(&queries) {
             Ok(embeddings) => {
-                for ((query, reply, enqueued), emb) in to_embed.into_iter().zip(embeddings) {
+                let embedded = Instant::now();
+                router.latency.record("embed", (embedded - t_embed).as_micros() as f64);
+                // One embed interval shared by the whole micro-batch: stamp
+                // it on every trace before any request starts routing, so a
+                // batch-mate's route time never bleeds into an embed span.
+                for (_, _, _, trace) in to_embed.iter_mut() {
+                    trace.span_at(Stage::Embed, t_embed, embedded, f32::NAN);
+                }
+                for ((query, reply, enqueued, mut trace), emb) in
+                    to_embed.into_iter().zip(embeddings)
+                {
                     match &mut sched {
-                        Some(s) => match router.route(&query, emb, enqueued) {
+                        Some(s) => match router.route(&query, emb, enqueued, &mut trace) {
                             RouteDecision::Exact(resp) => {
                                 let _ = reply.send(Ok(resp));
                             }
                             RouteDecision::Tweak(t) => {
-                                let job = Job::new(JobKind::Tweak(t), reply, enqueued);
+                                let job = Job::traced(JobKind::Tweak(t), reply, enqueued, trace);
                                 s.submit(job, router);
                             }
                             RouteDecision::Miss(m) => {
                                 let key = query_key(&m.query);
                                 let kind = JobKind::Miss { job: m, key };
-                                s.submit(Job::new(kind, reply, enqueued), router);
+                                s.submit(Job::traced(kind, reply, enqueued, trace), router);
                             }
                         },
                         None => {
-                            let resp = router.handle_embedded(&query, emb, enqueued);
+                            let resp = router.handle_embedded(&query, emb, enqueued, &mut trace);
                             let _ = reply.send(resp);
                         }
                     }
@@ -324,7 +370,7 @@ impl Engine {
             }
             Err(e) => {
                 let msg = format!("batched embed failed: {e}");
-                for (_, reply, _) in to_embed {
+                for (_, reply, _, _) in to_embed {
                     let _ = reply.send(Err(anyhow!("{msg}")));
                 }
             }
@@ -349,7 +395,7 @@ impl Engine {
 
     fn collect_stats(
         router: &Router,
-        batcher: &Batcher<(String, ReplyTx)>,
+        batcher: &Batcher<BatchItem>,
         sched: &Scheduler,
     ) -> EngineStats {
         let persist = router.cache().persist_status();
@@ -385,6 +431,8 @@ impl Engine {
                 .recovery
                 .as_ref()
                 .map_or(0, |r| r.recovered_entries),
+            stage_latency: router.traces.stage_summaries(),
+            traces_finished: router.traces.finished(),
         }
     }
 

@@ -27,6 +27,7 @@ use crate::cost::{CostLedger, ModelRole, TokenUsage};
 use crate::llm::{BatchDecodeStats, LanguageModel, LlmResponse, LlmSession, TweakPrompt};
 use crate::metrics::{Counters, LatencyRecorder};
 use crate::runtime::{Embedder, Runtime, SamplingParams, TextEmbedder};
+use crate::trace::{Stage, TraceBuilder, TraceHub, TraceTag};
 use crate::util::ThreadPool;
 
 /// Where a request's response is delivered (front-ends block on the
@@ -102,6 +103,8 @@ pub struct Router {
     pub ledger: CostLedger,
     pub latency: LatencyRecorder,
     pub counters: Counters,
+    /// Completed per-request span traces (ring + slow list + histograms).
+    pub traces: TraceHub,
     /// What crash recovery found on startup (None: persistence disabled).
     pub recovery: Option<RecoveryReport>,
     /// Shared scan workers for the sharded vector search (`index.shards`
@@ -183,6 +186,7 @@ impl Router {
         if let Some(pool) = &scan_pool {
             cache.set_pool(Arc::clone(pool), config.index.shards);
         }
+        let traces = TraceHub::new(config.trace.clone());
         Router {
             config,
             embedder,
@@ -192,6 +196,7 @@ impl Router {
             ledger: CostLedger::default(),
             latency: LatencyRecorder::new(),
             counters: Counters::default(),
+            traces,
             recovery: None,
             scan_pool,
         }
@@ -255,9 +260,10 @@ impl Router {
     /// Route one query through the Figure-1 pipeline.
     pub fn handle(&mut self, query: &str) -> Result<RoutedResponse> {
         let t_start = std::time::Instant::now();
+        let mut trace = self.traces.begin(query, t_start);
 
         // 0) exact-match fast path (§6.1)
-        if let Some(resp) = self.try_exact(query, t_start) {
+        if let Some(resp) = self.try_exact(query, t_start, &mut trace) {
             return Ok(resp);
         }
 
@@ -265,30 +271,44 @@ impl Router {
         let t = std::time::Instant::now();
         let embedding = self.embedder.embed(query)?;
         self.latency.record_duration("embed", t.elapsed());
+        trace.span_from(Stage::Embed, t);
 
-        self.handle_embedded(query, embedding, t_start)
+        self.handle_embedded(query, embedding, t_start, &mut trace)
     }
 
     /// Exact-match fast path; `None` when disabled or no exact entry.
+    /// On a hit the trace is finished here (tagged `exact_hit`).
     pub fn try_exact(
         &mut self,
         query: &str,
         t_start: std::time::Instant,
+        trace: &mut TraceBuilder,
     ) -> Option<RoutedResponse> {
         if !self.config.exact_match_fast_path {
             return None;
         }
+        let t = std::time::Instant::now();
         let (id, entry) = self.cache.lookup_exact(query)?;
         let text = entry.response_text.clone();
         let cached_query = entry.query_text.clone();
         self.cache.touch(id);
+        trace.span_from_value(Stage::Route, t, 1.0);
+        trace.set_similarity(1.0);
         self.ledger.record_free();
         self.counters.inc("requests");
         self.counters.inc("exact_hits");
-        // Sample elapsed once: the recorded latency and the reported
-        // total_micros must be the same number.
+        trace.span_since_last(Stage::Reply);
+        // Sample elapsed once, after the reply span, so every span nests
+        // within [0, total_us] and the recorded latency and the reported
+        // total_micros are the same number.
         let total_micros = t_start.elapsed().as_micros();
         self.latency.record("total", total_micros as f64);
+        self.traces.finish(
+            trace,
+            TraceTag::ExactHit,
+            total_micros as u64,
+            self.config.similarity_threshold,
+        );
         Some(RoutedResponse {
             text,
             pathway: Pathway::ExactHit,
@@ -309,22 +329,41 @@ impl Router {
         query: &str,
         embedding: Vec<f32>,
         t_start: std::time::Instant,
+        trace: &mut TraceBuilder,
     ) -> Result<RoutedResponse> {
-        match self.route(query, embedding, t_start) {
+        match self.route(query, embedding, t_start, trace) {
             RouteDecision::Exact(resp) => Ok(resp),
             RouteDecision::Tweak(job) => {
                 let t = std::time::Instant::now();
                 let mut session = self.begin_tweak_session(&job)?;
+                let decode_started = std::time::Instant::now();
+                trace.span_at(Stage::Prefill, t, decode_started, f32::NAN);
                 while session.advance()? {}
                 let resp = session.finish()?;
-                Ok(self.complete_tweak(&job, resp, t_start, t.elapsed().as_micros()))
+                trace.span_at(
+                    Stage::Decode,
+                    decode_started,
+                    std::time::Instant::now(),
+                    resp.decode_micros as f32,
+                );
+                trace.set_compute(resp.prefill_micros, resp.decode_micros);
+                Ok(self.complete_tweak(&job, resp, t_start, t.elapsed().as_micros(), trace))
             }
             RouteDecision::Miss(job) => {
                 let t = std::time::Instant::now();
                 let mut session = self.begin_miss_session(&job)?;
+                let decode_started = std::time::Instant::now();
+                trace.span_at(Stage::Prefill, t, decode_started, f32::NAN);
                 while session.advance()? {}
                 let resp = session.finish()?;
-                Ok(self.complete_miss(job, resp, t_start, t.elapsed().as_micros()))
+                trace.span_at(
+                    Stage::Decode,
+                    decode_started,
+                    std::time::Instant::now(),
+                    resp.decode_micros as f32,
+                );
+                trace.set_compute(resp.prefill_micros, resp.decode_micros);
+                Ok(self.complete_miss(job, resp, t_start, t.elapsed().as_micros(), trace))
             }
         }
     }
@@ -336,20 +375,23 @@ impl Router {
         query: &str,
         embedding: Vec<f32>,
         t_start: std::time::Instant,
+        trace: &mut TraceBuilder,
     ) -> RouteDecision {
         // Exact-match re-check: the batched front runs `try_exact` before
         // embedding, but an identical query routed earlier in this same
         // drain may have inserted its response since.
-        if let Some(resp) = self.try_exact(query, t_start) {
+        if let Some(resp) = self.try_exact(query, t_start, trace) {
             return RouteDecision::Exact(resp);
         }
         self.counters.inc("requests");
         let t = std::time::Instant::now();
         let hits = self.cache.search(&embedding, self.config.top_k);
         self.latency.record_duration("search", t.elapsed());
+        trace.span_from(Stage::Search, t);
+        let t_route = std::time::Instant::now();
         let top = hits.first().copied();
         let threshold = self.config.similarity_threshold;
-        match top {
+        let decision = match top {
             Some(hit) if hit.score >= threshold => {
                 let entry = self
                     .cache
@@ -370,7 +412,17 @@ impl Router {
                 embedding,
                 top_score: top.map(|h| h.score),
             }),
+        };
+        let score = match &decision {
+            RouteDecision::Tweak(j) => j.score,
+            RouteDecision::Miss(j) => j.top_score.unwrap_or(f32::NAN),
+            RouteDecision::Exact(_) => unreachable!("exact resolved above"),
+        };
+        trace.span_from_value(Stage::Route, t_route, score);
+        if score.is_finite() {
+            trace.set_similarity(score);
         }
+        decision
     }
 
     /// Stage 2 (hit pathway): start the Small-LLM tweak session.
@@ -393,13 +445,22 @@ impl Router {
         resp: LlmResponse,
         t_start: std::time::Instant,
         gen_micros: u128,
+        trace: &mut TraceBuilder,
     ) -> RoutedResponse {
         self.latency.record("tweak_generate", gen_micros as f64);
         self.cache.touch(job.hit_id);
         self.ledger.record(ModelRole::Small, resp.usage);
         self.counters.inc("tweak_hits");
+        // Reply span before the total sample: spans nest in [0, total_us].
+        trace.span_since_last(Stage::Reply);
         let total_micros = t_start.elapsed().as_micros();
         self.latency.record("total", total_micros as f64);
+        self.traces.finish(
+            trace,
+            TraceTag::TweakHit,
+            total_micros as u64,
+            self.config.similarity_threshold,
+        );
         RoutedResponse {
             text: resp.text,
             pathway: Pathway::TweakHit,
@@ -418,15 +479,25 @@ impl Router {
         resp: LlmResponse,
         t_start: std::time::Instant,
         gen_micros: u128,
+        trace: &mut TraceBuilder,
     ) -> RoutedResponse {
         self.latency.record("big_generate", gen_micros as f64);
         let t = std::time::Instant::now();
         let id = self.cache.insert(&job.query, &resp.text, job.embedding);
         self.latency.record_duration("cache_insert", t.elapsed());
+        trace.span_from(Stage::CacheInsert, t);
         self.ledger.record(ModelRole::Big, resp.usage);
         self.counters.inc("misses");
+        // Reply span before the total sample: spans nest in [0, total_us].
+        trace.span_since_last(Stage::Reply);
         let total_micros = t_start.elapsed().as_micros();
         self.latency.record("total", total_micros as f64);
+        self.traces.finish(
+            trace,
+            TraceTag::Miss,
+            total_micros as u64,
+            self.config.similarity_threshold,
+        );
         RoutedResponse {
             text: resp.text,
             pathway: Pathway::Miss,
@@ -448,6 +519,7 @@ impl Router {
         leader_query: &str,
         leader: &RoutedResponse,
         enqueued: std::time::Instant,
+        trace: &mut TraceBuilder,
     ) -> RoutedResponse {
         // NB: "requests" was already counted when this request was routed;
         // only the pathway partition is settled here. (Coalescing itself is
@@ -465,8 +537,17 @@ impl Router {
             self.counters.inc("misses");
             Pathway::Miss
         };
+        // The follower's wait for the leader's generation is its queue-wait.
+        trace.span_since_last(Stage::QueueWait);
+        trace.span_since_last(Stage::Reply);
         let total_micros = enqueued.elapsed().as_micros();
         self.latency.record("total", total_micros as f64);
+        self.traces.finish(
+            trace,
+            TraceTag::Coalesced,
+            total_micros as u64,
+            self.config.similarity_threshold,
+        );
         RoutedResponse {
             text: leader.text.clone(),
             pathway,

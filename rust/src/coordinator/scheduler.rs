@@ -41,6 +41,7 @@ use anyhow::{anyhow, Result};
 use super::{MissJob, ReplyTx, Router, TweakJob};
 use crate::config::SchedulerConfig;
 use crate::llm::LlmSession;
+use crate::trace::{Stage, TraceBuilder};
 
 /// Which generation a routed request needs.
 pub enum JobKind {
@@ -57,11 +58,17 @@ pub struct Job {
     /// When the request entered the submission pipeline (drives reported
     /// latency, exactly as in the sequential path).
     pub enqueued: Instant,
+    /// The request's span-trace arena (disabled outside the engine path).
+    pub trace: TraceBuilder,
 }
 
 impl Job {
     pub fn new(kind: JobKind, reply: ReplyTx, enqueued: Instant) -> Job {
-        Job { kind, reply, enqueued }
+        Job { kind, reply, enqueued, trace: TraceBuilder::disabled() }
+    }
+
+    pub fn traced(kind: JobKind, reply: ReplyTx, enqueued: Instant, trace: TraceBuilder) -> Job {
+        Job { kind, reply, enqueued, trace }
     }
 }
 
@@ -71,6 +78,8 @@ struct Active {
     session: Box<dyn LlmSession>,
     /// Session begin time — completion reports begin→EOS occupancy.
     started: Instant,
+    /// Prefill end (first decode step eligible) — starts the decode span.
+    decode_started: Instant,
 }
 
 pub struct Scheduler {
@@ -82,7 +91,7 @@ pub struct Scheduler {
     /// Followers per in-flight (active or waiting) miss, by normalized
     /// query key: O(1) duplicate coalescing regardless of backlog size.
     /// An entry exists exactly while its leader is in flight.
-    followers: HashMap<u64, Vec<(ReplyTx, Instant)>>,
+    followers: HashMap<u64, Vec<(ReplyTx, Instant, TraceBuilder)>>,
     /// Requests served by attaching to an in-flight duplicate (lifetime).
     coalesced: u64,
     /// Sessions completed (lifetime).
@@ -127,7 +136,7 @@ impl Scheduler {
     pub fn submit(&mut self, job: Job, router: &mut Router) {
         if let JobKind::Miss { key, .. } = &job.kind {
             if let Some(flw) = self.followers.get_mut(key) {
-                flw.push((job.reply, job.enqueued));
+                flw.push((job.reply, job.enqueued, job.trace));
                 self.coalesced += 1;
                 return;
             }
@@ -147,12 +156,18 @@ impl Scheduler {
     /// sessions completed this round.
     pub fn step(&mut self, router: &mut Router) -> usize {
         let mut finished = 0;
-        for _ in 0..self.active.len() {
+        let live = self.active.len();
+        for _ in 0..live {
             let mut act = match self.active.pop_front() {
                 Some(a) => a,
                 None => break,
             };
-            match Self::advance_some(&mut act, self.cfg.fairness_steps.max(1)) {
+            let t_turn = Instant::now();
+            let outcome = Self::advance_some(&mut act, self.cfg.fairness_steps.max(1));
+            // Child span of the decode span: this session's turn in the
+            // round, tagged with the round's batch-slot occupancy.
+            act.job.trace.decode_round(t_turn, live as f32);
+            match outcome {
                 Ok(false) => self.active.push_back(act),
                 Ok(true) => {
                     self.complete(act, router);
@@ -201,14 +216,21 @@ impl Scheduler {
 
     /// Start a job's session (runs the prefill); replies with the error on
     /// failure instead of poisoning the ring.
-    fn start(&mut self, job: Job, router: &mut Router) {
+    fn start(&mut self, mut job: Job, router: &mut Router) {
+        // Queue wait: routing decision end → session start (≈0 when a slot
+        // was free at submit time).
+        job.trace.span_since_last(Stage::QueueWait);
         let started = Instant::now();
         let session = match &job.kind {
             JobKind::Tweak(t) => router.begin_tweak_session(t),
             JobKind::Miss { job: m, .. } => router.begin_miss_session(m),
         };
         match session {
-            Ok(session) => self.active.push_back(Active { job, session, started }),
+            Ok(session) => {
+                let decode_started = Instant::now();
+                job.trace.span_at(Stage::Prefill, started, decode_started, f32::NAN);
+                self.active.push_back(Active { job, session, started, decode_started });
+            }
             Err(e) => self.fail(job, &e),
         }
     }
@@ -217,7 +239,7 @@ impl Scheduler {
     /// and fan the response out to coalesced followers.
     fn complete(&mut self, act: Active, router: &mut Router) {
         let gen_micros = act.started.elapsed().as_micros();
-        let Active { job, session, .. } = act;
+        let Active { job, session, decode_started, .. } = act;
         let resp = match session.finish() {
             Ok(r) => r,
             Err(e) => {
@@ -226,31 +248,37 @@ impl Scheduler {
             }
         };
         self.completed += 1;
-        let (routed, leader_query, followers) = match job.kind {
+        let Job { kind, reply, enqueued, mut trace } = job;
+        // Parent span over every fairness-round turn; value = the
+        // generator-reported decode compute inside that occupancy window.
+        trace.span_at(Stage::Decode, decode_started, Instant::now(), resp.decode_micros as f32);
+        trace.set_compute(resp.prefill_micros, resp.decode_micros);
+        let (routed, leader_query, followers) = match kind {
             JobKind::Tweak(t) => {
-                let routed = router.complete_tweak(&t, resp, job.enqueued, gen_micros);
+                let routed = router.complete_tweak(&t, resp, enqueued, gen_micros, &mut trace);
                 (routed, t.prompt.new_query, Vec::new())
             }
             JobKind::Miss { job: m, key } => {
                 let query = m.query.clone();
-                let routed = router.complete_miss(m, resp, job.enqueued, gen_micros);
+                let routed = router.complete_miss(m, resp, enqueued, gen_micros, &mut trace);
                 let flw = self.followers.remove(&key).unwrap_or_default();
                 (routed, query, flw)
             }
         };
-        for (tx, enqueued) in followers {
-            let fan = router.complete_follower(&leader_query, &routed, enqueued);
+        for (tx, f_enqueued, mut f_trace) in followers {
+            let fan = router.complete_follower(&leader_query, &routed, f_enqueued, &mut f_trace);
             let _ = tx.send(Ok(fan));
         }
-        let _ = job.reply.send(Ok(routed));
+        let _ = reply.send(Ok(routed));
     }
 
     /// Propagate a session failure to the leader and every coalesced
     /// follower (the followers entry must be drained, or later duplicates
     /// would attach to a leader that no longer exists and never hear back).
+    /// Failed requests drop their traces: only served requests finish one.
     fn fail(&mut self, job: Job, e: &anyhow::Error) {
         if let JobKind::Miss { key, .. } = &job.kind {
-            for (tx, _) in self.followers.remove(key).unwrap_or_default() {
+            for (tx, _, _) in self.followers.remove(key).unwrap_or_default() {
                 let _ = tx.send(Err(anyhow!("generation failed: {e:#}")));
             }
         }
@@ -303,7 +331,8 @@ mod tests {
     ) -> mpsc::Receiver<Result<RoutedResponse>> {
         let (tx, rx) = mpsc::channel();
         let emb = router.embedder().embed(query).unwrap();
-        let kind = match router.route(query, emb, Instant::now()) {
+        let mut trace = TraceBuilder::disabled();
+        let kind = match router.route(query, emb, Instant::now(), &mut trace) {
             RouteDecision::Exact(resp) => {
                 tx.send(Ok(resp)).unwrap();
                 return rx;

@@ -30,4 +30,5 @@ pub mod metrics;
 pub mod runtime;
 pub mod server;
 pub mod tokenizer;
+pub mod trace;
 pub mod util;

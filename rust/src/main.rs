@@ -36,6 +36,8 @@ fn usage() -> &'static str {
             [--config FILE] [--threshold T] [--exact-fast-path BOOL]\n\
             [--data-dir DIR]         durable cache: replay WAL+snapshot on\n\
                                      start, snapshot on graceful shutdown\n\
+            [--trace-dir DIR]        export completed request traces as\n\
+                                     JSONL to DIR/traces.jsonl\n\
      query  [--addr HOST:PORT] TEXT  send one query to a running server\n\
      snapshot [--addr HOST:PORT]     force a cache snapshot + WAL rotation\n\
      demo   [--n N] [--threshold T]  route a small synthetic trace and report\n"
@@ -57,6 +59,9 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     if let Some(d) = args.opt_str("data-dir") {
         cfg.set("persist.data_dir", d)?;
+    }
+    if let Some(d) = args.opt_str("trace-dir") {
+        cfg.set("trace.export_dir", d)?;
     }
     Ok(cfg)
 }

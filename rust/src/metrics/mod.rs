@@ -1,14 +1,157 @@
 //! Serving metrics: latency recorders, counters, and the per-pathway
 //! breakdown the e2e driver reports.
+//!
+//! `LatencyRecorder` is bounded-memory: each stage keeps a Welford
+//! accumulator, a log-bucketed histogram, and a small exact-sample prefix.
+//! Percentiles are exact while a stage has at most [`EXACT_SAMPLE_CAP`]
+//! samples and histogram-approximated (<= 1/[`LOG_HIST_SUB`] relative error)
+//! beyond that, so a long-running server never grows per-request state.
 
 use std::collections::BTreeMap;
 
-use crate::util::{Summary};
+use crate::util::{Online, Summary};
+
+/// Exact samples retained per stage before falling back to the histogram.
+pub const EXACT_SAMPLE_CAP: usize = 4096;
+
+/// Linear sub-buckets per power-of-two octave in [`LogHistogram`].
+pub const LOG_HIST_SUB: usize = 8;
+
+/// Octaves covered by [`LogHistogram`]: values in `[1, 2^40)` microseconds
+/// (~12.7 days) resolve to a bucket; everything below clamps to bucket 0.
+const LOG_HIST_OCTAVES: usize = 40;
+
+/// HDR-style log-bucketed histogram over non-negative values (micros).
+///
+/// Buckets are `LOG_HIST_SUB` linear subdivisions of each power-of-two
+/// octave, so the worst-case relative quantile error is `1 / LOG_HIST_SUB`
+/// (12.5%) at constant memory (`40 * 8` u64 counts).
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram { counts: vec![0; LOG_HIST_OCTAVES * LOG_HIST_SUB], total: 0 }
+    }
+
+    fn bucket(x: f64) -> usize {
+        if !x.is_finite() || x < 1.0 {
+            return 0;
+        }
+        let octave = (x.log2().floor() as usize).min(LOG_HIST_OCTAVES - 1);
+        let base = (octave as f64).exp2();
+        let sub = (((x / base) - 1.0) * LOG_HIST_SUB as f64).floor();
+        let sub = (sub.max(0.0) as usize).min(LOG_HIST_SUB - 1);
+        octave * LOG_HIST_SUB + sub
+    }
+
+    /// Midpoint of bucket `i` (the value reported for quantiles landing
+    /// in it). Bucket width is `2^octave / LOG_HIST_SUB`.
+    fn bucket_mid(i: usize) -> f64 {
+        let octave = i / LOG_HIST_SUB;
+        let sub = i % LOG_HIST_SUB;
+        let base = (octave as f64).exp2();
+        base * (1.0 + sub as f64 / LOG_HIST_SUB as f64) + base / (2 * LOG_HIST_SUB) as f64
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.counts[Self::bucket(x)] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Quantile `q` in [0, 1] via cumulative walk; 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= rank {
+                return Self::bucket_mid(i);
+            }
+        }
+        Self::bucket_mid(self.counts.len() - 1)
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+}
+
+/// Per-stage accumulator: exact prefix + running moments + histogram.
+#[derive(Debug)]
+struct StageAcc {
+    online: Online,
+    exact: Vec<f64>,
+    hist: LogHistogram,
+}
+
+impl Default for StageAcc {
+    fn default() -> Self {
+        StageAcc { online: Online::new(), exact: Vec::new(), hist: LogHistogram::new() }
+    }
+}
+
+impl StageAcc {
+    fn push(&mut self, x: f64) {
+        self.online.push(x);
+        self.hist.record(x);
+        if self.exact.len() < EXACT_SAMPLE_CAP {
+            self.exact.push(x);
+        }
+    }
+
+    fn summary(&self) -> Summary {
+        let n = self.online.count() as usize;
+        if n == self.exact.len() {
+            return Summary::of(&self.exact);
+        }
+        Summary {
+            n,
+            mean: self.online.mean(),
+            std: self.online.std(),
+            min: self.online.min(),
+            p50: self.hist.quantile(0.50),
+            p90: self.hist.quantile(0.90),
+            p99: self.hist.quantile(0.99),
+            max: self.online.max(),
+        }
+    }
+
+    fn merge(&mut self, other: &StageAcc) {
+        self.online.merge(&other.online);
+        self.hist.merge(&other.hist);
+        for &x in &other.exact {
+            if self.exact.len() == EXACT_SAMPLE_CAP {
+                break;
+            }
+            self.exact.push(x);
+        }
+    }
+}
 
 /// Latency samples per named stage (embed, search, prefill, decode, ...).
 #[derive(Debug, Default)]
 pub struct LatencyRecorder {
-    samples: BTreeMap<String, Vec<f64>>,
+    samples: BTreeMap<String, StageAcc>,
 }
 
 impl LatencyRecorder {
@@ -25,16 +168,16 @@ impl LatencyRecorder {
     }
 
     pub fn summary(&self, stage: &str) -> Option<Summary> {
-        self.samples.get(stage).map(|s| Summary::of(s))
+        self.samples.get(stage).map(|s| s.summary())
     }
 
     pub fn stages(&self) -> impl Iterator<Item = (&String, Summary)> {
-        self.samples.iter().map(|(k, v)| (k, Summary::of(v)))
+        self.samples.iter().map(|(k, v)| (k, v.summary()))
     }
 
     pub fn merge(&mut self, other: &LatencyRecorder) {
         for (k, v) in &other.samples {
-            self.samples.entry(k.clone()).or_default().extend(v);
+            self.samples.entry(k.clone()).or_default().merge(v);
         }
     }
 
@@ -123,5 +266,76 @@ mod tests {
         let t = r.table();
         assert!(t.contains("decode"));
         assert!(t.contains("p99_us"));
+    }
+
+    #[test]
+    fn log_histogram_quantiles_bounded_error() {
+        let mut h = LogHistogram::new();
+        for i in 1..=10_000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 10_000);
+        for (q, expect) in [(0.5, 5_000.0), (0.9, 9_000.0), (0.99, 9_900.0)] {
+            let got = h.quantile(q);
+            let rel = (got - expect).abs() / expect;
+            assert!(rel <= 0.13, "q={q} got={got} expect={expect} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn log_histogram_edge_values() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(0.2);
+        h.record(f64::NAN);
+        h.record(1e30); // clamps to the top octave without panicking
+        assert_eq!(h.count(), 4);
+        assert!(h.quantile(0.0) >= 1.0);
+    }
+
+    #[test]
+    fn recorder_memory_is_bounded_past_cap() {
+        let mut r = LatencyRecorder::new();
+        let n = EXACT_SAMPLE_CAP + 6_000;
+        for i in 1..=n {
+            r.record("total", i as f64);
+        }
+        let stage = r.samples.get("total").unwrap();
+        assert_eq!(stage.exact.len(), EXACT_SAMPLE_CAP);
+        let s = r.summary("total").unwrap();
+        assert_eq!(s.n, n);
+        // mean/min/max stay exact via the online accumulator
+        assert!((s.mean - (n as f64 + 1.0) / 2.0).abs() < 1e-6 * n as f64);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, n as f64);
+        // percentiles come from the histogram: bounded relative error
+        let expect = n as f64 / 2.0;
+        assert!((s.p50 - expect).abs() / expect <= 0.13, "p50={}", s.p50);
+    }
+
+    #[test]
+    fn summaries_exact_below_cap() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=101 {
+            r.record("x", i as f64);
+        }
+        let s = r.summary("x").unwrap();
+        assert_eq!(s.p50, 51.0);
+        assert_eq!(s.max, 101.0);
+    }
+
+    #[test]
+    fn merged_recorders_past_cap_stay_bounded() {
+        let mut a = LatencyRecorder::new();
+        let mut b = LatencyRecorder::new();
+        for i in 0..EXACT_SAMPLE_CAP {
+            a.record("x", i as f64);
+            b.record("x", i as f64);
+        }
+        a.merge(&b);
+        let s = a.summary("x").unwrap();
+        assert_eq!(s.n, 2 * EXACT_SAMPLE_CAP);
+        let stage = a.samples.get("x").unwrap();
+        assert_eq!(stage.exact.len(), EXACT_SAMPLE_CAP);
     }
 }

@@ -4,9 +4,13 @@
 //!   → {"query": "why is coffee good for health?"}
 //!   ← {"text": "...", "pathway": "tweak_hit", "similarity": 0.83,
 //!      "latency_us": 1234}
-//!   → {"stats": true}   ← {"requests": 10, "latency_table": "...", ...}
+//!   → {"stats": true}   ← {"requests": 10, "latency_table": "...",
+//!      "stages": [{"stage": "decode", "pathway": "miss", ...}], ...}
 //!   → {"admin": "snapshot"}
 //!   ← {"snapshot": true, "generation": 3, "entries": 120}
+//!   → {"admin": "trace", "n": 4}
+//!   ← {"traces": [{"id": 7, "pathway": "tweak_hit", "spans": [...]}, ...],
+//!      "slow": [...], "finished": 42, "dropped": 0}
 //!
 //! The server accepts any number of concurrent connections; each connection
 //! thread forwards to the shared `EngineHandle` (the engine thread owns the
@@ -30,6 +34,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{EngineHandle, Pathway};
+use crate::trace::StageSummary;
 use crate::util::Json;
 
 pub fn pathway_str(p: Pathway) -> &'static str {
@@ -205,6 +210,8 @@ fn process_line(line: &str, handle: &EngineHandle) -> Json {
                     Json::num(s.last_compaction_unix as f64),
                 ),
                 ("recovered_entries", Json::num(s.recovered_entries as f64)),
+                ("stages", stage_rows(&s.stage_latency)),
+                ("traces_finished", Json::num(s.traces_finished as f64)),
             ]),
             Err(e) => Json::obj_from(vec![("error", Json::s(format!("{e}")))]),
         };
@@ -219,9 +226,27 @@ fn process_line(line: &str, handle: &EngineHandle) -> Json {
                 ]),
                 Err(e) => Json::obj_from(vec![("error", Json::s(format!("{e}")))]),
             },
+            Ok("trace") => {
+                let n = req.opt("n").and_then(|v| v.usize().ok()).unwrap_or(16);
+                match handle.traces(n) {
+                    Ok(r) => Json::obj_from(vec![
+                        (
+                            "traces",
+                            Json::Arr(r.traces.iter().map(|t| t.to_json()).collect()),
+                        ),
+                        (
+                            "slow",
+                            Json::Arr(r.slow.iter().map(|t| t.to_json()).collect()),
+                        ),
+                        ("finished", Json::num(r.finished as f64)),
+                        ("dropped", Json::num(r.dropped as f64)),
+                    ]),
+                    Err(e) => Json::obj_from(vec![("error", Json::s(format!("{e}")))]),
+                }
+            }
             _ => Json::obj_from(vec![(
                 "error",
-                Json::s("unknown admin command (expected \"snapshot\")"),
+                Json::s("unknown admin command (expected \"snapshot\" or \"trace\")"),
             )]),
         };
     }
@@ -246,6 +271,24 @@ fn process_line(line: &str, handle: &EngineHandle) -> Json {
         ]),
         Err(e) => Json::obj_from(vec![("error", Json::s(format!("{e}")))]),
     }
+}
+
+/// Per-stage × per-pathway quantile rows for the `stats` verb.
+fn stage_rows(rows: &[StageSummary]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj_from(vec![
+                    ("stage", Json::s(r.stage)),
+                    ("pathway", Json::s(r.pathway)),
+                    ("n", Json::num(r.n as f64)),
+                    ("p50_us", Json::num(r.p50_us)),
+                    ("p90_us", Json::num(r.p90_us)),
+                    ("p99_us", Json::num(r.p99_us)),
+                ])
+            })
+            .collect(),
+    )
 }
 
 /// Minimal blocking client for the line protocol (examples + tests).
@@ -281,6 +324,14 @@ impl Client {
     /// Ask the server to snapshot its cache now (`{"admin": "snapshot"}`).
     pub fn snapshot(&mut self) -> Result<Json> {
         self.roundtrip(&Json::obj_from(vec![("admin", Json::s("snapshot"))]))
+    }
+
+    /// Fetch the last `n` completed traces (`{"admin": "trace", "n": n}`).
+    pub fn trace(&mut self, n: usize) -> Result<Json> {
+        self.roundtrip(&Json::obj_from(vec![
+            ("admin", Json::s("trace")),
+            ("n", Json::num(n as f64)),
+        ]))
     }
 }
 

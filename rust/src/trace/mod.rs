@@ -1,0 +1,726 @@
+//! Per-request span tracing across the serving pipeline.
+//!
+//! Every request admitted by the engine gets a trace id and an ordered span
+//! tree: ingest → batcher-wait → embed → search → route → queue-wait →
+//! prefill → decode (with per-fairness-round child spans carrying slot
+//! occupancy) → cache-insert → reply. The route span carries the similarity
+//! score of the routing decision; the finished trace carries the pathway tag
+//! (exact hit / tweak hit / miss / coalesced follower).
+//!
+//! Cost discipline: a [`TraceBuilder`] is a per-request arena — a `Vec` of
+//! `(stage, start_us, end_us, value)` records plus two `Instant`s. Disabled
+//! builders (tracing off) allocate nothing and every recording call is an
+//! early-return. Completed traces land in [`TraceHub`]: a fixed-capacity
+//! ring buffer, a threshold-gated slow-request list, and log-bucketed
+//! per-stage × per-pathway histograms ([`LogHistogram`]) — all bounded
+//! memory regardless of uptime.
+
+use std::collections::VecDeque;
+use std::fs::OpenOptions;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+use crate::config::TraceConfig;
+use crate::metrics::LogHistogram;
+use crate::util::Json;
+
+/// Per-fairness-round child spans kept per trace; rounds beyond this are
+/// counted (`decode_rounds`) but not materialized, bounding the arena.
+pub const MAX_ROUND_SPANS: usize = 128;
+
+/// Slow-request retention list capacity.
+const SLOW_CAP: usize = 64;
+
+/// Query text retained per trace (chars).
+const QUERY_CAP: usize = 96;
+
+/// Pipeline stages a span can describe. `DecodeRound` spans are children of
+/// the `Decode` span (one per fairness round); everything else is depth 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Channel transit: `EngineHandle::request` send → engine thread pickup.
+    Ingest,
+    /// Time parked in the dynamic batcher awaiting batch-mates.
+    BatcherWait,
+    /// Embedding forward pass (batched: same interval for batch-mates).
+    Embed,
+    /// Vector index search.
+    Search,
+    /// Routing decision (threshold compare; exact-match lookup on hits).
+    /// `value` = similarity score of the decision.
+    Route,
+    /// Scheduler admission queue (or, for coalesced followers, the wait for
+    /// the leader's generation).
+    QueueWait,
+    /// Session start: prompt build + prefill dispatch.
+    Prefill,
+    /// Generation: first decode step → EOS. `value` = generator-reported
+    /// decode compute micros (the wall interval additionally contains
+    /// fairness-round interleaving).
+    Decode,
+    /// One fairness-round turn within `Decode`. `value` = sessions active
+    /// in that round (batch-slot occupancy).
+    DecodeRound,
+    /// Cache insert (embedding + response row append).
+    CacheInsert,
+    /// Response accounting + reply-channel send.
+    Reply,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 11] = [
+        Stage::Ingest,
+        Stage::BatcherWait,
+        Stage::Embed,
+        Stage::Search,
+        Stage::Route,
+        Stage::QueueWait,
+        Stage::Prefill,
+        Stage::Decode,
+        Stage::DecodeRound,
+        Stage::CacheInsert,
+        Stage::Reply,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Ingest => "ingest",
+            Stage::BatcherWait => "batcher_wait",
+            Stage::Embed => "embed",
+            Stage::Search => "search",
+            Stage::Route => "route",
+            Stage::QueueWait => "queue_wait",
+            Stage::Prefill => "prefill",
+            Stage::Decode => "decode",
+            Stage::DecodeRound => "decode_round",
+            Stage::CacheInsert => "cache_insert",
+            Stage::Reply => "reply",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Nesting depth in the span tree (DecodeRound nests under Decode).
+    pub fn depth(self) -> usize {
+        if self == Stage::DecodeRound {
+            2
+        } else {
+            1
+        }
+    }
+}
+
+/// Pathway tag on a finished trace. Mirrors `coordinator::Pathway` plus the
+/// coalesced-follower case (followers reuse the leader's generation, so the
+/// response-level pathway hides that they waited instead of routing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceTag {
+    ExactHit,
+    TweakHit,
+    Miss,
+    Coalesced,
+}
+
+impl TraceTag {
+    pub const ALL: [TraceTag; 4] = [
+        TraceTag::ExactHit,
+        TraceTag::TweakHit,
+        TraceTag::Miss,
+        TraceTag::Coalesced,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceTag::ExactHit => "exact_hit",
+            TraceTag::TweakHit => "tweak_hit",
+            TraceTag::Miss => "miss",
+            TraceTag::Coalesced => "coalesced",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// One timed interval. Offsets are micros since the trace start (request
+/// enqueue), so a span never needs an `Instant` once recorded.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub stage: Stage,
+    pub start_us: u64,
+    pub end_us: u64,
+    /// Stage-specific payload (route similarity, round occupancy, decode
+    /// compute micros); NaN = none.
+    pub value: f32,
+}
+
+/// Per-request span arena. Obtained from [`TraceHub::begin`]; a disabled
+/// builder (tracing off, or `Default`) never allocates and ignores all
+/// recording calls.
+#[derive(Debug)]
+pub struct TraceBuilder {
+    enabled: bool,
+    id: u64,
+    query: String,
+    start: Instant,
+    last_end: Instant,
+    spans: Vec<Span>,
+    similarity: f32,
+    prefill_us: u64,
+    decode_us: u64,
+    rounds: u32,
+}
+
+impl Default for TraceBuilder {
+    fn default() -> Self {
+        TraceBuilder::disabled()
+    }
+}
+
+impl TraceBuilder {
+    /// A no-op builder: recording calls return immediately, nothing is kept.
+    pub fn disabled() -> TraceBuilder {
+        let now = Instant::now();
+        TraceBuilder {
+            enabled: false,
+            id: 0,
+            query: String::new(),
+            start: now,
+            last_end: now,
+            spans: Vec::new(),
+            similarity: f32::NAN,
+            prefill_us: 0,
+            decode_us: 0,
+            rounds: 0,
+        }
+    }
+
+    fn live(id: u64, query: String, start: Instant) -> TraceBuilder {
+        TraceBuilder {
+            enabled: true,
+            id,
+            query,
+            start,
+            last_end: start,
+            spans: Vec::with_capacity(12),
+            similarity: f32::NAN,
+            prefill_us: 0,
+            decode_us: 0,
+            rounds: 0,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    fn us(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.start).as_micros() as u64
+    }
+
+    /// Record a span over an explicit interval.
+    pub fn span_at(&mut self, stage: Stage, begin: Instant, end: Instant, value: f32) {
+        if !self.enabled {
+            return;
+        }
+        let start_us = self.us(begin);
+        let end_us = self.us(end).max(start_us);
+        self.spans.push(Span { stage, start_us, end_us, value });
+        if end > self.last_end {
+            self.last_end = end;
+        }
+    }
+
+    /// Record a span from `begin` to now.
+    pub fn span_from(&mut self, stage: Stage, begin: Instant) {
+        self.span_at(stage, begin, Instant::now(), f32::NAN);
+    }
+
+    /// Record a span from `begin` to now carrying `value`.
+    pub fn span_from_value(&mut self, stage: Stage, begin: Instant, value: f32) {
+        self.span_at(stage, begin, Instant::now(), value);
+    }
+
+    /// Record a span covering the gap since the previous span's end (the
+    /// trace start if none) — used for wait stages measured by exclusion.
+    pub fn span_since_last(&mut self, stage: Stage) {
+        if !self.enabled {
+            return;
+        }
+        let begin = self.last_end;
+        self.span_at(stage, begin, Instant::now(), f32::NAN);
+    }
+
+    /// Record one fairness-round turn (child of `Decode`). Rounds past
+    /// [`MAX_ROUND_SPANS`] are counted but not materialized.
+    pub fn decode_round(&mut self, begin: Instant, occupancy: f32) {
+        if !self.enabled {
+            return;
+        }
+        self.rounds += 1;
+        if self.rounds as usize <= MAX_ROUND_SPANS {
+            self.span_at(Stage::DecodeRound, begin, Instant::now(), occupancy);
+        }
+    }
+
+    /// Similarity score of the routing decision (also on the route span).
+    pub fn set_similarity(&mut self, s: f32) {
+        if self.enabled {
+            self.similarity = s;
+        }
+    }
+
+    /// Generator-reported prefill/decode compute micros (IC-Cache-style
+    /// split; the wall-clock spans include interleaving on top).
+    pub fn set_compute(&mut self, prefill_us: u128, decode_us: u128) {
+        if self.enabled {
+            self.prefill_us = prefill_us as u64;
+            self.decode_us = decode_us as u64;
+        }
+    }
+}
+
+/// A completed, immutable trace.
+#[derive(Clone, Debug)]
+pub struct FinishedTrace {
+    pub id: u64,
+    pub tag: TraceTag,
+    pub query: String,
+    /// Route similarity; NaN when no candidate was scored (cold miss).
+    pub similarity: f32,
+    /// Router threshold at completion time (for score-vs-threshold reads).
+    pub threshold: f32,
+    pub total_us: u64,
+    /// Fairness rounds the decode took (0 on non-generating pathways).
+    pub decode_rounds: u32,
+    pub gen_prefill_us: u64,
+    pub gen_decode_us: u64,
+    /// Spans sorted by (start, depth): parents precede their children.
+    pub spans: Vec<Span>,
+}
+
+impl FinishedTrace {
+    pub fn span(&self, stage: Stage) -> Option<&Span> {
+        self.spans.iter().find(|s| s.stage == stage)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let spans = self
+            .spans
+            .iter()
+            .map(|s| {
+                let mut kv = vec![
+                    ("stage", Json::s(s.stage.name())),
+                    ("start_us", Json::num(s.start_us as f64)),
+                    ("end_us", Json::num(s.end_us as f64)),
+                ];
+                if s.value.is_finite() {
+                    kv.push(("value", Json::num(s.value as f64)));
+                }
+                Json::obj_from(kv)
+            })
+            .collect();
+        Json::obj_from(vec![
+            ("id", Json::num(self.id as f64)),
+            ("pathway", Json::s(self.tag.name())),
+            ("query", Json::s(self.query.clone())),
+            (
+                "similarity",
+                if self.similarity.is_finite() {
+                    Json::num(self.similarity as f64)
+                } else {
+                    Json::Null
+                },
+            ),
+            ("threshold", Json::num(self.threshold as f64)),
+            ("total_us", Json::num(self.total_us as f64)),
+            ("decode_rounds", Json::num(self.decode_rounds as f64)),
+            ("gen_prefill_us", Json::num(self.gen_prefill_us as f64)),
+            ("gen_decode_us", Json::num(self.gen_decode_us as f64)),
+            ("spans", Json::Arr(spans)),
+        ])
+    }
+}
+
+/// Per-stage × per-pathway latency quantiles from the hub's histograms.
+#[derive(Clone, Debug)]
+pub struct StageSummary {
+    pub stage: &'static str,
+    pub pathway: &'static str,
+    pub n: u64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+}
+
+/// Snapshot returned by the `trace` server verb.
+#[derive(Clone, Debug, Default)]
+pub struct TraceReport {
+    /// Most recent first.
+    pub traces: Vec<FinishedTrace>,
+    pub slow: Vec<FinishedTrace>,
+    pub finished: u64,
+    pub dropped: u64,
+}
+
+/// Owner of completed traces: ring buffer + slow list + histograms + export.
+pub struct TraceHub {
+    cfg: TraceConfig,
+    next_id: u64,
+    finished: u64,
+    ring: VecDeque<FinishedTrace>,
+    slow: VecDeque<FinishedTrace>,
+    /// `(Stage::ALL.len() + 1) × TraceTag::ALL.len()` histograms; the extra
+    /// row holds per-pathway request totals. DecodeRound spans are not
+    /// aggregated (they would swamp the decode row).
+    hist: Vec<LogHistogram>,
+    export: Option<BufWriter<std::fs::File>>,
+}
+
+const TOTAL_ROW: usize = Stage::ALL.len();
+
+impl TraceHub {
+    pub fn new(cfg: TraceConfig) -> TraceHub {
+        let export = if cfg.enabled && !cfg.export_dir.is_empty() {
+            match Self::open_export(&cfg.export_dir) {
+                Ok(w) => Some(w),
+                Err(e) => {
+                    eprintln!("[trace] JSONL export disabled: {e:#}");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        TraceHub {
+            cfg,
+            next_id: 0,
+            finished: 0,
+            ring: VecDeque::new(),
+            slow: VecDeque::new(),
+            hist: vec![LogHistogram::new(); (TOTAL_ROW + 1) * TraceTag::ALL.len()],
+            export,
+        }
+    }
+
+    fn open_export(dir: &str) -> anyhow::Result<BufWriter<std::fs::File>> {
+        std::fs::create_dir_all(dir)?;
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(Path::new(dir).join("traces.jsonl"))?;
+        Ok(BufWriter::new(file))
+    }
+
+    fn slot(row: usize, tag: TraceTag) -> usize {
+        row * TraceTag::ALL.len() + tag.index()
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Start a trace for a request. No-op (disabled builder) if tracing is
+    /// off. `start` should be the request's enqueue instant so span offsets
+    /// line up with `total_micros`.
+    pub fn begin(&mut self, query: &str, start: Instant) -> TraceBuilder {
+        if !self.cfg.enabled {
+            return TraceBuilder::disabled();
+        }
+        self.next_id += 1;
+        TraceBuilder::live(self.next_id, query.chars().take(QUERY_CAP).collect(), start)
+    }
+
+    /// Seal a builder into the ring/slow list/histograms. Takes the builder
+    /// by `&mut` and leaves a disabled one behind, so callers can finish
+    /// mid-method without fighting the borrow checker.
+    pub fn finish(
+        &mut self,
+        trace: &mut TraceBuilder,
+        tag: TraceTag,
+        total_us: u64,
+        threshold: f32,
+    ) {
+        let tb = std::mem::take(trace);
+        if !tb.enabled {
+            return;
+        }
+        let mut spans = tb.spans;
+        spans.sort_by_key(|s| (s.start_us, s.stage.depth()));
+        for s in &spans {
+            if s.stage != Stage::DecodeRound {
+                self.hist[Self::slot(s.stage.index(), tag)].record((s.end_us - s.start_us) as f64);
+            }
+        }
+        self.hist[Self::slot(TOTAL_ROW, tag)].record(total_us as f64);
+        let ft = FinishedTrace {
+            id: tb.id,
+            tag,
+            query: tb.query,
+            similarity: tb.similarity,
+            threshold,
+            total_us,
+            decode_rounds: tb.rounds,
+            gen_prefill_us: tb.prefill_us,
+            gen_decode_us: tb.decode_us,
+            spans,
+        };
+        if let Some(w) = &mut self.export {
+            let mut line = ft.to_json().to_string();
+            line.push('\n');
+            if w.write_all(line.as_bytes()).and_then(|()| w.flush()).is_err() {
+                eprintln!("[trace] JSONL export write failed; disabling export");
+                self.export = None;
+            }
+        }
+        if self.cfg.slow_threshold_ms > 0.0
+            && total_us as f64 >= self.cfg.slow_threshold_ms * 1_000.0
+        {
+            if self.slow.len() == SLOW_CAP {
+                self.slow.pop_front();
+            }
+            self.slow.push_back(ft.clone());
+        }
+        if self.ring.len() >= self.cfg.ring_capacity.max(1) {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(ft);
+        self.finished += 1;
+    }
+
+    pub fn finished(&self) -> u64 {
+        self.finished
+    }
+
+    /// Traces evicted from the ring (still counted in histograms).
+    pub fn dropped(&self) -> u64 {
+        self.finished - self.ring.len() as u64
+    }
+
+    /// Last `n` completed traces, most recent first.
+    pub fn recent(&self, n: usize) -> Vec<FinishedTrace> {
+        self.ring.iter().rev().take(n).cloned().collect()
+    }
+
+    /// Slow-request list, most recent first.
+    pub fn slow(&self) -> Vec<FinishedTrace> {
+        self.slow.iter().rev().cloned().collect()
+    }
+
+    pub fn report(&self, n: usize) -> TraceReport {
+        TraceReport {
+            traces: self.recent(n),
+            slow: self.slow(),
+            finished: self.finished,
+            dropped: self.dropped(),
+        }
+    }
+
+    /// Requests finished per pathway (from the total-row histograms).
+    pub fn pathway_counts(&self) -> Vec<(&'static str, u64)> {
+        TraceTag::ALL
+            .iter()
+            .map(|&t| (t.name(), self.hist[Self::slot(TOTAL_ROW, t)].count()))
+            .collect()
+    }
+
+    /// Non-empty per-stage × per-pathway quantile rows ("total" row last).
+    pub fn stage_summaries(&self) -> Vec<StageSummary> {
+        let names = Stage::ALL.iter().map(|s| s.name()).chain(std::iter::once("total"));
+        let mut out = Vec::new();
+        for (row, stage) in names.enumerate() {
+            for &tag in &TraceTag::ALL {
+                let h = &self.hist[Self::slot(row, tag)];
+                if h.count() == 0 {
+                    continue;
+                }
+                out.push(StageSummary {
+                    stage,
+                    pathway: tag.name(),
+                    n: h.count(),
+                    p50_us: h.quantile(0.50),
+                    p90_us: h.quantile(0.90),
+                    p99_us: h.quantile(0.99),
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn hub(ring: usize) -> TraceHub {
+        TraceHub::new(TraceConfig {
+            enabled: true,
+            ring_capacity: ring,
+            slow_threshold_ms: 0.5,
+            export_dir: String::new(),
+        })
+    }
+
+    fn finish_one(h: &mut TraceHub, tag: TraceTag, total_us: u64) {
+        let t0 = Instant::now();
+        let mut tb = h.begin("q", t0);
+        tb.span_at(Stage::Search, t0, t0 + Duration::from_micros(5), f32::NAN);
+        tb.span_at(
+            Stage::Route,
+            t0 + Duration::from_micros(5),
+            t0 + Duration::from_micros(6),
+            0.9,
+        );
+        h.finish(&mut tb, tag, total_us, 0.7);
+    }
+
+    #[test]
+    fn disabled_builder_records_nothing() {
+        let mut tb = TraceBuilder::disabled();
+        tb.span_from(Stage::Embed, Instant::now());
+        tb.decode_round(Instant::now(), 3.0);
+        tb.set_similarity(0.5);
+        assert!(tb.spans.is_empty());
+        assert_eq!(tb.rounds, 0);
+        assert!(tb.similarity.is_nan());
+    }
+
+    #[test]
+    fn disabled_hub_yields_disabled_builders() {
+        let mut h = TraceHub::new(TraceConfig { enabled: false, ..TraceConfig::default() });
+        let mut tb = h.begin("q", Instant::now());
+        assert!(!tb.is_enabled());
+        h.finish(&mut tb, TraceTag::Miss, 100, 0.7);
+        assert_eq!(h.finished(), 0);
+        assert!(h.stage_summaries().is_empty());
+    }
+
+    #[test]
+    fn spans_are_ordered_and_bounded() {
+        let t0 = Instant::now();
+        let mut h = hub(8);
+        let mut tb = h.begin("hello world", t0);
+        let t1 = t0 + Duration::from_micros(10);
+        let t2 = t0 + Duration::from_micros(30);
+        tb.span_at(Stage::Embed, t0, t1, f32::NAN);
+        tb.span_at(Stage::Search, t1, t2, f32::NAN);
+        // out-of-order recording still sorts by start
+        tb.span_at(Stage::Ingest, t0, t0, f32::NAN);
+        h.finish(&mut tb, TraceTag::Miss, 50, 0.7);
+        let ft = &h.recent(1)[0];
+        for w in ft.spans.windows(2) {
+            assert!(w[0].start_us <= w[1].start_us, "spans sorted by start");
+        }
+        for s in &ft.spans {
+            assert!(s.end_us >= s.start_us);
+            assert!(s.end_us <= ft.total_us);
+        }
+        let mut depth1 = 0u64;
+        for s in ft.spans.iter().filter(|s| s.stage.depth() == 1) {
+            depth1 += s.end_us - s.start_us;
+        }
+        assert!(depth1 <= ft.total_us, "stage sum {} > total {}", depth1, ft.total_us);
+    }
+
+    #[test]
+    fn round_spans_cap_but_count() {
+        let mut h = hub(8);
+        let mut tb = h.begin("q", Instant::now());
+        let d0 = Instant::now();
+        for _ in 0..(MAX_ROUND_SPANS + 10) {
+            tb.decode_round(Instant::now(), 2.0);
+        }
+        tb.span_at(Stage::Decode, d0, Instant::now(), f32::NAN);
+        h.finish(&mut tb, TraceTag::Miss, 1_000, 0.7);
+        let ft = &h.recent(1)[0];
+        assert_eq!(ft.decode_rounds as usize, MAX_ROUND_SPANS + 10);
+        let rounds = ft.spans.iter().filter(|s| s.stage == Stage::DecodeRound).count();
+        assert_eq!(rounds, MAX_ROUND_SPANS);
+        // children nest inside the decode parent
+        let d = ft.span(Stage::Decode).unwrap();
+        for s in ft.spans.iter().filter(|s| s.stage == Stage::DecodeRound) {
+            assert!(s.start_us >= d.start_us && s.end_us <= d.end_us);
+        }
+    }
+
+    #[test]
+    fn ring_evicts_slow_retains() {
+        let mut h = hub(4);
+        for i in 0..10 {
+            // 600us total >= 0.5ms slow threshold for even ids
+            let total = if i % 2 == 0 { 600 } else { 100 };
+            finish_one(&mut h, TraceTag::TweakHit, total);
+        }
+        assert_eq!(h.finished(), 10);
+        assert_eq!(h.recent(100).len(), 4);
+        assert_eq!(h.dropped(), 6);
+        let slow = h.slow();
+        assert_eq!(slow.len(), 5);
+        assert!(slow.iter().all(|t| t.total_us >= 500));
+        // most recent first
+        assert!(h.recent(100)[0].id > h.recent(100)[3].id);
+    }
+
+    #[test]
+    fn histograms_aggregate_per_pathway() {
+        let mut h = hub(8);
+        finish_one(&mut h, TraceTag::TweakHit, 100);
+        finish_one(&mut h, TraceTag::Miss, 200);
+        finish_one(&mut h, TraceTag::Miss, 300);
+        let counts = h.pathway_counts();
+        let get = |name: &str| counts.iter().find(|(n, _)| *n == name).unwrap().1;
+        assert_eq!(get("tweak_hit"), 1);
+        assert_eq!(get("miss"), 2);
+        assert_eq!(get("exact_hit"), 0);
+        let rows = h.stage_summaries();
+        assert!(rows.iter().any(|r| r.stage == "search" && r.pathway == "miss" && r.n == 2));
+        assert!(rows.iter().any(|r| r.stage == "total" && r.pathway == "miss" && r.n == 2));
+        assert!(!rows.iter().any(|r| r.pathway == "exact_hit"));
+    }
+
+    #[test]
+    fn json_shape_and_nan_similarity() {
+        let mut h = hub(8);
+        let t0 = Instant::now();
+        let mut tb = h.begin("q", t0);
+        tb.span_at(Stage::Search, t0, t0 + Duration::from_micros(5), f32::NAN);
+        h.finish(&mut tb, TraceTag::Miss, 42, 0.7);
+        let j = h.recent(1)[0].to_json();
+        let text = j.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("pathway").unwrap().str().unwrap(), "miss");
+        assert!(parsed.opt("similarity").is_none(), "NaN similarity must serialize as null");
+        let spans = parsed.get("spans").unwrap().arr().unwrap();
+        assert_eq!(spans[0].get("stage").unwrap().str().unwrap(), "search");
+        assert!(spans[0].opt("value").is_none());
+    }
+
+    #[test]
+    fn jsonl_export_writes_parseable_lines() {
+        let dir = std::env::temp_dir().join(format!("tweakllm_trace_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let mut h = TraceHub::new(TraceConfig {
+                enabled: true,
+                ring_capacity: 8,
+                slow_threshold_ms: 0.0,
+                export_dir: dir.to_string_lossy().into_owned(),
+            });
+            finish_one(&mut h, TraceTag::ExactHit, 10);
+            finish_one(&mut h, TraceTag::Miss, 20);
+        }
+        let text = std::fs::read_to_string(dir.join("traces.jsonl")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("total_us").unwrap().f64().unwrap() > 0.0);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -101,6 +101,26 @@ impl Online {
     pub fn max(&self) -> f64 {
         self.max
     }
+
+    /// Combine two accumulators (parallel Welford / Chan et al.).
+    pub fn merge(&mut self, other: &Online) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Fixed-bucket histogram over [lo, hi); out-of-range values clamp to the
@@ -182,6 +202,33 @@ mod tests {
         assert!((o.std() - s.std).abs() < 1e-9);
         assert_eq!(o.min(), 1.0);
         assert_eq!(o.max(), 9.0);
+    }
+
+    #[test]
+    fn online_merge_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0];
+        let ys = [9.0, 2.0, 6.0];
+        let mut a = Online::new();
+        for &x in &xs {
+            a.push(x);
+        }
+        let mut b = Online::new();
+        for &y in &ys {
+            b.push(y);
+        }
+        a.merge(&b);
+        let all: Vec<f64> = xs.iter().chain(&ys).copied().collect();
+        let s = Summary::of(&all);
+        assert_eq!(a.count(), 8);
+        assert!((a.mean() - s.mean).abs() < 1e-12);
+        assert!((a.std() - s.std).abs() < 1e-9);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 9.0);
+
+        let mut empty = Online::new();
+        empty.merge(&a);
+        assert_eq!(empty.count(), 8);
+        assert!((empty.mean() - s.mean).abs() < 1e-12);
     }
 
     #[test]

@@ -318,6 +318,103 @@ fn total_micros_includes_queue_wait_behind_slow_generation() {
 }
 
 #[test]
+fn trace_verb_returns_tagged_span_trees_for_all_pathways() {
+    // Mixed workload over real sockets: one miss, one tweak-hit paraphrase,
+    // one exact repeat — then pull the span traces back over the wire.
+    let (_engine, _handle, addr, stop, join) = start_stack();
+    let mut client = Client::connect(&addr).unwrap();
+    client.query("why is coffee good for health?").unwrap(); // miss
+    client.query("why is coffee great for health?").unwrap(); // tweak
+    client.query("why is coffee good for health?").unwrap(); // exact
+
+    let report = client.trace(16).unwrap();
+    assert!(report.get("finished").unwrap().f64().unwrap() as u64 >= 3);
+    let traces = report.get("traces").unwrap().arr().unwrap();
+    assert!(traces.len() >= 3, "got {} traces", traces.len());
+
+    // Newest first: [exact_hit, tweak_hit, miss].
+    let pathways: Vec<&str> = traces
+        .iter()
+        .take(3)
+        .map(|t| t.get("pathway").unwrap().str().unwrap())
+        .collect();
+    assert_eq!(pathways, vec!["exact_hit", "tweak_hit", "miss"]);
+
+    for t in traces.iter().take(3) {
+        let pathway = t.get("pathway").unwrap().str().unwrap();
+        let total = t.get("total_us").unwrap().f64().unwrap();
+        assert!(total > 0.0);
+        let spans = t.get("spans").unwrap().arr().unwrap();
+        assert!(!spans.is_empty(), "{pathway} trace has no spans");
+        let mut prev_start = 0.0;
+        let mut stages = Vec::new();
+        for s in spans {
+            let start = s.get("start_us").unwrap().f64().unwrap();
+            let end = s.get("end_us").unwrap().f64().unwrap();
+            assert!(start >= prev_start, "spans must be sorted by start");
+            assert!(end >= start && end <= total);
+            prev_start = start;
+            stages.push(s.get("stage").unwrap().str().unwrap().to_string());
+        }
+        // Every pathway passes through ingest and reply; the route span
+        // carries the similarity that also sits on the trace.
+        assert!(stages.iter().any(|s| s == "ingest"), "{pathway}: {stages:?}");
+        assert!(stages.iter().any(|s| s == "reply"), "{pathway}: {stages:?}");
+        assert!(stages.iter().any(|s| s == "route"), "{pathway}: {stages:?}");
+        let sim = t.opt("similarity").map(|s| s.f64().unwrap());
+        match pathway {
+            "exact_hit" => assert_eq!(sim, Some(1.0)),
+            "tweak_hit" => {
+                assert!(sim.unwrap() >= 0.7, "tweak sim {sim:?}");
+                for stage in ["embed", "search", "prefill", "decode"] {
+                    assert!(stages.iter().any(|s| s == stage), "{pathway}: {stages:?}");
+                }
+            }
+            "miss" => {
+                for stage in ["embed", "search", "decode", "cache_insert"] {
+                    assert!(stages.iter().any(|s| s == stage), "{pathway}: {stages:?}");
+                }
+            }
+            other => panic!("unexpected pathway {other}"),
+        }
+    }
+    stop.signal();
+    drop(client);
+    let _ = join.join().unwrap();
+}
+
+#[test]
+fn stats_reports_per_stage_quantiles_from_histograms() {
+    let (_engine, _handle, addr, stop, join) = start_stack();
+    let mut client = Client::connect(&addr).unwrap();
+    client.query("how do glaciers carve valleys").unwrap();
+    client.query("how do glaciers carve valleys").unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("traces_finished").unwrap().f64().unwrap() as u64, 2);
+    let stages = stats.get("stages").unwrap().arr().unwrap();
+    assert!(!stages.is_empty());
+    for row in stages {
+        let p50 = row.get("p50_us").unwrap().f64().unwrap();
+        let p99 = row.get("p99_us").unwrap().f64().unwrap();
+        assert!(row.get("n").unwrap().f64().unwrap() >= 1.0);
+        assert!(p50 >= 0.0 && p99 >= p50 * 0.99, "p50={p50} p99={p99}");
+        assert!(row.get("stage").unwrap().str().is_ok());
+        assert!(row.get("pathway").unwrap().str().is_ok());
+    }
+    // one "total" row per pathway observed (miss, then exact repeat)
+    let total_paths: Vec<&str> = stages
+        .iter()
+        .filter(|r| r.get("stage").unwrap().str().unwrap() == "total")
+        .map(|r| r.get("pathway").unwrap().str().unwrap())
+        .collect();
+    assert!(total_paths.contains(&"miss"), "{total_paths:?}");
+    assert!(total_paths.contains(&"exact_hit"), "{total_paths:?}");
+    stop.signal();
+    drop(client);
+    let _ = join.join().unwrap();
+}
+
+#[test]
 fn engine_in_process_handle_works_alongside_tcp() {
     let (_engine, handle, _addr, stop, _join) = start_stack();
     let r = handle.request("direct in-process request").unwrap();

@@ -1,0 +1,302 @@
+//! Span-trace assembly tests: every served request — all four pathways,
+//! scheduler on and off — finishes exactly one well-formed span tree, and
+//! the latency recorder sees exactly one "total" sample per request.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use tweakllm::baselines::MockLlm;
+use tweakllm::cache::query_key;
+use tweakllm::config::{Config, IndexKindConfig, SchedulerConfig};
+use tweakllm::coordinator::{
+    Engine, EngineHandle, Job, JobKind, Pathway, RouteDecision, RoutedResponse, Router, Scheduler,
+};
+use tweakllm::runtime::{NativeBowEmbedder, TextEmbedder};
+use tweakllm::trace::{FinishedTrace, Stage, TraceTag};
+
+/// Structural invariants every finished trace must satisfy: spans sorted by
+/// start, every span inside [0, total_us], depth-1 spans disjoint (so their
+/// durations sum to at most the total), round children nested in the decode
+/// parent.
+fn assert_well_formed(ft: &FinishedTrace) {
+    assert!(!ft.spans.is_empty(), "{:?}: no spans", ft.tag);
+    let mut prev_start = 0;
+    let mut prev_depth1_end = 0;
+    let mut depth1_sum = 0;
+    for s in &ft.spans {
+        assert!(s.start_us >= prev_start, "{:?}: spans not sorted", ft.tag);
+        prev_start = s.start_us;
+        assert!(s.end_us >= s.start_us);
+        assert!(
+            s.end_us <= ft.total_us,
+            "{:?}: span {:?} [{}, {}] exceeds total {}",
+            ft.tag,
+            s.stage,
+            s.start_us,
+            s.end_us,
+            ft.total_us
+        );
+        if s.stage.depth() == 1 {
+            assert!(
+                s.start_us >= prev_depth1_end,
+                "{:?}: {:?} overlaps the previous stage",
+                ft.tag,
+                s.stage
+            );
+            prev_depth1_end = s.end_us;
+            depth1_sum += s.end_us - s.start_us;
+        }
+    }
+    assert!(
+        depth1_sum <= ft.total_us,
+        "{:?}: stage sum {} > total {}",
+        ft.tag,
+        depth1_sum,
+        ft.total_us
+    );
+    if let Some(d) = ft.span(Stage::Decode) {
+        for s in ft.spans.iter().filter(|s| s.stage == Stage::DecodeRound) {
+            assert!(
+                s.start_us >= d.start_us && s.end_us <= d.end_us,
+                "{:?}: round span outside the decode parent",
+                ft.tag
+            );
+        }
+    }
+}
+
+fn start_engine(scheduler_on: bool) -> (Engine, EngineHandle) {
+    Engine::start(move || {
+        let mut cfg = Config::paper();
+        cfg.index.kind = IndexKindConfig::Flat;
+        cfg.exact_match_fast_path = true;
+        cfg.scheduler.enabled = scheduler_on;
+        let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+        Ok(Router::with_models(
+            embedder,
+            Box::new(MockLlm::new("big")),
+            Box::new(MockLlm::new("small")),
+            cfg,
+        ))
+    })
+    .expect("engine start")
+}
+
+/// Miss, tweak-hit paraphrase, exact repeat — then pull the traces back
+/// through the engine and check tags, scores, and tree shape.
+fn engine_pathways_traced(scheduler_on: bool) {
+    let (_engine, handle) = start_engine(scheduler_on);
+    handle.request("why is coffee good for health?").unwrap(); // miss
+    handle.request("why is coffee great for health?").unwrap(); // tweak
+    handle.request("why is coffee good for health?").unwrap(); // exact
+
+    let report = handle.traces(16).unwrap();
+    assert_eq!(report.finished, 3);
+    assert_eq!(report.dropped, 0);
+    let tags: Vec<TraceTag> = report.traces.iter().map(|t| t.tag).collect();
+    assert_eq!(
+        tags,
+        vec![TraceTag::ExactHit, TraceTag::TweakHit, TraceTag::Miss],
+        "newest first"
+    );
+    for ft in &report.traces {
+        assert_well_formed(ft);
+        assert!(ft.span(Stage::Ingest).is_some(), "{:?}", ft.tag);
+        assert!(ft.span(Stage::BatcherWait).is_some(), "{:?}", ft.tag);
+        assert!(ft.span(Stage::Route).is_some(), "{:?}", ft.tag);
+        assert!(ft.span(Stage::Reply).is_some(), "{:?}", ft.tag);
+    }
+
+    let exact = &report.traces[0];
+    assert_eq!(exact.similarity, 1.0);
+    assert_eq!(exact.span(Stage::Route).unwrap().value, 1.0);
+
+    let tweak = &report.traces[1];
+    assert!(tweak.similarity >= 0.7, "sim {}", tweak.similarity);
+    let route = tweak.span(Stage::Route).unwrap();
+    assert_eq!(route.value, tweak.similarity, "route span carries the score");
+    for stage in [Stage::Embed, Stage::Search, Stage::Prefill, Stage::Decode] {
+        assert!(tweak.span(stage).is_some(), "tweak missing {stage:?}");
+    }
+
+    let miss = &report.traces[2];
+    for stage in [Stage::Embed, Stage::Search, Stage::Prefill, Stage::Decode, Stage::CacheInsert] {
+        assert!(miss.span(stage).is_some(), "miss missing {stage:?}");
+    }
+    if scheduler_on {
+        assert!(miss.span(Stage::QueueWait).is_some());
+        assert!(miss.decode_rounds >= 1, "no fairness rounds recorded");
+        assert!(miss.spans.iter().any(|s| s.stage == Stage::DecodeRound));
+        // round spans carry the batch-slot occupancy of their round
+        for s in miss.spans.iter().filter(|s| s.stage == Stage::DecodeRound) {
+            assert!(s.value >= 1.0, "occupancy {}", s.value);
+        }
+    }
+}
+
+#[test]
+fn engine_traces_all_pathways_scheduler_on() {
+    engine_pathways_traced(true);
+}
+
+#[test]
+fn engine_traces_all_pathways_scheduler_off() {
+    engine_pathways_traced(false);
+}
+
+// ---- deterministic scheduler-level tests (no engine thread) ----
+
+fn test_router(max_sessions: usize) -> Router {
+    let mut cfg = Config::paper();
+    cfg.index.kind = IndexKindConfig::Flat;
+    cfg.exact_match_fast_path = true;
+    cfg.scheduler = SchedulerConfig {
+        enabled: true,
+        max_concurrent_sessions: max_sessions,
+        fairness_steps: 1,
+        decode_batch: 0,
+    };
+    let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+    Router::with_models(
+        embedder,
+        Box::new(MockLlm::new("big").with_pace(3, std::time::Duration::ZERO)),
+        Box::new(MockLlm::new("small")),
+        cfg,
+    )
+}
+
+/// Mirror the engine's per-request path with a live trace: begin, embed,
+/// route, submit (or resolve the exact hit in place).
+fn submit_traced(
+    sched: &mut Scheduler,
+    router: &mut Router,
+    query: &str,
+) -> mpsc::Receiver<anyhow::Result<RoutedResponse>> {
+    let (tx, rx) = mpsc::channel();
+    let enqueued = Instant::now();
+    let mut trace = router.traces.begin(query, enqueued);
+    let t = Instant::now();
+    let emb = router.embedder().embed(query).unwrap();
+    trace.span_from(Stage::Embed, t);
+    let kind = match router.route(query, emb, enqueued, &mut trace) {
+        RouteDecision::Exact(resp) => {
+            tx.send(Ok(resp)).unwrap();
+            return rx;
+        }
+        RouteDecision::Tweak(t) => JobKind::Tweak(t),
+        RouteDecision::Miss(m) => {
+            let key = query_key(&m.query);
+            JobKind::Miss { job: m, key }
+        }
+    };
+    sched.submit(Job::traced(kind, tx, enqueued, trace), router);
+    rx
+}
+
+#[test]
+fn coalesced_follower_finishes_its_own_trace() {
+    let mut router = test_router(4);
+    let mut sched = Scheduler::new(router.config.scheduler);
+    let q = "what is a quorum in raft consensus";
+    let a = submit_traced(&mut sched, &mut router, q);
+    let b = submit_traced(&mut sched, &mut router, q);
+    assert_eq!(sched.coalesced(), 1, "duplicate must attach as follower");
+    sched.drain(&mut router);
+    let ra = a.recv().unwrap().unwrap();
+    let rb = b.recv().unwrap().unwrap();
+    assert_eq!(ra.pathway, Pathway::Miss);
+    // Response-level pathway hides the coalescing (exact hit under the fast
+    // path) — the trace tag tells the truth.
+    assert_eq!(rb.pathway, Pathway::ExactHit);
+
+    assert_eq!(router.traces.finished(), 2);
+    let recent = router.traces.recent(2);
+    // The leader's trace finishes inside complete_miss, the follower's in
+    // the fan-out right after: newest first = [coalesced, miss].
+    assert_eq!(recent[0].tag, TraceTag::Coalesced);
+    assert_eq!(recent[1].tag, TraceTag::Miss);
+    let follower = &recent[0];
+    assert_well_formed(follower);
+    assert!(
+        follower.span(Stage::QueueWait).is_some(),
+        "the leader's generation is the follower's queue wait"
+    );
+    assert!(follower.span(Stage::Reply).is_some());
+    assert!(follower.span(Stage::Decode).is_none(), "followers run no session");
+    let leader = &recent[1];
+    assert_well_formed(leader);
+    assert!(leader.span(Stage::CacheInsert).is_some());
+    assert!(leader.decode_rounds >= 1);
+}
+
+#[test]
+fn every_request_records_one_total_sample_and_one_trace() {
+    // N mixed requests — miss, tweak, exact, coalesced duplicate, and
+    // overflow past the 2-session cap — must yield exactly N "total"
+    // latency samples, N finished traces, and a pathway partition that
+    // sums to N. (Regression guard: double-recording on the scheduler
+    // path, or dropping a follower's sample.)
+    let mut router = test_router(2);
+    let mut sched = Scheduler::new(router.config.scheduler);
+    let mut rxs = Vec::new();
+    rxs.push(submit_traced(&mut sched, &mut router, "inv0a inv0b inv0c inv0d inv0e inv0f"));
+    sched.drain(&mut router); // prime lands in the cache before the repeats
+    rxs.push(submit_traced(&mut sched, &mut router, "inv0a inv0b inv0c inv0d inv0e varyX"));
+    rxs.push(submit_traced(&mut sched, &mut router, "inv0a inv0b inv0c inv0d inv0e inv0f"));
+    rxs.push(submit_traced(&mut sched, &mut router, "dupa dupb dupc dupd"));
+    rxs.push(submit_traced(&mut sched, &mut router, "dupa dupb dupc dupd"));
+    for i in 0..3 {
+        let q = format!("fresh{i}x fresh{i}y fresh{i}z fresh{i}w");
+        rxs.push(submit_traced(&mut sched, &mut router, &q));
+    }
+    sched.drain(&mut router);
+    let n = rxs.len();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+
+    let total = router.latency.summary("total").unwrap();
+    assert_eq!(total.n, n, "exactly one total sample per served request");
+    assert_eq!(router.traces.finished(), n as u64);
+    let counts = router.traces.pathway_counts();
+    let sum: u64 = counts.iter().map(|&(_, c)| c).sum();
+    assert_eq!(sum, n as u64, "pathway partition must cover every request");
+    let get = |name: &str| counts.iter().find(|&&(k, _)| k == name).unwrap().1;
+    assert_eq!(get("miss"), 5, "prime + dup leader + 3 fresh");
+    assert_eq!(get("tweak_hit"), 1);
+    assert_eq!(get("exact_hit"), 1);
+    assert_eq!(get("coalesced"), 1);
+}
+
+#[test]
+fn ring_capacity_bounds_retained_traces_under_load() {
+    let mut cfg = Config::paper();
+    cfg.index.kind = IndexKindConfig::Flat;
+    cfg.trace.ring_capacity = 4;
+    let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+    let mut router = Router::with_models(
+        embedder,
+        Box::new(MockLlm::new("big")),
+        Box::new(MockLlm::new("small")),
+        cfg,
+    );
+    let mut sched = Scheduler::new(router.config.scheduler);
+    let n = 12;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let q = format!("ring{i}a ring{i}b ring{i}c ring{i}d");
+        rxs.push(submit_traced(&mut sched, &mut router, &q));
+    }
+    sched.drain(&mut router);
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    // Every finish is counted; the ring retains only the newest 4, and
+    // recent() reports them newest-first (strictly decreasing ids).
+    assert_eq!(router.traces.finished(), n as u64);
+    let recent = router.traces.recent(usize::MAX);
+    assert_eq!(recent.len(), 4, "ring must evict past its capacity");
+    for w in recent.windows(2) {
+        assert!(w[0].id > w[1].id, "recent() must be newest-first");
+    }
+}
