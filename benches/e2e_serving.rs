@@ -262,9 +262,7 @@ fn main() -> anyhow::Result<()> {
                 router.cache().len(),
             );
             println!(
-                "cost: ${:.6} vs all-big ${:.6}  ->  {:.1}% of baseline",
-                cost,
-                base,
+                "cost: ${cost:.6} vs all-big ${base:.6}  ->  {:.1}% of baseline",
                 100.0 * cost / base.max(1e-12)
             );
             println!("\nstage latency:\n{}", router.latency.table());

@@ -1,0 +1,262 @@
+//! Fault drill: a mid-run tweak-LLM outage against the full mock engine.
+//!
+//! Three measured phases — before (healthy), during (the Small-LLM backend
+//! hard-errors via its `FaultSwitch`), after (healed, breaker cool-down
+//! elapsed) — each under concurrent client threads. The drill asserts the
+//! availability contract of the degradation ladder: every request is
+//! answered in every phase (degraded tweak-hits serve the raw cached
+//! response, tagged `degraded_hit`), nothing hangs, nothing fails.
+//!
+//! A second A/B pass runs the same healthy workload with `[faults]` enabled
+//! vs disabled and gates the fault layer's p50 overhead at ≤ 2%.
+//!
+//! Results land in `BENCH_fault_drills.json` (uploaded from CI).
+//!
+//! `cargo bench --bench fault_drills [-- --requests 240 --threads 4]`
+
+use std::time::{Duration, Instant};
+
+use tweakllm::baselines::MockLlm;
+use tweakllm::bench::{bench_args, Table};
+use tweakllm::config::{Config, IndexKindConfig};
+use tweakllm::coordinator::{Engine, EngineHandle, Pathway, Router};
+use tweakllm::faults::{FaultMode, FaultSwitch, FaultyLlm};
+use tweakllm::llm::LanguageModel;
+use tweakllm::runtime::{NativeBowEmbedder, TextEmbedder};
+use tweakllm::util::{Json, Rng, Summary};
+
+const TOPICS: usize = 8;
+
+/// Engine with the Small (tweak) LLM behind a `FaultSwitch` the drill flips
+/// mid-run. Decode pacing is millisecond-scale so phase p50s sit well above
+/// scheduler jitter and the ≤2% overhead gate is meaningful.
+fn drill_engine(faults_on: bool) -> anyhow::Result<(Engine, EngineHandle, FaultSwitch)> {
+    let mut cfg = Config::paper();
+    cfg.index.kind = IndexKindConfig::Flat;
+    cfg.exact_match_fast_path = true;
+    cfg.scheduler.enabled = true;
+    cfg.faults.enabled = faults_on;
+    // Backstop reaper + a short breaker cool-down so the "after" phase can
+    // observe the half-open -> closed recovery inside the drill window.
+    cfg.faults.tweak_timeout_ms = 250;
+    cfg.faults.breaker_open_ms = 100;
+    let switch = FaultSwitch::healthy();
+    let s = switch.clone();
+    let (engine, handle) = Engine::start(move || {
+        let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+        let mut big = MockLlm::new("big");
+        big.steps = 16;
+        big.step_delay = Duration::from_millis(1);
+        let mut small = MockLlm::new("small");
+        small.steps = 8;
+        small.step_delay = Duration::from_millis(1);
+        let small: Box<dyn LanguageModel> = Box::new(FaultyLlm::new(Box::new(small), s));
+        Ok(Router::with_models(embedder, Box::new(big), small, cfg))
+    })?;
+    Ok((engine, handle, switch))
+}
+
+fn prime(handle: &EngineHandle) -> anyhow::Result<()> {
+    for i in 0..TOPICS {
+        handle.request(&format!("mix{i}a mix{i}b mix{i}c mix{i}d mix{i}e mix{i}f"))?;
+    }
+    Ok(())
+}
+
+struct PhaseResult {
+    name: &'static str,
+    n: usize,
+    ok: usize,
+    degraded: usize,
+    tweak_hits: usize,
+    lat_ms: Vec<f64>,
+    wall: Duration,
+}
+
+impl PhaseResult {
+    fn availability(&self) -> f64 {
+        self.ok as f64 / self.n.max(1) as f64
+    }
+
+    fn row(&self) -> Vec<String> {
+        let s = Summary::of(&self.lat_ms);
+        vec![
+            self.name.to_string(),
+            self.n.to_string(),
+            format!("{:.1}%", 100.0 * self.availability()),
+            self.degraded.to_string(),
+            self.tweak_hits.to_string(),
+            format!("{:.2}", s.p50),
+            format!("{:.2}", s.p99),
+        ]
+    }
+
+    fn json(&self) -> Json {
+        let s = Summary::of(&self.lat_ms);
+        Json::obj_from(vec![
+            ("phase", Json::s(self.name)),
+            ("n", Json::num(self.n as f64)),
+            ("availability", Json::num(self.availability())),
+            ("degraded_hits", Json::num(self.degraded as f64)),
+            ("tweak_hits", Json::num(self.tweak_hits as f64)),
+            ("p50_ms", Json::num(s.p50)),
+            ("p99_ms", Json::num(s.p99)),
+            ("qps", Json::num(self.n as f64 / self.wall.as_secs_f64().max(1e-9))),
+        ])
+    }
+}
+
+/// One measured phase: a deterministic ~70% paraphrase / ~30% fresh-miss
+/// mix over `threads` concurrent clients. Every outcome is recorded —
+/// errors count against availability instead of aborting the drill.
+fn run_phase(
+    handle: &EngineHandle,
+    name: &'static str,
+    phase: usize,
+    n: usize,
+    threads: usize,
+) -> PhaseResult {
+    let mut rng = Rng::new(42 + phase as u64);
+    let queries: Vec<String> = (0..n)
+        .map(|j| {
+            let i = rng.range(0, TOPICS);
+            match rng.range(0, 10) {
+                0..=6 => format!("mix{i}a mix{i}b mix{i}c mix{i}d mix{i}e ph{phase}v{j}"),
+                _ => format!("fr{phase}q{j}a fr{phase}q{j}b fr{phase}q{j}c fr{phase}q{j}d"),
+            }
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let h = handle.clone();
+        let chunk: Vec<String> = queries.iter().skip(t).step_by(threads).cloned().collect();
+        joins.push(std::thread::spawn(move || {
+            let mut out = Vec::with_capacity(chunk.len());
+            for q in &chunk {
+                out.push(h.request(q).map(|r| (r.pathway, r.total_micros)));
+            }
+            out
+        }));
+    }
+    let mut result = PhaseResult {
+        name,
+        n,
+        ok: 0,
+        degraded: 0,
+        tweak_hits: 0,
+        lat_ms: Vec::with_capacity(n),
+        wall: Duration::ZERO,
+    };
+    for j in joins {
+        for r in j.join().expect("client thread panicked") {
+            if let Ok((pathway, us)) = r {
+                result.ok += 1;
+                result.lat_ms.push(us as f64 / 1000.0);
+                match pathway {
+                    Pathway::DegradedHit => result.degraded += 1,
+                    Pathway::TweakHit => result.tweak_hits += 1,
+                    _ => {}
+                }
+            }
+        }
+    }
+    result.wall = t0.elapsed();
+    result
+}
+
+/// Healthy-workload pass for the overhead A/B: same engine, same mix, no
+/// injection — only `cfg.faults.enabled` differs between the two runs.
+fn run_ab(faults_on: bool, n: usize, threads: usize) -> anyhow::Result<PhaseResult> {
+    let (engine, handle, _switch) = drill_engine(faults_on)?;
+    prime(&handle)?;
+    let name = if faults_on { "faults_on" } else { "faults_off" };
+    let result = run_phase(&handle, name, 0, n, threads);
+    engine.shutdown();
+    Ok(result)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let n_requests = args.usize("requests", 240)?;
+    let threads = args.usize("threads", 4)?.max(1);
+    let per_phase = (n_requests / 3).max(8);
+
+    // ---- the drill: tweak-LLM outage mid-run ----
+    eprintln!("[faults] drill: {per_phase} requests/phase × 3 phases, {threads} threads...");
+    let (engine, handle, switch) = drill_engine(true)?;
+    prime(&handle)?;
+
+    let before = run_phase(&handle, "before", 0, per_phase, threads);
+    switch.set(FaultMode::Error);
+    let during = run_phase(&handle, "during", 1, per_phase, threads);
+    switch.set(FaultMode::Healthy);
+    // Let the small-LLM breaker cool down so "after" measures recovery, not
+    // the tail of the open window.
+    std::thread::sleep(Duration::from_millis(150));
+    let after = run_phase(&handle, "after", 2, per_phase, threads);
+    let stats = handle.stats()?;
+    engine.shutdown();
+
+    let mut table = Table::new(
+        "Fault drill: tweak-LLM outage (mock engine) — per-phase availability",
+        &["phase", "n", "avail", "degraded", "tweak_hits", "p50_ms", "p99_ms"],
+    );
+    for p in [&before, &during, &after] {
+        table.push(p.row());
+    }
+    println!("{}", table.render());
+    println!(
+        "drill: {} degraded hits, {} breaker trips, small breaker now '{}'",
+        stats.degraded_hits, stats.breaker_trips, stats.breaker_small
+    );
+
+    // The availability contract, enforced: every request answered in every
+    // phase, the outage is absorbed by the degraded rung, and the ladder
+    // steps back up once the backend heals.
+    for p in [&before, &during, &after] {
+        assert_eq!(p.ok, p.n, "phase '{}': every request must be answered", p.name);
+        assert!(p.wall < Duration::from_secs(120), "phase '{}' stalled", p.name);
+    }
+    assert_eq!(before.degraded, 0, "healthy phase must not degrade");
+    assert!(during.degraded > 0, "outage phase must exercise the degraded rung");
+    assert!(after.tweak_hits > 0, "tweak pathway must recover after the outage");
+    assert_eq!(stats.failed, 0, "no request may fail terminally in this drill");
+    assert_eq!(stats.shed, 0, "no deadline is set; nothing may be shed");
+
+    // ---- overhead A/B: the fault layer itself must be ~free ----
+    eprintln!("[faults] overhead A/B: {n_requests} healthy requests, faults on vs off...");
+    let on = run_ab(true, n_requests, threads)?;
+    let off = run_ab(false, n_requests, threads)?;
+    let (p50_on, p50_off) = (Summary::of(&on.lat_ms).p50, Summary::of(&off.lat_ms).p50);
+    let overhead_pct = 100.0 * (p50_on - p50_off) / p50_off.max(1e-9);
+    println!(
+        "overhead: p50 {p50_on:.3}ms (faults on) vs {p50_off:.3}ms (off) -> {overhead_pct:+.2}%"
+    );
+    assert!(
+        overhead_pct <= 2.0,
+        "fault layer p50 overhead must stay within 2%: got {overhead_pct:+.2}%"
+    );
+
+    // ---- BENCH_fault_drills.json ----
+    let top = vec![
+        ("bench", Json::s("fault_drills")),
+        ("requests", Json::num(n_requests as f64)),
+        ("threads", Json::num(threads as f64)),
+        ("per_phase", Json::num(per_phase as f64)),
+        ("phases", Json::Arr(vec![before.json(), during.json(), after.json()])),
+        ("degraded_hits", Json::num(stats.degraded_hits as f64)),
+        ("breaker_trips", Json::num(stats.breaker_trips as f64)),
+        (
+            "overhead",
+            Json::obj_from(vec![
+                ("p50_on_ms", Json::num(p50_on)),
+                ("p50_off_ms", Json::num(p50_off)),
+                ("overhead_pct", Json::num(overhead_pct)),
+            ]),
+        ),
+    ];
+    std::fs::write("BENCH_fault_drills.json", Json::obj_from(top).to_string())?;
+    eprintln!("[faults] wrote BENCH_fault_drills.json");
+    Ok(())
+}

@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
                 format!("{:.2}", p.threshold),
                 format!("{:.3}", p.counts.precision()),
                 format!("{:.3}", p.counts.recall()),
-                format!("{}", p.hits),
+                p.hits.to_string(),
             ]);
         }
         let lo = &points[0];

@@ -25,8 +25,7 @@ fn main() -> anyhow::Result<()> {
         let trace = ChatTrace::generate(profile, n, seed);
         let (a, b) = trace.halves();
         eprintln!(
-            "[fig8-9] {} ({}): embedding insert {} / query {}...",
-            fig,
+            "[fig8-9] {fig} ({}): embedding insert {} / query {}...",
             profile.name,
             a.len(),
             b.len()

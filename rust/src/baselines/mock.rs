@@ -4,11 +4,49 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::cost::TokenUsage;
+use crate::faults::FaultMode;
 use crate::llm::{BatchDecodeStats, LanguageModel, LlmResponse, LlmSession, TweakPrompt};
 use crate::tokenizer::Tokenizer;
+
+/// Scripted fault plan: maps the 0-based call index (counted across
+/// `respond`, `tweak`, and both `begin_*` shapes) to the fault injected on
+/// that call. Lives *inside* the mock — unlike the runtime
+/// [`crate::faults::FaultyLlm`] wrapper, whose shared switch a controller
+/// flips in wall time — so chaos tests can script per-attempt behavior
+/// ("fail the first try, succeed the retry") deterministically.
+pub struct FaultPlan {
+    script: Box<dyn Fn(usize) -> FaultMode + Send>,
+}
+
+impl FaultPlan {
+    pub fn new(script: impl Fn(usize) -> FaultMode + Send + 'static) -> FaultPlan {
+        FaultPlan { script: Box::new(script) }
+    }
+
+    /// Error the first `n` calls, then heal — the retry-path script.
+    pub fn fail_first(n: usize) -> FaultPlan {
+        FaultPlan::new(move |call| if call < n { FaultMode::Error } else { FaultMode::Healthy })
+    }
+
+    /// Error every call whose index falls in `[from, to)` — a scripted
+    /// mid-run outage window.
+    pub fn fail_between(from: usize, to: usize) -> FaultPlan {
+        FaultPlan::new(move |call| {
+            if (from..to).contains(&call) {
+                FaultMode::Error
+            } else {
+                FaultMode::Healthy
+            }
+        })
+    }
+
+    fn mode(&self, call: usize) -> FaultMode {
+        (self.script)(call)
+    }
+}
 
 /// Echo-style mock: responds with a deterministic transform of the prompt;
 /// records every call.
@@ -34,6 +72,10 @@ pub struct MockLlm {
     /// twin of the substrate's batched decode, so the scheduler's batched
     /// path (and its O(1)-dispatch economics) is exercisable in CI.
     batch: Option<Arc<Mutex<MockPool>>>,
+    /// Scripted faults by call index (`with_fault_plan`); `None` = healthy.
+    faults: Option<FaultPlan>,
+    /// Calls consumed by the fault plan so far.
+    calls: usize,
 }
 
 /// Shared slot pool behind `MockLlm::with_batch`. Mirrors the credit
@@ -161,6 +203,8 @@ impl MockLlm {
             steps: 1,
             step_delay: Duration::ZERO,
             batch: None,
+            faults: None,
+            calls: 0,
         }
     }
 
@@ -180,6 +224,68 @@ impl MockLlm {
     pub fn with_batch(mut self, slots: usize) -> MockLlm {
         self.batch = Some(Arc::new(Mutex::new(MockPool::new(slots, self.step_delay))));
         self
+    }
+
+    /// Attach a scripted [`FaultPlan`]; each `respond`/`tweak`/`begin_*`
+    /// call consumes one plan index.
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> MockLlm {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Consume one fault-plan index for the call being made right now.
+    fn next_fault(&mut self) -> FaultMode {
+        let call = self.calls;
+        self.calls += 1;
+        match &self.faults {
+            Some(p) => p.mode(call),
+            None => FaultMode::Healthy,
+        }
+    }
+
+    /// Apply this call's scripted fault to a blocking-shape call.
+    fn faulted_blocking(&mut self, resp: LlmResponse) -> Result<LlmResponse> {
+        match self.next_fault() {
+            FaultMode::Healthy => Ok(resp),
+            FaultMode::Delay(d) => {
+                std::thread::sleep(d);
+                Ok(resp)
+            }
+            FaultMode::Error => bail!("injected fault: {} unavailable", self.name),
+            FaultMode::Hang => {
+                bail!("injected fault: {} hung (blocking call refused)", self.name)
+            }
+            FaultMode::FailAfterTokens(_) => {
+                bail!("injected fault: {} failed mid-generation", self.name)
+            }
+        }
+    }
+
+    /// Apply this call's scripted fault to a session-shape call. `Hang`
+    /// yields a session that paces forever (reaped only by a deadline or
+    /// generation timeout); `FailAfterTokens(n)` a session that errors on
+    /// its `n`-th `advance`.
+    fn faulted_session(&mut self, resp: LlmResponse) -> Result<Box<dyn LlmSession>> {
+        match self.next_fault() {
+            FaultMode::Healthy => Ok(self.session(resp)),
+            FaultMode::Delay(d) => {
+                std::thread::sleep(d);
+                Ok(self.session(resp))
+            }
+            FaultMode::Error => bail!("injected fault: {} unavailable", self.name),
+            FaultMode::Hang => Ok(Box::new(MockSession {
+                resp,
+                remaining: usize::MAX,
+                step_delay: Duration::from_millis(1),
+                fail_after: None,
+            })),
+            FaultMode::FailAfterTokens(n) => Ok(Box::new(MockSession {
+                resp,
+                remaining: self.steps.max(1),
+                step_delay: self.step_delay,
+                fail_after: Some(n),
+            })),
+        }
     }
 
     fn fresh_response(&self, query: &str) -> LlmResponse {
@@ -222,6 +328,7 @@ impl MockLlm {
             resp,
             remaining: self.steps.max(1),
             step_delay: self.step_delay,
+            fail_after: None,
         })
     }
 }
@@ -232,10 +339,19 @@ struct MockSession {
     resp: LlmResponse,
     remaining: usize,
     step_delay: Duration,
+    /// Scripted mid-generation failure: error on the `advance` after this
+    /// many successful ones (`FaultMode::FailAfterTokens`).
+    fail_after: Option<usize>,
 }
 
 impl LlmSession for MockSession {
     fn advance(&mut self) -> Result<bool> {
+        if let Some(n) = &mut self.fail_after {
+            if *n == 0 {
+                bail!("injected fault: mock failed mid-generation");
+            }
+            *n -= 1;
+        }
         if self.remaining > 0 {
             if !self.step_delay.is_zero() {
                 std::thread::sleep(self.step_delay);
@@ -261,22 +377,26 @@ impl LanguageModel for MockLlm {
 
     fn respond(&mut self, query: &str) -> Result<LlmResponse> {
         self.respond_calls.push(query.to_string());
-        Ok(self.fresh_response(query))
+        let resp = self.fresh_response(query);
+        self.faulted_blocking(resp)
     }
 
     fn tweak(&mut self, prompt: &TweakPrompt) -> Result<LlmResponse> {
         self.tweak_calls.push(prompt.clone());
-        Ok(self.tweak_response(prompt))
+        let resp = self.tweak_response(prompt);
+        self.faulted_blocking(resp)
     }
 
     fn begin_respond(&mut self, query: &str) -> Result<Box<dyn LlmSession>> {
         self.respond_calls.push(query.to_string());
-        Ok(self.session(self.fresh_response(query)))
+        let resp = self.fresh_response(query);
+        self.faulted_session(resp)
     }
 
     fn begin_tweak(&mut self, prompt: &TweakPrompt) -> Result<Box<dyn LlmSession>> {
         self.tweak_calls.push(prompt.clone());
-        Ok(self.session(self.tweak_response(prompt)))
+        let resp = self.tweak_response(prompt);
+        self.faulted_session(resp)
     }
 
     fn batch_stats(&self) -> Option<BatchDecodeStats> {
@@ -370,6 +490,38 @@ mod tests {
         drop(c); // dropping an unfinished batched session releases its slot
         let d = m.begin_respond("four").unwrap();
         assert!(!d.is_done());
+    }
+
+    #[test]
+    fn fault_plan_scripts_calls_by_index() {
+        let mut m = MockLlm::new("big").with_fault_plan(FaultPlan::fail_first(2));
+        assert!(m.respond("a").unwrap_err().to_string().contains("injected fault"));
+        assert!(m.begin_respond("b").is_err());
+        let healed = m.respond("c").unwrap();
+        assert!(healed.text.contains("big-fresh"));
+        assert_eq!(m.respond_calls.len(), 3, "faulted calls are still recorded");
+    }
+
+    #[test]
+    fn fail_after_tokens_errors_mid_generation() {
+        let mut m = MockLlm::new("big")
+            .with_pace(4, Duration::ZERO)
+            .with_fault_plan(FaultPlan::new(|_| FaultMode::FailAfterTokens(2)));
+        let mut s = m.begin_respond("q").unwrap();
+        assert!(s.advance().unwrap());
+        assert!(s.advance().unwrap());
+        let err = s.advance().unwrap_err();
+        assert!(err.to_string().contains("mid-generation"));
+    }
+
+    #[test]
+    fn hang_session_never_finishes_on_its_own() {
+        let mut m = MockLlm::new("small").with_fault_plan(FaultPlan::new(|_| FaultMode::Hang));
+        let mut s = m.begin_respond("q").unwrap();
+        for _ in 0..3 {
+            assert!(s.advance().unwrap());
+        }
+        assert!(!s.is_done());
     }
 
     #[test]

@@ -14,5 +14,5 @@ pub mod mock;
 pub mod rerank;
 
 pub use gptcache::{GptCacheBaseline, GptCacheHit};
-pub use mock::MockLlm;
+pub use mock::{FaultPlan, MockLlm};
 pub use rerank::{AlbertLike, CrossEncoder, DistilRobertaLike};

@@ -49,8 +49,8 @@ pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
 /// Format a measurement row.
 pub fn row(name: &str, s: &Summary) -> String {
     format!(
-        "{:<40} n={:<5} mean={:>10.1}us p50={:>10.1}us p99={:>10.1}us",
-        name, s.n, s.mean, s.p50, s.p99
+        "{name:<40} n={:<5} mean={:>10.1}us p50={:>10.1}us p99={:>10.1}us",
+        s.n, s.mean, s.p50, s.p99
     )
 }
 

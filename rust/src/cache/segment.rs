@@ -414,6 +414,10 @@ impl SegmentedStore {
         self.locs.len()
     }
 
+    pub fn is_empty(&self) -> bool {
+        self.locs.is_empty()
+    }
+
     /// Live rows, maintained incrementally (O(1); the old IVF train check
     /// recounted tombstones with a full scan on every insert).
     pub fn live_len(&self) -> usize {
@@ -421,7 +425,7 @@ impl SegmentedStore {
     }
 
     pub fn is_live(&self, id: usize) -> bool {
-        self.locs.get(id).map_or(false, |l| l.seg != TOMBSTONE_SEG)
+        self.locs.get(id).is_some_and(|l| l.seg != TOMBSTONE_SEG)
     }
 
     pub fn quantization(&self) -> Quantization {
@@ -789,7 +793,7 @@ impl SegmentedStore {
     pub fn payload_bytes(&self) -> usize {
         let seg_bytes =
             |s: &Segment| s.rows.len() * std::mem::size_of::<f32>() + s.codes.len();
-        self.sealed.iter().map(|s| seg_bytes(s)).sum::<usize>() + seg_bytes(&self.active)
+        self.sealed.iter().map(seg_bytes).sum::<usize>() + seg_bytes(&self.active)
     }
 }
 

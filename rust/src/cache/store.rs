@@ -207,7 +207,7 @@ impl SemanticCache {
         }
         self.tick += 1;
         let id = *self.exact.get(&Self::text_key(query))?;
-        if self.entries.get(id).map_or(true, |e| e.is_none()) {
+        if self.entries.get(id).is_none_or(|e| e.is_none()) {
             return None;
         }
         self.stats.exact_hits += 1;
@@ -231,7 +231,7 @@ impl SemanticCache {
     /// flight — reviving a dead id in the eviction maps (or journaling a
     /// Touch for a removed entry) must not happen.
     pub fn touch(&mut self, id: usize) {
-        if self.entries.get(id).map_or(true, |e| e.is_none()) {
+        if self.entries.get(id).is_none_or(|e| e.is_none()) {
             return;
         }
         self.tick += 1;
@@ -268,7 +268,7 @@ impl SemanticCache {
 
     /// Fold the WAL into a fresh snapshot when it outgrew `compact_bytes`.
     fn maybe_compact(&mut self) {
-        let wants = self.persist.as_ref().map_or(false, |p| p.wants_compaction());
+        let wants = self.persist.as_ref().is_some_and(|p| p.wants_compaction());
         if wants {
             if let Err(e) = self.compact_now() {
                 if let Some(p) = self.persist.as_mut() {
@@ -417,7 +417,7 @@ impl SemanticCache {
             }
             WalOp::Touch { id, tick } => {
                 let id = id as usize;
-                if self.entries.get(id).map_or(false, |e| e.is_some()) {
+                if self.entries.get(id).is_some_and(|e| e.is_some()) {
                     self.eviction.on_hit(id, tick);
                 }
                 self.tick = self.tick.max(tick);

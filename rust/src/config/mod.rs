@@ -42,6 +42,9 @@ pub struct Config {
     /// Per-request span tracing (ring buffer, slow-request list, per-stage
     /// histograms; surfaced via the `trace`/`stats` server verbs).
     pub trace: TraceConfig,
+    /// Fault tolerance: per-request deadlines, the degradation ladder, and
+    /// circuit breakers around each backend (DESIGN.md "Failure domains").
+    pub faults: FaultsConfig,
     /// Artifact directory.
     pub artifact_dir: String,
     /// Keep decode state (KV caches) on device between steps, fetching only
@@ -140,6 +143,64 @@ impl Default for TraceConfig {
     }
 }
 
+/// `[faults]` section: degradation ladder + breaker tuning. All timeouts
+/// use 0 as "unbounded" so the layer can be tightened knob by knob.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultsConfig {
+    /// Master switch. Off = no deadline checks, no breakers, no retries:
+    /// the exact pre-fault-layer behavior (kept for A/B overhead runs).
+    pub enabled: bool,
+    /// Per-request end-to-end deadline, stamped at `EngineHandle::request`
+    /// submission time and checked at stage boundaries (flush, session
+    /// start, each decode round). Expired requests are shed with a
+    /// structured error — or degraded to the raw cached response when one
+    /// is in hand. 0 = no deadline.
+    pub request_deadline_ms: u64,
+    /// Budget for a single tweak generation (session start → EOS). A tweak
+    /// that overruns is degraded to the raw cached response mid-decode and
+    /// its slot freed. Catches hangs the deadline alone would let occupy a
+    /// slot. 0 = unbounded.
+    pub tweak_timeout_ms: u64,
+    /// Budget for a single miss (Big-LLM) generation. Overruns fail the
+    /// request (subject to retry). 0 = unbounded.
+    pub generation_timeout_ms: u64,
+    /// Extra attempts for a failed Big-LLM miss generation. Retries re-begin
+    /// the session, and per-request RNG substreams make a successful retry
+    /// bit-identical to a first-try success.
+    pub miss_retries: usize,
+    /// Base backoff before a miss retry; attempt `n` waits `n * backoff`.
+    pub retry_backoff_ms: u64,
+    /// Rolling outcome window per breaker (last N calls).
+    pub breaker_window: usize,
+    /// Failure fraction within the window that trips the breaker open.
+    pub breaker_failure_ratio: f32,
+    /// Outcomes required in the window before the ratio is meaningful; the
+    /// breaker never opens on fewer samples.
+    pub breaker_min_samples: usize,
+    /// How long an open breaker rejects before allowing half-open probes.
+    pub breaker_open_ms: u64,
+    /// Consecutive probe successes needed to close from half-open.
+    pub breaker_half_open_probes: usize,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            enabled: true,
+            request_deadline_ms: 0,
+            tweak_timeout_ms: 0,
+            generation_timeout_ms: 0,
+            miss_retries: 2,
+            retry_backoff_ms: 5,
+            breaker_window: 32,
+            breaker_failure_ratio: 0.5,
+            breaker_min_samples: 8,
+            breaker_open_ms: 250,
+            breaker_half_open_probes: 2,
+        }
+    }
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct GenConfig {
     pub temperature: f32,
@@ -201,6 +262,7 @@ impl Config {
             },
             persist: PersistConfig::default(),
             trace: TraceConfig::default(),
+            faults: FaultsConfig::default(),
             artifact_dir: "artifacts".to_string(),
             device_resident: true,
             seed: 20250923,
@@ -333,6 +395,39 @@ impl Config {
             }
             "trace.slow_threshold_ms" => self.trace.slow_threshold_ms = f()?,
             "trace.export_dir" => self.trace.export_dir = val.to_string(),
+            "faults.enabled" => self.faults.enabled = b()?,
+            "faults.request_deadline_ms" => {
+                self.faults.request_deadline_ms = u()? as u64
+            }
+            "faults.tweak_timeout_ms" => self.faults.tweak_timeout_ms = u()? as u64,
+            "faults.generation_timeout_ms" => {
+                self.faults.generation_timeout_ms = u()? as u64
+            }
+            "faults.miss_retries" => self.faults.miss_retries = u()?,
+            "faults.retry_backoff_ms" => self.faults.retry_backoff_ms = u()? as u64,
+            "faults.breaker_window" => {
+                let n = u()?;
+                if n == 0 {
+                    bail!("faults.breaker_window must be >= 1");
+                }
+                self.faults.breaker_window = n;
+            }
+            "faults.breaker_failure_ratio" => {
+                let r = f()? as f32;
+                if !(0.0..=1.0).contains(&r) {
+                    bail!("faults.breaker_failure_ratio must be in [0, 1]");
+                }
+                self.faults.breaker_failure_ratio = r;
+            }
+            "faults.breaker_min_samples" => self.faults.breaker_min_samples = u()?,
+            "faults.breaker_open_ms" => self.faults.breaker_open_ms = u()? as u64,
+            "faults.breaker_half_open_probes" => {
+                let n = u()?;
+                if n == 0 {
+                    bail!("faults.breaker_half_open_probes must be >= 1");
+                }
+                self.faults.breaker_half_open_probes = n;
+            }
             "persist.data_dir" => self.persist.data_dir = val.to_string(),
             "persist.wal_fsync" => self.persist.wal_fsync = b()?,
             "persist.compact_bytes" => self.persist.compact_bytes = u()? as u64,
@@ -361,7 +456,7 @@ impl Config {
                 };
                 format!("{base}, {quant}, {} scan shard{}", self.index.shards, if self.index.shards == 1 { "" } else { "s" })
             }),
-            ("Similarity Threshold".into(), format!("{}", self.similarity_threshold)),
+            ("Similarity Threshold".into(), self.similarity_threshold.to_string()),
             ("Eviction".into(), format!("{:?} (capacity {})", self.eviction.policy, if self.eviction.capacity == usize::MAX { "unbounded".into() } else { self.eviction.capacity.to_string() })),
             ("Persistence".into(), if self.persist.enabled() {
                 format!("WAL+snapshots in {} (fsync {}, compact at {} MiB)", self.persist.data_dir, self.persist.wal_fsync, self.persist.compact_bytes / (1024 * 1024))
@@ -387,6 +482,23 @@ impl Config {
                 format!("per-request spans, ring {} (slow ≥ {} ms{export})", self.trace.ring_capacity, self.trace.slow_threshold_ms)
             } else {
                 "disabled".into()
+            }),
+            ("Fault tolerance".into(), if self.faults.enabled {
+                let deadline = if self.faults.request_deadline_ms > 0 {
+                    format!("{} ms deadline", self.faults.request_deadline_ms)
+                } else {
+                    "no deadline".into()
+                };
+                format!(
+                    "{deadline}, {} miss retr{}, breakers {}/{} @ {:.0}%",
+                    self.faults.miss_retries,
+                    if self.faults.miss_retries == 1 { "y" } else { "ies" },
+                    self.faults.breaker_min_samples,
+                    self.faults.breaker_window,
+                    self.faults.breaker_failure_ratio * 100.0
+                )
+            } else {
+                "disabled (fail-through, no degradation)".into()
             }),
             ("Decode transport".into(), if self.device_resident {
                 "device-resident KV (literal fallback for old artifact sets)".into()
@@ -564,6 +676,44 @@ mod tests {
         c.set("trace.enabled", "true").unwrap();
         let rows = c.table();
         assert!(rows.iter().any(|(k, v)| k == "Tracing" && v.contains("/tmp/traces")));
+    }
+
+    #[test]
+    fn faults_section_applies() {
+        let mut c = Config::paper();
+        assert!(c.faults.enabled);
+        assert_eq!(c.faults.request_deadline_ms, 0);
+        assert_eq!(c.faults.miss_retries, 2);
+        let mut kv = BTreeMap::new();
+        kv.insert("faults.request_deadline_ms".to_string(), "750".to_string());
+        kv.insert("faults.tweak_timeout_ms".to_string(), "100".to_string());
+        kv.insert("faults.generation_timeout_ms".to_string(), "400".to_string());
+        kv.insert("faults.miss_retries".to_string(), "3".to_string());
+        kv.insert("faults.retry_backoff_ms".to_string(), "10".to_string());
+        kv.insert("faults.breaker_window".to_string(), "16".to_string());
+        kv.insert("faults.breaker_failure_ratio".to_string(), "0.75".to_string());
+        kv.insert("faults.breaker_min_samples".to_string(), "4".to_string());
+        kv.insert("faults.breaker_open_ms".to_string(), "100".to_string());
+        kv.insert("faults.breaker_half_open_probes".to_string(), "1".to_string());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.faults.request_deadline_ms, 750);
+        assert_eq!(c.faults.tweak_timeout_ms, 100);
+        assert_eq!(c.faults.generation_timeout_ms, 400);
+        assert_eq!(c.faults.miss_retries, 3);
+        assert_eq!(c.faults.retry_backoff_ms, 10);
+        assert_eq!(c.faults.breaker_window, 16);
+        assert!((c.faults.breaker_failure_ratio - 0.75).abs() < 1e-6);
+        assert_eq!(c.faults.breaker_min_samples, 4);
+        assert_eq!(c.faults.breaker_open_ms, 100);
+        assert_eq!(c.faults.breaker_half_open_probes, 1);
+        assert!(c.set("faults.breaker_window", "0").is_err());
+        assert!(c.set("faults.breaker_failure_ratio", "1.5").is_err());
+        assert!(c.set("faults.breaker_half_open_probes", "0").is_err());
+        let rows = c.table();
+        assert!(rows.iter().any(|(k, v)| k == "Fault tolerance" && v.contains("750 ms")));
+        c.set("faults.enabled", "false").unwrap();
+        let rows = c.table();
+        assert!(rows.iter().any(|(k, v)| k == "Fault tolerance" && v.contains("disabled")));
     }
 
     #[test]

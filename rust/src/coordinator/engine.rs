@@ -29,7 +29,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use super::scheduler::{Job, JobKind, Scheduler};
-use super::{Batcher, ReplyTx, RouteDecision, RoutedResponse, Router};
+use super::{deadline_expired, Batcher, ReplyTx, RouteDecision, RoutedResponse, Router};
 use crate::cache::query_key;
 use crate::trace::{Stage, StageSummary, TraceBuilder, TraceReport};
 
@@ -99,6 +99,24 @@ pub struct EngineStats {
     pub stage_latency: Vec<StageSummary>,
     /// Traces completed since startup (ring + evicted).
     pub traces_finished: u64,
+    // ---- fault tolerance (all zero / "closed" when [faults] is disabled) ----
+    /// Tweak hits degraded to the raw cached response (tweak LLM sick).
+    pub degraded_hits: u64,
+    /// Requests shed at a stage boundary after their deadline expired.
+    pub shed: u64,
+    /// Requests answered with a terminal structured error.
+    pub failed: u64,
+    /// Requests routed straight to the miss path because the embedder was
+    /// unavailable (no cache lookup, no insert).
+    pub embed_bypasses: u64,
+    /// Miss-generation retry attempts (requeues + blocking-path retries).
+    pub miss_retries: u64,
+    /// Lifetime closed→open transitions across all three breakers.
+    pub breaker_trips: u64,
+    /// Breaker states: "closed", "open", or "half_open".
+    pub breaker_embed: String,
+    pub breaker_small: String,
+    pub breaker_big: String,
 }
 
 /// Result of an explicit `{"admin": "snapshot"}` request.
@@ -316,11 +334,22 @@ impl Engine {
         // Exact-match fast path first: those don't need embeddings.
         let mut to_embed: Vec<(String, ReplyTx, Instant, TraceBuilder)> =
             Vec::with_capacity(batch.len());
+        let faults = router.config.faults;
         for pending in batch {
             let enqueued = pending.enqueued;
             let arrived = pending.arrived;
             let (query, reply, mut trace) = pending.payload;
             trace.span_at(Stage::BatcherWait, arrived, drained, f32::NAN);
+            // Deadline shedding at the first stage boundary: a request that
+            // aged out in the batcher never pays for embed/route/decode.
+            if faults.enabled && deadline_expired(enqueued, faults.request_deadline_ms, drained) {
+                router.finish_failed("shed", true, enqueued, &mut trace);
+                let _ = reply.send(Err(anyhow!(
+                    "request deadline exceeded ({} ms)",
+                    faults.request_deadline_ms
+                )));
+                continue;
+            }
             if let Some(resp) = router.try_exact(&query, enqueued, &mut trace) {
                 let _ = reply.send(Ok(resp));
             } else {
@@ -332,11 +361,39 @@ impl Engine {
         }
         // Borrowed views only — embedding a batch must not copy every query.
         let queries: Vec<&str> = to_embed.iter().map(|(q, _, _, _)| q.as_str()).collect();
-        let t_embed = Instant::now();
-        match router.embedder().embed_batch(&queries) {
-            Ok(embeddings) => {
-                let embedded = Instant::now();
-                router.latency.record("embed", (embedded - t_embed).as_micros() as f64);
+        // Embed rung of the degradation ladder: an open breaker skips the
+        // backend call entirely; a failed call records breaker evidence.
+        // Either way every batch-mate falls through to the miss path below
+        // (no similarity search, no cache insert) instead of erroring out.
+        let embedded_ok = if faults.enabled && !router.breakers.embed.allow(Instant::now()) {
+            None
+        } else {
+            let t_embed = Instant::now();
+            match router.embedder().embed_batch(&queries) {
+                Ok(embeddings) => {
+                    let embedded = Instant::now();
+                    if faults.enabled {
+                        router.breakers.embed.record_success(embedded);
+                    }
+                    router.latency.record("embed", (embedded - t_embed).as_micros() as f64);
+                    Some((embeddings, t_embed, embedded))
+                }
+                Err(e) => {
+                    if faults.enabled {
+                        router.breakers.embed.record_failure(Instant::now());
+                        None
+                    } else {
+                        let msg = format!("batched embed failed: {e}");
+                        for (_, reply, _, _) in to_embed {
+                            let _ = reply.send(Err(anyhow!("{msg}")));
+                        }
+                        return;
+                    }
+                }
+            }
+        };
+        match embedded_ok {
+            Some((embeddings, t_embed, embedded)) => {
                 // One embed interval shared by the whole micro-batch: stamp
                 // it on every trace before any request starts routing, so a
                 // batch-mate's route time never bleeds into an embed span.
@@ -368,10 +425,22 @@ impl Engine {
                     }
                 }
             }
-            Err(e) => {
-                let msg = format!("batched embed failed: {e}");
-                for (_, reply, _, _) in to_embed {
-                    let _ = reply.send(Err(anyhow!("{msg}")));
+            None => {
+                // Embedder unavailable: bypass the cache for every
+                // batch-mate rather than failing them.
+                for (query, reply, enqueued, mut trace) in to_embed {
+                    let job = router.miss_bypass_job(&query);
+                    match &mut sched {
+                        Some(s) => {
+                            let key = query_key(&job.query);
+                            let kind = JobKind::Miss { job, key };
+                            s.submit(Job::traced(kind, reply, enqueued, trace), router);
+                        }
+                        None => {
+                            let resp = router.run_miss_blocking(job, enqueued, &mut trace);
+                            let _ = reply.send(resp);
+                        }
+                    }
                 }
             }
         }
@@ -433,6 +502,17 @@ impl Engine {
                 .map_or(0, |r| r.recovered_entries),
             stage_latency: router.traces.stage_summaries(),
             traces_finished: router.traces.finished(),
+            degraded_hits: router.counters.get("degraded_hits"),
+            shed: router.counters.get("shed"),
+            failed: router.counters.get("failed"),
+            embed_bypasses: router.counters.get("embed_bypasses"),
+            miss_retries: router.counters.get("miss_retries"),
+            breaker_trips: router.breakers.embed.trips()
+                + router.breakers.small.trips()
+                + router.breakers.big.trips(),
+            breaker_embed: router.breakers.embed.state().name().to_string(),
+            breaker_small: router.breakers.small.state().name().to_string(),
+            breaker_big: router.breakers.big.state().name().to_string(),
         }
     }
 

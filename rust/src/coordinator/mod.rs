@@ -18,12 +18,13 @@ pub use scheduler::{Job, JobKind, Scheduler};
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::cache::persist::RecoveryReport;
 use crate::cache::SemanticCache;
-use crate::config::Config;
+use crate::config::{Config, FaultsConfig};
 use crate::cost::{CostLedger, ModelRole, TokenUsage};
+use crate::faults::CircuitBreaker;
 use crate::llm::{BatchDecodeStats, LanguageModel, LlmResponse, LlmSession, TweakPrompt};
 use crate::metrics::{Counters, LatencyRecorder};
 use crate::runtime::{Embedder, Runtime, SamplingParams, TextEmbedder};
@@ -43,6 +44,10 @@ pub enum Pathway {
     TweakHit,
     /// Miss — Big LLM generated fresh (and the cache was updated).
     Miss,
+    /// Degradation ladder: the tweak step was unavailable (error, timeout,
+    /// deadline, or open breaker) and the raw cached response was served
+    /// verbatim — the paper's premise that a cached answer beats no answer.
+    DegradedHit,
 }
 
 /// Outcome of the route stage alone — the threshold decision with every
@@ -76,6 +81,10 @@ pub struct MissJob {
     pub embedding: Vec<f32>,
     /// Top-1 similarity that fell below the threshold (None: empty cache).
     pub top_score: Option<f32>,
+    /// Insert the response into the cache at EOS. `false` on the embed
+    /// degradation rung: the query was routed straight to the miss path
+    /// with no (trustworthy) embedding, so there is nothing to index.
+    pub insert: bool,
 }
 
 #[derive(Clone, Debug)]
@@ -92,6 +101,67 @@ pub struct RoutedResponse {
     pub total_micros: u128,
 }
 
+/// Per-backend circuit breakers (embedder, Small/tweak LLM, Big LLM).
+/// Consulted only when `[faults] enabled`; an open breaker moves requests
+/// down the degradation ladder without paying the backend's failure mode.
+pub struct Breakers {
+    pub embed: CircuitBreaker,
+    pub small: CircuitBreaker,
+    pub big: CircuitBreaker,
+}
+
+impl Breakers {
+    fn new(cfg: &FaultsConfig) -> Breakers {
+        Breakers {
+            embed: CircuitBreaker::from_config(cfg),
+            small: CircuitBreaker::from_config(cfg),
+            big: CircuitBreaker::from_config(cfg),
+        }
+    }
+}
+
+/// Has `ms` milliseconds elapsed since `anchor`? `ms == 0` never expires
+/// (the config convention for "unbounded").
+pub(crate) fn deadline_expired(
+    anchor: std::time::Instant,
+    ms: u64,
+    now: std::time::Instant,
+) -> bool {
+    ms > 0 && now.duration_since(anchor) >= std::time::Duration::from_millis(ms)
+}
+
+/// How a driven session ended (blocking path).
+enum DriveEnd {
+    Done(LlmResponse),
+    /// The request's end-to-end deadline expired mid-generation.
+    Deadline,
+    /// The per-generation budget (tweak/generation timeout) expired.
+    Budget,
+}
+
+/// Drive a session to EOS, checking the request deadline and the generation
+/// budget between advances (`0` budgets never fire). Hung sessions — ones
+/// that report work forever — end at whichever budget expires first.
+fn drive_session(
+    mut session: Box<dyn LlmSession>,
+    deadline: (std::time::Instant, u64),
+    budget: (std::time::Instant, u64),
+) -> Result<DriveEnd> {
+    loop {
+        let now = std::time::Instant::now();
+        if deadline_expired(deadline.0, deadline.1, now) {
+            return Ok(DriveEnd::Deadline);
+        }
+        if deadline_expired(budget.0, budget.1, now) {
+            return Ok(DriveEnd::Budget);
+        }
+        if !session.advance()? {
+            break;
+        }
+    }
+    Ok(DriveEnd::Done(session.finish()?))
+}
+
 /// The router: owns the cache and both models. Single-threaded by design —
 /// the engine wraps it in a dedicated thread (PJRT CPU serializes compute).
 pub struct Router {
@@ -105,6 +175,8 @@ pub struct Router {
     pub counters: Counters,
     /// Completed per-request span traces (ring + slow list + histograms).
     pub traces: TraceHub,
+    /// Per-backend circuit breakers ([`FaultsConfig`] tuning).
+    pub breakers: Breakers,
     /// What crash recovery found on startup (None: persistence disabled).
     pub recovery: Option<RecoveryReport>,
     /// Shared scan workers for the sharded vector search (`index.shards`
@@ -187,6 +259,7 @@ impl Router {
             cache.set_pool(Arc::clone(pool), config.index.shards);
         }
         let traces = TraceHub::new(config.trace.clone());
+        let breakers = Breakers::new(&config.faults);
         Router {
             config,
             embedder,
@@ -197,6 +270,7 @@ impl Router {
             latency: LatencyRecorder::new(),
             counters: Counters::default(),
             traces,
+            breakers,
             recovery: None,
             scan_pool,
         }
@@ -267,13 +341,30 @@ impl Router {
             return Ok(resp);
         }
 
-        // 1) embed
-        let t = std::time::Instant::now();
-        let embedding = self.embedder.embed(query)?;
-        self.latency.record_duration("embed", t.elapsed());
-        trace.span_from(Stage::Embed, t);
-
-        self.handle_embedded(query, embedding, t_start, &mut trace)
+        // 1) embed — embedder failure (or an open embed breaker) drops to
+        // the ladder's bypass rung: straight to the miss path, no insert.
+        let faults_on = self.config.faults.enabled;
+        if !faults_on || self.breakers.embed.allow(std::time::Instant::now()) {
+            let t = std::time::Instant::now();
+            match self.embedder.embed(query) {
+                Ok(embedding) => {
+                    if faults_on {
+                        self.breakers.embed.record_success(std::time::Instant::now());
+                    }
+                    self.latency.record_duration("embed", t.elapsed());
+                    trace.span_from(Stage::Embed, t);
+                    return self.handle_embedded(query, embedding, t_start, &mut trace);
+                }
+                Err(e) => {
+                    if !faults_on {
+                        return Err(e);
+                    }
+                    self.breakers.embed.record_failure(std::time::Instant::now());
+                }
+            }
+        }
+        let job = self.miss_bypass_job(query);
+        self.run_miss_blocking(job, t_start, &mut trace)
     }
 
     /// Exact-match fast path; `None` when disabled or no exact entry.
@@ -333,37 +424,160 @@ impl Router {
     ) -> Result<RoutedResponse> {
         match self.route(query, embedding, t_start, trace) {
             RouteDecision::Exact(resp) => Ok(resp),
-            RouteDecision::Tweak(job) => {
-                let t = std::time::Instant::now();
-                let mut session = self.begin_tweak_session(&job)?;
+            RouteDecision::Tweak(job) => self.run_tweak_blocking(job, t_start, trace),
+            RouteDecision::Miss(job) => self.run_miss_blocking(job, t_start, trace),
+        }
+    }
+
+    /// Blocking hit pathway with the degradation ladder: a tweak that
+    /// errors, overruns its budget, outlives the request deadline, or is
+    /// rejected by an open breaker degrades to the raw cached response.
+    /// With `[faults]` disabled this is exactly the old fail-through path.
+    fn run_tweak_blocking(
+        &mut self,
+        job: TweakJob,
+        t_start: std::time::Instant,
+        trace: &mut TraceBuilder,
+    ) -> Result<RoutedResponse> {
+        let f = self.config.faults;
+        if f.enabled && !self.breakers.small.allow(std::time::Instant::now()) {
+            return Ok(self.complete_degraded(&job, t_start, trace));
+        }
+        let (dl, bg) = if f.enabled { (f.request_deadline_ms, f.tweak_timeout_ms) } else { (0, 0) };
+        let t = std::time::Instant::now();
+        let outcome = match self.begin_tweak_session(&job) {
+            Ok(session) => {
                 let decode_started = std::time::Instant::now();
-                trace.span_at(Stage::Prefill, t, decode_started, f32::NAN);
-                while session.advance()? {}
-                let resp = session.finish()?;
-                trace.span_at(
-                    Stage::Decode,
-                    decode_started,
-                    std::time::Instant::now(),
-                    resp.decode_micros as f32,
-                );
-                trace.set_compute(resp.prefill_micros, resp.decode_micros);
+                match drive_session(session, (t_start, dl), (t, bg)) {
+                    Ok(DriveEnd::Done(resp)) => {
+                        trace.span_at(Stage::Prefill, t, decode_started, f32::NAN);
+                        trace.span_at(
+                            Stage::Decode,
+                            decode_started,
+                            std::time::Instant::now(),
+                            resp.decode_micros as f32,
+                        );
+                        trace.set_compute(resp.prefill_micros, resp.decode_micros);
+                        Ok(DriveEnd::Done(resp))
+                    }
+                    other => other,
+                }
+            }
+            Err(e) => Err(e),
+        };
+        match outcome {
+            Ok(DriveEnd::Done(resp)) => {
+                if f.enabled {
+                    self.breakers.small.record_success(std::time::Instant::now());
+                }
                 Ok(self.complete_tweak(&job, resp, t_start, t.elapsed().as_micros(), trace))
             }
-            RouteDecision::Miss(job) => {
-                let t = std::time::Instant::now();
-                let mut session = self.begin_miss_session(&job)?;
-                let decode_started = std::time::Instant::now();
-                trace.span_at(Stage::Prefill, t, decode_started, f32::NAN);
-                while session.advance()? {}
-                let resp = session.finish()?;
-                trace.span_at(
-                    Stage::Decode,
-                    decode_started,
-                    std::time::Instant::now(),
-                    resp.decode_micros as f32,
-                );
-                trace.set_compute(resp.prefill_micros, resp.decode_micros);
-                Ok(self.complete_miss(job, resp, t_start, t.elapsed().as_micros(), trace))
+            // Deadline expiry is the request running out of time, not
+            // (necessarily) backend sickness: degrade, no breaker record.
+            Ok(DriveEnd::Deadline) => Ok(self.complete_degraded(&job, t_start, trace)),
+            Ok(DriveEnd::Budget) => {
+                self.breakers.small.record_failure(std::time::Instant::now());
+                Ok(self.complete_degraded(&job, t_start, trace))
+            }
+            Err(e) => {
+                if !f.enabled {
+                    return Err(e);
+                }
+                self.breakers.small.record_failure(std::time::Instant::now());
+                Ok(self.complete_degraded(&job, t_start, trace))
+            }
+        }
+    }
+
+    /// Blocking miss pathway with bounded retry-and-backoff. Retries
+    /// re-begin the session; per-request RNG substreams make a successful
+    /// retry bit-identical to a first-try success. Exhausted retries (or an
+    /// open Big-LLM breaker, or deadline expiry) return a structured error
+    /// after accounting the failure (`finish_failed`).
+    fn run_miss_blocking(
+        &mut self,
+        job: MissJob,
+        t_start: std::time::Instant,
+        trace: &mut TraceBuilder,
+    ) -> Result<RoutedResponse> {
+        let f = self.config.faults;
+        let attempts = if f.enabled { f.miss_retries + 1 } else { 1 };
+        let (dl, bg) =
+            if f.enabled { (f.request_deadline_ms, f.generation_timeout_ms) } else { (0, 0) };
+        let mut last_err: Option<anyhow::Error> = None;
+        let mut done: Option<(LlmResponse, u128)> = None;
+        for attempt in 0..attempts {
+            let now = std::time::Instant::now();
+            if deadline_expired(t_start, dl, now) {
+                self.finish_failed("shed", false, t_start, trace);
+                return Err(anyhow!("request deadline exceeded ({dl} ms)"));
+            }
+            if f.enabled && !self.breakers.big.allow(now) {
+                self.finish_failed("failed", false, t_start, trace);
+                return Err(anyhow!("big LLM unavailable (circuit breaker open)"));
+            }
+            if attempt > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(
+                    f.retry_backoff_ms.saturating_mul(attempt as u64),
+                ));
+            }
+            let t = std::time::Instant::now();
+            let drive = match self.begin_miss_session(&job) {
+                Ok(session) => {
+                    let decode_started = std::time::Instant::now();
+                    match drive_session(session, (t_start, dl), (t, bg)) {
+                        Ok(DriveEnd::Done(resp)) => {
+                            trace.span_at(Stage::Prefill, t, decode_started, f32::NAN);
+                            trace.span_at(
+                                Stage::Decode,
+                                decode_started,
+                                std::time::Instant::now(),
+                                resp.decode_micros as f32,
+                            );
+                            trace.set_compute(resp.prefill_micros, resp.decode_micros);
+                            Ok(DriveEnd::Done(resp))
+                        }
+                        other => other,
+                    }
+                }
+                Err(e) => Err(e),
+            };
+            match drive {
+                Ok(DriveEnd::Done(resp)) => {
+                    if f.enabled {
+                        self.breakers.big.record_success(std::time::Instant::now());
+                    }
+                    done = Some((resp, t.elapsed().as_micros()));
+                    break;
+                }
+                Ok(DriveEnd::Deadline) => {
+                    self.finish_failed("shed", false, t_start, trace);
+                    return Err(anyhow!("request deadline exceeded mid-generation"));
+                }
+                Ok(DriveEnd::Budget) => {
+                    self.breakers.big.record_failure(std::time::Instant::now());
+                    last_err = Some(anyhow!("generation timeout ({bg} ms)"));
+                }
+                Err(e) => {
+                    if !f.enabled {
+                        return Err(e);
+                    }
+                    self.breakers.big.record_failure(std::time::Instant::now());
+                    last_err = Some(e);
+                }
+            }
+        }
+        match done {
+            Some((resp, gen_micros)) => {
+                Ok(self.complete_miss(job, resp, t_start, gen_micros, trace))
+            }
+            None => {
+                self.finish_failed("failed", false, t_start, trace);
+                let e = last_err.expect("no success implies a recorded error");
+                Err(anyhow!(
+                    "miss generation failed after {attempts} attempt{}: {e:#}",
+                    if attempts == 1 { "" } else { "s" }
+                ))
             }
         }
     }
@@ -411,6 +625,7 @@ impl Router {
                 query: query.to_string(),
                 embedding,
                 top_score: top.map(|h| h.score),
+                insert: true,
             }),
         };
         let score = match &decision {
@@ -482,10 +697,16 @@ impl Router {
         trace: &mut TraceBuilder,
     ) -> RoutedResponse {
         self.latency.record("big_generate", gen_micros as f64);
-        let t = std::time::Instant::now();
-        let id = self.cache.insert(&job.query, &resp.text, job.embedding);
-        self.latency.record_duration("cache_insert", t.elapsed());
-        trace.span_from(Stage::CacheInsert, t);
+        let id = if job.insert {
+            let t = std::time::Instant::now();
+            let id = self.cache.insert(&job.query, &resp.text, job.embedding);
+            self.latency.record_duration("cache_insert", t.elapsed());
+            trace.span_from(Stage::CacheInsert, t);
+            Some(id)
+        } else {
+            // Embed-bypass rung: no embedding to index, nothing inserted.
+            None
+        };
         self.ledger.record(ModelRole::Big, resp.usage);
         self.counters.inc("misses");
         // Reply span before the total sample: spans nest in [0, total_us].
@@ -503,9 +724,86 @@ impl Router {
             pathway: Pathway::Miss,
             similarity: job.top_score,
             cached_query: None,
-            cache_entry: Some(id),
+            cache_entry: id,
             usage: resp.usage,
             total_micros,
+        }
+    }
+
+    /// Degradation-ladder terminal for the hit pathway: serve the raw
+    /// cached response verbatim (no model run) because the tweak step was
+    /// unavailable. Accounted as its own `degraded_hit` pathway in
+    /// counters, latency, and traces so dashboards see degradation happen.
+    pub fn complete_degraded(
+        &mut self,
+        job: &TweakJob,
+        t_start: std::time::Instant,
+        trace: &mut TraceBuilder,
+    ) -> RoutedResponse {
+        self.cache.touch(job.hit_id);
+        self.ledger.record_free();
+        self.counters.inc("degraded_hits");
+        // Reply span before the total sample: spans nest in [0, total_us].
+        trace.span_since_last(Stage::Reply);
+        let total_micros = t_start.elapsed().as_micros();
+        self.latency.record("total", total_micros as f64);
+        self.traces.finish(
+            trace,
+            TraceTag::DegradedHit,
+            total_micros as u64,
+            self.config.similarity_threshold,
+        );
+        RoutedResponse {
+            text: job.prompt.cached_response.clone(),
+            pathway: Pathway::DegradedHit,
+            similarity: Some(job.score),
+            cached_query: Some(job.prompt.cached_query.clone()),
+            cache_entry: Some(job.hit_id),
+            usage: TokenUsage::default(),
+            total_micros,
+        }
+    }
+
+    /// Account a request answered with a structured error — deadline shed
+    /// (`kind = "shed"`) or exhausted generation attempts (`"failed"`). The
+    /// single-recording invariant holds for failures too: one `total`
+    /// latency sample and one finished trace (tag `failed`) per request.
+    /// `count_request` covers requests shed before ever reaching `route()`
+    /// (which is where "requests" is normally counted). The caller sends
+    /// the error on the reply channel.
+    pub fn finish_failed(
+        &mut self,
+        kind: &'static str,
+        count_request: bool,
+        enqueued: std::time::Instant,
+        trace: &mut TraceBuilder,
+    ) {
+        if count_request {
+            self.counters.inc("requests");
+        }
+        self.counters.inc(kind);
+        trace.span_since_last(Stage::Reply);
+        let total_micros = enqueued.elapsed().as_micros();
+        self.latency.record("total", total_micros as f64);
+        self.traces.finish(
+            trace,
+            TraceTag::Failed,
+            total_micros as u64,
+            self.config.similarity_threshold,
+        );
+    }
+
+    /// Degradation ladder, embed rung: build a miss job with no embedding
+    /// (embedder down or its breaker open). Counted as a request here — the
+    /// query never reaches `route()` — and served without a cache insert.
+    pub fn miss_bypass_job(&mut self, query: &str) -> MissJob {
+        self.counters.inc("requests");
+        self.counters.inc("embed_bypasses");
+        MissJob {
+            query: query.to_string(),
+            embedding: Vec::new(),
+            top_score: None,
+            insert: false,
         }
     }
 

@@ -38,7 +38,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use super::{MissJob, ReplyTx, Router, TweakJob};
+use super::{deadline_expired, MissJob, ReplyTx, Router, TweakJob};
 use crate::config::SchedulerConfig;
 use crate::llm::LlmSession;
 use crate::trace::{Stage, TraceBuilder};
@@ -60,15 +60,20 @@ pub struct Job {
     pub enqueued: Instant,
     /// The request's span-trace arena (disabled outside the engine path).
     pub trace: TraceBuilder,
+    /// Generation attempts already failed (miss retry accounting). A failed
+    /// miss re-enters the waiting queue up to `[faults] miss_retries`
+    /// times; per-request RNG substreams make a successful retry
+    /// bit-identical to a first-try success.
+    pub attempts: usize,
 }
 
 impl Job {
     pub fn new(kind: JobKind, reply: ReplyTx, enqueued: Instant) -> Job {
-        Job { kind, reply, enqueued, trace: TraceBuilder::disabled() }
+        Job { kind, reply, enqueued, trace: TraceBuilder::disabled(), attempts: 0 }
     }
 
     pub fn traced(kind: JobKind, reply: ReplyTx, enqueued: Instant, trace: TraceBuilder) -> Job {
-        Job { kind, reply, enqueued, trace }
+        Job { kind, reply, enqueued, trace, attempts: 0 }
     }
 }
 
@@ -157,11 +162,57 @@ impl Scheduler {
     pub fn step(&mut self, router: &mut Router) -> usize {
         let mut finished = 0;
         let live = self.active.len();
+        let f = router.config.faults;
         for _ in 0..live {
             let mut act = match self.active.pop_front() {
                 Some(a) => a,
                 None => break,
             };
+            if f.enabled {
+                let now = Instant::now();
+                // Budget checks at the round boundary: an expired session
+                // resolves NOW (degrade / shed / retry) and frees its slot
+                // — dropping the session releases any batch-pool slot —
+                // instead of decoding on borrowed time.
+                if deadline_expired(act.job.enqueued, f.request_deadline_ms, now) {
+                    let Active { job, .. } = act;
+                    match &job.kind {
+                        JobKind::Tweak(_) => self.degrade(job, router),
+                        JobKind::Miss { .. } => self.shed(job, router),
+                    }
+                    finished += 1;
+                    continue;
+                }
+                let overrun = match &act.job.kind {
+                    JobKind::Tweak(_) => {
+                        deadline_expired(act.started, f.tweak_timeout_ms, now)
+                    }
+                    JobKind::Miss { .. } => {
+                        deadline_expired(act.started, f.generation_timeout_ms, now)
+                    }
+                };
+                if overrun {
+                    let Active { job, .. } = act;
+                    match &job.kind {
+                        JobKind::Tweak(_) => {
+                            router.breakers.small.record_failure(now);
+                            self.degrade(job, router);
+                            finished += 1;
+                        }
+                        JobKind::Miss { .. } => {
+                            router.breakers.big.record_failure(now);
+                            let e = anyhow!(
+                                "generation timeout ({} ms)",
+                                f.generation_timeout_ms
+                            );
+                            if self.retry_or_fail(job, e, router) {
+                                finished += 1;
+                            }
+                        }
+                    }
+                    continue;
+                }
+            }
             let t_turn = Instant::now();
             let outcome = Self::advance_some(&mut act, self.cfg.fairness_steps.max(1));
             // Child span of the decode span: this session's turn in the
@@ -174,8 +225,26 @@ impl Scheduler {
                     finished += 1;
                 }
                 Err(e) => {
-                    self.fail(act.job, &e);
-                    finished += 1;
+                    let Active { job, .. } = act;
+                    match &job.kind {
+                        JobKind::Tweak(_) if f.enabled => {
+                            // Ladder rung 1: a failed tweak degrades to the
+                            // raw cached response instead of failing.
+                            router.breakers.small.record_failure(Instant::now());
+                            self.degrade(job, router);
+                            finished += 1;
+                        }
+                        JobKind::Miss { .. } if f.enabled => {
+                            router.breakers.big.record_failure(Instant::now());
+                            if self.retry_or_fail(job, e, router) {
+                                finished += 1;
+                            }
+                        }
+                        _ => {
+                            self.fail(job, &e, router);
+                            finished += 1;
+                        }
+                    }
                 }
             }
         }
@@ -214,9 +283,39 @@ impl Scheduler {
         }
     }
 
-    /// Start a job's session (runs the prefill); replies with the error on
-    /// failure instead of poisoning the ring.
+    /// Start a job's session (runs the prefill); failures walk the
+    /// degradation ladder (degrade / retry / structured error) instead of
+    /// poisoning the ring.
     fn start(&mut self, mut job: Job, router: &mut Router) {
+        let f = router.config.faults;
+        if f.enabled {
+            let now = Instant::now();
+            // Shed before prefill: a request that has already outlived its
+            // deadline must not occupy a slot.
+            if deadline_expired(job.enqueued, f.request_deadline_ms, now) {
+                match &job.kind {
+                    JobKind::Tweak(_) => self.degrade(job, router),
+                    JobKind::Miss { .. } => self.shed(job, router),
+                }
+                return;
+            }
+            // Open breakers divert proactively — no timeout paid.
+            match &job.kind {
+                JobKind::Tweak(_) if !router.breakers.small.allow(now) => {
+                    self.degrade(job, router);
+                    return;
+                }
+                JobKind::Miss { .. } if !router.breakers.big.allow(now) => {
+                    self.fail(
+                        job,
+                        &anyhow!("big LLM unavailable (circuit breaker open)"),
+                        router,
+                    );
+                    return;
+                }
+                _ => {}
+            }
+        }
         // Queue wait: routing decision end → session start (≈0 when a slot
         // was free at submit time).
         job.trace.span_since_last(Stage::QueueWait);
@@ -231,7 +330,17 @@ impl Scheduler {
                 job.trace.span_at(Stage::Prefill, started, decode_started, f32::NAN);
                 self.active.push_back(Active { job, session, started, decode_started });
             }
-            Err(e) => self.fail(job, &e),
+            Err(e) => match &job.kind {
+                JobKind::Tweak(_) if f.enabled => {
+                    router.breakers.small.record_failure(Instant::now());
+                    self.degrade(job, router);
+                }
+                JobKind::Miss { .. } if f.enabled => {
+                    router.breakers.big.record_failure(Instant::now());
+                    self.retry_or_fail(job, e, router);
+                }
+                _ => self.fail(job, &e, router),
+            },
         }
     }
 
@@ -240,15 +349,32 @@ impl Scheduler {
     fn complete(&mut self, act: Active, router: &mut Router) {
         let gen_micros = act.started.elapsed().as_micros();
         let Active { job, session, decode_started, .. } = act;
+        let f = router.config.faults;
         let resp = match session.finish() {
             Ok(r) => r,
             Err(e) => {
-                self.fail(job, &e);
+                match &job.kind {
+                    JobKind::Tweak(_) if f.enabled => {
+                        router.breakers.small.record_failure(Instant::now());
+                        self.degrade(job, router);
+                    }
+                    JobKind::Miss { .. } if f.enabled => {
+                        router.breakers.big.record_failure(Instant::now());
+                        self.retry_or_fail(job, e, router);
+                    }
+                    _ => self.fail(job, &e, router),
+                }
                 return;
             }
         };
+        if f.enabled {
+            match &job.kind {
+                JobKind::Tweak(_) => router.breakers.small.record_success(Instant::now()),
+                JobKind::Miss { .. } => router.breakers.big.record_success(Instant::now()),
+            }
+        }
         self.completed += 1;
-        let Job { kind, reply, enqueued, mut trace } = job;
+        let Job { kind, reply, enqueued, mut trace, .. } = job;
         // Parent span over every fairness-round turn; value = the
         // generator-reported decode compute inside that occupancy window.
         trace.span_at(Stage::Decode, decode_started, Instant::now(), resp.decode_micros as f32);
@@ -272,17 +398,83 @@ impl Scheduler {
         let _ = reply.send(Ok(routed));
     }
 
-    /// Propagate a session failure to the leader and every coalesced
-    /// follower (the followers entry must be drained, or later duplicates
-    /// would attach to a leader that no longer exists and never hear back).
-    /// Failed requests drop their traces: only served requests finish one.
-    fn fail(&mut self, job: Job, e: &anyhow::Error) {
-        if let JobKind::Miss { key, .. } = &job.kind {
-            for (tx, _, _) in self.followers.remove(key).unwrap_or_default() {
-                let _ = tx.send(Err(anyhow!("generation failed: {e:#}")));
+    /// Degradation-ladder rung 1: resolve a tweak job with the raw cached
+    /// response (the tweak step errored, timed out, outlived the deadline,
+    /// or its breaker is open). The cached text is in the job snapshot, so
+    /// this costs no model work.
+    fn degrade(&mut self, job: Job, router: &mut Router) {
+        let Job { kind, reply, enqueued, mut trace, .. } = job;
+        let t = match kind {
+            JobKind::Tweak(t) => t,
+            JobKind::Miss { .. } => unreachable!("only tweak jobs degrade"),
+        };
+        let routed = router.complete_degraded(&t, enqueued, &mut trace);
+        let _ = reply.send(Ok(routed));
+        self.completed += 1;
+    }
+
+    /// Shed a miss that outlived its request deadline: a structured error
+    /// to the leader and every coalesced follower.
+    fn shed(&mut self, job: Job, router: &mut Router) {
+        let dl = router.config.faults.request_deadline_ms;
+        self.resolve_failed(job, &anyhow!("request deadline exceeded ({dl} ms)"), "shed", router);
+    }
+
+    /// Failed miss: re-queue for another attempt when the retry budget,
+    /// breaker, and deadline allow — the back of the waiting queue is the
+    /// backoff (other work runs first; the engine thread never sleeps) —
+    /// else answer with a structured error. Returns `true` when terminal.
+    /// The followers entry survives a re-queue: the leader is still in
+    /// flight, and duplicates keep attaching to it.
+    fn retry_or_fail(&mut self, mut job: Job, e: anyhow::Error, router: &mut Router) -> bool {
+        let f = router.config.faults;
+        let now = Instant::now();
+        if f.enabled
+            && job.attempts < f.miss_retries
+            && router.breakers.big.allow(now)
+            && !deadline_expired(job.enqueued, f.request_deadline_ms, now)
+        {
+            job.attempts += 1;
+            router.counters.inc("miss_retries");
+            self.waiting.push_back(job);
+            return false;
+        }
+        self.fail(job, &e, router);
+        true
+    }
+
+    /// Terminal failure: structured error to the leader and every follower.
+    fn fail(&mut self, job: Job, e: &anyhow::Error, router: &mut Router) {
+        self.resolve_failed(job, e, "failed", router);
+    }
+
+    /// Propagate a failure to the leader and every coalesced follower (the
+    /// followers entry must be drained, or later duplicates would attach to
+    /// a leader that no longer exists and never hear back). Every request —
+    /// followers included — still finishes one trace (tag `failed`) and
+    /// records one total sample: the one-reply-one-trace invariant holds on
+    /// the failure path too.
+    fn resolve_failed(
+        &mut self,
+        job: Job,
+        e: &anyhow::Error,
+        kind: &'static str,
+        router: &mut Router,
+    ) {
+        let Job { kind: jkind, reply, enqueued, mut trace, .. } = job;
+        let msg = if kind == "shed" {
+            format!("{e:#}")
+        } else {
+            format!("generation failed: {e:#}")
+        };
+        if let JobKind::Miss { key, .. } = &jkind {
+            for (tx, f_enqueued, mut f_trace) in self.followers.remove(key).unwrap_or_default() {
+                router.finish_failed(kind, false, f_enqueued, &mut f_trace);
+                let _ = tx.send(Err(anyhow!("{msg}")));
             }
         }
-        let _ = job.reply.send(Err(anyhow!("generation failed: {e:#}")));
+        router.finish_failed(kind, false, enqueued, &mut trace);
+        let _ = reply.send(Err(anyhow!("{msg}")));
     }
 }
 

@@ -1,0 +1,533 @@
+//! Fault-tolerance substrate: circuit breakers around each backend and the
+//! fault-injection harness (a shared [`FaultSwitch`] plus decorators that
+//! wrap any [`LanguageModel`] / [`TextEmbedder`] with injectable failures).
+//!
+//! The breaker is a pure state machine — every transition is driven by an
+//! `Instant` the *caller* supplies, so tests step simulated time instead of
+//! sleeping. The injection side is deliberately tiny: a mode cell the bench
+//! controller thread can flip mid-run (`Error`, `Delay`, `Hang`,
+//! `FailAfterTokens`) while the engine thread reads it per call.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::config::FaultsConfig;
+use crate::llm::{BatchDecodeStats, LanguageModel, LlmResponse, LlmSession, TweakPrompt};
+use crate::runtime::TextEmbedder;
+
+/// Circuit breaker phases (classic closed → open → half-open cycle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Calls flow; outcomes fill the rolling window.
+    Closed,
+    /// Calls are rejected without touching the backend.
+    Open,
+    /// Probe calls are let through; successes close, a failure reopens.
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+}
+
+/// Rolling failure-rate circuit breaker.
+///
+/// * **Closed**: outcomes land in a bounded window; once at least
+///   `min_samples` are present and the failure fraction reaches
+///   `failure_ratio`, the breaker opens.
+/// * **Open**: `allow` rejects until `open_for` has elapsed, then flips to
+///   half-open.
+/// * **Half-open**: calls are admitted as probes; `half_open_probes`
+///   consecutive successes close the breaker (window reset), any failure
+///   reopens it and restarts the cool-down.
+pub struct CircuitBreaker {
+    /// Rolling outcome window; `true` = failure.
+    window: VecDeque<bool>,
+    capacity: usize,
+    failure_ratio: f32,
+    min_samples: usize,
+    open_for: Duration,
+    half_open_probes: usize,
+    state: BreakerState,
+    opened_at: Option<Instant>,
+    probe_successes: usize,
+    /// Lifetime count of closed/half-open → open transitions.
+    trips: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(
+        capacity: usize,
+        failure_ratio: f32,
+        min_samples: usize,
+        open_for: Duration,
+        half_open_probes: usize,
+    ) -> Self {
+        CircuitBreaker {
+            window: VecDeque::with_capacity(capacity.max(1)),
+            capacity: capacity.max(1),
+            failure_ratio,
+            min_samples: min_samples.max(1),
+            open_for,
+            half_open_probes: half_open_probes.max(1),
+            state: BreakerState::Closed,
+            opened_at: None,
+            probe_successes: 0,
+            trips: 0,
+        }
+    }
+
+    pub fn from_config(cfg: &FaultsConfig) -> Self {
+        CircuitBreaker::new(
+            cfg.breaker_window,
+            cfg.breaker_failure_ratio,
+            cfg.breaker_min_samples,
+            Duration::from_millis(cfg.breaker_open_ms),
+            cfg.breaker_half_open_probes,
+        )
+    }
+
+    /// May a call proceed at `now`? Open breakers flip to half-open (and
+    /// admit the call as a probe) once the cool-down has elapsed.
+    pub fn allow(&mut self, now: Instant) -> bool {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                let opened = self.opened_at.expect("open breaker has a timestamp");
+                if now.duration_since(opened) >= self.open_for {
+                    self.state = BreakerState::HalfOpen;
+                    self.probe_successes = 0;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    pub fn record_success(&mut self, _now: Instant) {
+        match self.state {
+            BreakerState::HalfOpen => {
+                self.probe_successes += 1;
+                if self.probe_successes >= self.half_open_probes {
+                    self.state = BreakerState::Closed;
+                    self.opened_at = None;
+                    self.window.clear();
+                }
+            }
+            BreakerState::Closed => self.push(false),
+            // A success racing an open breaker (call admitted before the
+            // trip) is stale evidence; drop it.
+            BreakerState::Open => {}
+        }
+    }
+
+    pub fn record_failure(&mut self, now: Instant) {
+        match self.state {
+            BreakerState::HalfOpen => self.trip(now),
+            BreakerState::Closed => {
+                self.push(true);
+                if self.window.len() >= self.min_samples {
+                    let failures = self.window.iter().filter(|&&f| f).count();
+                    if failures as f32 / self.window.len() as f32 >= self.failure_ratio {
+                        self.trip(now);
+                    }
+                }
+            }
+            BreakerState::Open => {}
+        }
+    }
+
+    fn push(&mut self, failure: bool) {
+        if self.window.len() == self.capacity {
+            self.window.pop_front();
+        }
+        self.window.push_back(failure);
+    }
+
+    fn trip(&mut self, now: Instant) {
+        self.state = BreakerState::Open;
+        self.opened_at = Some(now);
+        self.probe_successes = 0;
+        self.trips += 1;
+        self.window.clear();
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+}
+
+/// What a wrapped backend does when called.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Pass through untouched.
+    Healthy,
+    /// Fail immediately at call/begin time.
+    Error,
+    /// Succeed after an injected latency.
+    Delay(Duration),
+    /// Sessions never make progress (each `advance` sleeps ~1ms and reports
+    /// more work forever) — only a deadline or generation timeout ends them.
+    /// Blocking calls and embedder calls refuse instead of wedging the
+    /// engine thread.
+    Hang,
+    /// Sessions error after N successful `advance` calls (mid-decode
+    /// failure); for embedders, fail every call after N successful batches.
+    FailAfterTokens(usize),
+}
+
+/// Shared, thread-safe fault mode cell: the bench/test controller flips it
+/// mid-run while the engine thread reads it on every wrapped call.
+#[derive(Clone)]
+pub struct FaultSwitch(Arc<Mutex<FaultMode>>);
+
+impl FaultSwitch {
+    pub fn new(mode: FaultMode) -> Self {
+        FaultSwitch(Arc::new(Mutex::new(mode)))
+    }
+
+    pub fn healthy() -> Self {
+        FaultSwitch::new(FaultMode::Healthy)
+    }
+
+    pub fn set(&self, mode: FaultMode) {
+        *self.0.lock().unwrap() = mode;
+    }
+
+    pub fn get(&self) -> FaultMode {
+        *self.0.lock().unwrap()
+    }
+}
+
+impl Default for FaultSwitch {
+    fn default() -> Self {
+        FaultSwitch::healthy()
+    }
+}
+
+/// [`LanguageModel`] decorator that injects the switch's current fault on
+/// every call. The mode is sampled at `begin` time, so an outage flipped
+/// mid-run hits new sessions while in-flight ones finish normally (matching
+/// how a real backend outage presents to a connection pool).
+pub struct FaultyLlm {
+    inner: Box<dyn LanguageModel>,
+    switch: FaultSwitch,
+}
+
+impl FaultyLlm {
+    pub fn new(inner: Box<dyn LanguageModel>, switch: FaultSwitch) -> Self {
+        FaultyLlm { inner, switch }
+    }
+
+    fn begin_inner(
+        &mut self,
+        start: impl FnOnce(&mut Box<dyn LanguageModel>) -> Result<Box<dyn LlmSession>>,
+    ) -> Result<Box<dyn LlmSession>> {
+        match self.switch.get() {
+            FaultMode::Healthy => start(&mut self.inner),
+            FaultMode::Error => {
+                bail!("injected fault: {} unavailable", self.inner.name())
+            }
+            FaultMode::Delay(d) => {
+                std::thread::sleep(d);
+                start(&mut self.inner)
+            }
+            FaultMode::Hang => Ok(Box::new(HungSession)),
+            FaultMode::FailAfterTokens(n) => Ok(Box::new(FailingSession {
+                inner: start(&mut self.inner)?,
+                remaining: n,
+                name: self.inner.name().to_string(),
+            })),
+        }
+    }
+}
+
+impl LanguageModel for FaultyLlm {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn respond(&mut self, query: &str) -> Result<LlmResponse> {
+        if self.switch.get() == FaultMode::Hang {
+            // A blocking call cannot be timed out from outside; refuse
+            // rather than wedge the caller forever.
+            bail!("injected fault: {} hung (blocking call refused)", self.inner.name());
+        }
+        let mut session = self.begin_respond(query)?;
+        while session.advance()? {}
+        session.finish()
+    }
+
+    fn tweak(&mut self, prompt: &TweakPrompt) -> Result<LlmResponse> {
+        if self.switch.get() == FaultMode::Hang {
+            bail!("injected fault: {} hung (blocking call refused)", self.inner.name());
+        }
+        let mut session = self.begin_tweak(prompt)?;
+        while session.advance()? {}
+        session.finish()
+    }
+
+    fn begin_respond(&mut self, query: &str) -> Result<Box<dyn LlmSession>> {
+        let query = query.to_string();
+        self.begin_inner(move |inner| inner.begin_respond(&query))
+    }
+
+    fn begin_tweak(&mut self, prompt: &TweakPrompt) -> Result<Box<dyn LlmSession>> {
+        let prompt = prompt.clone();
+        self.begin_inner(move |inner| inner.begin_tweak(&prompt))
+    }
+
+    fn batch_stats(&self) -> Option<BatchDecodeStats> {
+        self.inner.batch_stats()
+    }
+}
+
+/// A session that never finishes: `advance` paces itself (~1ms) so a
+/// deadline/timeout check elsewhere can reap it without a busy spin.
+struct HungSession;
+
+impl LlmSession for HungSession {
+    fn advance(&mut self) -> Result<bool> {
+        std::thread::sleep(Duration::from_millis(1));
+        Ok(true)
+    }
+
+    fn is_done(&self) -> bool {
+        false
+    }
+
+    fn finish(self: Box<Self>) -> Result<LlmResponse> {
+        bail!("injected fault: hung session never finished")
+    }
+}
+
+/// A session that errors after `remaining` successful advances — the
+/// mid-decode failure shape (backend dies partway through a generation).
+struct FailingSession {
+    inner: Box<dyn LlmSession>,
+    remaining: usize,
+    name: String,
+}
+
+impl LlmSession for FailingSession {
+    fn advance(&mut self) -> Result<bool> {
+        if self.remaining == 0 {
+            bail!("injected fault: {} failed mid-generation", self.name);
+        }
+        self.remaining -= 1;
+        self.inner.advance()
+    }
+
+    fn is_done(&self) -> bool {
+        self.inner.is_done()
+    }
+
+    fn finish(self: Box<Self>) -> Result<LlmResponse> {
+        self.inner.finish()
+    }
+}
+
+/// [`TextEmbedder`] decorator mirroring [`FaultyLlm`]. `Hang` surfaces as a
+/// paced error (an embed call is synchronous on the engine thread — a true
+/// wedge would stall every request, not just this one).
+pub struct FaultyEmbedder {
+    inner: Box<dyn TextEmbedder>,
+    switch: FaultSwitch,
+    successes: Cell<usize>,
+}
+
+impl FaultyEmbedder {
+    pub fn new(inner: Box<dyn TextEmbedder>, switch: FaultSwitch) -> Self {
+        FaultyEmbedder { inner, switch, successes: Cell::new(0) }
+    }
+}
+
+impl TextEmbedder for FaultyEmbedder {
+    fn out_dim(&self) -> usize {
+        self.inner.out_dim()
+    }
+
+    fn embed_batch(&self, texts: &[&str]) -> Result<Vec<Vec<f32>>> {
+        match self.switch.get() {
+            FaultMode::Healthy => {
+                let out = self.inner.embed_batch(texts)?;
+                self.successes.set(self.successes.get() + 1);
+                Ok(out)
+            }
+            FaultMode::Error => bail!("injected fault: embedder unavailable"),
+            FaultMode::Delay(d) => {
+                std::thread::sleep(d);
+                let out = self.inner.embed_batch(texts)?;
+                self.successes.set(self.successes.get() + 1);
+                Ok(out)
+            }
+            FaultMode::Hang => {
+                std::thread::sleep(Duration::from_millis(1));
+                bail!("injected fault: embedder hung")
+            }
+            FaultMode::FailAfterTokens(n) => {
+                if self.successes.get() >= n {
+                    bail!("injected fault: embedder failed after {n} batches");
+                }
+                let out = self.inner.embed_batch(texts)?;
+                self.successes.set(self.successes.get() + 1);
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::MockLlm;
+    use crate::runtime::NativeBowEmbedder;
+
+    fn breaker() -> CircuitBreaker {
+        // window 8, trip at ≥50% failures over ≥4 samples, 100ms cool-down,
+        // 2 probes to close.
+        CircuitBreaker::new(8, 0.5, 4, Duration::from_millis(100), 2)
+    }
+
+    #[test]
+    fn breaker_opens_on_failure_ratio() {
+        let mut b = breaker();
+        let t0 = Instant::now();
+        assert_eq!(b.state(), BreakerState::Closed);
+        // 3 failures: below min_samples, still closed.
+        for _ in 0..3 {
+            b.record_failure(t0);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.record_failure(t0);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+        assert!(!b.allow(t0));
+        assert!(!b.allow(t0 + Duration::from_millis(50)));
+    }
+
+    #[test]
+    fn breaker_ignores_sparse_failures() {
+        let mut b = breaker();
+        let t0 = Instant::now();
+        // Alternate: 50% would trip, so use 1 failure per 3 successes.
+        for _ in 0..6 {
+            b.record_success(t0);
+            b.record_success(t0);
+            b.record_success(t0);
+            b.record_failure(t0);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_half_open_closes_after_probes() {
+        let mut b = breaker();
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            b.record_failure(t0);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        let t1 = t0 + Duration::from_millis(120);
+        assert!(b.allow(t1), "cool-down elapsed: probe admitted");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.record_success(t1);
+        assert_eq!(b.state(), BreakerState::HalfOpen, "1 of 2 probes");
+        b.record_success(t1);
+        assert_eq!(b.state(), BreakerState::Closed);
+        // Window was reset: old failures don't haunt the fresh state.
+        b.record_failure(t1);
+        b.record_failure(t1);
+        b.record_failure(t1);
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_half_open_failure_reopens() {
+        let mut b = breaker();
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            b.record_failure(t0);
+        }
+        let t1 = t0 + Duration::from_millis(120);
+        assert!(b.allow(t1));
+        b.record_failure(t1);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 2);
+        // Cool-down restarts from the reopen.
+        assert!(!b.allow(t1 + Duration::from_millis(50)));
+        assert!(b.allow(t1 + Duration::from_millis(120)));
+    }
+
+    #[test]
+    fn faulty_llm_error_mode_fails_begin() {
+        let switch = FaultSwitch::new(FaultMode::Error);
+        let mut m = FaultyLlm::new(Box::new(MockLlm::new("small")), switch.clone());
+        assert!(m.begin_respond("q").is_err());
+        assert!(m.respond("q").is_err());
+        switch.set(FaultMode::Healthy);
+        assert!(m.respond("q").unwrap().text.contains("small-fresh"));
+    }
+
+    #[test]
+    fn faulty_llm_hang_session_never_finishes() {
+        let mut m =
+            FaultyLlm::new(Box::new(MockLlm::new("small")), FaultSwitch::new(FaultMode::Hang));
+        let mut s = m.begin_respond("q").unwrap();
+        assert!(s.advance().unwrap());
+        assert!(s.advance().unwrap());
+        assert!(!s.is_done());
+        assert!(s.finish().is_err());
+        // Blocking calls refuse instead of wedging.
+        assert!(m.respond("q").is_err());
+    }
+
+    #[test]
+    fn faulty_llm_fails_after_n_tokens() {
+        let inner = MockLlm::new("big").with_pace(8, Duration::ZERO);
+        let mut m =
+            FaultyLlm::new(Box::new(inner), FaultSwitch::new(FaultMode::FailAfterTokens(3)));
+        let mut s = m.begin_respond("q").unwrap();
+        let mut advances = 0;
+        let err = loop {
+            match s.advance() {
+                Ok(true) => advances += 1,
+                Ok(false) => panic!("session completed despite injection"),
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(advances, 3);
+        assert!(err.to_string().contains("injected fault"));
+    }
+
+    #[test]
+    fn faulty_embedder_modes() {
+        let switch = FaultSwitch::healthy();
+        let e = FaultyEmbedder::new(Box::new(NativeBowEmbedder::new(16, 7)), switch.clone());
+        assert_eq!(e.out_dim(), 16);
+        assert_eq!(e.embed_batch(&["a"]).unwrap().len(), 1);
+        switch.set(FaultMode::Error);
+        assert!(e.embed_batch(&["a"]).is_err());
+        switch.set(FaultMode::FailAfterTokens(2));
+        // One success already recorded; one more allowed, then failure.
+        assert!(e.embed_batch(&["b"]).is_ok());
+        assert!(e.embed_batch(&["c"]).is_err());
+        switch.set(FaultMode::Healthy);
+        assert!(e.embed_batch(&["d"]).is_ok());
+    }
+}

@@ -25,6 +25,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod datasets;
 pub mod eval;
+pub mod faults;
 pub mod llm;
 pub mod metrics;
 pub mod runtime;

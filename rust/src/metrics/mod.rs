@@ -190,8 +190,8 @@ impl LatencyRecorder {
         ));
         for (stage, s) in self.stages() {
             out.push_str(&format!(
-                "{:<18} {:>8} {:>10.0} {:>10.0} {:>10.0} {:>10.0}\n",
-                stage, s.n, s.mean, s.p50, s.p90, s.p99
+                "{stage:<18} {:>8} {:>10.0} {:>10.0} {:>10.0} {:>10.0}\n",
+                s.n, s.mean, s.p50, s.p90, s.p99
             ));
         }
         out

@@ -525,6 +525,10 @@ struct SlotState {
     /// observed via `advance()` — the collective-advance bookkeeping.
     credits: u32,
     done: bool,
+    /// Set when a collective round this slot rode failed: the packed device
+    /// state can no longer be trusted for it. The owner observes the stored
+    /// error on its next `advance()`/`finish()` and the slot is reclaimed.
+    failed: Option<String>,
     stats: GenerationStats,
 }
 
@@ -622,6 +626,7 @@ impl<E: BatchEngine> BatchedDecode<E> {
             pending: (max_new > 0).then_some(logits),
             credits: 0,
             done: max_new == 0,
+            failed: None,
             stats,
         });
         Ok(Some(slot))
@@ -643,6 +648,9 @@ impl<E: BatchEngine> BatchedDecode<E> {
     pub fn advance(&mut self, slot: usize) -> Result<bool> {
         {
             let s = self.slot_mut(slot)?;
+            if let Some(msg) = &s.failed {
+                bail!("{msg}");
+            }
             if s.done {
                 return Ok(false);
             }
@@ -701,8 +709,31 @@ impl<E: BatchEngine> BatchedDecode<E> {
             return Ok(());
         }
         // 3) one dispatch + one fetch for everyone
-        self.engine.step(&self.tokens, &self.pos, &self.active)?;
-        let all = self.engine.peek()?;
+        let fetched = self
+            .engine
+            .step(&self.tokens, &self.pos, &self.active)
+            .and_then(|()| self.engine.peek());
+        let all = match fetched {
+            Ok(all) => all,
+            Err(e) => {
+                // Poison every slot that rode the failed round: the packed
+                // device state is stale for all of them (a collective
+                // dispatch has no per-slot failure isolation). Each owner
+                // observes the stored error on its next advance()/finish()
+                // and its slot is reclaimed; idle slots are untouched, and
+                // the next admission reseeds the device state from zeros.
+                let msg = format!("batched decode round failed: {e:#}");
+                for (i, s) in self.slots.iter_mut().enumerate() {
+                    if self.active[i] == 0 {
+                        continue;
+                    }
+                    let s = s.as_mut().expect("active slot is live");
+                    s.done = true;
+                    s.failed = Some(msg.clone());
+                }
+                bail!(msg);
+            }
+        };
         self.dispatches += 1;
         self.active_slot_sum += n_active;
         let round_micros = t0.elapsed().as_micros();
@@ -743,6 +774,11 @@ impl<E: BatchEngine> BatchedDecode<E> {
             .get_mut(slot)
             .and_then(|s| s.take())
             .with_context(|| format!("slot {slot} is not live"))?;
+        // A poisoned slot still frees (the take above already reclaimed it);
+        // its stream is not trustworthy, so surface the round error instead.
+        if let Some(msg) = s.failed.take() {
+            bail!(msg);
+        }
         s.stats.generated_tokens = s.generated.len();
         Ok((s.generated, s.stats))
     }
@@ -883,7 +919,7 @@ impl<B: DecodeBackend> DecodeSession<B> {
                 let pos = (self.prompt_len + self.generated.len() - 1) as i32;
                 let remaining = self.max_new - self.generated.len();
                 let span_n = self.backend.span_n();
-                if self.use_span && span_n.map_or(false, |n| remaining >= n) {
+                if self.use_span && span_n.is_some_and(|n| remaining >= n) {
                     let n = span_n.expect("use_span implies span_n");
                     self.u_buf.clear();
                     for _ in 0..n {
@@ -1600,6 +1636,8 @@ mod tests {
         staged: Vec<f32>,
         dispatches: u64,
         prefills: u64,
+        /// One-shot injected fault: error the dispatch with this ordinal.
+        fail_on_dispatch: Option<u64>,
     }
 
     impl FakeBatchEngine {
@@ -1613,6 +1651,7 @@ mod tests {
                 staged: vec![0.0; slots * 32],
                 dispatches: 0,
                 prefills: 0,
+                fail_on_dispatch: None,
             }
         }
 
@@ -1645,6 +1684,10 @@ mod tests {
 
         fn step(&mut self, tokens: &[i32], pos: &[i32], active: &[i32]) -> Result<()> {
             assert_eq!(tokens.len(), self.slots);
+            if self.fail_on_dispatch == Some(self.dispatches) {
+                self.fail_on_dispatch = None;
+                bail!("injected device fault");
+            }
             self.dispatches += 1;
             for i in 0..self.slots {
                 if active[i] == 0 {
@@ -1774,6 +1817,38 @@ mod tests {
         assert_eq!(tok_b, vec![20, 21, 22, 23, 24, 25, 26, 27]);
         assert_eq!(tok_c, vec![30, 31, EOS_ID]);
         assert_eq!(pool.free_slots(), 2);
+    }
+
+    #[test]
+    fn failed_round_poisons_riders_and_reclaims_slots() {
+        // A mid-round device error must neither leak slots nor hang owners:
+        // every slot that rode the failed round observes the error on its
+        // next advance()/finish(), frees its slot, and the pool keeps
+        // serving fresh admissions afterwards.
+        let scripts =
+            vec![vec![10, 11, 12, 13], vec![20, 21, 22, 23], vec![5, 6, 7, 8]];
+        let mut engine = FakeBatchEngine::new(2, scripts);
+        engine.fail_on_dispatch = Some(1); // second collective round errors
+        let mut pool = BatchedDecode::new(engine, 32, 64);
+        let ids = [1, 1, 1];
+        let p = SamplingParams::greedy(4);
+        let a = pool.admit(&ids, 3, p, Rng::new(1)).unwrap().expect("slot");
+        let b = pool.admit(&ids, 3, p, Rng::new(2)).unwrap().expect("slot");
+        assert!(pool.advance(a).unwrap()); // round 0: healthy
+        assert!(pool.advance(b).unwrap()); // banked credit
+        let err = pool.advance(a).unwrap_err(); // round 1: injected fault
+        assert!(err.to_string().contains("injected device fault"));
+        // Peer b rode the same failed round: poisoned, not hung.
+        let err_b = pool.advance(b).unwrap_err();
+        assert!(err_b.to_string().contains("batched decode round failed"));
+        assert!(pool.is_done(a) && pool.is_done(b));
+        // finish() surfaces the stored error AND reclaims the slot.
+        assert!(pool.finish(a).is_err());
+        pool.release(b);
+        assert_eq!(pool.free_slots(), 2, "failed slots must be reclaimed");
+        let c = pool.admit(&ids, 3, p, Rng::new(3)).unwrap().expect("slot");
+        sweep_until_done(&mut pool, &[c]);
+        assert_eq!(pool.tokens(c), &[5, 6, 7, 8][..]);
     }
 
     #[test]

@@ -41,6 +41,7 @@ pub fn pathway_str(p: Pathway) -> &'static str {
     match p {
         Pathway::ExactHit => "exact_hit",
         Pathway::TweakHit => "tweak_hit",
+        Pathway::DegradedHit => "degraded_hit",
         Pathway::Miss => "miss",
     }
 }
@@ -134,6 +135,26 @@ impl Server {
 /// How often an idle connection wakes up to poll the stop flag.
 const READ_POLL_INTERVAL: std::time::Duration = std::time::Duration::from_millis(100);
 
+/// Hard cap on one request line. Anything larger gets a structured error
+/// reply (and the connection closed) instead of growing the line buffer
+/// without bound.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Bound on each reply write: a stalled client (full socket buffer, dead
+/// peer) errors out of the connection thread instead of pinning it forever.
+const WRITE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(5);
+
+fn send_reply(writer: &mut TcpStream, reply: &Json) -> Result<()> {
+    writer.write_all(reply.to_string().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    Ok(())
+}
+
+fn error_reply(msg: String) -> Json {
+    Json::obj_from(vec![("error", Json::s(msg))])
+}
+
 fn handle_connection(
     stream: TcpStream,
     handle: EngineHandle,
@@ -143,6 +164,7 @@ fn handle_connection(
     // A blocking `read_line` on an idle connection would never observe the
     // stop flag (the old shutdown hang): bound every read so the loop polls.
     stream.set_read_timeout(Some(READ_POLL_INTERVAL))?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
@@ -156,11 +178,16 @@ fn handle_connection(
         match reader.read_line(&mut line) {
             Ok(0) => break, // EOF: client closed
             Ok(_) => {
+                if line.len() > MAX_LINE_BYTES {
+                    send_reply(
+                        &mut writer,
+                        &error_reply(format!("request line exceeds {MAX_LINE_BYTES} bytes")),
+                    )?;
+                    break;
+                }
                 if !line.trim().is_empty() {
                     let reply = process_line(&line, &handle);
-                    writer.write_all(reply.to_string().as_bytes())?;
-                    writer.write_all(b"\n")?;
-                    writer.flush()?;
+                    send_reply(&mut writer, &reply)?;
                 }
                 line.clear();
             }
@@ -168,7 +195,24 @@ fn handle_connection(
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
+                // Bound the buffer for a line still in flight too: a client
+                // streaming an endless unterminated line gets refused here,
+                // not an OOM.
+                if line.len() > MAX_LINE_BYTES {
+                    send_reply(
+                        &mut writer,
+                        &error_reply(format!("request line exceeds {MAX_LINE_BYTES} bytes")),
+                    )?;
+                    break;
+                }
                 continue; // stop-flag poll point
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                // read_line consumed through the newline before failing
+                // UTF-8 validation, so the stream is still line-synced:
+                // reply structurally and keep serving.
+                send_reply(&mut writer, &error_reply("request is not valid UTF-8".into()))?;
+                line.clear();
             }
             Err(e) => return Err(e.into()),
         }
@@ -212,6 +256,15 @@ fn process_line(line: &str, handle: &EngineHandle) -> Json {
                 ("recovered_entries", Json::num(s.recovered_entries as f64)),
                 ("stages", stage_rows(&s.stage_latency)),
                 ("traces_finished", Json::num(s.traces_finished as f64)),
+                ("degraded_hits", Json::num(s.degraded_hits as f64)),
+                ("shed", Json::num(s.shed as f64)),
+                ("failed", Json::num(s.failed as f64)),
+                ("embed_bypasses", Json::num(s.embed_bypasses as f64)),
+                ("miss_retries", Json::num(s.miss_retries as f64)),
+                ("breaker_trips", Json::num(s.breaker_trips as f64)),
+                ("breaker_embed", Json::s(s.breaker_embed)),
+                ("breaker_small", Json::s(s.breaker_small)),
+                ("breaker_big", Json::s(s.breaker_big)),
             ]),
             Err(e) => Json::obj_from(vec![("error", Json::s(format!("{e}")))]),
         };
@@ -344,6 +397,7 @@ mod tests {
         assert_eq!(pathway_str(Pathway::Miss), "miss");
         assert_eq!(pathway_str(Pathway::TweakHit), "tweak_hit");
         assert_eq!(pathway_str(Pathway::ExactHit), "exact_hit");
+        assert_eq!(pathway_str(Pathway::DegradedHit), "degraded_hit");
     }
 
     #[test]

@@ -122,14 +122,22 @@ pub enum TraceTag {
     TweakHit,
     Miss,
     Coalesced,
+    /// Degradation-ladder outcome: the tweak step failed (error, timeout,
+    /// deadline, or open breaker) and the raw cached response was served.
+    DegradedHit,
+    /// Terminal failure: the request was answered with a structured error
+    /// (shed past its deadline, or every generation attempt failed).
+    Failed,
 }
 
 impl TraceTag {
-    pub const ALL: [TraceTag; 4] = [
+    pub const ALL: [TraceTag; 6] = [
         TraceTag::ExactHit,
         TraceTag::TweakHit,
         TraceTag::Miss,
         TraceTag::Coalesced,
+        TraceTag::DegradedHit,
+        TraceTag::Failed,
     ];
 
     pub fn name(self) -> &'static str {
@@ -138,6 +146,8 @@ impl TraceTag {
             TraceTag::TweakHit => "tweak_hit",
             TraceTag::Miss => "miss",
             TraceTag::Coalesced => "coalesced",
+            TraceTag::DegradedHit => "degraded_hit",
+            TraceTag::Failed => "failed",
         }
     }
 
@@ -624,7 +634,7 @@ mod tests {
         for s in ft.spans.iter().filter(|s| s.stage.depth() == 1) {
             depth1 += s.end_us - s.start_us;
         }
-        assert!(depth1 <= ft.total_us, "stage sum {} > total {}", depth1, ft.total_us);
+        assert!(depth1 <= ft.total_us, "stage sum {depth1} > total {}", ft.total_us);
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! Chaos matrix for the fault-tolerance layer: each test knocks out (or
+//! degrades) one backend through the `FaultSwitch` decorators and asserts
+//! the degradation ladder lands on the documented rung — and that every
+//! request still gets exactly one reply and finishes exactly one trace.
+//!
+//! NB: retried and failed requests deliberately violate span well-formedness
+//! (a re-queued job opens a second QueueWait under the same trace), so these
+//! tests assert on tags and counters, never on span nesting.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use tweakllm::baselines::{FaultPlan, MockLlm};
+use tweakllm::config::{Config, IndexKindConfig};
+use tweakllm::coordinator::{Engine, EngineHandle, Pathway, Router};
+use tweakllm::faults::{FaultMode, FaultSwitch, FaultyEmbedder, FaultyLlm};
+use tweakllm::llm::LanguageModel;
+use tweakllm::runtime::{NativeBowEmbedder, TextEmbedder};
+use tweakllm::trace::TraceTag;
+
+/// Engine with every backend behind a fault decorator, each on its own
+/// switch so a test can take one subsystem down while the rest stay up.
+struct ChaosStack {
+    _engine: Engine,
+    handle: EngineHandle,
+    embed: FaultSwitch,
+    small: FaultSwitch,
+    #[allow(dead_code)]
+    big: FaultSwitch,
+}
+
+fn chaos_stack(big_llm: MockLlm, tune: impl FnOnce(&mut Config)) -> ChaosStack {
+    let mut cfg = Config::paper();
+    cfg.index.kind = IndexKindConfig::Flat;
+    cfg.exact_match_fast_path = true;
+    cfg.scheduler.enabled = true;
+    tune(&mut cfg);
+    let embed = FaultSwitch::healthy();
+    let small = FaultSwitch::healthy();
+    let big = FaultSwitch::healthy();
+    let (e, s, b) = (embed.clone(), small.clone(), big.clone());
+    let (engine, handle) = Engine::start(move || {
+        let embedder: Box<dyn TextEmbedder> =
+            Box::new(FaultyEmbedder::new(Box::new(NativeBowEmbedder::new(128, 7)), e));
+        let big: Box<dyn LanguageModel> = Box::new(FaultyLlm::new(Box::new(big_llm), b));
+        let small: Box<dyn LanguageModel> =
+            Box::new(FaultyLlm::new(Box::new(MockLlm::new("small")), s));
+        Ok(Router::with_models(embedder, big, small, cfg))
+    })
+    .expect("engine start");
+    ChaosStack { _engine: engine, handle, embed, small, big }
+}
+
+/// Prime query: six disjoint synthetic words, same scheme as the scheduler
+/// identity tests.
+fn prime(topic: usize) -> String {
+    format!("q{topic}a q{topic}b q{topic}c q{topic}d q{topic}e q{topic}f")
+}
+
+/// Paraphrase sharing 5/6 words with its prime — a guaranteed tweak-hit
+/// against the `NativeBowEmbedder` at the paper threshold.
+fn paraphrase(topic: usize, variant: usize) -> String {
+    format!("q{topic}a q{topic}b q{topic}c q{topic}d q{topic}e v{variant}")
+}
+
+/// Rung 1: tweak-LLM outage. A would-be tweak-hit is degraded to the raw
+/// cached response — tagged `degraded_hit` in both stats and traces — and
+/// the pathway heals as soon as the backend does.
+#[test]
+fn tweak_outage_degrades_to_raw_cached_response() {
+    let stack = chaos_stack(MockLlm::new("big"), |_| {});
+    let primed = stack.handle.request(&prime(0)).unwrap();
+    assert_eq!(primed.pathway, Pathway::Miss);
+
+    stack.small.set(FaultMode::Error);
+    let r = stack.handle.request(&paraphrase(0, 0)).unwrap();
+    assert_eq!(r.pathway, Pathway::DegradedHit);
+    assert_eq!(r.text, primed.text, "degraded rung serves the raw cached response");
+    assert_eq!(r.cache_entry, primed.cache_entry);
+
+    let stats = stack.handle.stats().unwrap();
+    assert_eq!(stats.degraded_hits, 1);
+    assert_eq!(stats.tweak_hits, 0);
+    let report = stack.handle.traces(16).unwrap();
+    let t = report
+        .traces
+        .iter()
+        .find(|t| t.query == paraphrase(0, 0))
+        .expect("degraded request finished a trace");
+    assert_eq!(t.tag, TraceTag::DegradedHit);
+
+    stack.small.set(FaultMode::Healthy);
+    let healed = stack.handle.request(&paraphrase(0, 1)).unwrap();
+    assert_eq!(healed.pathway, Pathway::TweakHit, "ladder steps back up once healthy");
+}
+
+/// Rung 1, hang shape: a tweak session that never finishes is reaped by the
+/// `tweak_timeout_ms` overrun check and degraded — bounded time, no wedge.
+#[test]
+fn hung_tweak_times_out_and_degrades() {
+    let stack = chaos_stack(MockLlm::new("big"), |cfg| {
+        cfg.faults.tweak_timeout_ms = 40;
+    });
+    let primed = stack.handle.request(&prime(0)).unwrap();
+
+    stack.small.set(FaultMode::Hang);
+    let t0 = Instant::now();
+    let r = stack.handle.request(&paraphrase(0, 0)).unwrap();
+    assert!(t0.elapsed() < Duration::from_secs(10), "hung tweak must be reaped, not waited");
+    assert_eq!(r.pathway, Pathway::DegradedHit);
+    assert_eq!(r.text, primed.text);
+    assert_eq!(stack.handle.stats().unwrap().degraded_hits, 1);
+}
+
+/// Rung 2: embedder outage. The cache tier is bypassed entirely — the query
+/// goes straight to the Big LLM, nothing is inserted (there is no embedding
+/// to index), and the cache serves again once the embedder heals.
+#[test]
+fn embedder_outage_bypasses_cache() {
+    let stack = chaos_stack(MockLlm::new("big"), |_| {});
+    stack.handle.request(&prime(0)).unwrap();
+
+    stack.embed.set(FaultMode::Error);
+    let r = stack.handle.request(&paraphrase(0, 0)).unwrap();
+    assert_eq!(r.pathway, Pathway::Miss, "embed outage bypasses straight to the miss path");
+
+    let stats = stack.handle.stats().unwrap();
+    assert_eq!(stats.embed_bypasses, 1);
+    assert_eq!(stats.cache_size, 1, "bypassed miss must not insert a row");
+
+    stack.embed.set(FaultMode::Healthy);
+    let healed = stack.handle.request(&paraphrase(0, 1)).unwrap();
+    assert_eq!(healed.pathway, Pathway::TweakHit, "cache tier intact behind the outage");
+}
+
+/// Rung 3: flaky Big LLM. A failed first attempt is retried from the back
+/// of the queue; the retry re-issues the same prompt, so the served text is
+/// bit-identical to what a first-try success would have produced.
+#[test]
+fn flaky_big_llm_retry_matches_first_try_response() {
+    let flaky = MockLlm::new("big").with_fault_plan(FaultPlan::fail_first(1));
+    let stack = chaos_stack(flaky, |_| {});
+    let r = stack.handle.request(&prime(3)).unwrap();
+    assert_eq!(r.pathway, Pathway::Miss);
+
+    let reference = chaos_stack(MockLlm::new("big"), |_| {});
+    let want = reference.handle.request(&prime(3)).unwrap();
+    assert_eq!(r.text, want.text, "retry must be bit-identical to a first-try success");
+
+    let stats = stack.handle.stats().unwrap();
+    assert_eq!(stats.miss_retries, 1);
+    assert_eq!(stats.misses, 1, "a retried miss is still one miss");
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.cache_size, 1, "the retried generation inserts normally");
+}
+
+/// Rung 3, terminal shape: when every attempt fails, the caller gets a
+/// structured error (exactly one), the failure is traced, and the engine
+/// keeps serving.
+#[test]
+fn exhausted_retries_return_structured_error() {
+    // 1 + miss_retries=2 attempts, all scripted to fail; call 3 heals.
+    let flaky = MockLlm::new("big").with_fault_plan(FaultPlan::fail_first(3));
+    let stack = chaos_stack(flaky, |_| {});
+    let err = stack.handle.request(&prime(0)).expect_err("all attempts failed");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("generation failed"), "structured error shape: {msg}");
+
+    let stats = stack.handle.stats().unwrap();
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.miss_retries, 2, "full retry budget was spent");
+    let report = stack.handle.traces(16).unwrap();
+    assert_eq!(report.traces[0].tag, TraceTag::Failed);
+
+    let ok = stack.handle.request(&prime(1)).unwrap();
+    assert_eq!(ok.pathway, Pathway::Miss, "engine serves normally after the outage");
+}
+
+/// Breaker lifecycle end-to-end: repeated tweak failures trip the small-LLM
+/// breaker open (later hits degrade without touching the backend), and a
+/// healthy probe after the cool-down closes it again.
+#[test]
+fn tweak_breaker_opens_and_recovers_through_half_open() {
+    let stack = chaos_stack(MockLlm::new("big"), |cfg| {
+        cfg.faults.breaker_window = 4;
+        cfg.faults.breaker_min_samples = 2;
+        cfg.faults.breaker_open_ms = 100;
+        cfg.faults.breaker_half_open_probes = 1;
+    });
+    stack.handle.request(&prime(0)).unwrap();
+
+    stack.small.set(FaultMode::Error);
+    for v in 0..2 {
+        let r = stack.handle.request(&paraphrase(0, v)).unwrap();
+        assert_eq!(r.pathway, Pathway::DegradedHit);
+    }
+    let stats = stack.handle.stats().unwrap();
+    assert_eq!(stats.breaker_small, "open", "two failures over min_samples=2 trip it");
+    assert!(stats.breaker_trips >= 1);
+
+    // Open gate: still degraded, no backend call needed.
+    let gated = stack.handle.request(&paraphrase(0, 2)).unwrap();
+    assert_eq!(gated.pathway, Pathway::DegradedHit);
+
+    // Heal the backend, let the cool-down elapse: the next hit is the
+    // half-open probe, succeeds, and closes the breaker.
+    stack.small.set(FaultMode::Healthy);
+    std::thread::sleep(Duration::from_millis(150));
+    let probe = stack.handle.request(&paraphrase(0, 3)).unwrap();
+    assert_eq!(probe.pathway, Pathway::TweakHit);
+    assert_eq!(stack.handle.stats().unwrap().breaker_small, "closed");
+}
+
+/// Deadline shedding: requests that outlive `request_deadline_ms` are
+/// answered with a structured error at the next stage boundary — every
+/// caller hears back, every shed request still finishes one trace.
+#[test]
+fn expired_deadlines_shed_with_structured_errors() {
+    let slow = MockLlm::new("big").with_pace(60, Duration::from_millis(2));
+    let stack = chaos_stack(slow, |cfg| {
+        cfg.faults.request_deadline_ms = 40;
+    });
+
+    let n = 3;
+    let (done_tx, done_rx) = mpsc::channel();
+    for i in 0..n {
+        let h = stack.handle.clone();
+        let done = done_tx.clone();
+        std::thread::spawn(move || {
+            let _ = done.send(h.request(&format!("slow{i}a slow{i}b slow{i}c slow{i}d")));
+        });
+    }
+    for _ in 0..n {
+        let r = done_rx
+            .recv_timeout(Duration::from_secs(20))
+            .expect("a shed request must still reply");
+        let err = r.expect_err("120ms generation cannot meet a 40ms deadline");
+        assert!(format!("{err:#}").contains("deadline"), "unexpected error: {err:#}");
+    }
+
+    let stats = stack.handle.stats().unwrap();
+    assert_eq!(stats.requests, n as u64);
+    assert_eq!(stats.shed, n as u64);
+    assert_eq!(stats.traces_finished, n as u64, "one trace per shed request");
+    let report = stack.handle.traces(16).unwrap();
+    assert!(report.traces.iter().all(|t| t.tag == TraceTag::Failed));
+}
+
+/// The umbrella invariant: a workload that crosses every rung — healthy,
+/// tweak outage, embedder outage, healed — yields exactly one reply and
+/// exactly one trace per request, with the pathway partition adding up.
+#[test]
+fn every_request_gets_one_reply_and_one_trace_across_the_ladder() {
+    let stack = chaos_stack(MockLlm::new("big"), |_| {});
+    let mut sent: Vec<String> = Vec::new();
+    let mut request = |q: String, want: Pathway| {
+        let r = stack.handle.request(&q).unwrap();
+        assert_eq!(r.pathway, want, "query {q}");
+        sent.push(q);
+    };
+
+    request(prime(0), Pathway::Miss);
+    request(prime(1), Pathway::Miss);
+    // Healthy rung.
+    request(paraphrase(0, 0), Pathway::TweakHit);
+    request("m0a m0b m0c m0d m0e m0f".into(), Pathway::Miss);
+    // Tweak outage rung.
+    stack.small.set(FaultMode::Error);
+    request(paraphrase(0, 1), Pathway::DegradedHit);
+    request(paraphrase(1, 0), Pathway::DegradedHit);
+    stack.small.set(FaultMode::Healthy);
+    // Embedder outage rung.
+    stack.embed.set(FaultMode::Error);
+    request(paraphrase(1, 1), Pathway::Miss); // would tweak; bypasses instead
+    request("m1a m1b m1c m1d m1e m1f".into(), Pathway::Miss);
+    stack.embed.set(FaultMode::Healthy);
+    // Healed.
+    request(paraphrase(1, 2), Pathway::TweakHit);
+    request("m2a m2b m2c m2d m2e m2f".into(), Pathway::Miss);
+
+    let stats = stack.handle.stats().unwrap();
+    assert_eq!(stats.requests, sent.len() as u64);
+    assert_eq!(stats.traces_finished, sent.len() as u64, "exactly one trace per request");
+    assert_eq!(stats.degraded_hits, 2);
+    assert_eq!(stats.embed_bypasses, 2);
+    assert_eq!(stats.tweak_hits, 2);
+    assert_eq!(stats.misses, 6, "2 primes + 2 fresh misses + 2 embed bypasses");
+    assert_eq!(stats.failed + stats.shed, 0, "nothing terminal in this mix");
+    assert_eq!(stats.cache_size, 5, "bypassed misses insert nothing");
+
+    // One trace per query, tags matching the stats partition.
+    let report = stack.handle.traces(32).unwrap();
+    let mut traced: Vec<String> = report.traces.iter().map(|t| t.query.clone()).collect();
+    traced.sort();
+    let mut expect = sent.clone();
+    expect.sort();
+    assert_eq!(traced, expect);
+    let degraded = report.traces.iter().filter(|t| t.tag == TraceTag::DegradedHit).count();
+    assert_eq!(degraded as u64, stats.degraded_hits);
+}

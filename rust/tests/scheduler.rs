@@ -9,10 +9,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use tweakllm::baselines::MockLlm;
+use tweakllm::baselines::{FaultPlan, MockLlm};
 use tweakllm::config::{Config, IndexKindConfig};
 use tweakllm::coordinator::{Engine, EngineHandle, Pathway, Router};
 use tweakllm::cost::TokenUsage;
+use tweakllm::faults::FaultMode;
 use tweakllm::llm::{LanguageModel, LlmResponse, LlmSession, TweakPrompt};
 use tweakllm::runtime::{NativeBowEmbedder, TextEmbedder};
 use tweakllm::util::Rng;
@@ -144,6 +145,56 @@ fn tweak_hit_overtakes_inflight_miss() {
     assert_eq!(tweak.pathway, Pathway::TweakHit);
     assert_eq!(miss_resp.pathway, Pathway::Miss);
     assert!(tweak_done < miss_done, "tweak-hit must overtake the in-flight miss");
+}
+
+/// Regression (coalesced-follower failure fan-out): when a miss leader's
+/// generation fails terminally, every coalesced follower must receive the
+/// structured error too — the old resolver dropped the followers map entry
+/// on the floor, so duplicates hung forever on a reply that never came.
+#[test]
+fn failed_leader_fans_error_out_to_coalesced_followers() {
+    let mut cfg = base_config();
+    cfg.faults.miss_retries = 0; // first failure is terminal
+    // The leader's doomed generation runs ~100ms before erroring, so the
+    // duplicate is guaranteed to be routed — and coalesced — in flight.
+    // Only call 0 is scripted to fail: the engine must stay serviceable.
+    let big = MockLlm::new("big").with_pace(60, Duration::from_millis(2)).with_fault_plan(
+        FaultPlan::new(|call| {
+            if call == 0 { FaultMode::FailAfterTokens(50) } else { FaultMode::Healthy }
+        }),
+    );
+    let (_engine, handle) = start_engine(cfg, big, MockLlm::new("small"));
+
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(2));
+    let (done_tx, done_rx) = mpsc::channel();
+    for _ in 0..2 {
+        let h = handle.clone();
+        let done = done_tx.clone();
+        let barrier = std::sync::Arc::clone(&barrier);
+        std::thread::spawn(move || {
+            barrier.wait();
+            let _ = done.send(h.request("what is a  B-TREE exactly"));
+        });
+    }
+    for _ in 0..2 {
+        let r = done_rx
+            .recv_timeout(Duration::from_secs(20))
+            .expect("no reply: a coalesced follower hung on its failed leader");
+        let err = r.expect_err("the leader's failure must fan out to every rider");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("generation failed"), "unexpected error shape: {msg}");
+        assert!(msg.contains("injected fault"), "root cause must survive fan-out: {msg}");
+    }
+
+    let stats = handle.stats().unwrap();
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.failed, 2, "leader and follower both settle as failed");
+    assert_eq!(stats.coalesced, 1, "the duplicate coalesced before the failure");
+    assert_eq!(stats.cache_size, 0, "a failed generation must not insert");
+
+    // The failure was a one-off: the very next miss is served normally.
+    let ok = handle.request("fresh topic after the outage").unwrap();
+    assert_eq!(ok.pathway, Pathway::Miss);
 }
 
 // ---------------------------------------------------------------------------

@@ -415,6 +415,51 @@ fn stats_reports_per_stage_quantiles_from_histograms() {
 }
 
 #[test]
+fn oversized_line_gets_structured_error_reply() {
+    // A request line past the cap must get a structured JSON refusal, not a
+    // silent connection drop (and certainly not an unbounded line buffer).
+    use std::io::{BufRead, BufReader, Write};
+    let (_engine, _handle, addr, stop, join) = start_stack();
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut big = "x".repeat(tweakllm::server::MAX_LINE_BYTES + 1024);
+    big.push('\n');
+    stream.write_all(big.as_bytes()).unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
+    let resp = tweakllm::util::Json::parse(&line).unwrap();
+    let err = resp.get("error").unwrap().str().unwrap().to_string();
+    assert!(err.contains("exceeds"), "{err}");
+    stop.signal();
+    drop(stream);
+    let _ = join.join().unwrap();
+}
+
+#[test]
+fn invalid_utf8_line_gets_structured_error_and_connection_survives() {
+    use std::io::{BufRead, BufReader, Write};
+    let (_engine, _handle, addr, stop, join) = start_stack();
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    stream.write_all(&[0xff, 0xfe, 0xfd, b'\n']).unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = tweakllm::util::Json::parse(&line).unwrap();
+    assert!(resp.get("error").unwrap().str().unwrap().contains("UTF-8"));
+    // The stream stays line-synced: a well-formed follow-up still answers.
+    stream.write_all(b"{\"query\": \"hello after garbage\"}\n").unwrap();
+    stream.flush().unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = tweakllm::util::Json::parse(&line).unwrap();
+    assert!(resp.opt("pathway").is_some(), "{}", resp.to_string());
+    stop.signal();
+    drop(stream);
+    let _ = join.join().unwrap();
+}
+
+#[test]
 fn engine_in_process_handle_works_alongside_tcp() {
     let (_engine, handle, _addr, stop, _join) = start_stack();
     let r = handle.request("direct in-process request").unwrap();
