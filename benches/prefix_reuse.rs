@@ -1,0 +1,183 @@
+//! KV prefix-cache benchmark: tweak-path prefill cost with cross-request
+//! prefix reuse on vs off, as the number of distinct cached answers grows.
+//!
+//! Mock tier (always runs, incl. CI): `MockLlm::with_prefix_reuse` prices
+//! prefill at `--delay-us` per token actually recomputed, over the same
+//! suffixed tweak encoding the substrate uses (static template + cached
+//! pair as the stable prefix, new query as the suffix). Reuse-on probes a
+//! chunk-keyed LRU before paying; reuse-off runs the identical cost model
+//! with an empty chunk set, so every prefill is cold. With D distinct
+//! cached answers round-robined over N requests, reuse-on pays the full
+//! prompt D times and the suffix N-D times — that is the hot-path
+//! economics the `{m}_prefill_resume{P}` artifacts buy on the substrate.
+//!
+//! Gates: reuse-on tweak p50 <= reuse-off at every D, and reuse-on must
+//! recompute strictly fewer tokens than it was asked to prefill.
+//!
+//! Results land in `BENCH_prefix_reuse.json` (uploaded from CI).
+//!
+//! `cargo bench --bench prefix_reuse [-- --requests 256 --delay-us 200]`
+
+use std::time::{Duration, Instant};
+
+use tweakllm::baselines::MockLlm;
+use tweakllm::bench::{bench_args, Table};
+use tweakllm::llm::{LanguageModel, TweakPrompt};
+use tweakllm::util::{Json, Summary};
+
+/// Distinct cached answers the tweak stream round-robins over.
+const DISTINCT: [usize; 3] = [1, 8, 64];
+/// Chunk depths the mock snapshots at (the substrate's PREFIX_CHUNKS twin,
+/// scaled to the mock's shorter prompts).
+const CHUNKS: [usize; 2] = [32, 64];
+
+struct Cell {
+    mode: &'static str,
+    distinct: usize,
+    tok_per_sec: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    total_tokens: u64,
+    recomputed_tokens: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// A cached (query, response) pair long enough that the stable prefix
+/// crosses every chunk depth in `CHUNKS`.
+fn cached_pair(d: usize) -> (String, String) {
+    let q = format!("topic {d} cached question about subject number {d}");
+    let resp: Vec<String> = (0..40).map(|w| format!("a{d}w{w}")).collect();
+    (q, resp.join(" "))
+}
+
+fn run_once(reuse: bool, distinct: usize, requests: usize, delay: Duration) -> Cell {
+    let chunks: &[usize] = if reuse { &CHUNKS } else { &[] };
+    let mut llm = MockLlm::new("small").with_prefix_reuse(chunks, 1024, delay);
+    let pairs: Vec<(String, String)> = (0..distinct).map(cached_pair).collect();
+
+    let mut lat = Vec::with_capacity(requests);
+    let mut total_tokens = 0u64;
+    let mut recomputed_tokens = 0u64;
+    let t0 = Instant::now();
+    for i in 0..requests {
+        let (cq, cr) = &pairs[i % distinct];
+        let prompt = TweakPrompt {
+            new_query: format!("please rephrase item {i} for me"),
+            cached_query: cq.clone(),
+            cached_response: cr.clone(),
+        };
+        let t = Instant::now();
+        let r = llm.tweak(&prompt).expect("mock tweak");
+        lat.push(t.elapsed().as_secs_f64() * 1000.0);
+        total_tokens += r.usage.input_tokens as u64;
+        recomputed_tokens += (r.usage.input_tokens - r.restored_tokens) as u64;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = llm.prefix_stats().expect("prefix sim enabled");
+    let summary = Summary::of(&lat);
+    Cell {
+        mode: if reuse { "reuse_on" } else { "reuse_off" },
+        distinct,
+        tok_per_sec: total_tokens as f64 / wall.max(1e-12),
+        p50_ms: summary.p50,
+        p99_ms: summary.p99,
+        total_tokens,
+        recomputed_tokens,
+        hits: stats.hits,
+        misses: stats.misses,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let requests = args.usize("requests", 256)?.max(DISTINCT[DISTINCT.len() - 1]);
+    let delay_us = args.u64("delay-us", 200)?;
+    let delay = Duration::from_micros(delay_us);
+
+    let mut cells: Vec<Cell> = Vec::new();
+    for &reuse in &[false, true] {
+        for &d in &DISTINCT {
+            cells.push(run_once(reuse, d, requests, delay));
+        }
+    }
+
+    let mut table = Table::new(
+        "KV prefix reuse (mock tier) — tweak prefill cost vs distinct cached answers",
+        &["mode", "distinct", "tok/s", "p50 ms", "p99 ms", "recomputed", "total", "hits"],
+    );
+    for c in &cells {
+        table.push(vec![
+            c.mode.to_string(),
+            c.distinct.to_string(),
+            format!("{:.0}", c.tok_per_sec),
+            format!("{:.2}", c.p50_ms),
+            format!("{:.2}", c.p99_ms),
+            c.recomputed_tokens.to_string(),
+            c.total_tokens.to_string(),
+            c.hits.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let get = |mode: &str, d: usize| -> &Cell {
+        cells.iter().find(|c| c.mode == mode && c.distinct == d).expect("cell")
+    };
+    for &d in &DISTINCT {
+        let on = get("reuse_on", d);
+        let off = get("reuse_off", d);
+        println!(
+            "distinct={d}: p50 {:.2} ms on vs {:.2} ms off ({:.1}x), \
+             recomputed {}/{} tokens",
+            on.p50_ms,
+            off.p50_ms,
+            off.p50_ms / on.p50_ms.max(1e-9),
+            on.recomputed_tokens,
+            on.total_tokens
+        );
+        // The acceptance gates: reuse must never slow the tweak path down,
+        // and must strictly cut the prefill work actually performed.
+        assert!(
+            on.p50_ms <= off.p50_ms,
+            "distinct={d}: reuse-on p50 {:.2} ms exceeds reuse-off {:.2} ms",
+            on.p50_ms,
+            off.p50_ms
+        );
+        assert!(
+            on.recomputed_tokens < on.total_tokens,
+            "distinct={d}: reuse-on recomputed every token ({} of {})",
+            on.recomputed_tokens,
+            on.total_tokens
+        );
+        // Round-robin over D pairs: exactly the first touch per pair seeds.
+        assert_eq!(on.misses, d as u64, "distinct={d}: one cold prefill per pair");
+        assert_eq!(on.hits, (requests - d) as u64, "distinct={d}: the rest restore");
+        assert_eq!(off.recomputed_tokens, off.total_tokens, "off must run cold");
+    }
+
+    let rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj_from(vec![
+                ("mode", Json::s(c.mode)),
+                ("distinct", Json::num(c.distinct as f64)),
+                ("tok_per_sec", Json::num(c.tok_per_sec)),
+                ("p50_ms", Json::num(c.p50_ms)),
+                ("p99_ms", Json::num(c.p99_ms)),
+                ("total_tokens", Json::num(c.total_tokens as f64)),
+                ("recomputed_tokens", Json::num(c.recomputed_tokens as f64)),
+                ("hits", Json::num(c.hits as f64)),
+                ("misses", Json::num(c.misses as f64)),
+            ])
+        })
+        .collect();
+    let top = vec![
+        ("bench", Json::s("prefix_reuse")),
+        ("requests", Json::num(requests as f64)),
+        ("delay_us", Json::num(delay_us as f64)),
+        ("rows", Json::Arr(rows)),
+    ];
+    std::fs::write("BENCH_prefix_reuse.json", Json::obj_from(top).to_string())?;
+    eprintln!("[prefix_reuse] wrote BENCH_prefix_reuse.json");
+    Ok(())
+}

@@ -357,6 +357,33 @@ def build_artifacts(out_dir: str, verbose: bool = True) -> dict:
             None,
         )
 
+        # Resume-capable prefill (cross-request KV prefix reuse): one
+        # artifact per static PREFIX_CHUNKS boundary. A cached packed state
+        # supplies K/V[:, :P]; only the suffix rows are recomputed. The Rust
+        # runtime discovers these by name and falls back to cold prefill in
+        # pre-resume artifact dirs.
+        for pre in configs.PREFIX_CHUNKS:
+
+            def resume_fn(*args, _cfg=cfg, _names=names, _pre=pre):
+                plist = list(args[: len(_names)])
+                tokens, length, prefix_state = args[len(_names) :]
+                return model.prefill_resume(
+                    _cfg, plist, _names, tokens, length, prefix_state, _pre
+                )
+
+            lower_artifact(
+                f"{mname}_prefill_resume{pre}",
+                resume_fn,
+                specs,
+                [
+                    _io_entry("tokens", (cfg.max_prefill,), "int32"),
+                    _io_entry("length", (1,), "int32"),
+                    _io_entry("prefix_state", (slen,), "float32"),
+                ],
+                [_io_entry("state", (slen,), "float32")],
+                mname,
+            )
+
         # Slot-based batched resident decode: for each compiled slot-count
         # bucket, a prefill-scatter entry point (claim a slot), a batched
         # masked decode step (advance every active slot in ONE call), and a
@@ -405,6 +432,32 @@ def build_artifacts(out_dir: str, verbose: bool = True) -> dict:
                 [_io_entry("state", (bslen,), "float32")],
                 mname,
             )
+
+            # Resume twin of prefill_scatter, per PREFIX_CHUNKS boundary.
+            for pre in configs.PREFIX_CHUNKS:
+
+                def scatter_resume_fn(*args, _cfg=cfg, _names=names, _pre=pre):
+                    plist = list(args[: len(_names)])
+                    tokens, length, slot, prefix_state, state = args[len(_names) :]
+                    return model.prefill_scatter_resume(
+                        _cfg, plist, _names, tokens, length, slot,
+                        prefix_state, state, _pre,
+                    )
+
+                lower_artifact(
+                    f"{mname}_prefill_scatter_resume{bsz}_{pre}",
+                    scatter_resume_fn,
+                    specs,
+                    [
+                        _io_entry("tokens", (cfg.max_prefill,), "int32"),
+                        _io_entry("length", (1,), "int32"),
+                        _io_entry("slot", (1,), "int32"),
+                        _io_entry("prefix_state", (slen,), "float32"),
+                        _io_entry("state", (bslen,), "float32"),
+                    ],
+                    [_io_entry("state", (bslen,), "float32")],
+                    mname,
+                )
 
             def peek_batch_fn(state, _cfg=cfg, _bsz=bsz):
                 return model.peek_logits_batch(_cfg, state, _bsz)

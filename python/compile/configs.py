@@ -95,6 +95,16 @@ DECODE_SPAN = 8
 # dispatch automatically.
 DECODE_BATCH_SIZES = (4, 8)
 
+# Prefix lengths compiled for the resume-capable prefill artifacts
+# (`{model}_prefill_resume{P}` / `{model}_prefill_scatter_resume{B}_{P}`).
+# XLA shapes are static, so cross-request KV prefix reuse quantizes the
+# shared prompt prefix to these chunk boundaries: a resumed prefill restores
+# the first P cached K/V positions and recomputes only the
+# (max_prefill - P)-row suffix. Multiples of block_q keep the Pallas
+# attention/matmul tilings identical to the cold prefill (the bit-identity
+# requirement); values must stay < max_prefill.
+PREFIX_CHUNKS = (64, 128)
+
 RNG_SEED = 20250923  # paper's date line; fixed for reproducibility
 
 # Function words whose token-embedding rows are scaled down in the encoder

@@ -454,6 +454,114 @@ def decode_batch_resident(
     return jnp.concatenate(outs)
 
 
+# ---------------------------------------------------------------------------
+# Resume-capable prefill (cross-request KV prefix reuse). A cached packed
+# state from *any* earlier prefill whose first ``prefix_len`` tokens match
+# this prompt supplies K/V[:, :prefix_len]; only the suffix rows are
+# recomputed. ``prefix_len`` is a static chunk boundary (configs.
+# PREFIX_CHUNKS) baked into the artifact name, because XLA shapes are static.
+#
+# Bit-identity argument (test-gated below and in tests/test_resume.py):
+# causal masking makes every K/V row at position p a function of tokens
+# [0, p] only, and the ``kpos < length`` mask term is redundant for rows
+# below ``length`` (causality already excludes those keys), so cached prefix
+# rows are independent of the *donor* prompt's suffix and total length.
+# Suffix hidden states are recomputed with the same per-row math as the cold
+# prefill: the q/k/v projections, norms, and FFN run on suffix rows only
+# (the savings), while attention runs at the cold prefill's full
+# [H, max_prefill, hd] shape — cached K/V fill the prefix key rows and the
+# prefix *query* rows are zero padding whose output is discarded. Attention
+# output rows are independent of other query rows, so the suffix rows come
+# out bitwise equal to the cold pass at identical tile shapes.
+# ---------------------------------------------------------------------------
+
+
+def prefill_resume(
+    cfg: DecoderConfig,
+    plist,
+    names,
+    tokens: jax.Array,
+    length: jax.Array,
+    prefix_state: jax.Array,
+    prefix_len: int,
+    use_kernels: bool = True,
+):
+    """Prompt pass resumed from a cached packed prefix state.
+
+    tokens: [max_prefill] int32 — the FULL prompt (prefix included), padded;
+    length: [1] int32, with length[0] > prefix_len;
+    prefix_state: [state_len] — packed ``k ‖ v ‖ tail`` from a prior prefill
+    of any prompt sharing the first ``prefix_len`` tokens (the tail and the
+    positions >= prefix_len are ignored); prefix_len: static Python int.
+    Returns a packed state [state_len] bitwise equal to a cold
+    ``prefill_resident`` over the same tokens/length.
+    """
+    p = dict(zip(names, plist))
+    rms, mm, attn = _ops(use_kernels)
+    pmax, smax = cfg.max_prefill, cfg.max_seq
+    pre = prefix_len
+    if not 0 < pre < pmax:
+        raise ValueError(f"prefix_len {pre} outside (0, {pmax})")
+    ck, cv = _unpack_kv(cfg, prefix_state)
+    # Suffix hidden states only: [S, d] with S = pmax - prefix_len.
+    h = p["tok_emb"][tokens[pre:]] + p["pos_emb"][pre:pmax]
+    k_cache = jnp.zeros((cfg.n_layers, cfg.n_heads, smax, cfg.head_dim), h.dtype)
+    v_cache = jnp.zeros_like(k_cache)
+    for layer in range(cfg.n_layers):
+        lp = _layer_params(p, layer)
+        hn = rms(h, lp["ln1_w"])
+        qkv = mm(hn, lp["w_qkv"], lp["b_qkv"])  # [S, 3d]
+        q, k, v = (
+            _split_heads(t, cfg.n_heads) for t in jnp.split(qkv, 3, axis=-1)
+        )  # [H, S, hd]
+        # Full-width K/V: cached prefix rows ‖ recomputed suffix rows.
+        k_full = jnp.concatenate([ck[layer, :, :pre, :], k], axis=1)
+        v_full = jnp.concatenate([cv[layer, :, :pre, :], v], axis=1)
+        # Zero-pad the prefix query rows so attention runs at the cold
+        # prefill's exact [H, pmax, hd] shape; their output is discarded.
+        q_full = jnp.concatenate(
+            [jnp.zeros((cfg.n_heads, pre, cfg.head_dim), h.dtype), q], axis=1
+        )
+        a = attn(q_full, k_full, v_full, length, causal=True)
+        h = h + mm(_merge_heads(a)[pre:, :], lp["w_o"], lp["b_o"])
+        hn = rms(h, lp["ln2_w"])
+        f = mm(mm(hn, lp["w_ff1"], lp["b_ff1"], "gelu"), lp["w_ff2"], lp["b_ff2"])
+        h = h + f
+        k_cache = k_cache.at[layer, :, :pmax, :].set(k_full)
+        v_cache = v_cache.at[layer, :, :pmax, :].set(v_full)
+    hf = rms(h, p["lnf_w"])
+    # length[0] - 1 indexes the full prompt; the suffix array starts at pre.
+    last = jax.lax.dynamic_slice_in_dim(hf, length[0] - 1 - pre, 1, axis=0)
+    logits = mm(
+        last,
+        p["tok_emb"].T,
+        jnp.zeros((cfg.vocab_size,), h.dtype),
+        block_n=cfg.vocab_size,
+    ) if use_kernels else last @ p["tok_emb"].T
+    return _pack_state(cfg, k_cache, v_cache, logits.reshape(cfg.vocab_size))
+
+
+def prefill_scatter_resume(
+    cfg,
+    plist,
+    names,
+    tokens,
+    length,
+    slot,
+    prefix_state,
+    batch_state,
+    prefix_len: int,
+    use_kernels: bool = True,
+):
+    """``prefill_resume`` scattered into slot ``slot`` of a batched state
+    (the resume twin of ``prefill_scatter``)."""
+    one = prefill_resume(
+        cfg, plist, names, tokens, length, prefix_state, prefix_len, use_kernels
+    )
+    off = slot[0] * state_len(cfg)
+    return jax.lax.dynamic_update_slice(batch_state, one, (off,))
+
+
 def peek_logits_batch(cfg: DecoderConfig, batch_state, batch: int):
     """Slice every slot's logits tail out of a batched state: -> [B, vocab].
 

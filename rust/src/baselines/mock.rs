@@ -1,6 +1,7 @@
 //! Mock language models for unit tests and quality-model-driven evals:
 //! deterministic, artifact-free, and instrumented.
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -8,7 +9,8 @@ use anyhow::{bail, Result};
 
 use crate::cost::TokenUsage;
 use crate::faults::FaultMode;
-use crate::llm::{BatchDecodeStats, LanguageModel, LlmResponse, LlmSession, TweakPrompt};
+use crate::llm::{prompts, BatchDecodeStats, LanguageModel, LlmResponse, LlmSession, TweakPrompt};
+use crate::runtime::PrefixCacheStats;
 use crate::tokenizer::Tokenizer;
 
 /// Scripted fault plan: maps the 0-based call index (counted across
@@ -76,6 +78,106 @@ pub struct MockLlm {
     faults: Option<FaultPlan>,
     /// Calls consumed by the fault plan so far.
     calls: usize,
+    /// Prefix-reuse simulation for the tweak pathway (`with_prefix_reuse`);
+    /// `None` = every tweak prefills cold.
+    prefix: Option<Arc<Mutex<MockPrefixSim>>>,
+    /// Wall time per *recomputed* prefill token on the tweak pathway —
+    /// reuse shows up as tweaks that skip the restored tokens' pacing.
+    prefill_token_delay: Duration,
+}
+
+/// Prompt budget the prefix simulation encodes against — mirrors the
+/// substrate decoders' `max_prefill`.
+const MOCK_MAX_PREFILL: usize = 192;
+
+/// Nominal resident bytes per simulated snapshot, for `PrefixCacheStats`
+/// parity — the small substrate model's packed state (139264 f32).
+const MOCK_STATE_BYTES: usize = 139264 * 4;
+
+/// `Send`-safe twin of `runtime::PrefixCache` for the mock tier: the same
+/// chunk-boundary keying, first-writer-wins deepening, LRU eviction, and
+/// counters, with the packed K/V snapshot replaced by a unit marker (the
+/// mock doesn't decode, so reuse shows up as skipped per-token prefill
+/// pacing rather than a restored state). The real cache is `Rc`-based and
+/// single-threaded; mocks cross into the engine thread, hence the twin.
+struct MockPrefixSim {
+    /// Resume-capable chunk depths, ascending (mirror of
+    /// `Generator::resume_chunks`).
+    chunks: Vec<usize>,
+    /// Entry budget (the mock analogue of `prefix_cache_bytes`).
+    max_entries: usize,
+    /// Literal prefix ids → LRU tick of the last touch.
+    entries: HashMap<Vec<i32>, u64>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    saved_tokens: u64,
+}
+
+impl MockPrefixSim {
+    fn new(chunks: &[usize], max_entries: usize) -> MockPrefixSim {
+        MockPrefixSim {
+            chunks: chunks.to_vec(),
+            max_entries: max_entries.max(1),
+            entries: HashMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            saved_tokens: 0,
+        }
+    }
+
+    /// One lookup+deepen cycle for a prompt of `len` tokens: returns how
+    /// many leading tokens a resume would restore (0 = cold), and stores
+    /// every coverable chunk deeper than the hit — exactly the snapshot
+    /// policy of the real engine paths.
+    fn probe(&mut self, ids: &[i32], len: usize) -> usize {
+        self.tick += 1;
+        let mut covered = 0;
+        for &p in &self.chunks {
+            if p < len && p > covered {
+                if let Some(t) = self.entries.get_mut(&ids[..p]) {
+                    *t = self.tick;
+                    covered = p;
+                }
+            }
+        }
+        if covered > 0 {
+            self.hits += 1;
+            self.saved_tokens += covered as u64;
+        } else {
+            self.misses += 1;
+        }
+        for &p in &self.chunks {
+            if p < len && p > covered {
+                self.entries.entry(ids[..p].to_vec()).or_insert(self.tick);
+            }
+        }
+        while self.entries.len() > self.max_entries {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(_, &t)| t)
+                .map(|(k, _)| k.clone())
+                .expect("over budget implies non-empty");
+            self.entries.remove(&victim);
+            self.evictions += 1;
+        }
+        covered
+    }
+
+    fn stats(&self) -> PrefixCacheStats {
+        PrefixCacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            saved_tokens: self.saved_tokens,
+            entries: self.entries.len(),
+            bytes: self.entries.len() * MOCK_STATE_BYTES,
+        }
+    }
 }
 
 /// Shared slot pool behind `MockLlm::with_batch`. Mirrors the credit
@@ -205,6 +307,8 @@ impl MockLlm {
             batch: None,
             faults: None,
             calls: 0,
+            prefix: None,
+            prefill_token_delay: Duration::ZERO,
         }
     }
 
@@ -230,6 +334,23 @@ impl MockLlm {
     /// call consumes one plan index.
     pub fn with_fault_plan(mut self, plan: FaultPlan) -> MockLlm {
         self.faults = Some(plan);
+        self
+    }
+
+    /// Simulate cross-request KV prefix reuse on the tweak pathway: tweak
+    /// prompts are encoded with the real tokenizer's suffix-protected
+    /// framing (the substrate's exact token layout), probed against a
+    /// chunk-keyed LRU, and paced at `token_delay` per *recomputed* prefill
+    /// token — so reuse-on vs reuse-off latency is measurable without
+    /// compiled artifacts. `max_entries` bounds the simulated cache.
+    pub fn with_prefix_reuse(
+        mut self,
+        chunks: &[usize],
+        max_entries: usize,
+        token_delay: Duration,
+    ) -> MockLlm {
+        self.prefix = Some(Arc::new(Mutex::new(MockPrefixSim::new(chunks, max_entries))));
+        self.prefill_token_delay = token_delay;
         self
     }
 
@@ -293,21 +414,51 @@ impl MockLlm {
         LlmResponse {
             text: format!("[{}-fresh] answer about: {}", self.name, query),
             usage: TokenUsage { input_tokens, output_tokens: self.output_tokens },
+            restored_tokens: 0,
             prefill_micros: 0,
             decode_micros: 0,
         }
     }
 
     fn tweak_response(&self, prompt: &TweakPrompt) -> LlmResponse {
+        let text = format!(
+            "[{}-tweaked] {} (basis: {})",
+            self.name, prompt.new_query, prompt.cached_response
+        );
+        // Prefix-reuse simulation: encode with the substrate's exact tweak
+        // framing, probe the chunk-keyed LRU, and pace only the recomputed
+        // tokens. The TEXT never depends on reuse — like the real engine,
+        // where resumed prefill is bit-identical to cold.
+        if let Some(sim) = &self.prefix {
+            let tok = Tokenizer::new(8192);
+            let head = tok.encode(prompts::TWEAK_TEMPLATE);
+            let (ids, len) = tok.encode_prompt_suffixed(
+                &head,
+                &[&prompt.cached_query, &prompt.cached_response],
+                &prompt.new_query,
+                MOCK_MAX_PREFILL,
+                prompts::TWEAK_SUFFIX_RESERVE,
+            );
+            let restored = sim.lock().unwrap().probe(&ids, len);
+            let recomputed = len - restored;
+            if !self.prefill_token_delay.is_zero() {
+                std::thread::sleep(self.prefill_token_delay * recomputed as u32);
+            }
+            return LlmResponse {
+                text,
+                usage: TokenUsage { input_tokens: len, output_tokens: self.output_tokens },
+                restored_tokens: restored,
+                prefill_micros: (self.prefill_token_delay * recomputed as u32).as_micros(),
+                decode_micros: 0,
+            };
+        }
         let input_tokens = Tokenizer::words(&prompt.new_query).len()
             + Tokenizer::words(&prompt.cached_query).len()
             + Tokenizer::words(&prompt.cached_response).len();
         LlmResponse {
-            text: format!(
-                "[{}-tweaked] {} (basis: {})",
-                self.name, prompt.new_query, prompt.cached_response
-            ),
+            text,
             usage: TokenUsage { input_tokens, output_tokens: self.output_tokens },
+            restored_tokens: 0,
             prefill_micros: 0,
             decode_micros: 0,
         }
@@ -408,6 +559,10 @@ impl LanguageModel for MockLlm {
                 slots: pool.slots.len(),
             }
         })
+    }
+
+    fn prefix_stats(&self) -> Option<PrefixCacheStats> {
+        self.prefix.as_ref().map(|sim| sim.lock().unwrap().stats())
     }
 }
 
@@ -522,6 +677,50 @@ mod tests {
             assert!(s.advance().unwrap());
         }
         assert!(!s.is_done());
+    }
+
+    #[test]
+    fn prefix_reuse_hits_after_seeding_and_preserves_text() {
+        // Chunk 32 reaches past the static template into the cached fields,
+        // so distinct cache entries key distinct prefixes.
+        let p1 = TweakPrompt {
+            new_query: "how fast is rust?".into(),
+            cached_query: "what is rust?".into(),
+            cached_response: "a systems language".into(),
+        };
+        let p2 = TweakPrompt { new_query: "is rust memory safe?".into(), ..p1.clone() };
+        let mut on = MockLlm::new("small").with_prefix_reuse(&[32], 8, Duration::ZERO);
+        let a = on.tweak(&p1).unwrap();
+        assert_eq!(a.restored_tokens, 0, "first tweak against an entry is cold");
+        let b = on.tweak(&p2).unwrap();
+        assert_eq!(b.restored_tokens, 32, "same entry, new query: chunk-32 resume");
+        assert!(b.usage.input_tokens > 32);
+        // Reuse never changes the text — the mock twin of bit-identity.
+        let mut off = MockLlm::new("small");
+        assert_eq!(b.text, off.tweak(&p2).unwrap().text);
+        let s = on.prefix_stats().unwrap();
+        assert_eq!((s.hits, s.misses, s.saved_tokens), (1, 1, 32));
+        assert!(off.prefix_stats().is_none());
+    }
+
+    #[test]
+    fn prefix_sim_evicts_lru_under_entry_budget() {
+        let mut m = MockLlm::new("small").with_prefix_reuse(&[32], 2, Duration::ZERO);
+        let tp = |i: usize| TweakPrompt {
+            new_query: "q".into(),
+            cached_query: format!("cached question number {i}"),
+            cached_response: format!("cached answer number {i} with several extra words"),
+        };
+        for i in 0..3 {
+            m.tweak(&tp(i)).unwrap(); // 3 distinct entries through budget 2
+        }
+        let s = m.prefix_stats().unwrap();
+        assert_eq!((s.entries, s.evictions), (2, 1));
+        // The oldest entry was evicted: its prompt misses again (and
+        // re-seeds, displacing the next-oldest)...
+        assert_eq!(m.tweak(&tp(0)).unwrap().restored_tokens, 0);
+        // ...while the most recently used entry still hits.
+        assert_eq!(m.tweak(&tp(2)).unwrap().restored_tokens, 32);
     }
 
     #[test]

@@ -52,6 +52,13 @@ pub struct Config {
     /// falls back to the literal transport when the artifact set predates
     /// the packed-state convention; `false` pins the literal path.
     pub device_resident: bool,
+    /// Byte budget of the small model's cross-request KV prefix cache
+    /// (DESIGN.md "KV prefix cache"): post-prefill snapshots of the static
+    /// tweak-prompt head are stored in a radix tree and resumed on later
+    /// tweaks sharing the prefix. LRU-evicted over this budget; 0 disables.
+    /// Automatically off when the artifact set has no `prefill_resume`
+    /// chunks.
+    pub prefix_cache_bytes: usize,
     /// Master seed for all deterministic randomness.
     pub seed: u64,
 }
@@ -265,6 +272,7 @@ impl Config {
             faults: FaultsConfig::default(),
             artifact_dir: "artifacts".to_string(),
             device_resident: true,
+            prefix_cache_bytes: 64 << 20,
             seed: 20250923,
         }
     }
@@ -433,6 +441,8 @@ impl Config {
             "persist.compact_bytes" => self.persist.compact_bytes = u()? as u64,
             "runtime.artifact_dir" => self.artifact_dir = val.to_string(),
             "runtime.device_resident" => self.device_resident = b()?,
+            // 0 = prefix reuse off (every prefill runs cold)
+            "runtime.prefix_cache_bytes" => self.prefix_cache_bytes = u()?,
             "runtime.seed" => self.seed = val.parse()?,
             _ => bail!("unknown config key"),
         }
@@ -499,6 +509,14 @@ impl Config {
                 )
             } else {
                 "disabled (fail-through, no degradation)".into()
+            }),
+            ("KV prefix cache".into(), if self.prefix_cache_bytes > 0 {
+                format!(
+                    "cross-request tweak prefill reuse, {} MiB LRU",
+                    self.prefix_cache_bytes >> 20
+                )
+            } else {
+                "disabled (cold prefill every session)".into()
             }),
             ("Decode transport".into(), if self.device_resident {
                 "device-resident KV (literal fallback for old artifact sets)".into()
@@ -652,6 +670,26 @@ mod tests {
         assert!(c.set("runtime.device_resident", "maybe").is_err());
         let rows = c.table();
         assert!(rows.iter().any(|(k, v)| k == "Decode transport" && v.contains("literal")));
+    }
+
+    #[test]
+    fn runtime_prefix_cache_bytes_applies() {
+        let mut c = Config::paper();
+        assert_eq!(c.prefix_cache_bytes, 64 << 20);
+        let row = |c: &Config| -> String {
+            c.table()
+                .into_iter()
+                .find(|(k, _)| k == "KV prefix cache")
+                .map(|(_, v)| v)
+                .unwrap()
+        };
+        assert!(row(&c).contains("64 MiB"));
+        c.set("runtime.prefix_cache_bytes", "0").unwrap();
+        assert_eq!(c.prefix_cache_bytes, 0, "0 must be accepted (disable)");
+        assert!(row(&c).contains("disabled"));
+        c.set("runtime.prefix_cache_bytes", "1048576").unwrap();
+        assert_eq!(c.prefix_cache_bytes, 1 << 20);
+        assert!(c.set("runtime.prefix_cache_bytes", "lots").is_err());
     }
 
     #[test]

@@ -84,6 +84,15 @@ pub struct EngineStats {
     /// Mean active slots per batched dispatch (batch occupancy); 0.0 when
     /// no batched dispatch has run.
     pub mean_active_slots: f64,
+    // ---- KV prefix cache (all zero when prefix reuse is off) ----
+    /// Prefill lookups served from a cached prefix state.
+    pub prefix_hits: u64,
+    /// Prefill lookups that ran cold.
+    pub prefix_misses: u64,
+    /// Cached prefix states evicted by the LRU byte budget.
+    pub prefix_evictions: u64,
+    /// Prompt tokens restored from cache instead of recomputed.
+    pub prefix_saved_tokens: u64,
     // ---- persistence (all zero when the [persist] section is disabled) ----
     pub persist_enabled: bool,
     pub persist_generation: u64,
@@ -469,6 +478,7 @@ impl Engine {
     ) -> EngineStats {
         let persist = router.cache().persist_status();
         let batch = router.batch_stats();
+        let prefix = router.prefix_stats();
         EngineStats {
             requests: router.counters.get("requests"),
             tweak_hits: router.counters.get("tweak_hits"),
@@ -490,6 +500,10 @@ impl Engine {
                     b.active_slot_sum as f64 / b.dispatches as f64
                 }
             }),
+            prefix_hits: prefix.map_or(0, |p| p.hits),
+            prefix_misses: prefix.map_or(0, |p| p.misses),
+            prefix_evictions: prefix.map_or(0, |p| p.evictions),
+            prefix_saved_tokens: prefix.map_or(0, |p| p.saved_tokens),
             persist_enabled: persist.is_some(),
             persist_generation: persist.map_or(0, |p| p.generation),
             wal_bytes: persist.map_or(0, |p| p.wal_bytes),

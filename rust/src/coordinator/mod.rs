@@ -214,6 +214,11 @@ impl Router {
             )?
             .with_decode_batch_opts(slots, build_pool),
         );
+        // The prefix cache is wired to the SMALL model only: tweak prompts
+        // share the static template + cached-entry head across requests,
+        // while big-model miss prompts are raw user queries that almost
+        // never share a 64-token prefix — snapshots there would be pure
+        // overhead.
         let small = Box::new(
             crate::llm::SubstrateLlm::new_with(
                 rt,
@@ -226,7 +231,8 @@ impl Router {
                 config.seed,
                 config.device_resident,
             )?
-            .with_decode_batch_opts(slots, build_pool),
+            .with_decode_batch_opts(slots, build_pool)
+            .with_prefix_cache(config.prefix_cache_bytes),
         );
         let mut router = Self::with_models(embedder, big, small, config);
         router.enable_persistence()?;
@@ -319,6 +325,15 @@ impl Router {
     /// pools (`None` when neither model decodes batched).
     pub fn batch_stats(&self) -> Option<BatchDecodeStats> {
         BatchDecodeStats::merge(self.big.batch_stats(), self.small.batch_stats())
+    }
+
+    /// Combined KV-prefix-cache counters of both models (`None` when
+    /// neither has prefix reuse enabled).
+    pub fn prefix_stats(&self) -> Option<crate::runtime::PrefixCacheStats> {
+        crate::runtime::PrefixCacheStats::merge(
+            self.big.prefix_stats(),
+            self.small.prefix_stats(),
+        )
     }
 
     /// Pre-populate the cache (dataset warm-up in the eval protocols).
@@ -450,7 +465,9 @@ impl Router {
                 let decode_started = std::time::Instant::now();
                 match drive_session(session, (t_start, dl), (t, bg)) {
                     Ok(DriveEnd::Done(resp)) => {
-                        trace.span_at(Stage::Prefill, t, decode_started, f32::NAN);
+                        let recomputed =
+                            resp.usage.input_tokens.saturating_sub(resp.restored_tokens);
+                        trace.span_at(Stage::Prefill, t, decode_started, recomputed as f32);
                         trace.span_at(
                             Stage::Decode,
                             decode_started,
@@ -458,6 +475,7 @@ impl Router {
                             resp.decode_micros as f32,
                         );
                         trace.set_compute(resp.prefill_micros, resp.decode_micros);
+                        trace.set_prefill_tokens(resp.usage.input_tokens, recomputed);
                         Ok(DriveEnd::Done(resp))
                     }
                     other => other,
@@ -527,7 +545,9 @@ impl Router {
                     let decode_started = std::time::Instant::now();
                     match drive_session(session, (t_start, dl), (t, bg)) {
                         Ok(DriveEnd::Done(resp)) => {
-                            trace.span_at(Stage::Prefill, t, decode_started, f32::NAN);
+                            let recomputed =
+                                resp.usage.input_tokens.saturating_sub(resp.restored_tokens);
+                            trace.span_at(Stage::Prefill, t, decode_started, recomputed as f32);
                             trace.span_at(
                                 Stage::Decode,
                                 decode_started,
@@ -535,6 +555,7 @@ impl Router {
                                 resp.decode_micros as f32,
                             );
                             trace.set_compute(resp.prefill_micros, resp.decode_micros);
+                            trace.set_prefill_tokens(resp.usage.input_tokens, recomputed);
                             Ok(DriveEnd::Done(resp))
                         }
                         other => other,

@@ -379,6 +379,11 @@ impl Scheduler {
         // generator-reported decode compute inside that occupancy window.
         trace.span_at(Stage::Decode, decode_started, Instant::now(), resp.decode_micros as f32);
         trace.set_compute(resp.prefill_micros, resp.decode_micros);
+        // Prefill span value = tokens recomputed (prompt minus the prefix
+        // restored from the KV cache); known only once the response is in.
+        let recomputed = resp.usage.input_tokens.saturating_sub(resp.restored_tokens);
+        trace.set_span_value(Stage::Prefill, recomputed as f32);
+        trace.set_prefill_tokens(resp.usage.input_tokens, recomputed);
         let (routed, leader_query, followers) = match kind {
             JobKind::Tweak(t) => {
                 let routed = router.complete_tweak(&t, resp, enqueued, gen_micros, &mut trace);

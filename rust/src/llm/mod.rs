@@ -27,7 +27,9 @@ use std::rc::Rc;
 use anyhow::{bail, Result};
 
 use crate::cost::TokenUsage;
-use crate::runtime::{GenSession, Generator, Runtime, SamplingParams, SubstrateBatch};
+use crate::runtime::{
+    GenSession, Generator, PrefixCache, PrefixCacheStats, Runtime, SamplingParams, SubstrateBatch,
+};
 use crate::util::rng::hash_bytes;
 use crate::util::Rng;
 
@@ -66,6 +68,12 @@ pub trait LanguageModel {
     /// pool; `None` for models without one. Feeds the engine's
     /// `batched_steps` / `mean_active_slots` observability.
     fn batch_stats(&self) -> Option<BatchDecodeStats> {
+        None
+    }
+
+    /// Lifetime counters of this model's cross-request KV prefix cache;
+    /// `None` when prefix reuse is disabled or unsupported.
+    fn prefix_stats(&self) -> Option<PrefixCacheStats> {
         None
     }
 }
@@ -132,6 +140,10 @@ impl LlmSession for EagerSession {
 pub struct LlmResponse {
     pub text: String,
     pub usage: TokenUsage,
+    /// Prompt tokens restored from the KV prefix cache instead of
+    /// recomputed (0 = cold prefill). `input_tokens - restored_tokens` is
+    /// the prefill work actually performed for this response.
+    pub restored_tokens: usize,
     pub prefill_micros: u128,
     pub decode_micros: u128,
 }
@@ -156,6 +168,14 @@ pub struct SubstrateLlm {
     /// fusion consumes the RNG differently — a request's response must not
     /// depend on whether it decoded in a slot or in the overflow path.
     allow_span: bool,
+    /// Cross-request KV prefix cache (`[runtime] prefix_cache_bytes`);
+    /// `None` = cold prefill every session. One cache per model — packed
+    /// states of different models have different widths and must never mix.
+    prefix: Option<Rc<RefCell<PrefixCache>>>,
+    /// Token ids of [`prompts::TWEAK_TEMPLATE`], memoized at construction:
+    /// the static head of every tweak prompt is tokenized once per model,
+    /// not once per request.
+    tweak_head_ids: Vec<i32>,
 }
 
 impl SubstrateLlm {
@@ -173,13 +193,38 @@ impl SubstrateLlm {
         seed: u64,
         device_resident: bool,
     ) -> Result<Self> {
+        let gen = Generator::with_mode(rt, model, device_resident)?;
+        let tweak_head_ids = gen.tokenizer().encode(prompts::TWEAK_TEMPLATE);
         Ok(SubstrateLlm {
-            gen: Generator::with_mode(rt, model, device_resident)?,
+            gen,
             params,
             seed,
             batch: None,
             allow_span: true,
+            prefix: None,
+            tweak_head_ids,
         })
+    }
+
+    /// Enable cross-request KV prefix reuse under an LRU byte budget
+    /// (`[runtime] prefix_cache_bytes`; 0 disables). Left off, with a
+    /// notice, when the artifact set has no resume-capable prefill chunks —
+    /// a cache no lookup can ever be served from would only burn memory on
+    /// snapshots.
+    pub fn with_prefix_cache(mut self, budget_bytes: usize) -> Self {
+        if budget_bytes == 0 {
+            return self;
+        }
+        if self.gen.resume_chunks().is_empty() {
+            eprintln!(
+                "[llm] {}: no resume-capable prefill artifacts \
+                 (run `make artifacts`); prefix cache disabled",
+                self.gen.model_name
+            );
+            return self;
+        }
+        self.prefix = Some(PrefixCache::shared(budget_bytes));
+        self
     }
 
     /// Enable slot-batched decode with up to `max_slots` concurrent slots
@@ -239,20 +284,45 @@ impl SubstrateLlm {
 
     fn begin(&mut self, segments: &[&str]) -> Result<Box<dyn LlmSession>> {
         let rng = self.session_rng(segments);
+        let (ids, len) = self
+            .gen
+            .tokenizer()
+            .encode_prompt(segments, self.gen.max_prefill());
+        self.begin_ids(ids, len, rng)
+    }
+
+    /// Begin a tweak session. Unlike `begin`, the prompt is encoded with
+    /// suffix protection: the static template (memoized ids) + cached query
+    /// + cached response form a bit-stable prefix truncated at a FIXED
+    /// boundary, and the new query rides in the reserved tail — so every
+    /// tweak against one cache entry shares a prefix the KV cache can serve.
+    fn begin_tweak_session(&mut self, prompt: &TweakPrompt) -> Result<Box<dyn LlmSession>> {
+        let segs = prompt.segments();
+        let seg_refs: Vec<&str> = segs.iter().map(|s| s.as_str()).collect();
+        let rng = self.session_rng(&seg_refs);
+        let (ids, len) = self.gen.tokenizer().encode_prompt_suffixed(
+            &self.tweak_head_ids,
+            &[&prompt.cached_query, &prompt.cached_response],
+            &prompt.new_query,
+            self.gen.max_prefill(),
+            prompts::TWEAK_SUFFIX_RESERVE,
+        );
+        self.begin_ids(ids, len, rng)
+    }
+
+    /// Start a session from already-encoded prompt ids: a slot of the
+    /// batched pool when one is free, the per-session overflow backend
+    /// otherwise. Both paths probe the prefix cache, so a request's
+    /// restored-token count doesn't depend on slot placement.
+    fn begin_ids(&mut self, ids: Vec<i32>, len: usize, rng: Rng) -> Result<Box<dyn LlmSession>> {
+        if len == 0 {
+            bail!("empty prompt");
+        }
         if let Some(pool) = &self.batch {
-            // Only encode for the pool when a slot is actually free; a full
-            // pool overflows below without paying the tokenization twice.
             if pool.borrow().free_slots() > 0 {
-                let (ids, len) = self
-                    .gen
-                    .tokenizer()
-                    .encode_prompt(segments, self.gen.max_prefill());
-                if len == 0 {
-                    bail!("empty prompt");
-                }
                 let slot = pool
                     .borrow_mut()
-                    .admit(&ids, len, self.params, rng.clone())?
+                    .admit_prefixed(&ids, len, self.params, rng, self.prefix.as_ref())?
                     .expect("a free slot was just observed");
                 return Ok(Box::new(BatchedLlmSession {
                     pool: Rc::clone(pool),
@@ -263,12 +333,14 @@ impl SubstrateLlm {
             // Every slot occupied: overflow onto a per-session backend
             // (single-step, same sampling path as the pool).
         }
-        let session = self.gen.begin_session_opts(
-            segments,
+        let session = self.gen.begin_session_ids(
+            &ids,
+            len,
             &self.params,
             rng,
             self.gen.resident_available(),
             self.allow_span,
+            self.prefix.as_ref(),
         )?;
         Ok(Box::new(SubstrateSession { session }))
     }
@@ -314,6 +386,7 @@ impl LlmSession for BatchedLlmSession {
                 input_tokens: stats.prompt_tokens,
                 output_tokens: stats.generated_tokens,
             },
+            restored_tokens: stats.restored_tokens,
             prefill_micros: stats.prefill_micros,
             decode_micros: stats.decode_micros,
         })
@@ -351,6 +424,7 @@ impl LlmSession for SubstrateSession {
                 input_tokens: g.stats.prompt_tokens,
                 output_tokens: g.stats.generated_tokens,
             },
+            restored_tokens: g.stats.restored_tokens,
             prefill_micros: g.stats.prefill_micros,
             decode_micros: g.stats.decode_micros,
         })
@@ -367,8 +441,9 @@ impl LanguageModel for SubstrateLlm {
     }
 
     fn tweak(&mut self, prompt: &TweakPrompt) -> Result<LlmResponse> {
-        let segs = prompt.segments();
-        self.run(&segs.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+        let mut session = self.begin_tweak_session(prompt)?;
+        while session.advance()? {}
+        session.finish()
     }
 
     fn begin_respond(&mut self, query: &str) -> Result<Box<dyn LlmSession>> {
@@ -376,8 +451,7 @@ impl LanguageModel for SubstrateLlm {
     }
 
     fn begin_tweak(&mut self, prompt: &TweakPrompt) -> Result<Box<dyn LlmSession>> {
-        let segs = prompt.segments();
-        self.begin(&segs.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+        self.begin_tweak_session(prompt)
     }
 
     fn batch_stats(&self) -> Option<BatchDecodeStats> {
@@ -390,6 +464,10 @@ impl LanguageModel for SubstrateLlm {
             }
         })
     }
+
+    fn prefix_stats(&self) -> Option<PrefixCacheStats> {
+        self.prefix.as_ref().map(|c| c.borrow().stats())
+    }
 }
 
 #[cfg(test)]
@@ -397,15 +475,19 @@ mod tests {
     use super::*;
 
     #[test]
-    fn tweak_prompt_orders_new_query_first() {
+    fn tweak_prompt_orders_new_query_last() {
+        // Static template first, new query last: the leading tokens of a
+        // tweak are a pure function of the cache entry (prefix reuse), and
+        // suffix-protected encoding keeps the query from being truncated.
         let p = TweakPrompt {
             new_query: "why is rust fast?".into(),
             cached_query: "why is rust safe?".into(),
             cached_response: "because borrow checker".into(),
         };
         let segs = p.segments();
-        assert_eq!(segs[0], "why is rust fast?");
-        assert_eq!(segs.len(), 3);
+        assert_eq!(segs.len(), 4);
+        assert_eq!(segs[0], prompts::TWEAK_TEMPLATE);
+        assert_eq!(segs[3], "why is rust fast?");
     }
 
     #[test]
@@ -413,6 +495,7 @@ mod tests {
         let resp = LlmResponse {
             text: "canned".into(),
             usage: TokenUsage::default(),
+            restored_tokens: 0,
             prefill_micros: 1,
             decode_micros: 2,
         };
@@ -434,6 +517,7 @@ mod tests {
                 Ok(LlmResponse {
                     text: format!("re: {query}"),
                     usage: TokenUsage::default(),
+                    restored_tokens: 0,
                     prefill_micros: 0,
                     decode_micros: 0,
                 })

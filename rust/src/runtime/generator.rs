@@ -17,10 +17,13 @@
 //! sampling and the span/single-step/tail transitions; both backends must
 //! produce bit-identical token streams through it.
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use super::prefix_cache::{PrefixCache, PrefixHandle};
 use super::{to_f32_vec, ExecArg, Executable, HostTensor, IoSpec, Runtime};
 use crate::tokenizer::{Tokenizer, EOS_ID};
 use crate::util::Rng;
@@ -52,6 +55,9 @@ impl SamplingParams {
 #[derive(Clone, Debug, Default)]
 pub struct GenerationStats {
     pub prompt_tokens: usize,
+    /// Prompt tokens restored from the cross-request KV prefix cache
+    /// instead of recomputed (0 = cold prefill).
+    pub restored_tokens: usize,
     pub generated_tokens: usize,
     pub prefill_micros: u128,
     pub decode_micros: u128,
@@ -203,6 +209,33 @@ pub trait DecodeBackend {
     /// next-token logits.
     fn prefill(&mut self, ids: &[i32], len: usize) -> Result<Vec<f32>>;
 
+    /// Prefix lengths this transport compiled resume artifacts for
+    /// (ascending; empty = cross-request prefix reuse unsupported).
+    fn resume_chunks(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// Run the prompt pass restoring the first `prefix` positions from
+    /// `state` — a packed `k ‖ v ‖ tail` snapshot of an earlier prefill
+    /// whose prompt shared those tokens — and recomputing only the suffix.
+    /// Bit-identical to [`Self::prefill`] by construction (gated in
+    /// python/tests/test_resume.py).
+    fn prefill_resumed(
+        &mut self,
+        _ids: &[i32],
+        _len: usize,
+        _state: &[f32],
+        _prefix: usize,
+    ) -> Result<Vec<f32>> {
+        bail!("resume-capable prefill not supported by this transport")
+    }
+
+    /// Fetch the packed post-prefill state for insertion into the prefix
+    /// cache; `Ok(None)` = snapshots unsupported (literal transport).
+    fn snapshot_state(&mut self) -> Result<Option<Vec<f32>>> {
+        Ok(None)
+    }
+
     /// One decode step: consume `token` at position `pos`, return logits.
     fn step(&mut self, token: i32, pos: i32) -> Result<Vec<f32>>;
 
@@ -210,6 +243,63 @@ pub trait DecodeBackend {
     /// in-graph (one uniform per token) at `temperature`; returns the
     /// sampled token ids.
     fn span(&mut self, token: i32, pos: i32, u: &[f32], temperature: f32) -> Result<Vec<i32>>;
+}
+
+/// The prefix-cache interaction for one prompt pass, shared by the
+/// per-session ([`DecodeSession`]) and batched ([`BatchedDecode`])
+/// admission paths: probe for the deepest resumable prefix *before* the
+/// prefill, then decide whether the freshly computed state is worth
+/// snapshotting back — a miss, or a hit shallower than a chunk boundary
+/// the prompt covers (so the next request can resume deeper).
+struct PrefixPlan<'a> {
+    cache: Option<&'a Rc<RefCell<PrefixCache>>>,
+    /// Pinned basis state to resume from (`None` = cold prefill).
+    hit: Option<PrefixHandle>,
+    /// Chunk depths to (re)insert the post-prefill snapshot at.
+    insert_at: Vec<usize>,
+    ids: &'a [i32],
+}
+
+impl<'a> PrefixPlan<'a> {
+    /// `ids` must be the *live* prompt tokens (no padding): the radix key
+    /// and the strict-prefix rule are both relative to the real length.
+    fn probe(
+        cache: Option<&'a Rc<RefCell<PrefixCache>>>,
+        chunks: &[usize],
+        ids: &'a [i32],
+    ) -> PrefixPlan<'a> {
+        let mut plan = PrefixPlan { cache, hit: None, insert_at: Vec::new(), ids };
+        let Some(cache) = plan.cache else {
+            return plan;
+        };
+        if chunks.is_empty() {
+            // Resume-incapable transport: stay out of the cache entirely so
+            // hit/miss stats keep meaning "resume served / not served".
+            return plan;
+        }
+        plan.hit = PrefixCache::lookup_within(cache, ids, Some(chunks));
+        let covered = plan.hit.as_ref().map_or(0, |h| h.depth());
+        if chunks.iter().any(|&p| p < ids.len() && p > covered) {
+            // One snapshot serves every chunk depth below the prompt length
+            // (a resume at P reads only K/V[:, :P]), so register the shared
+            // `Rc` at all of them; re-inserts only refresh LRU position.
+            plan.insert_at = chunks.iter().copied().filter(|&p| p < ids.len()).collect();
+        }
+        plan
+    }
+
+    fn should_snapshot(&self) -> bool {
+        !self.insert_at.is_empty()
+    }
+
+    fn insert(&self, state: Vec<f32>) {
+        let Some(cache) = self.cache else { return };
+        let rc = Rc::new(state);
+        let mut c = cache.borrow_mut();
+        for &p in &self.insert_at {
+            c.insert(&self.ids[..p], Rc::clone(&rc));
+        }
+    }
 }
 
 /// Host-literal transport: the KV tuple round-trips device→host→device on
@@ -301,6 +391,10 @@ pub struct ResidentSet {
     /// state — the only thing fetched per single step, O(vocab).
     peek_logits: Arc<Executable>,
     span: Option<SpanSet>,
+    /// `{model}_prefill_resume{P}` executables by ascending chunk length P:
+    /// prefill restoring K/V[:, :P] from a cached packed state and
+    /// recomputing only the suffix. Empty on pre-resume artifact dirs.
+    resume: Vec<(usize, Arc<Executable>)>,
 }
 
 /// Device-resident transport: the packed decode state lives in one PJRT
@@ -349,6 +443,44 @@ impl DecodeBackend for ResidentBackend {
         let outs = self.set.prefill.run_raw(&[ExecArg::I32(ids), ExecArg::I32(&len_in)])?;
         self.take_output(outs, "resident prefill")?;
         self.peek_logits()
+    }
+
+    fn resume_chunks(&self) -> Vec<usize> {
+        self.set.resume.iter().map(|(p, _)| *p).collect()
+    }
+
+    fn prefill_resumed(
+        &mut self,
+        ids: &[i32],
+        len: usize,
+        state: &[f32],
+        prefix: usize,
+    ) -> Result<Vec<f32>> {
+        let exe = self
+            .set
+            .resume
+            .iter()
+            .find(|(p, _)| *p == prefix)
+            .map(|(_, e)| Arc::clone(e))
+            .with_context(|| format!("no resume artifact for prefix {prefix}"))?;
+        let len_in = [len as i32];
+        let outs = exe.run_raw(&[
+            ExecArg::I32(ids),
+            ExecArg::I32(&len_in),
+            ExecArg::F32(state),
+        ])?;
+        self.take_output(outs, "resident prefill_resume")?;
+        self.peek_logits()
+    }
+
+    fn snapshot_state(&mut self) -> Result<Option<Vec<f32>>> {
+        let state = match self.state.as_ref() {
+            Some(s) => s,
+            None => return Ok(None),
+        };
+        // `to_literal_sync` borrows — the resident buffer stays on device.
+        let lit = state.to_literal_sync()?;
+        Ok(Some(to_f32_vec(&lit)?))
     }
 
     fn step(&mut self, token: i32, pos: i32) -> Result<Vec<f32>> {
@@ -417,6 +549,32 @@ pub trait BatchEngine {
     /// `slot`. Every other slot's state is untouched.
     fn prefill(&mut self, slot: usize, ids: &[i32], len: usize) -> Result<()>;
 
+    /// Prefix lengths this engine compiled scatter-resume artifacts for
+    /// (ascending; empty = cross-request prefix reuse unsupported).
+    fn resume_chunks(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// [`Self::prefill`] restoring the first `prefix` positions of `slot`
+    /// from a cached packed single-slot `state` and recomputing only the
+    /// suffix. Every other slot's state is untouched.
+    fn prefill_resumed(
+        &mut self,
+        _slot: usize,
+        _ids: &[i32],
+        _len: usize,
+        _state: &[f32],
+        _prefix: usize,
+    ) -> Result<()> {
+        bail!("resume-capable prefill not supported by this engine")
+    }
+
+    /// Fetch `slot`'s packed post-prefill state for insertion into the
+    /// prefix cache; `Ok(None)` = snapshots unsupported.
+    fn snapshot_slot(&mut self, _slot: usize) -> Result<Option<Vec<f32>>> {
+        Ok(None)
+    }
+
     /// One masked decode step: slot `i` consumes `tokens[i]` at `pos[i]`
     /// when `active[i] != 0`, and rides through unchanged otherwise.
     fn step(&mut self, tokens: &[i32], pos: &[i32], active: &[i32]) -> Result<()>;
@@ -436,6 +594,9 @@ pub struct BatchArtifacts {
     prefill_scatter: Arc<Executable>,
     decode: Arc<Executable>,
     peek: Arc<Executable>,
+    /// `{model}_prefill_scatter_resume{B}_{P}` executables by ascending
+    /// chunk length P. Empty on pre-resume artifact dirs.
+    resume: Vec<(usize, Arc<Executable>)>,
 }
 
 /// PJRT-backed [`BatchEngine`]: the batched state lives in one device
@@ -496,6 +657,62 @@ impl BatchEngine for PjrtBatchEngine {
             ExecArg::Device(&state),
         ])?;
         self.store(outs, "decode_batch")
+    }
+
+    fn resume_chunks(&self) -> Vec<usize> {
+        self.set.resume.iter().map(|(p, _)| *p).collect()
+    }
+
+    fn prefill_resumed(
+        &mut self,
+        slot: usize,
+        ids: &[i32],
+        len: usize,
+        state: &[f32],
+        prefix: usize,
+    ) -> Result<()> {
+        let exe = self
+            .set
+            .resume
+            .iter()
+            .find(|(p, _)| *p == prefix)
+            .map(|(_, e)| Arc::clone(e))
+            .with_context(|| format!("no scatter-resume artifact for prefix {prefix}"))?;
+        let len_in = [len as i32];
+        let slot_in = [slot as i32];
+        let outs = match self.state.take() {
+            Some(batch) => exe.run_raw(&[
+                ExecArg::I32(ids),
+                ExecArg::I32(&len_in),
+                ExecArg::I32(&slot_in),
+                ExecArg::F32(state),
+                ExecArg::Device(&batch),
+            ])?,
+            None => {
+                // Same first-claim seeding as the cold scatter path.
+                let zeros = vec![0.0f32; self.set.batch * self.set.state_len];
+                exe.run_raw(&[
+                    ExecArg::I32(ids),
+                    ExecArg::I32(&len_in),
+                    ExecArg::I32(&slot_in),
+                    ExecArg::F32(state),
+                    ExecArg::F32(&zeros),
+                ])?
+            }
+        };
+        self.store(outs, "prefill_scatter_resume")
+    }
+
+    fn snapshot_slot(&mut self, slot: usize) -> Result<Option<Vec<f32>>> {
+        let state = match self.state.as_ref() {
+            Some(s) => s,
+            None => return Ok(None),
+        };
+        // One O(B · state_len) fetch; the device buffer stays resident.
+        let lit = state.to_literal_sync()?;
+        let all = to_f32_vec(&lit)?;
+        let w = self.set.state_len;
+        Ok(Some(all[slot * w..(slot + 1) * w].to_vec()))
     }
 
     fn peek(&mut self) -> Result<Vec<f32>> {
@@ -598,6 +815,22 @@ impl<E: BatchEngine> BatchedDecode<E> {
         params: SamplingParams,
         rng: Rng,
     ) -> Result<Option<usize>> {
+        self.admit_prefixed(ids, prompt_len, params, rng, None)
+    }
+
+    /// [`Self::admit`] with a cross-request KV prefix cache: a hit runs the
+    /// scatter-resume artifact for the claimed slot (only the suffix is
+    /// recomputed), a qualifying cold prefill snapshots the slot's packed
+    /// state back into the cache. Streams are bit-identical either way
+    /// (python/tests/test_resume.py).
+    pub fn admit_prefixed(
+        &mut self,
+        ids: &[i32],
+        prompt_len: usize,
+        params: SamplingParams,
+        rng: Rng,
+        cache: Option<&Rc<RefCell<PrefixCache>>>,
+    ) -> Result<Option<usize>> {
         if prompt_len == 0 {
             bail!("empty prompt");
         }
@@ -606,12 +839,30 @@ impl<E: BatchEngine> BatchedDecode<E> {
             None => return Ok(None),
         };
         let t0 = std::time::Instant::now();
-        self.engine.prefill(slot, ids, prompt_len)?;
+        let chunks = self.engine.resume_chunks();
+        let plan = PrefixPlan::probe(cache, &chunks, &ids[..prompt_len]);
+        let restored = match &plan.hit {
+            Some(h) => {
+                self.engine.prefill_resumed(slot, ids, prompt_len, h.state(), h.depth())?;
+                h.depth()
+            }
+            None => {
+                self.engine.prefill(slot, ids, prompt_len)?;
+                0
+            }
+        };
+        if plan.should_snapshot() {
+            if let Some(state) = self.engine.snapshot_slot(slot)? {
+                plan.insert(state);
+            }
+        }
+        drop(plan); // release the pin: the basis state has been consumed
         let all = self.engine.peek()?;
         let logits = all[slot * self.vocab..(slot + 1) * self.vocab].to_vec();
         let max_new = params.max_new_tokens.min(self.max_seq.saturating_sub(prompt_len));
         let stats = GenerationStats {
             prompt_tokens: prompt_len,
+            restored_tokens: restored,
             prefill_micros: t0.elapsed().as_micros(),
             device_resident: true,
             ..Default::default()
@@ -847,20 +1098,53 @@ impl<B: DecodeBackend> DecodeSession<B> {
     /// vs single-step consume the RNG differently, so mixing them would
     /// make a response depend on which path happened to serve it.
     pub fn start_opts(
-        mut backend: B,
+        backend: B,
         params: SamplingParams,
         ids: &[i32],
         prompt_len: usize,
         max_seq: usize,
         allow_span: bool,
     ) -> Result<Self> {
+        Self::start_prefixed(backend, params, ids, prompt_len, max_seq, allow_span, None)
+    }
+
+    /// [`Self::start_opts`] with a cross-request KV prefix cache: when the
+    /// backend can resume (`resume_chunks` non-empty), a cached prefix of
+    /// the prompt is restored and only the suffix recomputed; a qualifying
+    /// cold prefill snapshots its packed state back for later requests.
+    /// Token streams are bit-identical either way — the resume artifacts
+    /// reproduce the cold prefill state bit for bit
+    /// (python/tests/test_resume.py).
+    pub fn start_prefixed(
+        mut backend: B,
+        params: SamplingParams,
+        ids: &[i32],
+        prompt_len: usize,
+        max_seq: usize,
+        allow_span: bool,
+        cache: Option<&Rc<RefCell<PrefixCache>>>,
+    ) -> Result<Self> {
         if prompt_len == 0 {
             bail!("empty prompt");
         }
         let t0 = std::time::Instant::now();
-        let logits = backend.prefill(ids, prompt_len)?;
+        let chunks = backend.resume_chunks();
+        let plan = PrefixPlan::probe(cache, &chunks, &ids[..prompt_len]);
+        let (logits, restored) = match &plan.hit {
+            Some(h) => {
+                (backend.prefill_resumed(ids, prompt_len, h.state(), h.depth())?, h.depth())
+            }
+            None => (backend.prefill(ids, prompt_len)?, 0),
+        };
+        if plan.should_snapshot() {
+            if let Some(state) = backend.snapshot_state()? {
+                plan.insert(state);
+            }
+        }
+        drop(plan); // release the pin: the basis state has been consumed
         let stats = GenerationStats {
             prompt_tokens: prompt_len,
+            restored_tokens: restored,
             prefill_micros: t0.elapsed().as_micros(),
             device_resident: backend.device_resident(),
             ..Default::default()
@@ -1040,7 +1324,28 @@ fn discover_resident(
             set
         }
     };
-    Some(ResidentSet { prefill, decode, peek_logits, span })
+    // Resume-capable prefill chunks are optional sugar on top of the
+    // resident set: a missing or inconsistent chunk only disables reuse at
+    // that boundary (pre-resume artifact dirs yield an empty list and every
+    // prefill stays cold).
+    let mut resume = Vec::new();
+    for p in rt.manifest.resume_chunks(model) {
+        let Ok(exe) = rt.executable(&format!("{model}_prefill_resume{p}")) else {
+            continue; // tolerate selective loading
+        };
+        let ok = exe.spec.untupled
+            && exe.spec.inputs.len() == 3
+            && p < exe.spec.inputs[0].numel()
+            && exe.spec.inputs[1].numel() == 1
+            && exe.spec.inputs[2].numel() == state_len
+            && exe.spec.outputs.first().map(|o| o.numel()) == Some(state_len);
+        if !ok {
+            eprintln!("[runtime] {model}: resume({p}) artifact inconsistent; chunk skipped");
+            continue;
+        }
+        resume.push((p, exe));
+    }
+    Some(ResidentSet { prefill, decode, peek_logits, span, resume })
 }
 
 /// Discover the `{model}_prefill_scatter{B}` / `{model}_decode_batch{B}_res`
@@ -1082,13 +1387,37 @@ fn discover_batched(rt: &Runtime, model: &str, vocab: usize) -> Vec<Arc<BatchArt
             );
             continue;
         }
+        let state_len = batch_numel / b;
+        let mut resume = Vec::new();
+        for p in rt.manifest.batch_resume_chunks(model, b) {
+            let Ok(exe) =
+                rt.executable(&format!("{model}_prefill_scatter_resume{b}_{p}"))
+            else {
+                continue; // tolerate selective loading
+            };
+            let ok = exe.spec.untupled
+                && exe.spec.inputs.len() == 5
+                && p < exe.spec.inputs[0].numel()
+                && exe.spec.inputs[3].numel() == state_len
+                && exe.spec.inputs[4].numel() == batch_numel
+                && exe.spec.outputs.first().map(|o| o.numel()) == Some(batch_numel);
+            if !ok {
+                eprintln!(
+                    "[runtime] {model}: batch{b} resume({p}) artifact inconsistent; \
+                     chunk skipped"
+                );
+                continue;
+            }
+            resume.push((p, exe));
+        }
         out.push(Arc::new(BatchArtifacts {
             batch: b,
-            state_len: batch_numel / b,
+            state_len,
             vocab,
             prefill_scatter: scatter,
             decode,
             peek,
+            resume,
         }));
     }
     out.sort_by_key(|a| a.batch);
@@ -1160,6 +1489,14 @@ impl Generator {
     /// Whether the device-resident transport is available.
     pub fn resident_available(&self) -> bool {
         self.resident.is_some()
+    }
+
+    /// Resume-capable prefix chunk lengths of the resident transport
+    /// (ascending; empty = cold prefill only).
+    pub fn resume_chunks(&self) -> Vec<usize> {
+        self.resident
+            .as_ref()
+            .map_or_else(Vec::new, |s| s.resume.iter().map(|(p, _)| *p).collect())
     }
 
     /// Compiled batched-decode buckets (slot counts), ascending. Empty when
@@ -1248,7 +1585,40 @@ impl Generator {
         resident: bool,
         allow_span: bool,
     ) -> Result<GenSession> {
+        self.begin_session_cached(segments, params, rng, resident, allow_span, None)
+    }
+
+    /// [`Self::begin_session_opts`] with a caller-owned cross-request KV
+    /// prefix cache (one per model: packed states of different models have
+    /// different widths and must never mix). Only the resident transport
+    /// can resume; the literal transport ignores the cache.
+    pub fn begin_session_cached(
+        &self,
+        segments: &[&str],
+        params: &SamplingParams,
+        rng: Rng,
+        resident: bool,
+        allow_span: bool,
+        cache: Option<&Rc<RefCell<PrefixCache>>>,
+    ) -> Result<GenSession> {
         let (ids, len) = self.tokenizer.encode_prompt(segments, self.max_prefill);
+        self.begin_session_ids(&ids, len, params, rng, resident, allow_span, cache)
+    }
+
+    /// [`Self::begin_session_cached`] for callers that already hold encoded
+    /// prompt ids (e.g. a prompt built with suffix-protected encoding, or
+    /// one tokenized once and shared between the pool and overflow paths).
+    #[allow(clippy::too_many_arguments)]
+    pub fn begin_session_ids(
+        &self,
+        ids: &[i32],
+        len: usize,
+        params: &SamplingParams,
+        rng: Rng,
+        resident: bool,
+        allow_span: bool,
+        cache: Option<&Rc<RefCell<PrefixCache>>>,
+    ) -> Result<GenSession> {
         if len == 0 {
             bail!("empty prompt");
         }
@@ -1258,13 +1628,14 @@ impl Generator {
                 .as_ref()
                 .context("device-resident artifacts not compiled")?;
             let backend = ResidentBackend { set: Arc::clone(set), state: None };
-            let s = DecodeSession::start_opts(
+            let s = DecodeSession::start_prefixed(
                 backend,
                 *params,
-                &ids,
+                ids,
                 len,
                 self.max_seq,
                 allow_span,
+                cache,
             )?;
             SessionInner::Resident(s)
         } else {
@@ -1279,7 +1650,7 @@ impl Generator {
             let s = DecodeSession::start_opts(
                 backend,
                 *params,
-                &ids,
+                ids,
                 len,
                 self.max_seq,
                 allow_span,
@@ -1445,11 +1816,20 @@ mod tests {
         script: Vec<i32>,
         emitted: usize,
         calls: Vec<String>,
+        /// Resume chunk lengths this fake pretends to have compiled.
+        resume_at: Vec<usize>,
     }
 
     impl FakeBackend {
         fn new(span_width: Option<usize>, script: Vec<i32>) -> FakeBackend {
-            FakeBackend { vocab: 32, span_width, script, emitted: 0, calls: Vec::new() }
+            FakeBackend {
+                vocab: 32,
+                span_width,
+                script,
+                emitted: 0,
+                calls: Vec::new(),
+                resume_at: Vec::new(),
+            }
         }
 
         fn logits_for(&mut self) -> Vec<f32> {
@@ -1473,6 +1853,28 @@ mod tests {
             assert!(ids.len() >= len);
             self.calls.push(format!("prefill({len})"));
             Ok(self.logits_for())
+        }
+
+        fn resume_chunks(&self) -> Vec<usize> {
+            self.resume_at.clone()
+        }
+
+        fn prefill_resumed(
+            &mut self,
+            ids: &[i32],
+            len: usize,
+            state: &[f32],
+            prefix: usize,
+        ) -> Result<Vec<f32>> {
+            assert!(ids.len() >= len && prefix > 0 && prefix < len);
+            assert!(!state.is_empty(), "resume needs a basis state");
+            self.calls.push(format!("resume({len},{prefix})"));
+            Ok(self.logits_for())
+        }
+
+        fn snapshot_state(&mut self) -> Result<Option<Vec<f32>>> {
+            self.calls.push("snapshot".to_string());
+            Ok(Some(vec![0.5; 4]))
         }
 
         fn step(&mut self, token: i32, pos: i32) -> Result<Vec<f32>> {
@@ -1621,6 +2023,139 @@ mod tests {
     }
 
     // -----------------------------------------------------------------------
+    // Cross-request prefix cache plumbing over resume-capable fakes: miss →
+    // cold prefill + snapshot insert, hit → resumed prefill, and streams
+    // bit-identical either way.
+    // -----------------------------------------------------------------------
+
+    fn resumable(script: Vec<i32>, chunks: &[usize]) -> FakeBackend {
+        let mut b = FakeBackend::new(None, script);
+        b.resume_at = chunks.to_vec();
+        b
+    }
+
+    #[test]
+    fn prefix_miss_snapshots_then_hit_resumes_identically() {
+        let cache = PrefixCache::shared(1 << 20);
+        let p = SamplingParams::greedy(3);
+        let script = vec![5, 6, 7];
+        let ids_a = [1, 2, 3, 4, 9, 9];
+        let mut a = DecodeSession::start_prefixed(
+            resumable(script.clone(), &[2, 4]),
+            p,
+            &ids_a,
+            6,
+            64,
+            true,
+            Some(&cache),
+        )
+        .unwrap();
+        a.run(&mut Rng::new(1)).unwrap();
+        assert_eq!(a.backend.calls[0], "prefill(6)");
+        assert!(a.backend.calls.contains(&"snapshot".to_string()));
+        let (cold, stats) = a.finish();
+        assert_eq!(stats.restored_tokens, 0);
+
+        // Same leading 4 tokens, different tail: deepest chunk hit.
+        let ids_b = [1, 2, 3, 4, 8, 8];
+        let mut b = DecodeSession::start_prefixed(
+            resumable(script, &[2, 4]),
+            p,
+            &ids_b,
+            6,
+            64,
+            true,
+            Some(&cache),
+        )
+        .unwrap();
+        b.run(&mut Rng::new(1)).unwrap();
+        assert_eq!(b.backend.calls[0], "resume(6,4)");
+        assert!(
+            !b.backend.calls.contains(&"snapshot".to_string()),
+            "a hit at the deepest covered chunk must not re-snapshot"
+        );
+        let (resumed, stats) = b.finish();
+        assert_eq!(stats.restored_tokens, 4);
+        assert_eq!(resumed, cold, "resumed stream must equal the cold stream");
+
+        let s = cache.borrow().stats();
+        assert_eq!((s.hits, s.misses, s.saved_tokens), (1, 1, 4));
+    }
+
+    #[test]
+    fn shallow_hit_deepens_the_cache() {
+        // A short prompt seeds only chunk 2; a longer one resumes at 2 AND
+        // snapshots so chunk 4 becomes available; a third resumes at 4.
+        let cache = PrefixCache::shared(1 << 20);
+        let p = SamplingParams::greedy(2);
+        let mut s = DecodeSession::start_prefixed(
+            resumable(vec![5, 6], &[2, 4]),
+            p,
+            &[1, 2, 9],
+            3,
+            64,
+            true,
+            Some(&cache),
+        )
+        .unwrap();
+        s.run(&mut Rng::new(1)).unwrap();
+        assert_eq!(s.backend.calls[0], "prefill(3)");
+        drop(s);
+        let mut s = DecodeSession::start_prefixed(
+            resumable(vec![5, 6], &[2, 4]),
+            p,
+            &[1, 2, 3, 4, 9, 9],
+            6,
+            64,
+            true,
+            Some(&cache),
+        )
+        .unwrap();
+        s.run(&mut Rng::new(1)).unwrap();
+        assert_eq!(s.backend.calls[0], "resume(6,2)");
+        assert!(
+            s.backend.calls.contains(&"snapshot".to_string()),
+            "a shallow hit with a deeper covered chunk must snapshot"
+        );
+        let (_, stats) = s.finish();
+        assert_eq!(stats.restored_tokens, 2);
+        let mut s = DecodeSession::start_prefixed(
+            resumable(vec![5, 6], &[2, 4]),
+            p,
+            &[1, 2, 3, 4, 7, 7],
+            6,
+            64,
+            true,
+            Some(&cache),
+        )
+        .unwrap();
+        s.run(&mut Rng::new(1)).unwrap();
+        assert_eq!(s.backend.calls[0], "resume(6,4)");
+    }
+
+    #[test]
+    fn resume_incapable_transport_bypasses_cache() {
+        // No resume chunks compiled: the cache is never consulted, so its
+        // hit/miss stats keep meaning "resume served / not served".
+        let cache = PrefixCache::shared(1 << 20);
+        let b = FakeBackend::new(None, vec![5, 6]);
+        let mut s = DecodeSession::start_prefixed(
+            b,
+            SamplingParams::greedy(2),
+            &[1, 2, 3],
+            3,
+            64,
+            true,
+            Some(&cache),
+        )
+        .unwrap();
+        s.run(&mut Rng::new(1)).unwrap();
+        assert_eq!(s.backend.calls[0], "prefill(3)");
+        let st = cache.borrow().stats();
+        assert_eq!((st.hits, st.misses, st.entries), (0, 0, 0));
+    }
+
+    // -----------------------------------------------------------------------
     // BatchedDecode slot pool over a scripted fake engine: the collective
     // advance protocol (credits), O(1) dispatches per fairness round, slot
     // reuse / mid-flight admission, and batched ≡ per-session bit-identity.
@@ -1636,6 +2171,10 @@ mod tests {
         staged: Vec<f32>,
         dispatches: u64,
         prefills: u64,
+        resumes: u64,
+        snapshots: u64,
+        /// Resume chunk lengths this fake pretends to have compiled.
+        resume_at: Vec<usize>,
         /// One-shot injected fault: error the dispatch with this ordinal.
         fail_on_dispatch: Option<u64>,
     }
@@ -1651,8 +2190,19 @@ mod tests {
                 staged: vec![0.0; slots * 32],
                 dispatches: 0,
                 prefills: 0,
+                resumes: 0,
+                snapshots: 0,
+                resume_at: Vec::new(),
                 fail_on_dispatch: None,
             }
+        }
+
+        /// Bind the next queued script to `slot` (cold and resumed prefill
+        /// behave identically at the stream level, as on the real engine).
+        fn seed_slot(&mut self, slot: usize) {
+            self.scripts[slot] = self.queue.pop_front().expect("a script per admission");
+            self.emitted[slot] = 0;
+            self.stage(slot);
         }
 
         /// Stage the slot's next scripted token as a dominant logit spike
@@ -1676,10 +2226,32 @@ mod tests {
         fn prefill(&mut self, slot: usize, ids: &[i32], len: usize) -> Result<()> {
             assert!(ids.len() >= len && len > 0);
             self.prefills += 1;
-            self.scripts[slot] = self.queue.pop_front().expect("a script per admission");
-            self.emitted[slot] = 0;
-            self.stage(slot);
+            self.seed_slot(slot);
             Ok(())
+        }
+
+        fn resume_chunks(&self) -> Vec<usize> {
+            self.resume_at.clone()
+        }
+
+        fn prefill_resumed(
+            &mut self,
+            slot: usize,
+            ids: &[i32],
+            len: usize,
+            state: &[f32],
+            prefix: usize,
+        ) -> Result<()> {
+            assert!(ids.len() >= len && prefix > 0 && prefix < len);
+            assert!(!state.is_empty(), "resume needs a basis state");
+            self.resumes += 1;
+            self.seed_slot(slot);
+            Ok(())
+        }
+
+        fn snapshot_slot(&mut self, _slot: usize) -> Result<Option<Vec<f32>>> {
+            self.snapshots += 1;
+            Ok(Some(vec![0.25; 8]))
         }
 
         fn step(&mut self, tokens: &[i32], pos: &[i32], active: &[i32]) -> Result<()> {
@@ -1754,6 +2326,38 @@ mod tests {
         sweep_until_done(&mut pool, &slots);
         let batched: Vec<Vec<i32>> = slots.iter().map(|&s| pool.finish(s).unwrap().0).collect();
         assert_eq!(batched, sequential);
+    }
+
+    #[test]
+    fn batched_admission_resumes_from_prefix_cache() {
+        // Two identical scripts: the cold admission seeds the cache, the
+        // second admission (sharing a chunk-length prefix) resumes and must
+        // stream identically.
+        let cache = PrefixCache::shared(1 << 20);
+        let p = SamplingParams::greedy(4);
+        let script = vec![10, 11, 12, 13];
+        let mut engine = FakeBatchEngine::new(2, vec![script.clone(), script]);
+        engine.resume_at = vec![2];
+        let mut pool = BatchedDecode::new(engine, 32, 64);
+        let a = pool
+            .admit_prefixed(&[1, 2, 3, 4], 4, p, Rng::new(1), Some(&cache))
+            .unwrap()
+            .expect("slot");
+        let b = pool
+            .admit_prefixed(&[1, 2, 7, 8], 4, p, Rng::new(1), Some(&cache))
+            .unwrap()
+            .expect("slot");
+        assert_eq!(pool.engine().prefills, 1);
+        assert_eq!(pool.engine().resumes, 1);
+        assert_eq!(pool.engine().snapshots, 1);
+        sweep_until_done(&mut pool, &[a, b]);
+        let (tok_a, st_a) = pool.finish(a).unwrap();
+        let (tok_b, st_b) = pool.finish(b).unwrap();
+        assert_eq!(tok_a, tok_b, "resumed slot must stream identically");
+        assert_eq!(st_a.restored_tokens, 0);
+        assert_eq!(st_b.restored_tokens, 2);
+        let s = cache.borrow().stats();
+        assert_eq!((s.hits, s.misses, s.saved_tokens), (1, 1, 2));
     }
 
     #[test]

@@ -208,6 +208,36 @@ impl Manifest {
         out
     }
 
+    /// Resume prefix chunk lengths compiled for `model` (ascending): every
+    /// `P` with a `{model}_prefill_resume{P}` manifest entry. Empty for
+    /// pre-resume artifact sets — callers fall back to cold prefill.
+    pub fn resume_chunks(&self, model: &str) -> Vec<usize> {
+        let prefix = format!("{model}_prefill_resume");
+        let mut out: Vec<usize> = self
+            .artifacts
+            .keys()
+            .filter_map(|name| name.strip_prefix(&prefix)?.parse().ok())
+            .filter(|&p| p > 0)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Resume prefix chunk lengths compiled for `model`'s slot-batched
+    /// prefill at bucket `batch` (ascending): every `P` with a
+    /// `{model}_prefill_scatter_resume{batch}_{P}` manifest entry.
+    pub fn batch_resume_chunks(&self, model: &str, batch: usize) -> Vec<usize> {
+        let prefix = format!("{model}_prefill_scatter_resume{batch}_");
+        let mut out: Vec<usize> = self
+            .artifacts
+            .keys()
+            .filter_map(|name| name.strip_prefix(&prefix)?.parse().ok())
+            .filter(|&p| p > 0)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
     pub fn model(&self, name: &str) -> Result<&ModelSpec> {
         self.models
             .get(name)
@@ -279,6 +309,42 @@ mod tests {
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.batch_buckets("m"), vec![4, 8]);
         assert!(m.batch_buckets("other").is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_chunks_enumerates_prefix_boundaries() {
+        let dir =
+            std::env::temp_dir().join(format!("twk-man-rc-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let art = |name: &str| {
+            format!(
+                r#"{{"name":"{name}","file":"{name}.hlo.txt",
+                    "n_weight_args":0,"untupled":true,
+                    "inputs":[{{"name":"x","shape":[4],"dtype":"float32"}}],
+                    "outputs":[{{"name":"y","shape":[4],"dtype":"float32"}}]}}"#
+            )
+        };
+        std::fs::write(
+            dir.join("manifest.json"),
+            format!(
+                r#"{{"format":"hlo-text-v1","vocab_size":8,"embed_dim":4,
+                    "models":{{}},"artifacts":[{},{},{},{},{},{}]}}"#,
+                art("m_prefill_resume128"),
+                art("m_prefill_resume64"),
+                art("m_prefill_res"), // resident prefill, not a resume: skipped
+                art("m_prefill_scatter_resume8_64"),
+                art("m_prefill_scatter_resume8_128"),
+                art("m_prefill_scatter_resume4_64"),
+            ),
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.resume_chunks("m"), vec![64, 128]);
+        assert!(m.resume_chunks("other").is_empty());
+        assert_eq!(m.batch_resume_chunks("m", 8), vec![64, 128]);
+        assert_eq!(m.batch_resume_chunks("m", 4), vec![64]);
+        assert!(m.batch_resume_chunks("m", 2).is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

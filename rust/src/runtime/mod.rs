@@ -21,6 +21,7 @@
 pub mod embedder;
 pub mod generator;
 pub mod manifest;
+pub mod prefix_cache;
 pub mod weights;
 
 use std::collections::BTreeMap;
@@ -36,6 +37,7 @@ pub use generator::{
     SubstrateBatch,
 };
 pub use manifest::{ArtifactSpec, Dtype, IoSpec, Manifest};
+pub use prefix_cache::{PrefixCache, PrefixCacheStats, PrefixHandle};
 
 /// A compiled artifact plus its resident (on-device) weight arguments.
 ///

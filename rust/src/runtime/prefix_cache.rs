@@ -1,0 +1,544 @@
+//! Cross-request KV prefix cache: a radix tree (token trie with compressed
+//! edges) mapping literal token prefixes to packed `k ‖ v ‖ tail` prefill
+//! states, so a tweak prefill whose leading tokens were already prefilled by
+//! an earlier request restores the cached K/V rows and recomputes only the
+//! suffix (`{model}_prefill_resume{P}` artifacts).
+//!
+//! Keying is the literal token sequence — prompt *structure* is irrelevant,
+//! which is what makes the tree correct under any prompt template as long
+//! as shared content tokenizes to a shared prefix. Snapshots are stored at
+//! the static chunk depths the artifacts were compiled for (the caller
+//! decides the depths; the tree is depth-agnostic), and one snapshot —
+//! a full packed post-prefill state — serves every chunk depth below its
+//! prompt length, because a resume at depth `P` reads only K/V[:, :P].
+//!
+//! Lifecycle: `lookup` returns the *deepest* stored prefix strictly shorter
+//! than the prompt and pins it (ref-counted [`PrefixHandle`], released on
+//! drop) so an in-flight session's basis state can never be evicted under
+//! it. Eviction is LRU over unpinned entries, under a byte budget
+//! (`[runtime] prefix_cache_bytes`); the budget bounds resident snapshot
+//! bytes, counting each entry at its full state size even when several
+//! chunk depths share one snapshot `Rc` (conservative, and what keeps the
+//! accounting O(1) on eviction).
+//!
+//! Single-threaded by design, like the rest of the substrate serving stack:
+//! the engine thread owns the models, so `Rc<RefCell<PrefixCache>>` is the
+//! sharing primitive (one cache per model; states of different models have
+//! different widths and must never mix).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Hit/miss/eviction counters plus saved-token accounting, surfaced through
+/// `LanguageModel::prefix_stats` into `EngineStats` and the TCP `stats`
+/// verb.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    /// Lookups that returned a pinned prefix.
+    pub hits: u64,
+    /// Lookups that found no usable prefix.
+    pub misses: u64,
+    /// Entries removed by the LRU to fit the byte budget.
+    pub evictions: u64,
+    /// Prompt tokens restored from cache instead of recomputed (sum of hit
+    /// depths).
+    pub saved_tokens: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+    /// Snapshot bytes currently resident.
+    pub bytes: usize,
+}
+
+impl PrefixCacheStats {
+    /// Combine the per-model caches for engine-level reporting.
+    pub fn merge(
+        a: Option<PrefixCacheStats>,
+        b: Option<PrefixCacheStats>,
+    ) -> Option<PrefixCacheStats> {
+        match (a, b) {
+            (None, None) => None,
+            (Some(x), None) | (None, Some(x)) => Some(x),
+            (Some(x), Some(y)) => Some(PrefixCacheStats {
+                hits: x.hits + y.hits,
+                misses: x.misses + y.misses,
+                evictions: x.evictions + y.evictions,
+                saved_tokens: x.saved_tokens + y.saved_tokens,
+                entries: x.entries + y.entries,
+                bytes: x.bytes + y.bytes,
+            }),
+        }
+    }
+}
+
+/// One compressed-edge radix-tree node. `entry` holds the snapshot stored
+/// at exactly this node's depth, if any.
+#[derive(Default)]
+struct Node {
+    edges: Vec<Edge>,
+    entry: Option<usize>,
+}
+
+struct Edge {
+    label: Vec<i32>,
+    child: usize,
+}
+
+struct Entry {
+    state: Rc<Vec<f32>>,
+    /// Token depth of this prefix (== resume chunk length).
+    depth: usize,
+    /// Owning node, so eviction can clear the back-pointer.
+    node: usize,
+    /// In-flight sessions holding a [`PrefixHandle`] to this entry.
+    pins: u32,
+    /// LRU clock value of the last lookup/insert touch.
+    last_used: u64,
+    bytes: usize,
+}
+
+/// The cache proper. Obtain handles through the `Rc<RefCell<_>>`-taking
+/// associated functions so pins can be released on handle drop.
+pub struct PrefixCache {
+    budget_bytes: usize,
+    nodes: Vec<Node>,
+    /// Slab: evicted slots are `None` and reused.
+    entries: Vec<Option<Entry>>,
+    free: Vec<usize>,
+    tick: u64,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    saved_tokens: u64,
+}
+
+impl PrefixCache {
+    pub fn new(budget_bytes: usize) -> PrefixCache {
+        PrefixCache {
+            budget_bytes,
+            nodes: vec![Node::default()],
+            entries: Vec::new(),
+            free: Vec::new(),
+            tick: 0,
+            bytes: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            saved_tokens: 0,
+        }
+    }
+
+    /// Wrap for sharing between the session layer and the backends.
+    pub fn shared(budget_bytes: usize) -> Rc<RefCell<PrefixCache>> {
+        Rc::new(RefCell::new(PrefixCache::new(budget_bytes)))
+    }
+
+    pub fn stats(&self) -> PrefixCacheStats {
+        PrefixCacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            saved_tokens: self.saved_tokens,
+            entries: self.entries.iter().flatten().count(),
+            bytes: self.bytes,
+        }
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Longest-prefix lookup: the deepest stored prefix of `ids` that is
+    /// *strictly* shorter than `ids` (a resume needs at least one suffix
+    /// token). Pins the entry; the handle unpins on drop. Counts a hit
+    /// (+ saved tokens) or a miss.
+    pub fn lookup(
+        this: &Rc<RefCell<PrefixCache>>,
+        ids: &[i32],
+    ) -> Option<PrefixHandle> {
+        Self::lookup_within(this, ids, None)
+    }
+
+    /// [`Self::lookup`] restricted to `allowed` depths — the chunk lengths
+    /// the caller's transport actually compiled resume artifacts for. A
+    /// deeper entry at an unsupported depth is passed over in favor of the
+    /// deepest *usable* one. `None` = any depth.
+    pub fn lookup_within(
+        this: &Rc<RefCell<PrefixCache>>,
+        ids: &[i32],
+        allowed: Option<&[usize]>,
+    ) -> Option<PrefixHandle> {
+        let (id, depth, state) = {
+            let mut c = this.borrow_mut();
+            match c.find(ids, allowed) {
+                Some(id) => {
+                    let tick = c.next_tick();
+                    c.hits += 1;
+                    let e = c.entries[id].as_mut().expect("live entry");
+                    e.pins += 1;
+                    e.last_used = tick;
+                    c.saved_tokens += e.depth as u64;
+                    let e = c.entries[id].as_ref().expect("live entry");
+                    (id, e.depth, Rc::clone(&e.state))
+                }
+                None => {
+                    c.misses += 1;
+                    return None;
+                }
+            }
+        };
+        Some(PrefixHandle { cache: Rc::clone(this), entry: id, depth, state })
+    }
+
+    /// Walk the tree; return the deepest live entry at depth < ids.len()
+    /// (and, when `allowed` is given, at one of the allowed depths).
+    fn find(&self, ids: &[i32], allowed: Option<&[usize]>) -> Option<usize> {
+        let mut node = 0;
+        let mut depth = 0;
+        let mut best = None;
+        loop {
+            if depth < ids.len() && allowed.is_none_or(|a| a.contains(&depth)) {
+                if let Some(id) = self.nodes[node].entry {
+                    best = Some(id);
+                }
+            }
+            if depth >= ids.len() {
+                break;
+            }
+            let Some(edge) =
+                self.nodes[node].edges.iter().find(|e| e.label[0] == ids[depth])
+            else {
+                break;
+            };
+            // The whole label must match: entries only live at node depths,
+            // so a partial-label match cannot reach one.
+            if ids.len() - depth < edge.label.len()
+                || ids[depth..depth + edge.label.len()] != edge.label[..]
+            {
+                break;
+            }
+            depth += edge.label.len();
+            node = edge.child;
+        }
+        best
+    }
+
+    /// Store a snapshot for the exact prefix `prefix` (depth =
+    /// `prefix.len()`). First writer wins: re-inserting an existing prefix
+    /// only refreshes its LRU position. Returns whether a new entry landed.
+    /// Entries wider than the whole budget are refused.
+    pub fn insert(&mut self, prefix: &[i32], state: Rc<Vec<f32>>) -> bool {
+        let bytes = state.len() * std::mem::size_of::<f32>();
+        if prefix.is_empty() || bytes > self.budget_bytes {
+            return false;
+        }
+        let node = self.node_at(prefix);
+        let tick = self.next_tick();
+        if let Some(id) = self.nodes[node].entry {
+            if let Some(e) = self.entries[id].as_mut() {
+                e.last_used = tick;
+            }
+            return false;
+        }
+        let entry = Entry {
+            state,
+            depth: prefix.len(),
+            node,
+            pins: 0,
+            last_used: tick,
+            bytes,
+        };
+        let id = match self.free.pop() {
+            Some(slot) => {
+                self.entries[slot] = Some(entry);
+                slot
+            }
+            None => {
+                self.entries.push(Some(entry));
+                self.entries.len() - 1
+            }
+        };
+        self.nodes[node].entry = Some(id);
+        self.bytes += bytes;
+        self.evict_to_budget();
+        true
+    }
+
+    /// Walk to (creating / splitting as needed) the node at exactly
+    /// `prefix`'s depth.
+    fn node_at(&mut self, prefix: &[i32]) -> usize {
+        let mut node = 0;
+        let mut i = 0;
+        while i < prefix.len() {
+            let rest = &prefix[i..];
+            let Some(ei) =
+                self.nodes[node].edges.iter().position(|e| e.label[0] == rest[0])
+            else {
+                let child = self.nodes.len();
+                self.nodes.push(Node::default());
+                self.nodes[node].edges.push(Edge { label: rest.to_vec(), child });
+                return child;
+            };
+            let label_len = self.nodes[node].edges[ei].label.len();
+            let common = self.nodes[node].edges[ei]
+                .label
+                .iter()
+                .zip(rest)
+                .take_while(|(a, b)| a == b)
+                .count();
+            if common == label_len {
+                node = self.nodes[node].edges[ei].child;
+            } else {
+                // Split the edge at the divergence point: parent -> mid
+                // keeps label[..common], mid -> old child the remainder.
+                let mid = self.nodes.len();
+                self.nodes.push(Node::default());
+                let edge = &mut self.nodes[node].edges[ei];
+                let tail = edge.label.split_off(common);
+                let old_child = std::mem::replace(&mut edge.child, mid);
+                self.nodes[mid].edges.push(Edge { label: tail, child: old_child });
+                node = mid;
+            }
+            i += common;
+        }
+        node
+    }
+
+    /// Evict least-recently-used *unpinned* entries until within budget.
+    /// Pinned entries are invisible to the LRU scan — the pinning
+    /// invariant — so the cache can transiently exceed its budget while
+    /// every resident prefix is in flight.
+    fn evict_to_budget(&mut self) {
+        while self.bytes > self.budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter_map(|(id, e)| e.as_ref().map(|e| (id, e)))
+                .filter(|(_, e)| e.pins == 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(id, _)| id);
+            let Some(id) = victim else {
+                break;
+            };
+            let e = self.entries[id].take().expect("victim is live");
+            self.nodes[e.node].entry = None;
+            self.bytes -= e.bytes;
+            self.free.push(id);
+            self.evictions += 1;
+        }
+    }
+
+    fn unpin(&mut self, id: usize) {
+        if let Some(e) = self.entries[id].as_mut() {
+            e.pins = e.pins.saturating_sub(1);
+        }
+        // A release may make room the last over-budget insert could not.
+        self.evict_to_budget();
+    }
+}
+
+/// A pinned prefix snapshot held by an in-flight session. Keeps the state
+/// `Rc` alive and the entry unevictable until dropped.
+pub struct PrefixHandle {
+    cache: Rc<RefCell<PrefixCache>>,
+    entry: usize,
+    depth: usize,
+    state: Rc<Vec<f32>>,
+}
+
+impl PrefixHandle {
+    /// Token depth of the restored prefix (the resume chunk length).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// The packed `k ‖ v ‖ tail` state to feed the resume artifact.
+    pub fn state(&self) -> &[f32] {
+        &self.state
+    }
+}
+
+impl Drop for PrefixHandle {
+    fn drop(&mut self) {
+        self.cache.borrow_mut().unpin(self.entry);
+    }
+}
+
+impl std::fmt::Debug for PrefixHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PrefixHandle")
+            .field("entry", &self.entry)
+            .field("depth", &self.depth)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(n: usize, fill: f32) -> Rc<Vec<f32>> {
+        Rc::new(vec![fill; n])
+    }
+
+    fn toks(ids: &[i32]) -> Vec<i32> {
+        ids.to_vec()
+    }
+
+    #[test]
+    fn longest_prefix_lookup_is_strict_and_deepest() {
+        let c = PrefixCache::shared(1 << 20);
+        c.borrow_mut().insert(&toks(&[1, 2, 3]), state(8, 3.0));
+        c.borrow_mut().insert(&toks(&[1, 2, 3, 4, 5]), state(8, 5.0));
+
+        let h = PrefixCache::lookup(&c, &[1, 2, 3, 4, 5, 9]).expect("deep hit");
+        assert_eq!(h.depth(), 5);
+        assert_eq!(h.state()[0], 5.0);
+        drop(h);
+
+        let h = PrefixCache::lookup(&c, &[1, 2, 3, 9]).expect("shallow hit");
+        assert_eq!(h.depth(), 3);
+        assert_eq!(h.state()[0], 3.0);
+        drop(h);
+
+        // Exact-length match is useless for a resume (no suffix): strict.
+        assert!(PrefixCache::lookup(&c, &[1, 2, 3]).is_none());
+        // Deeper entry unusable, shallower one still strict-shorter.
+        let h = PrefixCache::lookup(&c, &[1, 2, 3, 4, 5]).expect("fallback");
+        assert_eq!(h.depth(), 3);
+        drop(h);
+        assert!(PrefixCache::lookup(&c, &[2, 2, 3, 4]).is_none());
+
+        let s = c.borrow().stats();
+        assert_eq!(s.hits, 3);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.saved_tokens, 5 + 3 + 3);
+        assert_eq!(s.entries, 2);
+    }
+
+    #[test]
+    fn lookup_within_restricts_to_allowed_depths() {
+        // A transport only resumes at its compiled chunk lengths: a deeper
+        // entry at an unsupported depth must be passed over.
+        let c = PrefixCache::shared(1 << 20);
+        c.borrow_mut().insert(&toks(&[1, 2]), state(4, 2.0));
+        c.borrow_mut().insert(&toks(&[1, 2, 3, 4]), state(4, 4.0));
+        let h = PrefixCache::lookup_within(&c, &[1, 2, 3, 4, 5], Some(&[2])).unwrap();
+        assert_eq!((h.depth(), h.state()[0]), (2, 2.0));
+        drop(h);
+        assert!(PrefixCache::lookup_within(&c, &[1, 2, 3, 4, 5], Some(&[8])).is_none());
+        let h = PrefixCache::lookup_within(&c, &[1, 2, 3, 4, 5], None).unwrap();
+        assert_eq!(h.depth(), 4);
+        drop(h);
+        let s = c.borrow().stats();
+        assert_eq!((s.hits, s.misses, s.saved_tokens), (2, 1, 6));
+    }
+
+    #[test]
+    fn edge_splitting_keeps_divergent_prefixes_apart() {
+        let c = PrefixCache::shared(1 << 20);
+        c.borrow_mut().insert(&toks(&[1, 2, 3, 4]), state(4, 1.0));
+        // Diverges mid-edge: forces a split at depth 2.
+        c.borrow_mut().insert(&toks(&[1, 2, 9, 9]), state(4, 2.0));
+        c.borrow_mut().insert(&toks(&[1, 2]), state(4, 0.5));
+
+        let h = PrefixCache::lookup(&c, &[1, 2, 3, 4, 7]).unwrap();
+        assert_eq!((h.depth(), h.state()[0]), (4, 1.0));
+        drop(h);
+        let h = PrefixCache::lookup(&c, &[1, 2, 9, 9, 7]).unwrap();
+        assert_eq!((h.depth(), h.state()[0]), (4, 2.0));
+        drop(h);
+        let h = PrefixCache::lookup(&c, &[1, 2, 8]).unwrap();
+        assert_eq!((h.depth(), h.state()[0]), (2, 0.5));
+    }
+
+    #[test]
+    fn reinsert_refreshes_but_does_not_replace() {
+        let c = PrefixCache::shared(1 << 20);
+        assert!(c.borrow_mut().insert(&toks(&[1, 2]), state(4, 1.0)));
+        assert!(!c.borrow_mut().insert(&toks(&[1, 2]), state(4, 9.0)));
+        let h = PrefixCache::lookup(&c, &[1, 2, 3]).unwrap();
+        assert_eq!(h.state()[0], 1.0, "first writer wins");
+        let s = c.borrow().stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.bytes, 16);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_under_byte_budget() {
+        // Budget fits exactly two 40-byte entries.
+        let c = PrefixCache::shared(80);
+        c.borrow_mut().insert(&toks(&[1]), state(10, 1.0));
+        c.borrow_mut().insert(&toks(&[2]), state(10, 2.0));
+        // Touch [1] so [2] becomes the LRU victim.
+        drop(PrefixCache::lookup(&c, &[1, 7]).unwrap());
+        c.borrow_mut().insert(&toks(&[3]), state(10, 3.0));
+
+        assert!(PrefixCache::lookup(&c, &[1, 7]).is_some());
+        assert!(PrefixCache::lookup(&c, &[2, 7]).is_none(), "LRU victim");
+        assert!(PrefixCache::lookup(&c, &[3, 7]).is_some());
+        let s = c.borrow().stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.bytes, 80);
+    }
+
+    #[test]
+    fn oversized_entry_is_refused() {
+        let c = PrefixCache::shared(16);
+        assert!(!c.borrow_mut().insert(&toks(&[1]), state(10, 1.0)));
+        assert_eq!(c.borrow().stats().bytes, 0);
+    }
+
+    #[test]
+    fn pinned_entries_survive_eviction_pressure() {
+        let c = PrefixCache::shared(40);
+        c.borrow_mut().insert(&toks(&[1]), state(10, 1.0));
+        let pinned = PrefixCache::lookup(&c, &[1, 7]).expect("pin it");
+        // Over budget with the pinned entry resident: the new entry is the
+        // only unpinned one, so IT gets evicted, never the pinned basis.
+        c.borrow_mut().insert(&toks(&[2]), state(10, 2.0));
+        assert!(PrefixCache::lookup(&c, &[2, 7]).is_none());
+        assert_eq!(pinned.state()[0], 1.0);
+
+        // Releasing the pin lets the next pressure evict it normally.
+        drop(pinned);
+        c.borrow_mut().insert(&toks(&[3]), state(10, 3.0));
+        assert!(PrefixCache::lookup(&c, &[3, 7]).is_some());
+        assert!(PrefixCache::lookup(&c, &[1, 7]).is_none());
+    }
+
+    #[test]
+    fn everything_pinned_transiently_exceeds_budget_then_recovers() {
+        let c = PrefixCache::shared(40);
+        c.borrow_mut().insert(&toks(&[1]), state(10, 1.0));
+        let pin = PrefixCache::lookup(&c, &[1, 9]).unwrap();
+        c.borrow_mut().insert(&toks(&[2]), state(5, 2.0));
+        let pin2 = PrefixCache::lookup(&c, &[2, 9]).unwrap();
+        assert!(c.borrow().stats().bytes > 40, "both pinned: over budget");
+        drop(pin);
+        // Unpin triggers deferred eviction back under budget.
+        assert!(c.borrow().stats().bytes <= 40);
+        drop(pin2);
+    }
+
+    #[test]
+    fn one_snapshot_serves_multiple_chunk_depths() {
+        // The generator registers a single post-prefill snapshot Rc at
+        // every supported chunk boundary below the prompt length.
+        let c = PrefixCache::shared(1 << 20);
+        let snap = state(16, 7.0);
+        let ids: Vec<i32> = (0..6).collect();
+        c.borrow_mut().insert(&ids[..2], Rc::clone(&snap));
+        c.borrow_mut().insert(&ids[..4], Rc::clone(&snap));
+        let h = PrefixCache::lookup(&c, &ids[..5]).unwrap();
+        assert_eq!(h.depth(), 4);
+        drop(h);
+        // A prompt diverging after depth 2 still reuses the shallow entry.
+        let h = PrefixCache::lookup(&c, &[0, 1, 99, 99]).unwrap();
+        assert_eq!(h.depth(), 2);
+        assert_eq!(h.state()[0], 7.0);
+    }
+}

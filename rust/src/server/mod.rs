@@ -241,6 +241,13 @@ fn process_line(line: &str, handle: &EngineHandle) -> Json {
                 ("coalesced", Json::num(s.coalesced as f64)),
                 ("batched_steps", Json::num(s.batched_steps as f64)),
                 ("mean_active_slots", Json::num(s.mean_active_slots)),
+                ("prefix_hits", Json::num(s.prefix_hits as f64)),
+                ("prefix_misses", Json::num(s.prefix_misses as f64)),
+                ("prefix_evictions", Json::num(s.prefix_evictions as f64)),
+                (
+                    "prefix_saved_tokens",
+                    Json::num(s.prefix_saved_tokens as f64),
+                ),
                 ("cost_dollars", Json::num(s.cost_dollars)),
                 ("baseline_dollars", Json::num(s.baseline_dollars)),
                 ("latency_table", Json::s(s.latency_table)),

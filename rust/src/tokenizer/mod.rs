@@ -114,8 +114,42 @@ impl Tokenizer {
             }
             ids.extend(self.encode(seg));
         }
-        // Keep the head: the tweak template puts the *new query* first, and
-        // truncation must never cut it in favour of the cached tail.
+        // Keep the head: for plain prompts the leading segment carries the
+        // query, and truncation must never cut it in favour of the tail.
+        // Tweak prompts (query last) go through `encode_prompt_suffixed`,
+        // which reserves tail space instead.
+        ids.truncate(max_len);
+        let len = ids.len();
+        ids.resize(max_len, PAD_ID);
+        (ids, len)
+    }
+
+    /// Encode a prompt whose head must be bit-stable and whose tail must
+    /// never be truncated away: BOS + `head_ids` + (SEP + segment) for each
+    /// prefix segment, hard-truncated at `max_len - suffix_reserve`, then
+    /// SEP + suffix, truncated to `max_len`. The truncation boundary for the
+    /// prefix is FIXED (independent of the suffix length), so the prefix
+    /// token ids are a pure function of `head_ids` + `prefix_segments` —
+    /// the invariant the cross-request KV prefix cache keys on. Returns
+    /// (ids padded to max_len, length).
+    pub fn encode_prompt_suffixed(
+        &self,
+        head_ids: &[i32],
+        prefix_segments: &[&str],
+        suffix: &str,
+        max_len: usize,
+        suffix_reserve: usize,
+    ) -> (Vec<i32>, usize) {
+        assert!(suffix_reserve < max_len);
+        let mut ids = vec![BOS_ID];
+        ids.extend_from_slice(head_ids);
+        for seg in prefix_segments {
+            ids.push(SEP_ID);
+            ids.extend(self.encode(seg));
+        }
+        ids.truncate(max_len - suffix_reserve);
+        ids.push(SEP_ID);
+        ids.extend(self.encode(suffix));
         ids.truncate(max_len);
         let len = ids.len();
         ids.resize(max_len, PAD_ID);
@@ -224,6 +258,36 @@ mod tests {
         assert_eq!(ids[0], BOS_ID);
         assert!(ids[..len].contains(&SEP_ID));
         assert!(len <= 32);
+    }
+
+    #[test]
+    fn suffixed_prompt_prefix_is_stable_across_suffixes() {
+        let t = tok();
+        let head = t.encode("tailor the cached response");
+        let long: String = (0..200).map(|i| format!("word{i} ")).collect();
+        let segs: [&str; 2] = [&long, "cached reply"];
+        let (a, _) = t.encode_prompt_suffixed(&head, &segs, "query one", 64, 16);
+        let (b, _) = t.encode_prompt_suffixed(&head, &segs, "different two", 64, 16);
+        // Prefix region identical regardless of suffix; SEP sits exactly at
+        // the reserved boundary; suffix tokens differ after it.
+        assert_eq!(a[..48], b[..48]);
+        assert_eq!(a[48], SEP_ID);
+        assert_eq!(b[48], SEP_ID);
+        assert_ne!(a[49..], b[49..]);
+        assert_eq!(a[0], BOS_ID);
+    }
+
+    #[test]
+    fn suffixed_prompt_short_prefix_keeps_suffix_adjacent() {
+        let t = tok();
+        // Prefix shorter than the boundary: no forced gap, suffix follows
+        // directly after its SEP and the rest is padding.
+        let (ids, len) = t.encode_prompt_suffixed(&[], &["cq"], "new query", 32, 8);
+        assert_eq!(ids[0], BOS_ID);
+        assert_eq!(ids[1], SEP_ID); // before "cq"
+        assert_eq!(ids[3], SEP_ID); // before the suffix
+        assert_eq!(len, 6);
+        assert!(ids[len..].iter().all(|&x| x == PAD_ID));
     }
 
     #[test]

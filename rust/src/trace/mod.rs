@@ -53,7 +53,10 @@ pub enum Stage {
     /// Scheduler admission queue (or, for coalesced followers, the wait for
     /// the leader's generation).
     QueueWait,
-    /// Session start: prompt build + prefill dispatch.
+    /// Session start: prompt build + prefill dispatch. `value` = prompt
+    /// tokens actually recomputed (total minus tokens restored from the
+    /// cross-request KV prefix cache; equal to the prompt length on a cold
+    /// prefill).
     Prefill,
     /// Generation: first decode step → EOS. `value` = generator-reported
     /// decode compute micros (the wall interval additionally contains
@@ -182,6 +185,8 @@ pub struct TraceBuilder {
     similarity: f32,
     prefill_us: u64,
     decode_us: u64,
+    prefill_tokens: u32,
+    prefill_recomputed: u32,
     rounds: u32,
 }
 
@@ -205,6 +210,8 @@ impl TraceBuilder {
             similarity: f32::NAN,
             prefill_us: 0,
             decode_us: 0,
+            prefill_tokens: 0,
+            prefill_recomputed: 0,
             rounds: 0,
         }
     }
@@ -220,6 +227,8 @@ impl TraceBuilder {
             similarity: f32::NAN,
             prefill_us: 0,
             decode_us: 0,
+            prefill_tokens: 0,
+            prefill_recomputed: 0,
             rounds: 0,
         }
     }
@@ -292,6 +301,26 @@ impl TraceBuilder {
             self.decode_us = decode_us as u64;
         }
     }
+
+    /// Prompt token accounting for the prefill: `total` prompt tokens, of
+    /// which `recomputed` actually ran through the model (the rest were
+    /// restored from the KV prefix cache).
+    pub fn set_prefill_tokens(&mut self, total: usize, recomputed: usize) {
+        if self.enabled {
+            self.prefill_tokens = total as u32;
+            self.prefill_recomputed = recomputed as u32;
+        }
+    }
+
+    /// Set the payload of the most recent `stage` span — for values only
+    /// known after the interval was recorded (the prefill span is stamped
+    /// at session start; its recomputed-token count arrives with the
+    /// finished response).
+    pub fn set_span_value(&mut self, stage: Stage, value: f32) {
+        if let Some(s) = self.spans.iter_mut().rev().find(|s| s.stage == stage) {
+            s.value = value;
+        }
+    }
 }
 
 /// A completed, immutable trace.
@@ -309,6 +338,11 @@ pub struct FinishedTrace {
     pub decode_rounds: u32,
     pub gen_prefill_us: u64,
     pub gen_decode_us: u64,
+    /// Prompt tokens of the generation (0 on non-generating pathways).
+    pub prefill_tokens: u32,
+    /// Prompt tokens recomputed; `< prefill_tokens` when the KV prefix
+    /// cache restored the difference.
+    pub prefill_recomputed: u32,
     /// Spans sorted by (start, depth): parents precede their children.
     pub spans: Vec<Span>,
 }
@@ -351,6 +385,11 @@ impl FinishedTrace {
             ("decode_rounds", Json::num(self.decode_rounds as f64)),
             ("gen_prefill_us", Json::num(self.gen_prefill_us as f64)),
             ("gen_decode_us", Json::num(self.gen_decode_us as f64)),
+            ("prefill_tokens", Json::num(self.prefill_tokens as f64)),
+            (
+                "prefill_recomputed",
+                Json::num(self.prefill_recomputed as f64),
+            ),
             ("spans", Json::Arr(spans)),
         ])
     }
@@ -477,6 +516,8 @@ impl TraceHub {
             decode_rounds: tb.rounds,
             gen_prefill_us: tb.prefill_us,
             gen_decode_us: tb.decode_us,
+            prefill_tokens: tb.prefill_tokens,
+            prefill_recomputed: tb.prefill_recomputed,
             spans,
         };
         if let Some(w) = &mut self.export {

@@ -120,6 +120,7 @@ fn tweak_prompt_carries_cached_pair() {
             Ok(LlmResponse {
                 text: "t".into(),
                 usage: Default::default(),
+                restored_tokens: 0,
                 prefill_micros: 0,
                 decode_micros: 0,
             })

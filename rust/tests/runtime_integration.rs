@@ -244,6 +244,56 @@ fn batched_decode_fallback_when_artifacts_absent() {
 }
 
 #[test]
+fn prefix_resumed_prefill_matches_cold() {
+    // The KV-prefix-cache identity gate on the real substrate: the first
+    // tweak against a cached pair runs cold and snapshots its prefix state;
+    // a second tweak with a different new-query suffix must restore that
+    // snapshot and still emit a bit-identical response to a cache-less run.
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir, &[]).unwrap();
+    {
+        let g = Generator::new(&rt, "small").unwrap();
+        if !g.resident_available() || g.resume_chunks().is_empty() {
+            eprintln!("SKIP: artifact set predates prefill resume");
+            return;
+        }
+    }
+    use tweakllm::llm::{LanguageModel, SubstrateLlm, TweakPrompt};
+    let params = SamplingParams { temperature: 0.9, top_k: 7, max_new_tokens: 8 };
+    // A long cached response pushes the stable prefix past every resume
+    // chunk depth, so the second tweak restores at the deepest one.
+    let resp: String = (0..120).map(|i| format!("w{i}")).collect::<Vec<_>>().join(" ");
+    let prompt = |q: &str| TweakPrompt {
+        new_query: q.into(),
+        cached_query: "why is coffee good for health?".into(),
+        cached_response: resp.clone(),
+    };
+    let queries = ["why is coffee great for health?", "is coffee actually good for you"];
+    let cold: Vec<_> = {
+        let mut llm = SubstrateLlm::new(&rt, "small", params, 7).unwrap();
+        queries.iter().map(|&q| llm.tweak(&prompt(q)).unwrap()).collect()
+    };
+    let mut llm =
+        SubstrateLlm::new(&rt, "small", params, 7).unwrap().with_prefix_cache(64 << 20);
+    let resumed: Vec<_> = queries.iter().map(|&q| llm.tweak(&prompt(q)).unwrap()).collect();
+    for (i, (c, r)) in cold.iter().zip(&resumed).enumerate() {
+        assert_eq!(c.text, r.text, "query {i}: resumed prefill diverged from cold");
+        assert_eq!(c.usage.output_tokens, r.usage.output_tokens, "query {i}");
+    }
+    // The cache-less run never restores; the cached run must have resumed
+    // on the second tweak (same prefix, different suffix).
+    assert!(cold.iter().all(|c| c.restored_tokens == 0));
+    assert!(
+        resumed[1].restored_tokens > 0,
+        "second tweak must report restored prefix tokens"
+    );
+    let stats = llm.prefix_stats().expect("prefix cache enabled");
+    assert!(stats.hits >= 1, "stats: {stats:?}");
+    assert!(stats.saved_tokens > 0, "stats: {stats:?}");
+    assert!(stats.entries > 0 && stats.bytes > 0, "stats: {stats:?}");
+}
+
+#[test]
 fn artifact_router_full_pipeline() {
     let dir = require_artifacts!();
     let rt = Runtime::load(&dir, &[]).unwrap();

@@ -314,6 +314,7 @@ impl LlmSession for SeededBatchSession {
         Ok(LlmResponse {
             text: format!("[{}] {}", self.prefix, s.emitted.join(" ")),
             usage: TokenUsage { input_tokens: 1, output_tokens: self.steps },
+            restored_tokens: 0,
             prefill_micros: 0,
             decode_micros: 0,
         })
@@ -351,6 +352,7 @@ impl LlmSession for SeededSession {
         Ok(LlmResponse {
             text: format!("[{}] {}", self.prefix, self.emitted.join(" ")),
             usage: TokenUsage { input_tokens: 1, output_tokens: self.steps },
+            restored_tokens: 0,
             prefill_micros: 0,
             decode_micros: 0,
         })
@@ -499,6 +501,90 @@ fn batched_decode_streams_match_per_session() {
     let batched = run_workload(true, 3);
     let per_session = run_workload(true, 0);
     assert_eq!(batched, per_session);
+}
+
+/// The KV-prefix-cache identity gate through the engine: a mixed workload of
+/// concurrent tweak-hits and fresh misses must produce responses bitwise
+/// identical with prefix reuse on vs off, while the reuse-on run counts
+/// hits/misses/saved-tokens in `EngineStats`. The mock's reuse simulation
+/// shares the real cache's keying (literal token prefixes at chunk depths
+/// over the suffixed tweak encoding), so a text divergence here means the
+/// prompt layout leaked the suffix into the prefix key.
+#[test]
+fn prefix_reuse_identity_and_stats_through_engine() {
+    let run = |reuse: bool| {
+        let cfg = base_config();
+        let small = if reuse {
+            MockLlm::new("small").with_prefix_reuse(&[32], 16, Duration::from_micros(100))
+        } else {
+            MockLlm::new("small")
+        };
+        let (engine, handle) = start_engine(cfg, MockLlm::new("big"), small);
+        // Primes: two disjoint cache entries for the tweak path to target.
+        for i in 0..2 {
+            let q = format!("c{i}a c{i}b c{i}c c{i}d c{i}e c{i}f");
+            assert_eq!(handle.request(&q).unwrap().pathway, Pathway::Miss, "prime {q}");
+        }
+        // Concurrent mix: paraphrases of both primes (5/6 words shared ->
+        // tweak-hit, all sharing the prime's cached pair and hence its
+        // prefix key) interleaved with fresh disjoint misses.
+        let mut queries = Vec::new();
+        for t in 0..3 {
+            for i in 0..2 {
+                queries.push(format!("c{i}a c{i}b c{i}c c{i}d c{i}e x{t}{i}"));
+            }
+            queries.push(format!("m{t}a m{t}b m{t}c m{t}d m{t}e m{t}f"));
+        }
+        let mut joins = Vec::new();
+        for chunk in queries.chunks(3) {
+            let h = handle.clone();
+            let chunk: Vec<String> = chunk.to_vec();
+            joins.push(std::thread::spawn(move || {
+                chunk
+                    .into_iter()
+                    .map(|q| {
+                        let r = h.request(&q).unwrap();
+                        (q, r.pathway, r.text)
+                    })
+                    .collect::<Vec<_>>()
+            }));
+        }
+        let mut results = Vec::new();
+        for j in joins {
+            for (q, pathway, text) in j.join().unwrap() {
+                if q.starts_with('c') {
+                    assert_eq!(pathway, Pathway::TweakHit, "paraphrase {q} must tweak");
+                } else {
+                    assert_eq!(pathway, Pathway::Miss, "fresh {q} must miss");
+                }
+                results.push((q, text));
+            }
+        }
+        // A final sequential tweak: by now the prefix is guaranteed seeded,
+        // so with reuse on this one must restore rather than recompute.
+        let last = handle.request("c0a c0b c0c c0d c0e zfin").unwrap();
+        assert_eq!(last.pathway, Pathway::TweakHit);
+        results.push(("c0a c0b c0c c0d c0e zfin".to_string(), last.text));
+        let stats = handle.stats().unwrap();
+        engine.shutdown();
+        results.sort();
+        (results, stats)
+    };
+    let (on, on_stats) = run(true);
+    let (off, off_stats) = run(false);
+    assert_eq!(on, off, "prefix reuse must not change a single response byte");
+    // 7 tweaks over 2 distinct cached pairs: the first probe per pair seeds
+    // (a miss), every later one restores the 32-token prefix — regardless of
+    // the order the concurrent threads arrive in.
+    assert_eq!(on_stats.prefix_hits, 5, "hits: {on_stats:?}");
+    assert_eq!(on_stats.prefix_misses, 2, "misses: {on_stats:?}");
+    assert_eq!(on_stats.prefix_saved_tokens, 5 * 32);
+    assert_eq!(on_stats.prefix_evictions, 0);
+    assert_eq!(
+        off_stats.prefix_hits + off_stats.prefix_misses,
+        0,
+        "reuse off must never touch a prefix cache"
+    );
 }
 
 /// Engine-level occupancy observability: concurrent batched sessions must
