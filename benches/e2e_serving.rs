@@ -19,6 +19,11 @@
 //! with it on, tweak sessions interleave and overtake. The run asserts the
 //! tweak-hit p99 drops.
 //!
+//! A **TTFT tier** measures submit → first non-empty token delta per
+//! pathway over the streaming transport (`request_streaming`), paced so the
+//! model tier dominates: the run asserts the tweak-hit p50 TTFT beats the
+//! miss p50 TTFT (the streaming payoff of serving from cache).
+//!
 //! `cargo bench --bench e2e_serving [-- --requests 256 --threads 4 --max-new 16]`
 
 use std::time::{Duration, Instant};
@@ -26,7 +31,7 @@ use std::time::{Duration, Instant};
 use tweakllm::baselines::MockLlm;
 use tweakllm::bench::{bench_args, load_runtime, Table};
 use tweakllm::config::{Config, IndexKindConfig};
-use tweakllm::coordinator::{Engine, Pathway, Router};
+use tweakllm::coordinator::{Engine, Pathway, Router, StreamEvent};
 use tweakllm::datasets::{ChatTrace, TraceProfile};
 use tweakllm::runtime::{Generator, NativeBowEmbedder, SamplingParams, TextEmbedder};
 use tweakllm::server::pathway_str;
@@ -133,6 +138,69 @@ fn run_mixed(
     Ok((lat_by_path, qps))
 }
 
+/// Time-to-first-token per pathway over the streaming transport: submit →
+/// first non-empty delta, sequential requests against paced mocks (big
+/// 3ms/step, small 500µs/step) so the model tier — not queueing — sets the
+/// first-token latency. Returns TTFT samples (ms) keyed by pathway.
+fn run_ttft(
+    n_per_path: usize,
+) -> anyhow::Result<std::collections::HashMap<&'static str, Vec<f64>>> {
+    let mut cfg = Config::paper();
+    cfg.index.kind = IndexKindConfig::Flat;
+    cfg.exact_match_fast_path = true;
+    let cfg_engine = cfg.clone();
+    let (engine, handle) = Engine::start(move || {
+        let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+        let mut big = MockLlm::new("big");
+        big.steps = 16;
+        big.step_delay = Duration::from_millis(3);
+        let mut small = MockLlm::new("small");
+        small.steps = 8;
+        small.step_delay = Duration::from_micros(500);
+        Ok(Router::with_models(embedder, Box::new(big), Box::new(small), cfg_engine))
+    })?;
+    // Primes: one cache entry per topic (disjoint word sets, as in the
+    // mixed workload) so the measured paraphrases tweak their own prime.
+    for i in 0..n_per_path {
+        handle.request(&format!("ttft{i}a ttft{i}b ttft{i}c ttft{i}d ttft{i}e ttft{i}f"))?;
+    }
+    let mut queries = Vec::new();
+    for i in 0..n_per_path {
+        // paraphrase (5/6 shared words) → tweak, repeat → exact, cold → miss
+        queries.push(format!("ttft{i}a ttft{i}b ttft{i}c ttft{i}d ttft{i}e vary{i}"));
+        queries.push(format!("ttft{i}a ttft{i}b ttft{i}c ttft{i}d ttft{i}e ttft{i}f"));
+        queries.push(format!("cold{i}a cold{i}b cold{i}c cold{i}d cold{i}e"));
+    }
+    let mut ttft_by_path: std::collections::HashMap<&'static str, Vec<f64>> =
+        Default::default();
+    for q in &queries {
+        let t0 = Instant::now();
+        let rx = handle.request_streaming(q)?;
+        let mut first = None;
+        let mut pathway = None;
+        for ev in rx.iter() {
+            match ev {
+                StreamEvent::Delta(d) => {
+                    if !d.is_empty() && first.is_none() {
+                        first = Some(t0.elapsed());
+                    }
+                }
+                StreamEvent::Done(r) => {
+                    pathway = Some(r.pathway);
+                    break;
+                }
+                StreamEvent::Error(m) => anyhow::bail!("ttft stream error: {m}"),
+            }
+        }
+        let (Some(first), Some(p)) = (first, pathway) else {
+            anyhow::bail!("stream for {q:?} ended without text or completion");
+        };
+        ttft_by_path.entry(pathway_str(p)).or_default().push(first.as_secs_f64() * 1e3);
+    }
+    engine.shutdown();
+    Ok(ttft_by_path)
+}
+
 fn main() -> anyhow::Result<()> {
     let args = bench_args();
     let n_requests = args.usize("requests", 256)?;
@@ -226,6 +294,48 @@ fn main() -> anyhow::Result<()> {
     let off_obj =
         Json::obj_from(vec![("qps", Json::num(qps_off)), ("pathways", Json::Arr(rows_off))]);
     let mixed_json = Json::obj_from(vec![("scheduler_on", on_obj), ("scheduler_off", off_obj)]);
+
+    // ---- TTFT per pathway over the streaming transport ----
+    let ttft_n = args.usize("ttft", 32)?.max(1);
+    eprintln!("[e2e] ttft: {ttft_n} streamed requests per pathway...");
+    let ttft_by_path = run_ttft(ttft_n)?;
+    let mut ttft_table = Table::new(
+        "Streaming TTFT (submit → first token) — per-pathway (ms)",
+        &["pathway", "n", "ttft_p50", "ttft_p99"],
+    );
+    let mut ttft_rows = Vec::new();
+    for path in ["exact_hit", "tweak_hit", "miss"] {
+        if let Some(samples) = ttft_by_path.get(path) {
+            let s = Summary::of(samples);
+            ttft_table.push(vec![
+                path.to_string(),
+                s.n.to_string(),
+                format!("{:.2}", s.p50),
+                format!("{:.2}", s.p99),
+            ]);
+            ttft_rows.push(Json::obj_from(vec![
+                ("pathway", Json::s(path)),
+                ("n", Json::num(s.n as f64)),
+                ("ttft_p50_ms", Json::num(s.p50)),
+                ("ttft_p99_ms", Json::num(s.p99)),
+            ]));
+        }
+    }
+    println!("{}", ttft_table.render());
+    let tweak_ttft = ttft_by_path.get("tweak_hit").map(|v| Summary::of(v).p50);
+    let miss_ttft = ttft_by_path.get("miss").map(|v| Summary::of(v).p50);
+    if let (Some(t), Some(m)) = (tweak_ttft, miss_ttft) {
+        println!(
+            "ttft p50: tweak {t:.2}ms vs miss {m:.2}ms  ->  {:.1}x",
+            m / t.max(1e-9)
+        );
+        // The streaming payoff of serving from cache: first token from the
+        // Small-LLM tweak must beat the Big-LLM miss.
+        assert!(
+            t < m,
+            "hit pathway must reach first token sooner: tweak {t:.2}ms vs miss {m:.2}ms"
+        );
+    }
 
     // ---- substrate tier: compiled artifacts (skipped when absent) ----
     let mut substrate_json: Option<Json> = None;
@@ -336,6 +446,7 @@ fn main() -> anyhow::Result<()> {
         ("mean_batch_size", Json::num(stats.mean_batch_size)),
         ("pathways_mock", Json::Arr(mock_rows)),
         ("mixed", mixed_json),
+        ("ttft", Json::Arr(ttft_rows)),
     ];
     if let Some(s) = substrate_json {
         top.push(("substrate", s));

@@ -1,0 +1,150 @@
+//! SSE streaming client exemplar for the OpenAI-compatible front end —
+//! plus a mock-backed `--serve` mode so the whole loop runs without
+//! compiled artifacts (CI smoke uses it).
+//!
+//! Serve (mock models, no artifacts):
+//!   cargo run --release --example stream_chat -- --serve --http-port 7412
+//!
+//! Stream a completion (prints deltas as they arrive + a TTFT summary):
+//!   cargo run --release --example stream_chat -- \
+//!       --addr 127.0.0.1:7412 "why do cats purr so much?"
+//!
+//! The same endpoint answers curl:
+//!   curl -N http://127.0.0.1:7412/v1/chat/completions \
+//!     -d '{"stream":true,"messages":[{"role":"user","content":"hi"}]}'
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use tweakllm::baselines::MockLlm;
+use tweakllm::config::{Config, IndexKindConfig};
+use tweakllm::coordinator::{Engine, Router};
+use tweakllm::runtime::{NativeBowEmbedder, TextEmbedder};
+use tweakllm::server::HttpServer;
+use tweakllm::util::{Args, Json};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    if args.has("serve") {
+        return serve(&args);
+    }
+    let addr = args.str("addr", "127.0.0.1:7412");
+    let prompt = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "why is coffee good for health?".to_string());
+    stream_once(&addr, &prompt)
+}
+
+/// Mock-backed engine + HTTP front end: the CI smoke target. Paced decode
+/// so streaming is observable, deterministic text so reruns compare.
+fn serve(args: &Args) -> Result<()> {
+    let port = args.usize("http-port", 7412)?;
+    let (_engine, handle) = Engine::start(|| {
+        let mut cfg = Config::paper();
+        cfg.index.kind = IndexKindConfig::Flat;
+        cfg.exact_match_fast_path = true;
+        let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+        let big = MockLlm::new("big").with_pace(16, std::time::Duration::from_millis(5));
+        let small = MockLlm::new("small").with_pace(8, std::time::Duration::from_millis(5));
+        Ok(Router::with_models(embedder, Box::new(big), Box::new(small), cfg))
+    })?;
+    let http = HttpServer::bind(&format!("127.0.0.1:{port}"), handle)?;
+    println!(
+        "listening on http://{}/v1/chat/completions (mock models)",
+        http.local_addr()?
+    );
+    http.serve()
+}
+
+/// POST one streamed completion and print deltas as they arrive.
+fn stream_once(addr: &str, prompt: &str) -> Result<()> {
+    let body = Json::obj_from(vec![
+        ("model", Json::s("tweakllm")),
+        ("stream", Json::Bool(true)),
+        (
+            "messages",
+            Json::Arr(vec![Json::obj_from(vec![
+                ("role", Json::s("user")),
+                ("content", Json::s(prompt)),
+            ])]),
+        ),
+    ])
+    .to_string();
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true).ok();
+    write!(
+        stream,
+        "POST /v1/chat/completions HTTP/1.1\r\nHost: {addr}\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+
+    let t0 = Instant::now();
+    let mut ttft = None;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    // Status line + headers (the server closes the connection at [DONE]).
+    reader.read_line(&mut line)?;
+    if !line.starts_with("HTTP/1.1 200") {
+        bail!("server answered {}", line.trim_end());
+    }
+    while reader.read_line(&mut line)? > 0 {
+        if line == "\r\n" || line == "\n" {
+            break;
+        }
+        line.clear();
+    }
+
+    let mut out = std::io::stdout();
+    line.clear();
+    while reader.read_line(&mut line)? > 0 {
+        let payload = line.trim_end();
+        line.clear();
+        let Some(payload) = payload.strip_prefix("data: ") else {
+            continue; // SSE comments (keepalives) and blank separators
+        };
+        if payload == "[DONE]" {
+            break;
+        }
+        let chunk = Json::parse(payload)?;
+        if let Some(err) = chunk.opt("error") {
+            bail!("stream error: {}", err.get("message")?.str()?);
+        }
+        let choice = &chunk.get("choices")?.arr()?[0];
+        if let Some(delta) = choice.get("delta")?.opt("content") {
+            if ttft.is_none() {
+                ttft = Some(t0.elapsed());
+            }
+            out.write_all(delta.str()?.as_bytes())?;
+            out.flush()?;
+        }
+        if choice.opt("finish_reason").is_some() {
+            let ext = chunk.get("tweakllm")?;
+            let sim = ext
+                .opt("similarity")
+                .map(|s| format!("{:.3}", s.f64().unwrap_or(0.0)))
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "\n--\npathway={} similarity={sim} trace_id={} ttft={:.1}ms total={:.1}ms",
+                ext.get("pathway")?.str()?,
+                ext.get("trace_id")?.usize()?,
+                ttft.unwrap_or_default().as_secs_f64() * 1e3,
+                t0.elapsed().as_secs_f64() * 1e3,
+            );
+        }
+    }
+    Ok(())
+}

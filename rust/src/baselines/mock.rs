@@ -258,11 +258,26 @@ impl MockPool {
     }
 }
 
+/// Largest byte index `<= i` on a `char` boundary of `s` — proportional
+/// text slicing must never cut a multi-byte char in half
+/// (`str::floor_char_boundary` is still unstable).
+fn floor_char_boundary(s: &str, i: usize) -> usize {
+    let mut i = i.min(s.len());
+    while !s.is_char_boundary(i) {
+        i -= 1;
+    }
+    i
+}
+
 /// A claimed slot of the mock pool, behind the standard session protocol.
 struct MockBatchedSession {
     pool: Arc<Mutex<MockPool>>,
     slot: Option<usize>,
     resp: LlmResponse,
+    /// Decode units this generation takes in total (pacing denominator).
+    total: usize,
+    /// Bytes of `resp.text` already surfaced through `take_delta`.
+    emitted: usize,
 }
 
 impl LlmSession for MockBatchedSession {
@@ -276,6 +291,25 @@ impl LlmSession for MockBatchedSession {
             Some(slot) => self.pool.lock().unwrap().is_done(slot),
             None => true,
         }
+    }
+
+    fn take_delta(&mut self) -> String {
+        let Some(slot) = self.slot else {
+            return String::new();
+        };
+        let remaining = match self.pool.lock().unwrap().slots.get(slot).and_then(|s| s.as_ref()) {
+            Some(s) => s.remaining,
+            None => 0,
+        };
+        let done = self.total.saturating_sub(remaining);
+        let target =
+            floor_char_boundary(&self.resp.text, self.resp.text.len() * done / self.total.max(1));
+        if target <= self.emitted {
+            return String::new();
+        }
+        let delta = self.resp.text[self.emitted..target].to_string();
+        self.emitted = target;
+        delta
     }
 
     fn finish(mut self: Box<Self>) -> Result<LlmResponse> {
@@ -397,12 +431,16 @@ impl MockLlm {
             FaultMode::Hang => Ok(Box::new(MockSession {
                 resp,
                 remaining: usize::MAX,
+                total: usize::MAX,
+                emitted: 0,
                 step_delay: Duration::from_millis(1),
                 fail_after: None,
             })),
             FaultMode::FailAfterTokens(n) => Ok(Box::new(MockSession {
                 resp,
                 remaining: self.steps.max(1),
+                total: self.steps.max(1),
+                emitted: 0,
                 step_delay: self.step_delay,
                 fail_after: Some(n),
             })),
@@ -471,6 +509,8 @@ impl MockLlm {
                     pool: Arc::clone(pool),
                     slot: Some(slot),
                     resp,
+                    total: self.steps.max(1),
+                    emitted: 0,
                 });
             }
             // pool full: overflow onto an independent per-session mock
@@ -478,6 +518,8 @@ impl MockLlm {
         Box::new(MockSession {
             resp,
             remaining: self.steps.max(1),
+            total: self.steps.max(1),
+            emitted: 0,
             step_delay: self.step_delay,
             fail_after: None,
         })
@@ -489,6 +531,11 @@ impl MockLlm {
 struct MockSession {
     resp: LlmResponse,
     remaining: usize,
+    /// Decode units this generation takes in total (pacing denominator for
+    /// proportional `take_delta` slices).
+    total: usize,
+    /// Bytes of `resp.text` already surfaced through `take_delta`.
+    emitted: usize,
     step_delay: Duration,
     /// Scripted mid-generation failure: error on the `advance` after this
     /// many successful ones (`FaultMode::FailAfterTokens`).
@@ -514,6 +561,18 @@ impl LlmSession for MockSession {
 
     fn is_done(&self) -> bool {
         self.remaining == 0
+    }
+
+    fn take_delta(&mut self) -> String {
+        let done = self.total.saturating_sub(self.remaining);
+        let target =
+            floor_char_boundary(&self.resp.text, self.resp.text.len() * done / self.total.max(1));
+        if target <= self.emitted {
+            return String::new();
+        }
+        let delta = self.resp.text[self.emitted..target].to_string();
+        self.emitted = target;
+        delta
     }
 
     fn finish(self: Box<Self>) -> Result<LlmResponse> {
@@ -721,6 +780,39 @@ mod tests {
         assert_eq!(m.tweak(&tp(0)).unwrap().restored_tokens, 0);
         // ...while the most recently used entry still hits.
         assert_eq!(m.tweak(&tp(2)).unwrap().restored_tokens, 32);
+    }
+
+    #[test]
+    fn session_deltas_concatenate_to_blocking_text() {
+        // Per-session and batched-pool mocks both pace out the response
+        // proportionally; the concatenated deltas must equal the blocking
+        // text once the session completes.
+        let mut m = MockLlm::new("big").with_pace(4, Duration::ZERO);
+        let blocking = m.respond("stream me").unwrap();
+        let mut s = m.begin_respond("stream me").unwrap();
+        assert_eq!(s.take_delta(), "", "nothing decoded before the first advance");
+        let mut out = String::new();
+        loop {
+            let more = s.advance().unwrap();
+            out.push_str(&s.take_delta());
+            if !more {
+                break;
+            }
+        }
+        assert_eq!(out, blocking.text);
+
+        let mut m = MockLlm::new("big").with_pace(4, Duration::ZERO).with_batch(2);
+        let blocking = m.respond("stream me too").unwrap();
+        let mut s = m.begin_respond("stream me too").unwrap();
+        let mut out = String::new();
+        loop {
+            let more = s.advance().unwrap();
+            out.push_str(&s.take_delta());
+            if !more {
+                break;
+            }
+        }
+        assert_eq!(out, blocking.text);
     }
 
     #[test]

@@ -45,6 +45,8 @@ pub struct Config {
     /// Fault tolerance: per-request deadlines, the degradation ladder, and
     /// circuit breakers around each backend (DESIGN.md "Failure domains").
     pub faults: FaultsConfig,
+    /// Front-end listeners beyond the TCP line protocol (`[server]`).
+    pub server: ServerConfig,
     /// Artifact directory.
     pub artifact_dir: String,
     /// Keep decode state (KV caches) on device between steps, fetching only
@@ -208,6 +210,16 @@ impl Default for FaultsConfig {
     }
 }
 
+/// `[server]` section: the optional HTTP/SSE front end riding beside the
+/// TCP line protocol.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerConfig {
+    /// Port for the OpenAI-compatible HTTP endpoint
+    /// (`POST /v1/chat/completions`, SSE streaming when `"stream": true`).
+    /// 0 disables the listener (the default: TCP line protocol only).
+    pub http_port: u16,
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct GenConfig {
     pub temperature: f32,
@@ -270,6 +282,7 @@ impl Config {
             persist: PersistConfig::default(),
             trace: TraceConfig::default(),
             faults: FaultsConfig::default(),
+            server: ServerConfig::default(),
             artifact_dir: "artifacts".to_string(),
             device_resident: true,
             prefix_cache_bytes: 64 << 20,
@@ -436,6 +449,8 @@ impl Config {
                 }
                 self.faults.breaker_half_open_probes = n;
             }
+            // 0 = HTTP front end off (TCP line protocol only)
+            "server.http_port" => self.server.http_port = u()? as u16,
             "persist.data_dir" => self.persist.data_dir = val.to_string(),
             "persist.wal_fsync" => self.persist.wal_fsync = b()?,
             "persist.compact_bytes" => self.persist.compact_bytes = u()? as u64,
@@ -522,6 +537,14 @@ impl Config {
                 "device-resident KV (literal fallback for old artifact sets)".into()
             } else {
                 "host literals (KV round-trips every step)".into()
+            }),
+            ("HTTP front end".into(), if self.server.http_port > 0 {
+                format!(
+                    "OpenAI-compatible /v1/chat/completions with SSE streaming on port {}",
+                    self.server.http_port
+                )
+            } else {
+                "disabled (TCP line protocol only)".into()
             }),
         ]
     }
@@ -752,6 +775,26 @@ mod tests {
         c.set("faults.enabled", "false").unwrap();
         let rows = c.table();
         assert!(rows.iter().any(|(k, v)| k == "Fault tolerance" && v.contains("disabled")));
+    }
+
+    #[test]
+    fn server_section_applies() {
+        let mut c = Config::paper();
+        assert_eq!(c.server.http_port, 0, "HTTP front end must default off");
+        let row = |c: &Config| -> String {
+            c.table()
+                .into_iter()
+                .find(|(k, _)| k == "HTTP front end")
+                .map(|(_, v)| v)
+                .unwrap()
+        };
+        assert!(row(&c).contains("disabled"));
+        let mut kv = BTreeMap::new();
+        kv.insert("server.http_port".to_string(), "8080".to_string());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.server.http_port, 8080);
+        assert!(row(&c).contains("8080"));
+        assert!(c.set("server.http_port", "not-a-port").is_err());
     }
 
     #[test]

@@ -29,18 +29,20 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use super::scheduler::{Job, JobKind, Scheduler};
-use super::{deadline_expired, Batcher, ReplyTx, RouteDecision, RoutedResponse, Router};
+use super::{
+    deadline_expired, Batcher, ReplySink, RouteDecision, RoutedResponse, Router, StreamEvent,
+};
 use crate::cache::query_key;
 use crate::trace::{Stage, StageSummary, TraceBuilder, TraceReport};
 
-/// What rides through the batcher per request: the query, the rendezvous
-/// reply channel, and the request's span-trace arena.
-type BatchItem = (String, ReplyTx, TraceBuilder);
+/// What rides through the batcher per request: the query, the reply sink
+/// (streaming or one-shot), and the request's span-trace arena.
+type BatchItem = (String, ReplySink, TraceBuilder);
 
 enum Msg {
     Request {
         query: String,
-        reply: ReplyTx,
+        reply: ReplySink,
         /// Stamped by `EngineHandle::request` before the channel send, so
         /// reported latency includes time spent queued behind whatever the
         /// engine was doing (e.g. a slow Big-LLM generation).
@@ -115,6 +117,9 @@ pub struct EngineStats {
     pub shed: u64,
     /// Requests answered with a terminal structured error.
     pub failed: u64,
+    /// In-flight requests abandoned because the streaming client
+    /// disconnected (session dropped, slot freed, no reply sent).
+    pub cancelled: u64,
     /// Requests routed straight to the miss path because the embedder was
     /// unavailable (no cache lookup, no insert).
     pub embed_bypasses: u64,
@@ -145,9 +150,34 @@ pub struct EngineHandle {
 }
 
 impl EngineHandle {
-    /// Route one query (blocks until the engine responds).
+    /// Route one query (blocks until the engine responds). A thin
+    /// drain-to-EOS wrapper over the streaming transport: deltas are
+    /// suppressed at the source (`ReplySink::buffered`), so this costs one
+    /// terminal event exactly like the pre-streaming rendezvous channel.
     pub fn request(&self, query: &str) -> Result<RoutedResponse> {
-        let (reply, rx) = mpsc::channel();
+        let rx = self.submit(query, false)?;
+        for ev in rx.iter() {
+            match ev {
+                StreamEvent::Delta(_) => {}
+                StreamEvent::Done(resp) => return Ok(resp),
+                StreamEvent::Error(msg) => return Err(anyhow!("{msg}")),
+            }
+        }
+        Err(anyhow!("engine dropped the request"))
+    }
+
+    /// Route one query, streaming token deltas as the engine decodes them.
+    /// The receiver yields `Delta` events (empty ones are liveness probes)
+    /// and ends with exactly one `Done` or `Error`; concatenated deltas are
+    /// bit-identical to the blocking response's text on every pathway.
+    /// Dropping the receiver mid-stream cancels the in-flight generation.
+    pub fn request_streaming(&self, query: &str) -> Result<mpsc::Receiver<StreamEvent>> {
+        self.submit(query, true)
+    }
+
+    fn submit(&self, query: &str, live: bool) -> Result<mpsc::Receiver<StreamEvent>> {
+        let (tx, rx) = mpsc::channel();
+        let reply = if live { ReplySink::stream(tx) } else { ReplySink::buffered(tx) };
         self.tx
             .send(Msg::Request {
                 query: query.to_string(),
@@ -155,7 +185,7 @@ impl EngineHandle {
                 enqueued: Instant::now(),
             })
             .map_err(|_| anyhow!("engine is down"))?;
-        rx.recv().map_err(|_| anyhow!("engine dropped the request"))?
+        Ok(rx)
     }
 
     pub fn stats(&self) -> Result<EngineStats> {
@@ -341,7 +371,7 @@ impl Engine {
         }
         let drained = Instant::now();
         // Exact-match fast path first: those don't need embeddings.
-        let mut to_embed: Vec<(String, ReplyTx, Instant, TraceBuilder)> =
+        let mut to_embed: Vec<(String, ReplySink, Instant, TraceBuilder)> =
             Vec::with_capacity(batch.len());
         let faults = router.config.faults;
         for pending in batch {
@@ -353,14 +383,14 @@ impl Engine {
             // aged out in the batcher never pays for embed/route/decode.
             if faults.enabled && deadline_expired(enqueued, faults.request_deadline_ms, drained) {
                 router.finish_failed("shed", true, enqueued, &mut trace);
-                let _ = reply.send(Err(anyhow!(
+                reply.fail(&format!(
                     "request deadline exceeded ({} ms)",
                     faults.request_deadline_ms
-                )));
+                ));
                 continue;
             }
             if let Some(resp) = router.try_exact(&query, enqueued, &mut trace) {
-                let _ = reply.send(Ok(resp));
+                reply.done(resp);
             } else {
                 to_embed.push((query, reply, enqueued, trace));
             }
@@ -394,7 +424,7 @@ impl Engine {
                     } else {
                         let msg = format!("batched embed failed: {e}");
                         for (_, reply, _, _) in to_embed {
-                            let _ = reply.send(Err(anyhow!("{msg}")));
+                            reply.fail(&msg);
                         }
                         return;
                     }
@@ -409,27 +439,31 @@ impl Engine {
                 for (_, _, _, trace) in to_embed.iter_mut() {
                     trace.span_at(Stage::Embed, t_embed, embedded, f32::NAN);
                 }
-                for ((query, reply, enqueued, mut trace), emb) in
+                for ((query, mut reply, enqueued, mut trace), emb) in
                     to_embed.into_iter().zip(embeddings)
                 {
                     match &mut sched {
                         Some(s) => match router.route(&query, emb, enqueued, &mut trace) {
                             RouteDecision::Exact(resp) => {
-                                let _ = reply.send(Ok(resp));
+                                reply.done(resp);
                             }
                             RouteDecision::Tweak(t) => {
-                                let job = Job::traced(JobKind::Tweak(t), reply, enqueued, trace);
-                                s.submit(job, router);
+                                let kind = JobKind::Tweak(t);
+                                s.submit(Job::with_sink(kind, reply, enqueued, trace), router);
                             }
                             RouteDecision::Miss(m) => {
                                 let key = query_key(&m.query);
                                 let kind = JobKind::Miss { job: m, key };
-                                s.submit(Job::traced(kind, reply, enqueued, trace), router);
+                                s.submit(Job::with_sink(kind, reply, enqueued, trace), router);
                             }
                         },
                         None => {
-                            let resp = router.handle_embedded(&query, emb, enqueued, &mut trace);
-                            let _ = reply.send(resp);
+                            match router.handle_embedded_streaming(
+                                &query, emb, enqueued, &mut reply, &mut trace,
+                            ) {
+                                Ok(resp) => reply.done(resp),
+                                Err(e) => reply.fail(&format!("{e:#}")),
+                            }
                         }
                     }
                 }
@@ -437,17 +471,19 @@ impl Engine {
             None => {
                 // Embedder unavailable: bypass the cache for every
                 // batch-mate rather than failing them.
-                for (query, reply, enqueued, mut trace) in to_embed {
+                for (query, mut reply, enqueued, mut trace) in to_embed {
                     let job = router.miss_bypass_job(&query);
                     match &mut sched {
                         Some(s) => {
                             let key = query_key(&job.query);
                             let kind = JobKind::Miss { job, key };
-                            s.submit(Job::traced(kind, reply, enqueued, trace), router);
+                            s.submit(Job::with_sink(kind, reply, enqueued, trace), router);
                         }
                         None => {
-                            let resp = router.run_miss_blocking(job, enqueued, &mut trace);
-                            let _ = reply.send(resp);
+                            match router.run_miss_blocking(job, enqueued, &mut reply, &mut trace) {
+                                Ok(resp) => reply.done(resp),
+                                Err(e) => reply.fail(&format!("{e:#}")),
+                            }
                         }
                     }
                 }
@@ -519,6 +555,7 @@ impl Engine {
             degraded_hits: router.counters.get("degraded_hits"),
             shed: router.counters.get("shed"),
             failed: router.counters.get("failed"),
+            cancelled: router.counters.get("cancelled"),
             embed_bypasses: router.counters.get("embed_bypasses"),
             miss_retries: router.counters.get("miss_retries"),
             breaker_trips: router.breakers.embed.trips()

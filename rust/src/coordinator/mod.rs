@@ -35,6 +35,164 @@ use crate::util::ThreadPool;
 /// receiving end). One definition shared by the engine and the scheduler.
 pub type ReplyTx = std::sync::mpsc::Sender<Result<RoutedResponse>>;
 
+/// One event on a streaming reply channel: zero or more `Delta`s followed
+/// by exactly one terminal `Done` or `Error`.
+#[derive(Debug)]
+pub enum StreamEvent {
+    /// Text appended to the response. May be empty — a liveness probe the
+    /// engine sends between tokens so a vanished receiver is noticed even
+    /// when a fairness round produced no new text.
+    Delta(String),
+    /// Terminal success: the finished response. The sink streams the
+    /// not-yet-sent remainder before this event, so the concatenation of
+    /// all deltas is bit-identical to `RoutedResponse::text`.
+    Done(RoutedResponse),
+    /// Terminal failure: structured error, the stream is over.
+    Error(String),
+}
+
+/// Transport behind a [`ReplySink`].
+enum SinkChan {
+    /// Classic one-shot reply channel (TCP line protocol): deltas are
+    /// discarded, the response arrives once at EOS.
+    Blocking(ReplyTx),
+    /// Delta-streaming channel. `live = false` (the `EngineHandle::request`
+    /// drain wrapper) suppresses mid-decode deltas so the blocking shape
+    /// pays no per-token sends.
+    Stream { tx: std::sync::mpsc::Sender<StreamEvent>, live: bool },
+}
+
+/// Where a request's reply — streamed or one-shot — is delivered. Owns the
+/// streaming protocol invariants:
+/// * `done()` first streams the un-sent remainder of the final text, so
+///   concatenated deltas are bit-identical to the blocking response on
+///   EVERY pathway (cached-text pathways replay entirely through this
+///   remainder);
+/// * a failed send latches `closed` — the client went away, and the
+///   scheduler uses that to cancel the in-flight session;
+/// * `has_emitted()` reports whether any text actually left the process:
+///   the degradation ladder and miss retries must never swap or restart
+///   response text mid-stream.
+pub struct ReplySink {
+    chan: SinkChan,
+    /// Bytes of response text already streamed as deltas.
+    sent: usize,
+    /// A non-empty delta has been offered (TTFT latch; tracked for every
+    /// sink shape so `first_token` lands on blocking traces too).
+    seen: bool,
+    /// A send failed: the receiver is gone.
+    closed: bool,
+}
+
+impl ReplySink {
+    /// One-shot reply channel (TCP line protocol, `Msg::Request` today).
+    pub fn blocking(tx: ReplyTx) -> ReplySink {
+        ReplySink { chan: SinkChan::Blocking(tx), sent: 0, seen: false, closed: false }
+    }
+
+    /// Live delta-streaming channel (`EngineHandle::request_streaming`).
+    pub fn stream(tx: std::sync::mpsc::Sender<StreamEvent>) -> ReplySink {
+        ReplySink { chan: SinkChan::Stream { tx, live: true }, sent: 0, seen: false, closed: false }
+    }
+
+    /// Streaming transport with deltas suppressed — the drain-to-EOS
+    /// wrapper behind the blocking `EngineHandle::request`.
+    pub fn buffered(tx: std::sync::mpsc::Sender<StreamEvent>) -> ReplySink {
+        ReplySink {
+            chan: SinkChan::Stream { tx, live: false },
+            sent: 0,
+            seen: false,
+            closed: false,
+        }
+    }
+
+    /// Discard-everything sink for direct blocking `Router` calls.
+    pub fn ignore() -> ReplySink {
+        ReplySink::blocking(std::sync::mpsc::channel().0)
+    }
+
+    /// Offer a delta. Returns `true` iff this is the first non-empty text
+    /// of the reply — the caller's cue to stamp the TTFT trace event.
+    /// Blocking/buffered sinks record the latch but send nothing.
+    pub fn delta(&mut self, text: &str) -> bool {
+        if text.is_empty() {
+            return false;
+        }
+        let first = !self.seen;
+        self.seen = true;
+        if !self.closed {
+            if let SinkChan::Stream { tx, live: true } = &self.chan {
+                if tx.send(StreamEvent::Delta(text.to_string())).is_err() {
+                    self.closed = true;
+                } else {
+                    self.sent += text.len();
+                }
+            }
+        }
+        first
+    }
+
+    /// Empty-delta liveness probe: notices a receiver that went away in a
+    /// round that produced no text. No-op on non-live sinks.
+    pub fn probe(&mut self) {
+        if self.closed {
+            return;
+        }
+        if let SinkChan::Stream { tx, live: true } = &self.chan {
+            if tx.send(StreamEvent::Delta(String::new())).is_err() {
+                self.closed = true;
+            }
+        }
+    }
+
+    /// Whether any response text has actually been streamed out.
+    pub fn has_emitted(&self) -> bool {
+        self.sent > 0
+    }
+
+    /// Whether the receiving end is known gone (a send failed).
+    pub fn is_closed(&self) -> bool {
+        self.closed
+    }
+
+    /// Terminal success: stream the not-yet-sent remainder of the final
+    /// text (this is also how cached-text pathways replay as chunks), then
+    /// deliver the full response. Consumes the sink — one reply per request.
+    pub fn done(mut self, resp: RoutedResponse) {
+        match &self.chan {
+            SinkChan::Blocking(tx) => {
+                let _ = tx.send(Ok(resp));
+            }
+            SinkChan::Stream { tx, live } => {
+                if *live
+                    && !self.closed
+                    && self.sent < resp.text.len()
+                    && resp.text.is_char_boundary(self.sent)
+                {
+                    let tail = resp.text[self.sent..].to_string();
+                    if tx.send(StreamEvent::Delta(tail)).is_err() {
+                        self.closed = true;
+                    }
+                }
+                let _ = tx.send(StreamEvent::Done(resp));
+            }
+        }
+    }
+
+    /// Terminal failure: a structured error event ends the stream.
+    /// Consumes the sink.
+    pub fn fail(self, msg: &str) {
+        match &self.chan {
+            SinkChan::Blocking(tx) => {
+                let _ = tx.send(Err(anyhow!("{msg}")));
+            }
+            SinkChan::Stream { tx, .. } => {
+                let _ = tx.send(StreamEvent::Error(msg.to_string()));
+            }
+        }
+    }
+}
+
 /// Which pathway served a request.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Pathway {
@@ -99,6 +257,9 @@ pub struct RoutedResponse {
     pub cache_entry: Option<usize>,
     pub usage: TokenUsage,
     pub total_micros: u128,
+    /// Id of the request's span trace (0 when tracing is disabled) —
+    /// surfaced to clients so a streamed reply can be joined to its trace.
+    pub trace_id: u64,
 }
 
 /// Per-backend circuit breakers (embedder, Small/tweak LLM, Big LLM).
@@ -137,15 +298,21 @@ enum DriveEnd {
     Deadline,
     /// The per-generation budget (tweak/generation timeout) expired.
     Budget,
+    /// The streaming client went away mid-generation (a delta send failed).
+    Cancelled,
 }
 
 /// Drive a session to EOS, checking the request deadline and the generation
 /// budget between advances (`0` budgets never fire). Hung sessions — ones
-/// that report work forever — end at whichever budget expires first.
+/// that report work forever — end at whichever budget expires first. Token
+/// deltas stream out through `sink` as each advance decodes them; the first
+/// one stamps the trace's TTFT event.
 fn drive_session(
     mut session: Box<dyn LlmSession>,
     deadline: (std::time::Instant, u64),
     budget: (std::time::Instant, u64),
+    sink: &mut ReplySink,
+    trace: &mut TraceBuilder,
 ) -> Result<DriveEnd> {
     loop {
         let now = std::time::Instant::now();
@@ -155,7 +322,14 @@ fn drive_session(
         if deadline_expired(budget.0, budget.1, now) {
             return Ok(DriveEnd::Budget);
         }
-        if !session.advance()? {
+        if sink.is_closed() {
+            return Ok(DriveEnd::Cancelled);
+        }
+        let more = session.advance()?;
+        if sink.delta(&session.take_delta()) {
+            trace.first_token();
+        }
+        if !more {
             break;
         }
     }
@@ -346,8 +520,19 @@ impl Router {
         Ok(())
     }
 
-    /// Route one query through the Figure-1 pipeline.
+    /// Route one query through the Figure-1 pipeline (one-shot reply).
     pub fn handle(&mut self, query: &str) -> Result<RoutedResponse> {
+        self.handle_streaming(query, &mut ReplySink::ignore())
+    }
+
+    /// [`Self::handle`] with a delta sink: generated text streams out as it
+    /// decodes. The router only emits deltas — the terminal `done`/`fail`
+    /// event stays with the caller, who owns the sink.
+    pub fn handle_streaming(
+        &mut self,
+        query: &str,
+        sink: &mut ReplySink,
+    ) -> Result<RoutedResponse> {
         let t_start = std::time::Instant::now();
         let mut trace = self.traces.begin(query, t_start);
 
@@ -368,7 +553,9 @@ impl Router {
                     }
                     self.latency.record_duration("embed", t.elapsed());
                     trace.span_from(Stage::Embed, t);
-                    return self.handle_embedded(query, embedding, t_start, &mut trace);
+                    return self.handle_embedded_streaming(
+                        query, embedding, t_start, sink, &mut trace,
+                    );
                 }
                 Err(e) => {
                     if !faults_on {
@@ -379,7 +566,7 @@ impl Router {
             }
         }
         let job = self.miss_bypass_job(query);
-        self.run_miss_blocking(job, t_start, &mut trace)
+        self.run_miss_blocking(job, t_start, sink, &mut trace)
     }
 
     /// Exact-match fast path; `None` when disabled or no exact entry.
@@ -409,6 +596,7 @@ impl Router {
         // total_micros are the same number.
         let total_micros = t_start.elapsed().as_micros();
         self.latency.record("total", total_micros as f64);
+        let trace_id = trace.id();
         self.traces.finish(
             trace,
             TraceTag::ExactHit,
@@ -423,6 +611,7 @@ impl Router {
             cache_entry: Some(id),
             usage: TokenUsage::default(),
             total_micros,
+            trace_id,
         })
     }
 
@@ -437,10 +626,24 @@ impl Router {
         t_start: std::time::Instant,
         trace: &mut TraceBuilder,
     ) -> Result<RoutedResponse> {
+        self.handle_embedded_streaming(query, embedding, t_start, &mut ReplySink::ignore(), trace)
+    }
+
+    /// [`Self::handle_embedded`] with a delta sink — the scheduler-off
+    /// streaming path. Deltas flow out per advance; terminal events stay
+    /// with the caller.
+    pub fn handle_embedded_streaming(
+        &mut self,
+        query: &str,
+        embedding: Vec<f32>,
+        t_start: std::time::Instant,
+        sink: &mut ReplySink,
+        trace: &mut TraceBuilder,
+    ) -> Result<RoutedResponse> {
         match self.route(query, embedding, t_start, trace) {
             RouteDecision::Exact(resp) => Ok(resp),
-            RouteDecision::Tweak(job) => self.run_tweak_blocking(job, t_start, trace),
-            RouteDecision::Miss(job) => self.run_miss_blocking(job, t_start, trace),
+            RouteDecision::Tweak(job) => self.run_tweak_blocking(job, t_start, sink, trace),
+            RouteDecision::Miss(job) => self.run_miss_blocking(job, t_start, sink, trace),
         }
     }
 
@@ -448,10 +651,16 @@ impl Router {
     /// errors, overruns its budget, outlives the request deadline, or is
     /// rejected by an open breaker degrades to the raw cached response.
     /// With `[faults]` disabled this is exactly the old fail-through path.
+    ///
+    /// Mid-stream guard: once deltas have left the process the response
+    /// text is committed — degrading would swap it under the client — so a
+    /// post-emission deadline/budget/error fails the request with a
+    /// structured error instead of degrading.
     fn run_tweak_blocking(
         &mut self,
         job: TweakJob,
         t_start: std::time::Instant,
+        sink: &mut ReplySink,
         trace: &mut TraceBuilder,
     ) -> Result<RoutedResponse> {
         let f = self.config.faults;
@@ -463,7 +672,7 @@ impl Router {
         let outcome = match self.begin_tweak_session(&job) {
             Ok(session) => {
                 let decode_started = std::time::Instant::now();
-                match drive_session(session, (t_start, dl), (t, bg)) {
+                match drive_session(session, (t_start, dl), (t, bg), sink, trace) {
                     Ok(DriveEnd::Done(resp)) => {
                         let recomputed =
                             resp.usage.input_tokens.saturating_sub(resp.restored_tokens);
@@ -490,11 +699,25 @@ impl Router {
                 }
                 Ok(self.complete_tweak(&job, resp, t_start, t.elapsed().as_micros(), trace))
             }
+            Ok(DriveEnd::Cancelled) => {
+                self.finish_failed("cancelled", false, t_start, trace);
+                Err(anyhow!("client disconnected mid-generation"))
+            }
             // Deadline expiry is the request running out of time, not
             // (necessarily) backend sickness: degrade, no breaker record.
-            Ok(DriveEnd::Deadline) => Ok(self.complete_degraded(&job, t_start, trace)),
+            Ok(DriveEnd::Deadline) => {
+                if sink.has_emitted() {
+                    self.finish_failed("shed", false, t_start, trace);
+                    return Err(anyhow!("request deadline exceeded mid-stream"));
+                }
+                Ok(self.complete_degraded(&job, t_start, trace))
+            }
             Ok(DriveEnd::Budget) => {
                 self.breakers.small.record_failure(std::time::Instant::now());
+                if sink.has_emitted() {
+                    self.finish_failed("failed", false, t_start, trace);
+                    return Err(anyhow!("tweak timeout ({bg} ms) mid-stream"));
+                }
                 Ok(self.complete_degraded(&job, t_start, trace))
             }
             Err(e) => {
@@ -502,6 +725,10 @@ impl Router {
                     return Err(e);
                 }
                 self.breakers.small.record_failure(std::time::Instant::now());
+                if sink.has_emitted() {
+                    self.finish_failed("failed", false, t_start, trace);
+                    return Err(anyhow!("tweak failed mid-stream: {e:#}"));
+                }
                 Ok(self.complete_degraded(&job, t_start, trace))
             }
         }
@@ -512,10 +739,14 @@ impl Router {
     /// retry bit-identical to a first-try success. Exhausted retries (or an
     /// open Big-LLM breaker, or deadline expiry) return a structured error
     /// after accounting the failure (`finish_failed`).
+    /// Mid-stream guard: a retry restarts the token stream from scratch,
+    /// which would duplicate text already streamed to the client — so once
+    /// deltas have been emitted, the first failure is terminal.
     fn run_miss_blocking(
         &mut self,
         job: MissJob,
         t_start: std::time::Instant,
+        sink: &mut ReplySink,
         trace: &mut TraceBuilder,
     ) -> Result<RoutedResponse> {
         let f = self.config.faults;
@@ -543,7 +774,7 @@ impl Router {
             let drive = match self.begin_miss_session(&job) {
                 Ok(session) => {
                     let decode_started = std::time::Instant::now();
-                    match drive_session(session, (t_start, dl), (t, bg)) {
+                    match drive_session(session, (t_start, dl), (t, bg), sink, trace) {
                         Ok(DriveEnd::Done(resp)) => {
                             let recomputed =
                                 resp.usage.input_tokens.saturating_sub(resp.restored_tokens);
@@ -575,9 +806,16 @@ impl Router {
                     self.finish_failed("shed", false, t_start, trace);
                     return Err(anyhow!("request deadline exceeded mid-generation"));
                 }
+                Ok(DriveEnd::Cancelled) => {
+                    self.finish_failed("cancelled", false, t_start, trace);
+                    return Err(anyhow!("client disconnected mid-generation"));
+                }
                 Ok(DriveEnd::Budget) => {
                     self.breakers.big.record_failure(std::time::Instant::now());
                     last_err = Some(anyhow!("generation timeout ({bg} ms)"));
+                    if sink.has_emitted() {
+                        break;
+                    }
                 }
                 Err(e) => {
                     if !f.enabled {
@@ -585,6 +823,9 @@ impl Router {
                     }
                     self.breakers.big.record_failure(std::time::Instant::now());
                     last_err = Some(e);
+                    if sink.has_emitted() {
+                        break;
+                    }
                 }
             }
         }
@@ -691,6 +932,7 @@ impl Router {
         trace.span_since_last(Stage::Reply);
         let total_micros = t_start.elapsed().as_micros();
         self.latency.record("total", total_micros as f64);
+        let trace_id = trace.id();
         self.traces.finish(
             trace,
             TraceTag::TweakHit,
@@ -705,6 +947,7 @@ impl Router {
             cache_entry: Some(job.hit_id),
             usage: resp.usage,
             total_micros,
+            trace_id,
         }
     }
 
@@ -734,6 +977,7 @@ impl Router {
         trace.span_since_last(Stage::Reply);
         let total_micros = t_start.elapsed().as_micros();
         self.latency.record("total", total_micros as f64);
+        let trace_id = trace.id();
         self.traces.finish(
             trace,
             TraceTag::Miss,
@@ -748,6 +992,7 @@ impl Router {
             cache_entry: id,
             usage: resp.usage,
             total_micros,
+            trace_id,
         }
     }
 
@@ -768,6 +1013,7 @@ impl Router {
         trace.span_since_last(Stage::Reply);
         let total_micros = t_start.elapsed().as_micros();
         self.latency.record("total", total_micros as f64);
+        let trace_id = trace.id();
         self.traces.finish(
             trace,
             TraceTag::DegradedHit,
@@ -782,6 +1028,7 @@ impl Router {
             cache_entry: Some(job.hit_id),
             usage: TokenUsage::default(),
             total_micros,
+            trace_id,
         }
     }
 
@@ -861,6 +1108,7 @@ impl Router {
         trace.span_since_last(Stage::Reply);
         let total_micros = enqueued.elapsed().as_micros();
         self.latency.record("total", total_micros as f64);
+        let trace_id = trace.id();
         self.traces.finish(
             trace,
             TraceTag::Coalesced,
@@ -875,6 +1123,7 @@ impl Router {
             cache_entry: leader.cache_entry,
             usage: TokenUsage::default(),
             total_micros,
+            trace_id,
         }
     }
 
@@ -901,5 +1150,97 @@ mod tests {
     fn pathway_eq() {
         assert_ne!(Pathway::ExactHit, Pathway::Miss);
         assert_eq!(Pathway::TweakHit, Pathway::TweakHit);
+    }
+
+    fn resp(text: &str) -> RoutedResponse {
+        RoutedResponse {
+            text: text.to_string(),
+            pathway: Pathway::Miss,
+            similarity: None,
+            cached_query: None,
+            cache_entry: None,
+            usage: TokenUsage::default(),
+            total_micros: 0,
+            trace_id: 0,
+        }
+    }
+
+    /// Core identity invariant: concat(deltas) == Done.text, whether the
+    /// deltas were streamed during decode or replayed by `done()`.
+    #[test]
+    fn sink_done_streams_the_unsent_remainder() {
+        // Nothing streamed: the whole text arrives as one pre-Done delta.
+        let (tx, rx) = std::sync::mpsc::channel();
+        ReplySink::stream(tx).done(resp("hello world"));
+        let mut got = String::new();
+        let mut done_text = None;
+        for ev in rx.iter() {
+            match ev {
+                StreamEvent::Delta(d) => got.push_str(&d),
+                StreamEvent::Done(r) => done_text = Some(r.text),
+                StreamEvent::Error(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert_eq!(got, "hello world");
+        assert_eq!(done_text.as_deref(), Some("hello world"));
+
+        // Partially streamed: only the tail is replayed.
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut sink = ReplySink::stream(tx);
+        assert!(sink.delta("hello "), "first non-empty delta is the TTFT cue");
+        assert!(!sink.delta("wor"), "later deltas are not");
+        assert!(sink.has_emitted());
+        sink.done(resp("hello world"));
+        let mut got = String::new();
+        for ev in rx.iter() {
+            if let StreamEvent::Delta(d) = ev {
+                got.push_str(&d);
+            }
+        }
+        assert_eq!(got, "hello world");
+    }
+
+    #[test]
+    fn sink_latches_closed_when_receiver_drops() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut sink = ReplySink::stream(tx);
+        assert!(sink.delta("a"));
+        drop(rx);
+        sink.probe();
+        assert!(sink.is_closed(), "probe must notice the dropped receiver");
+        assert!(!sink.delta("b"), "deltas after close are swallowed");
+    }
+
+    #[test]
+    fn blocking_and_buffered_sinks_never_stream() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut sink = ReplySink::blocking(tx);
+        assert!(sink.delta("chunk"), "TTFT latch fires even when not streaming");
+        assert!(!sink.has_emitted(), "nothing left the process");
+        sink.done(resp("full text"));
+        assert_eq!(rx.recv().unwrap().unwrap().text, "full text");
+
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut sink = ReplySink::buffered(tx);
+        sink.delta("chunk");
+        assert!(!sink.has_emitted());
+        sink.done(resp("full text"));
+        match rx.recv().unwrap() {
+            StreamEvent::Done(r) => assert_eq!(r.text, "full text"),
+            other => panic!("buffered sink must skip straight to Done, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sink_fail_maps_to_the_transport() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        ReplySink::stream(tx).fail("boom");
+        match rx.recv().unwrap() {
+            StreamEvent::Error(e) => assert_eq!(e, "boom"),
+            other => panic!("expected Error, got {other:?}"),
+        }
+        let (tx, rx) = std::sync::mpsc::channel();
+        ReplySink::blocking(tx).fail("boom");
+        assert_eq!(format!("{:#}", rx.recv().unwrap().unwrap_err()), "boom");
     }
 }

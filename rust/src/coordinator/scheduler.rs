@@ -38,7 +38,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use super::{deadline_expired, MissJob, ReplyTx, Router, TweakJob};
+use super::{deadline_expired, MissJob, ReplySink, ReplyTx, Router, TweakJob};
 use crate::config::SchedulerConfig;
 use crate::llm::LlmSession;
 use crate::trace::{Stage, TraceBuilder};
@@ -54,7 +54,7 @@ pub enum JobKind {
 /// A routed request: the decision snapshot plus everything needed to reply.
 pub struct Job {
     pub kind: JobKind,
-    pub reply: ReplyTx,
+    pub reply: ReplySink,
     /// When the request entered the submission pipeline (drives reported
     /// latency, exactly as in the sequential path).
     pub enqueued: Instant,
@@ -69,10 +69,27 @@ pub struct Job {
 
 impl Job {
     pub fn new(kind: JobKind, reply: ReplyTx, enqueued: Instant) -> Job {
-        Job { kind, reply, enqueued, trace: TraceBuilder::disabled(), attempts: 0 }
+        Job {
+            kind,
+            reply: ReplySink::blocking(reply),
+            enqueued,
+            trace: TraceBuilder::disabled(),
+            attempts: 0,
+        }
     }
 
     pub fn traced(kind: JobKind, reply: ReplyTx, enqueued: Instant, trace: TraceBuilder) -> Job {
+        Job { kind, reply: ReplySink::blocking(reply), enqueued, trace, attempts: 0 }
+    }
+
+    /// Engine path: reply through an explicit delta sink — streaming or
+    /// blocking decided by the front end.
+    pub fn with_sink(
+        kind: JobKind,
+        reply: ReplySink,
+        enqueued: Instant,
+        trace: TraceBuilder,
+    ) -> Job {
         Job { kind, reply, enqueued, trace, attempts: 0 }
     }
 }
@@ -87,6 +104,18 @@ struct Active {
     decode_started: Instant,
 }
 
+/// Followers attached to one in-flight miss leader.
+#[derive(Default)]
+struct FollowerSet {
+    /// Reply sinks of the attached duplicates (with their enqueue time and
+    /// trace, exactly as a leader job carries them).
+    sinks: Vec<(ReplySink, Instant, TraceBuilder)>,
+    /// Leader text streamed so far — replayed to a follower at attach time
+    /// so every follower's delta concatenation is complete regardless of
+    /// when it joined the generation.
+    streamed: String,
+}
+
 pub struct Scheduler {
     cfg: SchedulerConfig,
     /// Round-robin ring of live sessions.
@@ -96,7 +125,7 @@ pub struct Scheduler {
     /// Followers per in-flight (active or waiting) miss, by normalized
     /// query key: O(1) duplicate coalescing regardless of backlog size.
     /// An entry exists exactly while its leader is in flight.
-    followers: HashMap<u64, Vec<(ReplyTx, Instant, TraceBuilder)>>,
+    followers: HashMap<u64, FollowerSet>,
     /// Requests served by attaching to an in-flight duplicate (lifetime).
     coalesced: u64,
     /// Sessions completed (lifetime).
@@ -138,15 +167,21 @@ impl Scheduler {
 
     /// Admit a routed request: coalesce onto an identical in-flight miss,
     /// start its session if a slot is free, or queue it.
-    pub fn submit(&mut self, job: Job, router: &mut Router) {
+    pub fn submit(&mut self, mut job: Job, router: &mut Router) {
         if let JobKind::Miss { key, .. } = &job.kind {
             if let Some(flw) = self.followers.get_mut(key) {
-                flw.push((job.reply, job.enqueued, job.trace));
+                // Catch the follower up on what the leader has already
+                // streamed, then subscribe it to the rest of the stream.
+                let mut sink = job.reply;
+                if sink.delta(&flw.streamed) {
+                    job.trace.first_token();
+                }
+                flw.sinks.push((sink, job.enqueued, job.trace));
                 self.coalesced += 1;
                 return;
             }
             // This job is now the in-flight leader for its key.
-            self.followers.insert(*key, Vec::new());
+            self.followers.insert(*key, FollowerSet::default());
         }
         if self.active.len() < self.cfg.max_concurrent_sessions.max(1) {
             self.start(job, router);
@@ -218,8 +253,26 @@ impl Scheduler {
             // Child span of the decode span: this session's turn in the
             // round, tagged with the round's batch-slot occupancy.
             act.job.trace.decode_round(t_turn, live as f32);
+            // Stream the round's decoded text to the leader and every
+            // follower; empty rounds send a liveness probe instead so a
+            // vanished client is noticed. Skipped on an advance error: the
+            // session is about to degrade/retry and text from the doomed
+            // attempt must not leak into the stream.
+            if outcome.is_ok() {
+                let delta = act.session.take_delta();
+                self.pump_delta(&mut act.job, &delta, router);
+            }
             match outcome {
-                Ok(false) => self.active.push_back(act),
+                Ok(false) => {
+                    if act.job.reply.is_closed() && !self.has_live_followers(&act.job.kind) {
+                        // Dropping the session frees its batch-pool slot.
+                        let Active { job, .. } = act;
+                        self.cancel(job, router);
+                        finished += 1;
+                    } else {
+                        self.active.push_back(act);
+                    }
+                }
                 Ok(true) => {
                     self.complete(act, router);
                     finished += 1;
@@ -272,6 +325,61 @@ impl Scheduler {
         Ok(act.session.is_done())
     }
 
+    /// Forward one round's decoded text to the leader sink and every
+    /// follower sink (an empty delta probes instead). First non-empty text
+    /// stamps each trace's TTFT event; followers whose client vanished are
+    /// pruned here, accounted as cancelled.
+    fn pump_delta(&mut self, job: &mut Job, delta: &str, router: &mut Router) {
+        if delta.is_empty() {
+            job.reply.probe();
+        } else if job.reply.delta(delta) {
+            job.trace.first_token();
+        }
+        if let JobKind::Miss { key, .. } = &job.kind {
+            if let Some(flw) = self.followers.get_mut(key) {
+                flw.streamed.push_str(delta);
+                for (sink, _, f_trace) in flw.sinks.iter_mut() {
+                    if delta.is_empty() {
+                        sink.probe();
+                    } else if sink.delta(delta) {
+                        f_trace.first_token();
+                    }
+                }
+                flw.sinks.retain_mut(|(sink, f_enqueued, f_trace)| {
+                    if sink.is_closed() {
+                        router.finish_failed("cancelled", false, *f_enqueued, f_trace);
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+        }
+    }
+
+    /// Does this job's generation still have listening followers? (Only a
+    /// miss leader can: followers attach by query key.)
+    fn has_live_followers(&self, kind: &JobKind) -> bool {
+        match kind {
+            JobKind::Miss { key, .. } => {
+                self.followers.get(key).is_some_and(|flw| !flw.sinks.is_empty())
+            }
+            JobKind::Tweak(_) => false,
+        }
+    }
+
+    /// The streaming client went away and nobody else is waiting on this
+    /// generation: drop it, account the request as `cancelled` (one trace,
+    /// one total sample — the invariant holds for abandoned requests too),
+    /// and drain the follower entry so a later duplicate starts fresh.
+    fn cancel(&mut self, job: Job, router: &mut Router) {
+        let Job { kind, enqueued, mut trace, .. } = job;
+        if let JobKind::Miss { key, .. } = &kind {
+            self.followers.remove(key);
+        }
+        router.finish_failed("cancelled", false, enqueued, &mut trace);
+    }
+
     /// Fill free session slots from the waiting queue (FIFO).
     fn admit(&mut self, router: &mut Router) {
         while self.active.len() < self.cfg.max_concurrent_sessions.max(1) {
@@ -287,6 +395,14 @@ impl Scheduler {
     /// degradation ladder (degrade / retry / structured error) instead of
     /// poisoning the ring.
     fn start(&mut self, mut job: Job, router: &mut Router) {
+        // A queued client may have vanished while waiting for a slot:
+        // probe before paying the prefill. A leader with live followers
+        // starts regardless — the generation is shared.
+        job.reply.probe();
+        if job.reply.is_closed() && !self.has_live_followers(&job.kind) {
+            self.cancel(job, router);
+            return;
+        }
         let f = router.config.faults;
         if f.enabled {
             let now = Instant::now();
@@ -387,7 +503,7 @@ impl Scheduler {
         let (routed, leader_query, followers) = match kind {
             JobKind::Tweak(t) => {
                 let routed = router.complete_tweak(&t, resp, enqueued, gen_micros, &mut trace);
-                (routed, t.prompt.new_query, Vec::new())
+                (routed, t.prompt.new_query, FollowerSet::default())
             }
             JobKind::Miss { job: m, key } => {
                 let query = m.query.clone();
@@ -396,11 +512,11 @@ impl Scheduler {
                 (routed, query, flw)
             }
         };
-        for (tx, f_enqueued, mut f_trace) in followers {
+        for (sink, f_enqueued, mut f_trace) in followers.sinks {
             let fan = router.complete_follower(&leader_query, &routed, f_enqueued, &mut f_trace);
-            let _ = tx.send(Ok(fan));
+            sink.done(fan);
         }
-        let _ = reply.send(Ok(routed));
+        reply.done(routed);
     }
 
     /// Degradation-ladder rung 1: resolve a tweak job with the raw cached
@@ -408,13 +524,20 @@ impl Scheduler {
     /// or its breaker is open). The cached text is in the job snapshot, so
     /// this costs no model work.
     fn degrade(&mut self, job: Job, router: &mut Router) {
+        if job.reply.has_emitted() {
+            // Mid-stream guard: partial tweak text already left the
+            // process; serving the raw cached response now would corrupt
+            // the stream. A structured error ends it instead.
+            self.resolve_failed(job, &anyhow!("tweak unavailable mid-stream"), "failed", router);
+            return;
+        }
         let Job { kind, reply, enqueued, mut trace, .. } = job;
         let t = match kind {
             JobKind::Tweak(t) => t,
             JobKind::Miss { .. } => unreachable!("only tweak jobs degrade"),
         };
         let routed = router.complete_degraded(&t, enqueued, &mut trace);
-        let _ = reply.send(Ok(routed));
+        reply.done(routed);
         self.completed += 1;
     }
 
@@ -434,13 +557,35 @@ impl Scheduler {
     fn retry_or_fail(&mut self, mut job: Job, e: anyhow::Error, router: &mut Router) -> bool {
         let f = router.config.faults;
         let now = Instant::now();
+        // A retry restarts the token stream from the beginning. That is
+        // invisible when nothing has been streamed (per-request RNG makes
+        // the retry bit-identical), but once the leader OR any follower has
+        // received text, a restart would duplicate it — the failure is
+        // terminal instead.
+        let streamed_any = job.reply.has_emitted()
+            || match &job.kind {
+                JobKind::Miss { key, .. } => self
+                    .followers
+                    .get(key)
+                    .is_some_and(|flw| flw.sinks.iter().any(|(s, _, _)| s.has_emitted())),
+                JobKind::Tweak(_) => false,
+            };
         if f.enabled
+            && !streamed_any
             && job.attempts < f.miss_retries
             && router.breakers.big.allow(now)
             && !deadline_expired(job.enqueued, f.request_deadline_ms, now)
         {
             job.attempts += 1;
             router.counters.inc("miss_retries");
+            // The retry replays the identical token stream from scratch;
+            // reset the follower catch-up buffer to match (no sink has
+            // received any of it — checked above).
+            if let JobKind::Miss { key, .. } = &job.kind {
+                if let Some(flw) = self.followers.get_mut(key) {
+                    flw.streamed.clear();
+                }
+            }
             self.waiting.push_back(job);
             return false;
         }
@@ -473,13 +618,14 @@ impl Scheduler {
             format!("generation failed: {e:#}")
         };
         if let JobKind::Miss { key, .. } = &jkind {
-            for (tx, f_enqueued, mut f_trace) in self.followers.remove(key).unwrap_or_default() {
+            let flw = self.followers.remove(key).unwrap_or_default();
+            for (sink, f_enqueued, mut f_trace) in flw.sinks {
                 router.finish_failed(kind, false, f_enqueued, &mut f_trace);
-                let _ = tx.send(Err(anyhow!("{msg}")));
+                sink.fail(&msg);
             }
         }
         router.finish_failed(kind, false, enqueued, &mut trace);
-        let _ = reply.send(Err(anyhow!("{msg}")));
+        reply.fail(&msg);
     }
 }
 
@@ -664,5 +810,83 @@ mod tests {
         }
         assert_eq!(sched.completed(), 5);
         assert!(sched.is_idle());
+    }
+
+    #[test]
+    fn dropped_stream_receiver_cancels_in_flight_session() {
+        let mut router = test_router(sched_cfg(2, 1));
+        let mut sched = Scheduler::new(router.config.scheduler);
+        let query = "cancel me topic alpha beta";
+        let emb = router.embedder().embed(query).unwrap();
+        let mut trace = TraceBuilder::disabled();
+        let kind = match router.route(query, emb, Instant::now(), &mut trace) {
+            RouteDecision::Miss(m) => {
+                let key = query_key(&m.query);
+                JobKind::Miss { job: m, key }
+            }
+            _ => unreachable!("fresh query must route to the miss path"),
+        };
+        let (tx, rx) = mpsc::channel();
+        let job = Job::with_sink(kind, ReplySink::stream(tx), Instant::now(), trace);
+        sched.submit(job, &mut router);
+        assert_eq!(sched.active_sessions(), 1);
+        // One round streams the first chunk; then the client goes away.
+        sched.step(&mut router);
+        drop(rx);
+        let mut rounds = 0;
+        while sched.active_sessions() > 0 {
+            sched.step(&mut router);
+            rounds += 1;
+            assert!(rounds < 10, "cancelled session must free its slot promptly");
+        }
+        assert!(sched.is_idle(), "no waiting job may be stranded");
+        assert_eq!(router.counters.get("cancelled"), 1);
+        assert_eq!(
+            router.counters.get("misses"),
+            0,
+            "a cancelled generation must not be accounted as a completed miss"
+        );
+    }
+
+    #[test]
+    fn late_follower_catches_up_on_streamed_text() {
+        let mut router = test_router(sched_cfg(4, 1));
+        let mut sched = Scheduler::new(router.config.scheduler);
+        let query = "what is a skip list exactly";
+        // Leader: a plain blocking submission (4-step miss).
+        let leader_rx = submit_query(&mut sched, &mut router, query);
+        // Two rounds of decode happen before the duplicate arrives.
+        sched.step(&mut router);
+        sched.step(&mut router);
+        // Follower: a streaming duplicate of the same query.
+        let emb = router.embedder().embed(query).unwrap();
+        let mut trace = TraceBuilder::disabled();
+        let kind = match router.route(query, emb, Instant::now(), &mut trace) {
+            RouteDecision::Miss(m) => {
+                let key = query_key(&m.query);
+                JobKind::Miss { job: m, key }
+            }
+            _ => unreachable!("exact fast path must miss pre-insert"),
+        };
+        let (tx, rx) = mpsc::channel();
+        let follower = Job::with_sink(kind, ReplySink::stream(tx), Instant::now(), trace);
+        sched.submit(follower, &mut router);
+        assert_eq!(sched.coalesced(), 1, "duplicate must attach, not start a session");
+        sched.drain(&mut router);
+        let leader = leader_rx.recv().unwrap().unwrap();
+        let mut streamed = String::new();
+        let mut done_text = None;
+        for ev in rx.iter() {
+            match ev {
+                crate::coordinator::StreamEvent::Delta(d) => streamed.push_str(&d),
+                crate::coordinator::StreamEvent::Done(r) => done_text = Some(r.text),
+                crate::coordinator::StreamEvent::Error(e) => panic!("follower failed: {e}"),
+            }
+        }
+        assert_eq!(
+            streamed, leader.text,
+            "catch-up + live deltas must reassemble the leader's exact text"
+        );
+        assert_eq!(done_text.as_deref(), Some(leader.text.as_str()));
     }
 }

@@ -114,6 +114,15 @@ pub trait LlmSession {
 
     fn is_done(&self) -> bool;
 
+    /// Text decoded since the last call — always a prefix-continuation of
+    /// the final response text, UTF-8-complete at every boundary. Sessions
+    /// that cannot decode incrementally return an empty string; the reply
+    /// path streams the remainder at completion, so concatenated deltas
+    /// always equal the blocking text regardless.
+    fn take_delta(&mut self) -> String {
+        String::new()
+    }
+
     /// Consume the session into the finished response.
     fn finish(self: Box<Self>) -> Result<LlmResponse>;
 }
@@ -328,6 +337,8 @@ impl SubstrateLlm {
                     pool: Rc::clone(pool),
                     slot: Some(slot),
                     tokenizer: self.gen.tokenizer().clone(),
+                    decoder: self.gen.tokenizer().stream_decoder(),
+                    consumed: 0,
                 }));
             }
             // Every slot occupied: overflow onto a per-session backend
@@ -342,7 +353,11 @@ impl SubstrateLlm {
             self.allow_span,
             self.prefix.as_ref(),
         )?;
-        Ok(Box::new(SubstrateSession { session }))
+        Ok(Box::new(SubstrateSession {
+            session,
+            decoder: self.gen.tokenizer().stream_decoder(),
+            consumed: 0,
+        }))
     }
 
     fn run(&mut self, segments: &[&str]) -> Result<LlmResponse> {
@@ -362,6 +377,9 @@ struct BatchedLlmSession {
     /// `None` once finished (so Drop doesn't free a re-admitted slot).
     slot: Option<usize>,
     tokenizer: crate::tokenizer::Tokenizer,
+    /// Incremental view of the slot's token stream for `take_delta`.
+    decoder: crate::tokenizer::StreamDecoder,
+    consumed: usize,
 }
 
 impl LlmSession for BatchedLlmSession {
@@ -375,6 +393,20 @@ impl LlmSession for BatchedLlmSession {
             Some(slot) => self.pool.borrow().is_done(slot),
             None => true,
         }
+    }
+
+    fn take_delta(&mut self) -> String {
+        let Some(slot) = self.slot else {
+            return String::new();
+        };
+        let pool = self.pool.borrow();
+        let toks = pool.tokens(slot);
+        if self.consumed >= toks.len() {
+            return String::new();
+        }
+        let delta = self.decoder.push_ids(&toks[self.consumed..]);
+        self.consumed = toks.len();
+        delta
     }
 
     fn finish(mut self: Box<Self>) -> Result<LlmResponse> {
@@ -405,6 +437,9 @@ impl Drop for BatchedLlmSession {
 /// at completion.
 struct SubstrateSession {
     session: GenSession,
+    /// Incremental view of the generated token stream for `take_delta`.
+    decoder: crate::tokenizer::StreamDecoder,
+    consumed: usize,
 }
 
 impl LlmSession for SubstrateSession {
@@ -414,6 +449,16 @@ impl LlmSession for SubstrateSession {
 
     fn is_done(&self) -> bool {
         self.session.is_done()
+    }
+
+    fn take_delta(&mut self) -> String {
+        let toks = self.session.tokens();
+        if self.consumed >= toks.len() {
+            return String::new();
+        }
+        let delta = self.decoder.push_ids(&toks[self.consumed..]);
+        self.consumed = toks.len();
+        delta
     }
 
     fn finish(self: Box<Self>) -> Result<LlmResponse> {

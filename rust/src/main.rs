@@ -12,13 +12,15 @@
 //! Figure/table reproduction lives in `cargo bench` (see DESIGN.md);
 //! examples/ hold the end-to-end drivers.
 
+use std::thread;
+
 use anyhow::Result;
 
 use tweakllm::config::Config;
 use tweakllm::coordinator::{Engine, Router};
 use tweakllm::datasets::{ChatTrace, TraceProfile};
 use tweakllm::runtime::Runtime;
-use tweakllm::server::{pathway_str, Client, Server};
+use tweakllm::server::{pathway_str, Client, HttpServer, Server};
 use tweakllm::util::{Args, Json};
 
 fn main() {
@@ -38,6 +40,8 @@ fn usage() -> &'static str {
                                      start, snapshot on graceful shutdown\n\
             [--trace-dir DIR]        export completed request traces as\n\
                                      JSONL to DIR/traces.jsonl\n\
+            [--http-port PORT]       also serve OpenAI-compatible\n\
+                                     /v1/chat/completions (SSE streaming)\n\
      query  [--addr HOST:PORT] TEXT  send one query to a running server\n\
      snapshot [--addr HOST:PORT]     force a cache snapshot + WAL rotation\n\
      demo   [--n N] [--threshold T]  route a small synthetic trace and report\n"
@@ -63,6 +67,9 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(d) = args.opt_str("trace-dir") {
         cfg.set("trace.export_dir", d)?;
     }
+    if let Some(p) = args.opt_str("http-port") {
+        cfg.set("server.http_port", p)?;
+    }
     Ok(cfg)
 }
 
@@ -82,6 +89,8 @@ fn run() -> Result<()> {
         "serve" => {
             let cfg = load_config(&args)?;
             let addr = args.str("addr", "127.0.0.1:7411");
+            // Captured before cfg moves into the engine factory closure.
+            let http_port = cfg.server.http_port;
             eprintln!("[tweakllm] loading artifacts from {} ...", cfg.artifact_dir);
             let (_engine, handle) = Engine::start(move || {
                 let rt = Runtime::load(&cfg.artifact_dir, &[])?;
@@ -98,8 +107,21 @@ fn run() -> Result<()> {
                 }
                 Ok(router)
             })?;
-            let server = Server::bind(&addr, handle)?;
+            let server = Server::bind(&addr, handle.clone())?;
             eprintln!("[tweakllm] serving on {}", server.local_addr()?);
+            if http_port != 0 {
+                let host = addr.rsplit_once(':').map(|(h, _)| h).unwrap_or("127.0.0.1");
+                let http = HttpServer::bind(&format!("{host}:{http_port}"), handle)?;
+                eprintln!(
+                    "[tweakllm] OpenAI-compatible endpoint on http://{}/v1/chat/completions",
+                    http.local_addr()?
+                );
+                thread::spawn(move || {
+                    if let Err(e) = http.serve() {
+                        eprintln!("[tweakllm] http front end exited: {e:#}");
+                    }
+                });
+            }
             server.serve()
         }
         "query" => {

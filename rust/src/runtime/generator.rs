@@ -1693,6 +1693,15 @@ impl GenSession {
         }
     }
 
+    /// Tokens generated so far (grows with each `advance`; the streaming
+    /// layer reads the tail it has not yet decoded).
+    pub fn tokens(&self) -> &[i32] {
+        match &self.inner {
+            SessionInner::Literal(s) => s.tokens(),
+            SessionInner::Resident(s) => s.tokens(),
+        }
+    }
+
     /// Consume the session into the finished generation.
     pub fn finish(self) -> Generation {
         let (token_ids, stats) = match self.inner {

@@ -23,17 +23,26 @@
 //! to 5 ms of added latency. Connections are now accepted the instant they
 //! arrive; shutdown wakes the blocked `accept` with a self-connect
 //! ([`Shutdown::signal`]).
+//!
+//! Beside the TCP listener, [`HttpServer`] exposes an OpenAI-compatible
+//! `POST /v1/chat/completions` endpoint (`[server] http_port`, 0 = off).
+//! With `"stream": true` it replies as Server-Sent Events: one
+//! `chat.completion.chunk` per token delta, a final chunk carrying
+//! `finish_reason`, `usage`, and a `"tweakllm"` extension object
+//! (`pathway`, `similarity`, `trace_id`), then `data: [DONE]`. Empty
+//! liveness probes from the engine become SSE comment lines, so a closed
+//! client socket surfaces as a write error and cancels the session.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{EngineHandle, Pathway};
+use crate::coordinator::{EngineHandle, Pathway, RoutedResponse, StreamEvent};
 use crate::trace::StageSummary;
 use crate::util::Json;
 
@@ -107,26 +116,37 @@ impl Server {
     /// connect is accepted the moment it arrives (blocking accept — no
     /// poll-interval quantization on cold-connect latency).
     pub fn serve(&self) -> Result<()> {
-        loop {
-            match self.listener.accept() {
-                Ok((stream, _)) => {
-                    // Check AFTER accept too: the shutdown wake arrives as a
-                    // connection; it (and any connect racing it) is dropped.
-                    if self.stop.load(Ordering::Relaxed) {
-                        return Ok(());
-                    }
-                    let handle = self.handle.clone();
-                    let stop = Arc::clone(&self.stop);
-                    thread::spawn(move || {
-                        let _ = handle_connection(stream, handle, stop);
-                    });
+        accept_loop(&self.listener, &self.stop, |stream| {
+            let handle = self.handle.clone();
+            let stop = Arc::clone(&self.stop);
+            thread::spawn(move || {
+                let _ = handle_connection(stream, handle, stop);
+            });
+        })
+    }
+}
+
+/// Shared blocking accept loop (TCP line protocol + HTTP front end).
+/// Checks the stop flag AFTER accept too: the shutdown wake arrives as a
+/// connection; it (and any connect racing it) is dropped.
+fn accept_loop(
+    listener: &TcpListener,
+    stop: &Arc<AtomicBool>,
+    spawn: impl Fn(TcpStream),
+) -> Result<()> {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
                 }
-                Err(e) => {
-                    if self.stop.load(Ordering::Relaxed) {
-                        return Ok(());
-                    }
-                    return Err(e.into());
+                spawn(stream);
+            }
+            Err(e) => {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
                 }
+                return Err(e.into());
             }
         }
     }
@@ -266,6 +286,7 @@ fn process_line(line: &str, handle: &EngineHandle) -> Json {
                 ("degraded_hits", Json::num(s.degraded_hits as f64)),
                 ("shed", Json::num(s.shed as f64)),
                 ("failed", Json::num(s.failed as f64)),
+                ("cancelled", Json::num(s.cancelled as f64)),
                 ("embed_bypasses", Json::num(s.embed_bypasses as f64)),
                 ("miss_retries", Json::num(s.miss_retries as f64)),
                 ("breaker_trips", Json::num(s.breaker_trips as f64)),
@@ -351,6 +372,382 @@ fn stage_rows(rows: &[StageSummary]) -> Json {
     )
 }
 
+// ---------------------------------------------------------------------------
+// OpenAI-compatible HTTP/SSE front end
+// ---------------------------------------------------------------------------
+
+/// Minimal HTTP/1.1 listener for `POST /v1/chat/completions`, one request
+/// per connection (`Connection: close`). Non-streaming requests get a full
+/// `chat.completion` JSON body; `"stream": true` gets SSE chunks. Runs
+/// beside the TCP line-protocol [`Server`] on the same [`EngineHandle`].
+pub struct HttpServer {
+    listener: TcpListener,
+    handle: EngineHandle,
+    stop: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    pub fn bind(addr: &str, handle: EngineHandle) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding http {addr}"))?;
+        Ok(HttpServer { listener, handle, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Handle that stops a running `serve` loop (flag + accept wake).
+    pub fn shutdown_handle(&self) -> Result<Shutdown> {
+        Ok(Shutdown { stop: Arc::clone(&self.stop), addr: self.listener.local_addr()? })
+    }
+
+    /// Serve until [`Shutdown::signal`]. Blocks the calling thread.
+    pub fn serve(&self) -> Result<()> {
+        accept_loop(&self.listener, &self.stop, |stream| {
+            let handle = self.handle.clone();
+            let stop = Arc::clone(&self.stop);
+            thread::spawn(move || {
+                let _ = handle_http_connection(stream, handle, stop);
+            });
+        })
+    }
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Read one CRLF-terminated header line, polling the stop flag on read
+/// timeouts. `None` means EOF (or shutdown) before a complete line.
+fn read_http_line(
+    reader: &mut BufReader<TcpStream>,
+    stop: &AtomicBool,
+) -> Result<Option<String>> {
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(None);
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(None),
+            Ok(_) => return Ok(Some(line.trim_end_matches(['\r', '\n']).to_string())),
+            Err(e) if would_block(&e) => {
+                // Partial bytes stay in `line`; bound it like the TCP path.
+                if line.len() > MAX_LINE_BYTES {
+                    bail!("header line exceeds {MAX_LINE_BYTES} bytes");
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Read exactly `len` body bytes, polling the stop flag on read timeouts.
+fn read_http_body(
+    reader: &mut BufReader<TcpStream>,
+    len: usize,
+    stop: &AtomicBool,
+) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; len];
+    let mut filled = 0;
+    while filled < len {
+        if stop.load(Ordering::Relaxed) {
+            bail!("server shutting down");
+        }
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => bail!("connection closed mid-body"),
+            Ok(n) => filled += n,
+            Err(e) if would_block(&e) => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(buf)
+}
+
+fn http_error(writer: &mut TcpStream, status: &str, msg: &str) -> Result<()> {
+    let body = Json::obj_from(vec![(
+        "error",
+        Json::obj_from(vec![
+            ("message", Json::s(msg)),
+            ("type", Json::s("invalid_request_error")),
+        ]),
+    )])
+    .to_string();
+    write!(
+        writer,
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    writer.flush()?;
+    Ok(())
+}
+
+/// Content of the last `"role": "user"` message (the query the router sees).
+fn last_user_message(req: &Json) -> Option<String> {
+    let msgs = req.opt("messages")?.arr().ok()?;
+    msgs.iter()
+        .rev()
+        .find(|m| m.opt("role").and_then(|r| r.str().ok()) == Some("user"))
+        .and_then(|m| m.opt("content").and_then(|c| c.str().ok()))
+        .map(str::to_string)
+}
+
+fn next_completion_id() -> String {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    format!("chatcmpl-{}", NEXT.fetch_add(1, Ordering::Relaxed))
+}
+
+fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+fn usage_json(r: &RoutedResponse) -> Json {
+    Json::obj_from(vec![
+        ("prompt_tokens", Json::num(r.usage.input_tokens as f64)),
+        ("completion_tokens", Json::num(r.usage.output_tokens as f64)),
+        (
+            "total_tokens",
+            Json::num((r.usage.input_tokens + r.usage.output_tokens) as f64),
+        ),
+    ])
+}
+
+/// The `"tweakllm"` extension object on final chunks / blocking replies:
+/// which pathway served the request, the top-1 similarity, and the span
+/// trace id to join against `{"admin": "trace"}`.
+fn tweak_json(r: &RoutedResponse) -> Json {
+    Json::obj_from(vec![
+        ("pathway", Json::s(pathway_str(r.pathway))),
+        (
+            "similarity",
+            r.similarity.map(|s| Json::num(s as f64)).unwrap_or(Json::Null),
+        ),
+        ("trace_id", Json::num(r.trace_id as f64)),
+        ("latency_us", Json::num(r.total_micros as f64)),
+    ])
+}
+
+/// One `chat.completion.chunk`. `role` only on the preamble chunk, `finish`
+/// + `done` (usage & tweakllm extension) only on the final chunk.
+fn chunk_json(
+    id: &str,
+    model: &str,
+    created: u64,
+    role: Option<&str>,
+    content: &str,
+    finish: Option<&str>,
+    done: Option<&RoutedResponse>,
+) -> Json {
+    let mut delta = Vec::new();
+    if let Some(role) = role {
+        delta.push(("role", Json::s(role)));
+    }
+    if !content.is_empty() {
+        delta.push(("content", Json::s(content)));
+    }
+    let choice = Json::obj_from(vec![
+        ("index", Json::num(0.0)),
+        ("delta", Json::obj_from(delta)),
+        ("finish_reason", finish.map(Json::s).unwrap_or(Json::Null)),
+    ]);
+    let mut fields = vec![
+        ("id", Json::s(id)),
+        ("object", Json::s("chat.completion.chunk")),
+        ("created", Json::num(created as f64)),
+        ("model", Json::s(model)),
+        ("choices", Json::Arr(vec![choice])),
+    ];
+    if let Some(r) = done {
+        fields.push(("usage", usage_json(r)));
+        fields.push(("tweakllm", tweak_json(r)));
+    }
+    Json::obj_from(fields)
+}
+
+fn send_sse(writer: &mut TcpStream, payload: &str) -> Result<()> {
+    writer.write_all(b"data: ")?;
+    writer.write_all(payload.as_bytes())?;
+    writer.write_all(b"\n\n")?;
+    writer.flush()?;
+    Ok(())
+}
+
+fn handle_http_connection(
+    stream: TcpStream,
+    handle: EngineHandle,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(READ_POLL_INTERVAL))?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let request_line = match read_http_line(&mut reader, &stop)? {
+        Some(l) if !l.is_empty() => l,
+        _ => return Ok(()),
+    };
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let mut content_length = 0usize;
+    loop {
+        let line = match read_http_line(&mut reader, &stop)? {
+            Some(l) => l,
+            None => return Ok(()),
+        };
+        if line.is_empty() {
+            break; // blank line: headers done
+        }
+        if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    if path != "/v1/chat/completions" {
+        let msg = "unknown path (expected POST /v1/chat/completions)";
+        return http_error(&mut writer, "404 Not Found", msg);
+    }
+    if method != "POST" {
+        return http_error(&mut writer, "405 Method Not Allowed", "expected POST");
+    }
+    if content_length == 0 || content_length > MAX_LINE_BYTES {
+        let msg = format!("request body must be 1..={MAX_LINE_BYTES} bytes");
+        return http_error(&mut writer, "400 Bad Request", &msg);
+    }
+    let body = read_http_body(&mut reader, content_length, &stop)?;
+    let req = match std::str::from_utf8(&body).ok().and_then(|s| Json::parse(s).ok()) {
+        Some(j) => j,
+        None => return http_error(&mut writer, "400 Bad Request", "body is not valid JSON"),
+    };
+    let query = match last_user_message(&req) {
+        Some(q) => q,
+        None => {
+            let msg = "messages must contain a user message with string content";
+            return http_error(&mut writer, "400 Bad Request", msg);
+        }
+    };
+    let model =
+        req.opt("model").and_then(|m| m.str().ok()).unwrap_or("tweakllm").to_string();
+    let streaming = req.opt("stream").and_then(|s| s.bool().ok()).unwrap_or(false);
+    let id = next_completion_id();
+    let created = unix_now();
+    if streaming {
+        serve_sse(&mut writer, &handle, &query, &id, &model, created)
+    } else {
+        serve_completion(&mut writer, &handle, &query, &id, &model, created)
+    }
+}
+
+fn serve_completion(
+    writer: &mut TcpStream,
+    handle: &EngineHandle,
+    query: &str,
+    id: &str,
+    model: &str,
+    created: u64,
+) -> Result<()> {
+    let r = match handle.request(query) {
+        Ok(r) => r,
+        Err(e) => {
+            return http_error(writer, "500 Internal Server Error", &format!("{e:#}"))
+        }
+    };
+    let message = Json::obj_from(vec![
+        ("role", Json::s("assistant")),
+        ("content", Json::s(r.text.clone())),
+    ]);
+    let choice = Json::obj_from(vec![
+        ("index", Json::num(0.0)),
+        ("message", message),
+        ("finish_reason", Json::s("stop")),
+    ]);
+    let body = Json::obj_from(vec![
+        ("id", Json::s(id)),
+        ("object", Json::s("chat.completion")),
+        ("created", Json::num(created as f64)),
+        ("model", Json::s(model)),
+        ("choices", Json::Arr(vec![choice])),
+        ("usage", usage_json(&r)),
+        ("tweakllm", tweak_json(&r)),
+    ])
+    .to_string();
+    write!(
+        writer,
+        "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    writer.flush()?;
+    Ok(())
+}
+
+/// Pump one streamed completion out as SSE. A failed write (client gone,
+/// stalled past [`WRITE_TIMEOUT`]) errors out of this function and drops
+/// the receiver; the engine-side sink latches closed on its next send or
+/// probe and the scheduler cancels the in-flight session.
+fn serve_sse(
+    writer: &mut TcpStream,
+    handle: &EngineHandle,
+    query: &str,
+    id: &str,
+    model: &str,
+    created: u64,
+) -> Result<()> {
+    let rx = match handle.request_streaming(query) {
+        Ok(rx) => rx,
+        Err(e) => {
+            return http_error(writer, "500 Internal Server Error", &format!("{e:#}"))
+        }
+    };
+    write!(
+        writer,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+         Cache-Control: no-cache\r\nConnection: close\r\n\r\n"
+    )?;
+    // Role preamble chunk, per the OpenAI streaming shape.
+    let preamble = chunk_json(id, model, created, Some("assistant"), "", None, None);
+    send_sse(writer, &preamble.to_string())?;
+    for ev in rx.iter() {
+        match ev {
+            StreamEvent::Delta(text) if text.is_empty() => {
+                // Engine liveness probe → SSE comment: reaches the socket
+                // (and fails if the client is gone) without touching the
+                // payload any SSE client reassembles.
+                writer.write_all(b":\n\n")?;
+                writer.flush()?;
+            }
+            StreamEvent::Delta(text) => {
+                let chunk = chunk_json(id, model, created, None, &text, None, None);
+                send_sse(writer, &chunk.to_string())?;
+            }
+            StreamEvent::Done(resp) => {
+                let fin = chunk_json(id, model, created, None, "", Some("stop"), Some(&resp));
+                send_sse(writer, &fin.to_string())?;
+                send_sse(writer, "[DONE]")?;
+                break;
+            }
+            StreamEvent::Error(msg) => {
+                let err = Json::obj_from(vec![(
+                    "error",
+                    Json::obj_from(vec![
+                        ("message", Json::s(msg)),
+                        ("type", Json::s("server_error")),
+                    ]),
+                )]);
+                send_sse(writer, &err.to_string())?;
+                send_sse(writer, "[DONE]")?;
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Minimal blocking client for the line protocol (examples + tests).
 pub struct Client {
     reader: BufReader<TcpStream>,
@@ -413,5 +810,57 @@ mod tests {
         // checking only the parse branch (no engine call happens).
         let j = Json::parse("{\"x\": 1}").unwrap();
         assert!(j.opt("query").is_none());
+    }
+
+    #[test]
+    fn last_user_message_picks_newest_user_turn() {
+        let req = Json::parse(
+            r#"{"messages": [
+                {"role": "system", "content": "be terse"},
+                {"role": "user", "content": "first"},
+                {"role": "assistant", "content": "reply"},
+                {"role": "user", "content": "second"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(last_user_message(&req).as_deref(), Some("second"));
+        let none = Json::parse(r#"{"messages": [{"role": "system", "content": "s"}]}"#)
+            .unwrap();
+        assert!(last_user_message(&none).is_none());
+        assert!(last_user_message(&Json::parse("{}").unwrap()).is_none());
+    }
+
+    #[test]
+    fn chunk_json_openai_shapes() {
+        let first = chunk_json("chatcmpl-1", "m", 7, Some("assistant"), "", None, None);
+        assert_eq!(first.get("object").unwrap().str().unwrap(), "chat.completion.chunk");
+        let delta = |j: &Json| j.get("choices").unwrap().arr().unwrap()[0].clone();
+        assert_eq!(
+            delta(&first).get("delta").unwrap().get("role").unwrap().str().unwrap(),
+            "assistant"
+        );
+        assert_eq!(*delta(&first).get("finish_reason").unwrap(), Json::Null);
+
+        let mid = chunk_json("chatcmpl-1", "m", 7, None, "tok", None, None);
+        assert_eq!(
+            delta(&mid).get("delta").unwrap().get("content").unwrap().str().unwrap(),
+            "tok"
+        );
+
+        let resp = RoutedResponse {
+            text: "full".into(),
+            pathway: Pathway::TweakHit,
+            similarity: Some(0.9),
+            cached_query: None,
+            cache_entry: None,
+            usage: crate::cost::TokenUsage { input_tokens: 3, output_tokens: 5 },
+            total_micros: 42,
+            trace_id: 17,
+        };
+        let fin = chunk_json("chatcmpl-1", "m", 7, None, "", Some("stop"), Some(&resp));
+        assert_eq!(delta(&fin).get("finish_reason").unwrap().str().unwrap(), "stop");
+        assert_eq!(fin.get("usage").unwrap().get("total_tokens").unwrap().usize().unwrap(), 8);
+        let ext = fin.get("tweakllm").unwrap();
+        assert_eq!(ext.get("pathway").unwrap().str().unwrap(), "tweak_hit");
+        assert_eq!(ext.get("trace_id").unwrap().usize().unwrap(), 17);
     }
 }

@@ -176,6 +176,128 @@ impl Tokenizer {
         }
         out
     }
+
+    /// Stateful incremental counterpart of [`Self::decode`] for streaming:
+    /// feed ids as they are generated and get back exactly the text
+    /// `decode` would have appended so far.
+    pub fn stream_decoder(&self) -> StreamDecoder {
+        StreamDecoder::new()
+    }
+}
+
+/// Byte-level UTF-8 reassembly for streaming decoders: multi-byte characters
+/// whose bytes arrive across separate pushes are held back until complete,
+/// so a consumer never sees a replacement char for a merely *split* char.
+/// Bytes that can never complete a character (genuinely invalid input) are
+/// substituted with U+FFFD so a corrupt stream still terminates.
+#[derive(Clone, Debug, Default)]
+pub struct Utf8Guard {
+    pending: Vec<u8>,
+}
+
+impl Utf8Guard {
+    pub fn new() -> Self {
+        Utf8Guard { pending: Vec::new() }
+    }
+
+    /// Feed raw bytes; returns every character that is now complete.
+    /// An incomplete trailing sequence is held back for the next push.
+    pub fn push(&mut self, bytes: &[u8]) -> String {
+        self.pending.extend_from_slice(bytes);
+        let buf = std::mem::take(&mut self.pending);
+        let mut out = String::new();
+        let mut rest = &buf[..];
+        loop {
+            match std::str::from_utf8(rest) {
+                Ok(s) => {
+                    out.push_str(s);
+                    rest = &[];
+                    break;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    out.push_str(std::str::from_utf8(&rest[..valid]).expect("valid prefix"));
+                    match e.error_len() {
+                        // Incomplete trailing sequence: more bytes may still
+                        // complete it — hold it back instead of emitting a
+                        // replacement char mid-stream.
+                        None => {
+                            rest = &rest[valid..];
+                            break;
+                        }
+                        // Invalid bytes can never complete: substitute and
+                        // keep scanning the remainder.
+                        Some(n) => {
+                            out.push('\u{FFFD}');
+                            rest = &rest[valid + n..];
+                        }
+                    }
+                }
+            }
+        }
+        self.pending = rest.to_vec();
+        out
+    }
+
+    /// End of stream: a held-back tail can no longer complete, so it renders
+    /// as replacement chars (lossy) rather than being dropped silently.
+    pub fn flush(&mut self) -> String {
+        let buf = std::mem::take(&mut self.pending);
+        String::from_utf8_lossy(&buf).into_owned()
+    }
+
+    pub fn has_pending(&self) -> bool {
+        !self.pending.is_empty()
+    }
+}
+
+/// Incremental [`Tokenizer::decode`]: push newly generated ids as they land
+/// and receive the exact text `decode` would have appended, UTF-8-safe at
+/// every step. Invariant (unit-tested): the concatenation of every
+/// `push_ids` return value plus `finish()`, over ANY split of an id stream,
+/// equals one-shot `decode` of the whole stream.
+#[derive(Clone, Debug, Default)]
+pub struct StreamDecoder {
+    guard: Utf8Guard,
+    emitted_any: bool,
+    done: bool,
+}
+
+impl StreamDecoder {
+    pub fn new() -> Self {
+        StreamDecoder::default()
+    }
+
+    /// Feed the next span of generated ids; returns the text to append.
+    /// EOS/PAD latch the stream done (ids after them are ignored), BOS/SEP
+    /// are skipped, and words are space-joined exactly like `decode`.
+    pub fn push_ids(&mut self, ids: &[i32]) -> String {
+        if self.done {
+            return String::new();
+        }
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if id == EOS_ID || id == PAD_ID {
+                self.done = true;
+                break;
+            }
+            if id == BOS_ID || id == SEP_ID {
+                continue;
+            }
+            if self.emitted_any {
+                bytes.push(b' ');
+            }
+            bytes.extend_from_slice(format!("w{id}").as_bytes());
+            self.emitted_any = true;
+        }
+        self.guard.push(&bytes)
+    }
+
+    /// End of stream: release any held-back bytes.
+    pub fn finish(&mut self) -> String {
+        self.done = true;
+        self.guard.flush()
+    }
 }
 
 #[cfg(test)]
@@ -318,5 +440,79 @@ mod tests {
         let t = tok();
         let s = t.decode(&[BOS_ID, 100, SEP_ID, 200, EOS_ID, 300]);
         assert_eq!(s, "w100 w200");
+    }
+
+    #[test]
+    fn utf8_guard_never_splits_multibyte_chars() {
+        // 2-, 3-, and 4-byte sequences split at every byte boundary: the
+        // split must never surface a replacement char mid-stream, and the
+        // concatenation must reproduce the original text exactly.
+        let text = "aé€🦀b";
+        let bytes = text.as_bytes();
+        for split in 0..=bytes.len() {
+            let mut g = Utf8Guard::new();
+            let mut out = g.push(&bytes[..split]);
+            out.push_str(&g.push(&bytes[split..]));
+            out.push_str(&g.flush());
+            assert!(!out.contains('\u{FFFD}'), "split at {split}: {out:?}");
+            assert_eq!(out, text, "split at {split}");
+        }
+        // byte-at-a-time delivery
+        let mut g = Utf8Guard::new();
+        let mut out = String::new();
+        for &b in bytes {
+            out.push_str(&g.push(&[b]));
+        }
+        out.push_str(&g.flush());
+        assert_eq!(out, text);
+    }
+
+    #[test]
+    fn utf8_guard_substitutes_invalid_bytes() {
+        let mut g = Utf8Guard::new();
+        assert_eq!(g.push(&[0xFF, b'a']), "\u{FFFD}a");
+        assert_eq!(g.push(&[0x80]), "\u{FFFD}"); // lone continuation byte
+        assert!(!g.has_pending());
+        assert!(g.flush().is_empty());
+    }
+
+    #[test]
+    fn utf8_guard_flush_renders_incomplete_tail() {
+        let mut g = Utf8Guard::new();
+        // First two bytes of € (E2 82 AC): held back while the stream is
+        // live, substituted at end-of-stream when they can never complete.
+        assert_eq!(g.push(&[0xE2, 0x82]), "");
+        assert!(g.has_pending());
+        assert_eq!(g.flush(), "\u{FFFD}");
+    }
+
+    #[test]
+    fn stream_decoder_concat_equals_one_shot_decode() {
+        let t = tok();
+        let ids = [BOS_ID, 100, SEP_ID, 200, 300, EOS_ID, 400];
+        for split in 0..=ids.len() {
+            let mut d = t.stream_decoder();
+            let mut out = d.push_ids(&ids[..split]);
+            out.push_str(&d.push_ids(&ids[split..]));
+            out.push_str(&d.finish());
+            assert_eq!(out, t.decode(&ids), "split at {split}");
+        }
+        // one id at a time
+        let mut d = t.stream_decoder();
+        let mut out = String::new();
+        for id in ids {
+            out.push_str(&d.push_ids(&[id]));
+        }
+        out.push_str(&d.finish());
+        assert_eq!(out, t.decode(&ids));
+    }
+
+    #[test]
+    fn stream_decoder_latches_on_eos() {
+        let t = tok();
+        let mut d = t.stream_decoder();
+        assert_eq!(d.push_ids(&[100, EOS_ID]), "w100");
+        assert_eq!(d.push_ids(&[200]), "");
+        assert_eq!(d.finish(), "");
     }
 }

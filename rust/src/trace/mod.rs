@@ -69,10 +69,15 @@ pub enum Stage {
     CacheInsert,
     /// Response accounting + reply-channel send.
     Reply,
+    /// Time-to-first-token: `[0, ttft]` wall offset of the first streamed
+    /// delta leaving the engine (recorded once per trace; `value` = TTFT
+    /// micros). Depth 2 — it overlays the depth-1 stage timeline rather
+    /// than partitioning it.
+    FirstToken,
 }
 
 impl Stage {
-    pub const ALL: [Stage; 11] = [
+    pub const ALL: [Stage; 12] = [
         Stage::Ingest,
         Stage::BatcherWait,
         Stage::Embed,
@@ -84,6 +89,7 @@ impl Stage {
         Stage::DecodeRound,
         Stage::CacheInsert,
         Stage::Reply,
+        Stage::FirstToken,
     ];
 
     pub fn name(self) -> &'static str {
@@ -99,6 +105,7 @@ impl Stage {
             Stage::DecodeRound => "decode_round",
             Stage::CacheInsert => "cache_insert",
             Stage::Reply => "reply",
+            Stage::FirstToken => "first_token",
         }
     }
 
@@ -106,9 +113,10 @@ impl Stage {
         self as usize
     }
 
-    /// Nesting depth in the span tree (DecodeRound nests under Decode).
+    /// Nesting depth in the span tree (DecodeRound nests under Decode;
+    /// FirstToken overlays the whole pre-first-delta timeline).
     pub fn depth(self) -> usize {
-        if self == Stage::DecodeRound {
+        if self == Stage::DecodeRound || self == Stage::FirstToken {
             2
         } else {
             1
@@ -237,6 +245,12 @@ impl TraceBuilder {
         self.enabled
     }
 
+    /// Trace id (0 for disabled builders). Surfaced on responses so clients
+    /// can correlate a streamed reply with its server-side trace.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
     fn us(&self, t: Instant) -> u64 {
         t.saturating_duration_since(self.start).as_micros() as u64
     }
@@ -320,6 +334,24 @@ impl TraceBuilder {
         if let Some(s) = self.spans.iter_mut().rev().find(|s| s.stage == stage) {
             s.value = value;
         }
+    }
+
+    /// Record time-to-first-token: the wall offset of the first streamed
+    /// delta, exactly once per trace (later calls are no-ops). The span
+    /// covers `[0, ttft]` so the histogram row aggregates TTFT per pathway.
+    /// Deliberately does NOT advance `last_end`: the Reply span is measured
+    /// by exclusion and must not shrink because a delta streamed early.
+    pub fn first_token(&mut self) {
+        if !self.enabled || self.spans.iter().any(|s| s.stage == Stage::FirstToken) {
+            return;
+        }
+        let end_us = self.us(Instant::now());
+        self.spans.push(Span {
+            stage: Stage::FirstToken,
+            start_us: 0,
+            end_us,
+            value: end_us as f32,
+        });
     }
 }
 
@@ -732,6 +764,32 @@ mod tests {
         assert!(rows.iter().any(|r| r.stage == "search" && r.pathway == "miss" && r.n == 2));
         assert!(rows.iter().any(|r| r.stage == "total" && r.pathway == "miss" && r.n == 2));
         assert!(!rows.iter().any(|r| r.pathway == "exact_hit"));
+    }
+
+    #[test]
+    fn first_token_records_once_and_aggregates() {
+        let mut h = hub(8);
+        let t0 = Instant::now();
+        let mut tb = h.begin("q", t0);
+        tb.span_at(Stage::Search, t0, t0 + Duration::from_micros(5), f32::NAN);
+        tb.first_token();
+        tb.first_token(); // only the FIRST delta defines TTFT
+        tb.span_since_last(Stage::Reply);
+        h.finish(&mut tb, TraceTag::TweakHit, 1_000, 0.7);
+        let ft = &h.recent(1)[0];
+        let spans: Vec<_> = ft.spans.iter().filter(|s| s.stage == Stage::FirstToken).collect();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].start_us, 0);
+        assert!((spans[0].value - spans[0].end_us as f32).abs() < 1.0);
+        // Reply is measured by exclusion from the last depth-1 span end;
+        // the depth-2 TTFT overlay must not have shrunk it below the gap
+        // after Search.
+        let reply = ft.span(Stage::Reply).unwrap();
+        assert_eq!(reply.start_us, 5, "reply must start at the Search span end");
+        let rows = h.stage_summaries();
+        assert!(rows
+            .iter()
+            .any(|r| r.stage == "first_token" && r.pathway == "tweak_hit" && r.n == 1));
     }
 
     #[test]

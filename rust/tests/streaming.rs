@@ -1,0 +1,311 @@
+//! Token streaming end-to-end: concatenated deltas must be bit-identical
+//! to the blocking response on every pathway, scheduler on and off; a
+//! dropped receiver cancels the in-flight session; the HTTP/SSE front end
+//! speaks the OpenAI chunk shape over a real socket.
+
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+use tweakllm::baselines::{FaultPlan, MockLlm};
+use tweakllm::config::{Config, IndexKindConfig};
+use tweakllm::coordinator::{Engine, EngineHandle, Pathway, RoutedResponse, Router, StreamEvent};
+use tweakllm::faults::FaultMode;
+use tweakllm::runtime::{NativeBowEmbedder, TextEmbedder};
+use tweakllm::util::Json;
+
+fn start_engine(sched: bool, big: MockLlm, small: MockLlm) -> (Engine, EngineHandle) {
+    Engine::start(move || {
+        let mut cfg = Config::paper();
+        cfg.index.kind = IndexKindConfig::Flat;
+        cfg.exact_match_fast_path = true;
+        cfg.scheduler.enabled = sched;
+        let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+        Ok(Router::with_models(embedder, Box::new(big), Box::new(small), cfg))
+    })
+    .expect("engine start")
+}
+
+/// Drain a streamed reply: concatenated non-empty deltas plus the terminal
+/// event (`Done` response or `Error` message).
+fn drain(rx: Receiver<StreamEvent>) -> (String, Result<RoutedResponse, String>) {
+    let mut text = String::new();
+    for ev in rx.iter() {
+        match ev {
+            StreamEvent::Delta(d) => text.push_str(&d),
+            StreamEvent::Done(r) => return (text, Ok(r)),
+            StreamEvent::Error(m) => return (text, Err(m)),
+        }
+    }
+    (text, Err("stream ended without a terminal event".into()))
+}
+
+/// Submit a streamed request and drain it to the terminal event.
+fn stream(h: &EngineHandle, q: &str) -> (String, Result<RoutedResponse, String>) {
+    drain(h.request_streaming(q).expect("request_streaming"))
+}
+
+#[test]
+fn stream_concat_matches_blocking_text_on_every_pathway() {
+    for sched in [true, false] {
+        let big = MockLlm::new("big").with_pace(4, Duration::ZERO);
+        let small = MockLlm::new("small").with_pace(4, Duration::ZERO);
+        let (_engine, h) = start_engine(sched, big, small);
+
+        let (text, r) = stream(&h, "why is coffee good for health?");
+        let r = r.expect("miss completes");
+        assert_eq!(r.pathway, Pathway::Miss, "sched={sched}");
+        assert!(!text.is_empty(), "sched={sched}: miss streamed nothing");
+        assert_eq!(text, r.text, "sched={sched}: miss deltas != blocking text");
+        let miss_text = r.text;
+
+        let (text, r) = stream(&h, "why is coffee great for health?");
+        let r = r.expect("tweak completes");
+        assert_eq!(r.pathway, Pathway::TweakHit, "sched={sched}");
+        assert_eq!(text, r.text, "sched={sched}: tweak deltas != blocking text");
+
+        let (text, r) = stream(&h, "why is coffee good for health?");
+        let r = r.expect("exact hit completes");
+        assert_eq!(r.pathway, Pathway::ExactHit, "sched={sched}");
+        assert_eq!(text, r.text, "sched={sched}: exact deltas != blocking text");
+        assert_eq!(text, miss_text, "sched={sched}: exact hit must replay cached bytes");
+
+        // The blocking wrapper drains the same transport: same bytes.
+        let b = h.request("why is coffee good for health?").unwrap();
+        assert_eq!(b.text, miss_text, "sched={sched}");
+    }
+}
+
+#[test]
+fn degraded_stream_replays_cached_text_verbatim() {
+    for sched in [true, false] {
+        let big = MockLlm::new("big").with_pace(3, Duration::ZERO);
+        let plan = FaultPlan::new(|_| FaultMode::Error);
+        let small = MockLlm::new("small").with_fault_plan(plan);
+        let (_engine, h) = start_engine(sched, big, small);
+
+        let primed = h.request("why is coffee good for health?").unwrap();
+        assert_eq!(primed.pathway, Pathway::Miss, "sched={sched}");
+
+        let (text, r) = stream(&h, "why is coffee great for health?");
+        let r = r.expect("degraded hit completes");
+        assert_eq!(r.pathway, Pathway::DegradedHit, "sched={sched}");
+        assert_eq!(text, r.text, "sched={sched}: degraded deltas != blocking text");
+        assert_eq!(
+            text, primed.text,
+            "sched={sched}: degraded hit must replay the raw cached response"
+        );
+    }
+}
+
+#[test]
+fn coalesced_follower_stream_matches_leader_bytes() {
+    // Slow miss (~160ms) so the duplicate provably attaches mid-flight.
+    let big = MockLlm::new("big").with_pace(40, Duration::from_millis(4));
+    let small = MockLlm::new("small");
+    let (_engine, h) = start_engine(true, big, small);
+
+    let leader_rx = h.request_streaming("what makes glass transparent?").unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    let follower_rx = h.request_streaming("what makes glass transparent?").unwrap();
+
+    let leader = std::thread::spawn(move || drain(leader_rx));
+    let (f_text, f_r) = drain(follower_rx);
+    let (l_text, l_r) = leader.join().unwrap();
+    let l_r = l_r.expect("leader completes");
+    let f_r = f_r.expect("follower completes");
+
+    assert_eq!(l_text, l_r.text, "leader deltas != blocking text");
+    assert_eq!(f_text, f_r.text, "follower deltas != blocking text");
+    assert_eq!(
+        l_text, f_text,
+        "follower must catch up on already-streamed text and then track the leader"
+    );
+    let stats = h.stats().unwrap();
+    assert_eq!(stats.coalesced, 1, "duplicate must coalesce, not regenerate");
+    assert_eq!(stats.misses, 1);
+}
+
+#[test]
+fn dropped_stream_receiver_cancels_and_frees_the_slot() {
+    let big = MockLlm::new("big").with_pace(500, Duration::from_millis(2));
+    let small = MockLlm::new("small");
+    let (_engine, h) = start_engine(true, big, small);
+
+    let rx = h.request_streaming("an answer nobody will wait for").unwrap();
+    // Receive at least one real delta so the session is provably decoding.
+    let mut saw_text = false;
+    for ev in rx.iter() {
+        if let StreamEvent::Delta(d) = ev {
+            if !d.is_empty() {
+                saw_text = true;
+                break;
+            }
+        }
+    }
+    assert!(saw_text, "no delta before disconnect");
+    drop(rx); // client gone
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let s = h.stats().unwrap();
+        if s.cancelled == 1 {
+            assert_eq!(s.active_sessions, 0, "cancelled session must free its slot");
+            assert_eq!(s.misses, 0, "a cancelled request is not a completed miss");
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "scheduler never observed the disconnect"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // The engine keeps serving after the abandoned session is reaped.
+    let r = h.request("a fresh question after the disconnect").unwrap();
+    assert_eq!(r.pathway, Pathway::Miss);
+}
+
+#[test]
+fn every_reply_finishes_exactly_one_trace() {
+    let big = MockLlm::new("big").with_pace(3, Duration::ZERO);
+    let small = MockLlm::new("small").with_pace(3, Duration::ZERO);
+    let (_engine, h) = start_engine(true, big, small);
+
+    let queries = [
+        "how do owls rotate their heads?",
+        "how do owls turn their heads?",
+        "how do owls rotate their heads?",
+        "something unrelated entirely",
+    ];
+    let mut ids = std::collections::HashSet::new();
+    for q in queries {
+        let (_text, r) = drain(h.request_streaming(q).unwrap());
+        let r = r.expect("streamed request completes");
+        assert!(r.trace_id > 0, "streamed reply must carry its trace id");
+        assert!(ids.insert(r.trace_id), "trace id {} reused", r.trace_id);
+    }
+    let blocking = h.request("one more blocking request").unwrap();
+    assert!(blocking.trace_id > 0);
+
+    let s = h.stats().unwrap();
+    assert_eq!(
+        s.traces_finished,
+        queries.len() as u64 + 1,
+        "one reply must finish exactly one trace"
+    );
+}
+
+fn http_roundtrip(addr: &str, request: &str) -> String {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(request.as_bytes()).unwrap();
+    s.flush().unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap(); // Connection: close → EOF
+    raw
+}
+
+fn post(addr: &str, body: &str) -> String {
+    let req = format!(
+        "POST /v1/chat/completions HTTP/1.1\r\nHost: t\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    http_roundtrip(addr, &req)
+}
+
+#[test]
+fn sse_endpoint_streams_openai_chunks_over_a_real_socket() {
+    let big = MockLlm::new("big").with_pace(6, Duration::ZERO);
+    let small = MockLlm::new("small");
+    let (_engine, h) = start_engine(true, big, small);
+    let http = tweakllm::server::HttpServer::bind("127.0.0.1:0", h).unwrap();
+    let addr = http.local_addr().unwrap().to_string();
+    let stop = http.shutdown_handle().unwrap();
+    let join = std::thread::spawn(move || http.serve());
+
+    let body = r#"{"model":"tweakllm","stream":true,"messages":[{"role":"user","content":"why do cats purr so much?"}]}"#;
+    let raw = post(&addr, body);
+    assert!(raw.starts_with("HTTP/1.1 200 OK"), "{raw}");
+    assert!(raw.contains("text/event-stream"), "{raw}");
+
+    let mut payloads = Vec::new();
+    for line in raw.lines() {
+        if let Some(p) = line.strip_prefix("data: ") {
+            payloads.push(p);
+        }
+    }
+    assert!(payloads.len() >= 3, "expected preamble + deltas + final: {raw}");
+    assert_eq!(payloads.last().copied(), Some("[DONE]"));
+
+    let mut text = String::new();
+    let mut finish = None;
+    let mut pathway = None;
+    for p in &payloads[..payloads.len() - 1] {
+        let j = Json::parse(p).unwrap();
+        assert_eq!(j.get("object").unwrap().str().unwrap(), "chat.completion.chunk");
+        let choice = &j.get("choices").unwrap().arr().unwrap()[0];
+        if let Some(d) = choice.get("delta").unwrap().opt("content") {
+            text.push_str(d.str().unwrap());
+        }
+        if let Some(f) = choice.opt("finish_reason") {
+            finish = Some(f.str().unwrap().to_string());
+            let ext = j.get("tweakllm").unwrap();
+            pathway = Some(ext.get("pathway").unwrap().str().unwrap().to_string());
+            assert!(ext.get("trace_id").unwrap().usize().unwrap() > 0);
+            assert!(j.get("usage").unwrap().get("total_tokens").unwrap().f64().unwrap() > 0.0);
+        }
+    }
+    assert_eq!(finish.as_deref(), Some("stop"));
+    assert_eq!(pathway.as_deref(), Some("miss"));
+    assert!(!text.is_empty());
+
+    // Same question, non-streaming: an exact hit with identical bytes —
+    // the server-level identity gate.
+    let body2 = r#"{"messages":[{"role":"user","content":"why do cats purr so much?"}]}"#;
+    let raw2 = post(&addr, body2);
+    let (head, json_body) = raw2.split_once("\r\n\r\n").unwrap();
+    assert!(head.contains("200 OK"), "{raw2}");
+    let j = Json::parse(json_body).unwrap();
+    assert_eq!(j.get("object").unwrap().str().unwrap(), "chat.completion");
+    let msg = j.get("choices").unwrap().arr().unwrap()[0].get("message").unwrap().clone();
+    assert_eq!(
+        msg.get("content").unwrap().str().unwrap(),
+        text,
+        "streamed concat must equal the blocking reply body"
+    );
+    assert_eq!(
+        j.get("tweakllm").unwrap().get("pathway").unwrap().str().unwrap(),
+        "exact_hit"
+    );
+
+    stop.signal();
+    let _ = join.join().unwrap();
+}
+
+#[test]
+fn http_front_end_rejects_unknown_paths_methods_and_bodies() {
+    let big = MockLlm::new("big");
+    let small = MockLlm::new("small");
+    let (_engine, h) = start_engine(false, big, small);
+    let http = tweakllm::server::HttpServer::bind("127.0.0.1:0", h).unwrap();
+    let addr = http.local_addr().unwrap().to_string();
+    let stop = http.shutdown_handle().unwrap();
+    let join = std::thread::spawn(move || http.serve());
+
+    let raw = http_roundtrip(&addr, "GET /nope HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert!(raw.starts_with("HTTP/1.1 404"), "{raw}");
+
+    let raw = http_roundtrip(&addr, "GET /v1/chat/completions HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert!(raw.starts_with("HTTP/1.1 405"), "{raw}");
+
+    let raw = post(&addr, "{\"messages\": []}");
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+    assert!(raw.contains("user message"), "{raw}");
+
+    let raw = post(&addr, "this is not json");
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+
+    stop.signal();
+    let _ = join.join().unwrap();
+}
