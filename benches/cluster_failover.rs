@@ -1,0 +1,435 @@
+//! Cluster drill: shard-count throughput scaling and availability through
+//! a mid-run owner kill.
+//!
+//! Tier 1 — **scaling**: the same all-miss workload is pushed through a
+//! cluster router fronting 1, 2, then 4 in-process shard owners (mock
+//! models, millisecond-paced decode, scheduler off so each engine decodes
+//! serially). With the per-shard engine as the bottleneck, QPS must rise
+//! with the node count; the drill gates 4 nodes at >= 1.5x the single-node
+//! QPS and 2 nodes strictly above it.
+//!
+//! Tier 2 — **availability**: a two-shard cluster with WAL-shipped
+//! replicas takes a mixed repeat/fresh workload while shard 0's owner
+//! front end is killed about a third of the way in. The contract is the
+//! paper appendix's failover rule made measurable: every request gets
+//! exactly one non-error reply (availability == 100%), one finished trace
+//! per request, and post-kill reads come from the replica under the
+//! bounded-staleness rule.
+//!
+//! Results land in `BENCH_cluster_failover.json` (uploaded from CI).
+//!
+//! `cargo bench --bench cluster_failover [-- --requests 120 --threads 8]`
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use tweakllm::baselines::MockLlm;
+use tweakllm::bench::{bench_args, Table};
+use tweakllm::cache::query_key;
+use tweakllm::cluster::ring::ShardRing;
+use tweakllm::cluster::{ClusterServer, HealthState, ReplicaListener, ShardSpec, Shipper, Topology};
+use tweakllm::config::{Config, IndexKindConfig};
+use tweakllm::coordinator::{Engine, EngineHandle, Router};
+use tweakllm::runtime::{NativeBowEmbedder, TextEmbedder};
+use tweakllm::server::{Client, Server, Shutdown};
+use tweakllm::util::{Json, Summary};
+
+const VNODES: usize = 64;
+const WAIT: Duration = Duration::from_secs(10);
+
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        if t0.elapsed() > WAIT {
+            panic!("timed out waiting for {what}");
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// One shard node: engine + TCP front end on an ephemeral port. Decode is
+/// millisecond-paced and the interleaving scheduler is off, so a node's
+/// miss throughput is engine-bound — the quantity the scaling tier divides
+/// across shards.
+struct Node {
+    engine: Engine,
+    handle: EngineHandle,
+    addr: String,
+    stop: Shutdown,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl Node {
+    fn kill_front_end(&mut self) {
+        self.stop.signal();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+
+    fn shutdown(mut self) {
+        self.kill_front_end();
+        self.engine.shutdown();
+    }
+}
+
+fn start_node(role: &str, data_dir: Option<PathBuf>) -> anyhow::Result<(Node, HealthState)> {
+    let health = HealthState::new(role);
+    let (engine, handle) = Engine::start(move || {
+        let mut cfg = Config::paper();
+        cfg.index.kind = IndexKindConfig::Flat;
+        cfg.exact_match_fast_path = true;
+        cfg.scheduler.enabled = false;
+        if let Some(dir) = &data_dir {
+            cfg.persist.data_dir = dir.to_string_lossy().into_owned();
+            cfg.persist.wal_fsync = false;
+        }
+        let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+        let mut big = MockLlm::new("big");
+        big.steps = 16;
+        big.step_delay = Duration::from_millis(1);
+        let mut small = MockLlm::new("small");
+        small.steps = 8;
+        small.step_delay = Duration::from_millis(1);
+        let mut r = Router::with_models(embedder, Box::new(big), Box::new(small), cfg);
+        r.enable_persistence()?;
+        Ok(r)
+    })?;
+    let server = Server::bind("127.0.0.1:0", handle.clone())?.with_health(health.extra());
+    let addr = server.local_addr()?.to_string();
+    let stop = server.shutdown_handle()?;
+    let join = thread::spawn(move || {
+        let _ = server.serve();
+    });
+    Ok((Node { engine, handle, addr, stop, join: Some(join) }, health))
+}
+
+fn start_router(topology: Topology) -> anyhow::Result<(String, Shutdown, thread::JoinHandle<()>)> {
+    let cluster = ClusterServer::bind("127.0.0.1:0", topology, &Config::paper())?;
+    let addr = cluster.local_addr()?.to_string();
+    let stop = cluster.shutdown_handle()?;
+    let join = thread::spawn(move || {
+        let _ = cluster.serve();
+    });
+    Ok((addr, stop, join))
+}
+
+/// A query of six unique words: guaranteed mutual misses under the
+/// bag-of-words embedder, so every request costs one paced generation.
+fn fresh_query(tag: &str, j: usize) -> String {
+    format!("{tag}{j}a {tag}{j}b {tag}{j}c {tag}{j}d {tag}{j}e {tag}{j}f")
+}
+
+struct LoadResult {
+    answered: usize,
+    errors: usize,
+    lat_ms: Vec<f64>,
+    served_by: BTreeMap<String, usize>,
+    wall: Duration,
+}
+
+impl LoadResult {
+    fn qps(&self) -> f64 {
+        self.answered as f64 / self.wall.as_secs_f64()
+    }
+}
+
+/// Drive `queries` through the router from `threads` client connections
+/// (strided split, preserving per-thread order). A reply counts as
+/// answered only if it carries no `error` field; `progress` ticks once per
+/// completed request so a killer thread can fire mid-run.
+fn run_load(
+    addr: &str,
+    queries: &[String],
+    threads: usize,
+    progress: Option<Arc<AtomicUsize>>,
+) -> LoadResult {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let chunk: Vec<String> = queries.iter().skip(t).step_by(threads).cloned().collect();
+            let addr = addr.to_string();
+            let progress = progress.clone();
+            thread::spawn(move || {
+                let mut c = Client::connect(&addr).expect("connect to cluster router");
+                let mut out = Vec::with_capacity(chunk.len());
+                for q in &chunk {
+                    let t1 = Instant::now();
+                    let reply = c.query(q);
+                    out.push((reply, t1.elapsed().as_secs_f64() * 1000.0));
+                    if let Some(p) = &progress {
+                        p.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                out
+            })
+        })
+        .collect();
+    let mut res = LoadResult {
+        answered: 0,
+        errors: 0,
+        lat_ms: Vec::new(),
+        served_by: BTreeMap::new(),
+        wall: Duration::ZERO,
+    };
+    for h in handles {
+        for (reply, ms) in h.join().expect("load thread panicked") {
+            match reply {
+                Ok(r) if r.opt("error").is_none() => {
+                    res.answered += 1;
+                    res.lat_ms.push(ms);
+                    let by = r
+                        .opt("served_by")
+                        .and_then(|s| s.str().ok())
+                        .unwrap_or("unknown")
+                        .to_string();
+                    *res.served_by.entry(by).or_insert(0) += 1;
+                }
+                _ => res.errors += 1,
+            }
+        }
+    }
+    res.wall = t0.elapsed();
+    res
+}
+
+/// Tier 1: the same all-miss workload against 1 / 2 / 4 shard owners.
+fn scaling_tier(requests: usize, threads: usize) -> anyhow::Result<(Vec<Json>, Vec<f64>)> {
+    let mut rows = Vec::new();
+    let mut qps = Vec::new();
+    let mut table = Table::new(
+        "QPS scaling across shard owners (all-miss workload)",
+        &["nodes", "requests", "wall_s", "qps", "p50_ms", "p99_ms"],
+    );
+    for &nodes in &[1usize, 2, 4] {
+        let mut owners = Vec::new();
+        for _ in 0..nodes {
+            owners.push(start_node("owner", None)?.0);
+        }
+        let topology = Topology {
+            max_staleness_ms: 10_000,
+            epoch: 1,
+            vnodes: VNODES,
+            shards: owners
+                .iter()
+                .map(|o| ShardSpec { owner: o.addr.clone(), replica: None })
+                .collect(),
+        };
+        let (raddr, rstop, rjoin) = start_router(topology)?;
+        let tag = format!("s{nodes}x");
+        let queries: Vec<String> = (0..requests).map(|j| fresh_query(&tag, j)).collect();
+        let res = run_load(&raddr, &queries, threads, None);
+        assert_eq!(
+            res.answered, requests,
+            "scaling tier ({nodes} nodes): every request must be answered"
+        );
+        assert_eq!(res.errors, 0, "scaling tier ({nodes} nodes): no errors allowed");
+        let s = Summary::of(&res.lat_ms);
+        table.push(vec![
+            nodes.to_string(),
+            requests.to_string(),
+            format!("{:.2}", res.wall.as_secs_f64()),
+            format!("{:.1}", res.qps()),
+            format!("{:.2}", s.p50),
+            format!("{:.2}", s.p99),
+        ]);
+        rows.push(Json::obj_from(vec![
+            ("nodes", Json::num(nodes as f64)),
+            ("requests", Json::num(requests as f64)),
+            ("wall_s", Json::num(res.wall.as_secs_f64())),
+            ("qps", Json::num(res.qps())),
+            ("p50_ms", Json::num(s.p50)),
+            ("p99_ms", Json::num(s.p99)),
+        ]));
+        qps.push(res.qps());
+        rstop.signal();
+        let _ = rjoin.join();
+        for o in owners {
+            o.shutdown();
+        }
+    }
+    println!("{}", table.render());
+    Ok((rows, qps))
+}
+
+/// One shard's owner/replica pair: a durable owner whose WAL is shipped to
+/// an in-memory replica applying it through the recovery path.
+struct Pair {
+    owner: Node,
+    replica: Node,
+    _listener: ReplicaListener,
+    _shipper: Shipper,
+    dir: PathBuf,
+}
+
+fn replicated_pair(tag: &str) -> anyhow::Result<Pair> {
+    let dir = std::env::temp_dir()
+        .join(format!("tweakllm-bench-cluster-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (owner, owner_health) = start_node("owner", Some(dir.clone()))?;
+    let (replica, replica_health) = start_node("replica", None)?;
+    let listener = ReplicaListener::start("127.0.0.1:0", replica.handle.clone(), replica_health)?;
+    let shipper = Shipper::start(dir.clone(), &listener.local_addr().to_string(), owner_health);
+    Ok(Pair { owner, replica, _listener: listener, _shipper: shipper, dir })
+}
+
+/// Tier 2: kill shard 0's owner a third of the way into a mixed workload
+/// and require 100% availability plus one finished trace per request.
+fn availability_tier(requests: usize, threads: usize) -> anyhow::Result<Json> {
+    let mut pairs = vec![replicated_pair("a")?, replicated_pair("b")?];
+    let topology = Topology {
+        max_staleness_ms: 10_000,
+        epoch: 1,
+        vnodes: VNODES,
+        shards: pairs
+            .iter()
+            .map(|p| ShardSpec {
+                owner: p.owner.addr.clone(),
+                replica: Some(p.replica.addr.clone()),
+            })
+            .collect(),
+    };
+    let ring = ShardRing::new(pairs.len(), VNODES);
+    let (raddr, rstop, rjoin) = start_router(topology)?;
+
+    // Prime the cluster, then wait for both replicas to converge so the
+    // post-kill repeats have something to hit.
+    let prime_n = requests / 4;
+    let primes: Vec<String> = (0..prime_n).map(|j| fresh_query("k", j)).collect();
+    let warm = run_load(&raddr, &primes, threads.min(4), None);
+    assert_eq!(warm.answered, prime_n, "priming: every request must be answered");
+    let mut expect = vec![0usize; pairs.len()];
+    for q in &primes {
+        expect[ring.route(query_key(q))] += 1;
+    }
+    for (i, p) in pairs.iter().enumerate() {
+        let want = expect[i];
+        wait_for(&format!("replica {i} to apply {want} shipped entries"), || {
+            p.replica.handle.stats().is_ok_and(|s| s.cache_size == want)
+        });
+    }
+
+    // Mixed measured phase: 2/3 repeats of the primed set, 1/3 fresh
+    // misses, with shard 0's owner front end killed once a third of the
+    // requests have completed.
+    let measured: Vec<String> = (0..requests)
+        .map(|j| if j % 3 == 2 { fresh_query("f", j) } else { primes[j % prime_n].clone() })
+        .collect();
+    let progress = Arc::new(AtomicUsize::new(0));
+    let kill_at = requests / 3;
+    let kill_stop = pairs[0].owner.stop.clone();
+    let watched = Arc::clone(&progress);
+    let killer = thread::spawn(move || {
+        while watched.load(Ordering::Relaxed) < kill_at {
+            thread::sleep(Duration::from_millis(2));
+        }
+        kill_stop.signal();
+    });
+    let res = run_load(&raddr, &measured, threads, Some(progress));
+    killer.join().expect("killer thread panicked");
+    pairs[0].owner.kill_front_end();
+
+    assert_eq!(
+        res.answered, requests,
+        "availability drill: every request must be answered through the kill"
+    );
+    assert_eq!(res.errors, 0, "availability drill: no error replies allowed");
+
+    // One reply, one trace — the router's own ledger must agree.
+    let mut c = Client::connect(&raddr)?;
+    let stats = c.stats()?;
+    let total = (prime_n + requests) as f64;
+    assert_eq!(stats.get("requests")?.f64()?, total, "router request count");
+    assert_eq!(stats.get("traces_finished")?.f64()?, total, "one reply, one trace");
+    assert_eq!(stats.get("errors")?.f64()?, 0.0, "router must record zero errors");
+    let failovers = stats.get("failovers")?.f64()?;
+    let replica_served = stats.get("replica_served")?.f64()?;
+    assert!(failovers >= 1.0, "the kill must force at least one failover");
+    assert!(replica_served >= 1.0, "post-kill reads must come from the replica");
+    drop(c);
+
+    let s = Summary::of(&res.lat_ms);
+    let mut table = Table::new(
+        "Availability through a mid-run owner kill (2 shards, replicas)",
+        &["requests", "answered", "availability", "failovers", "replica_served", "p99_ms"],
+    );
+    table.push(vec![
+        requests.to_string(),
+        res.answered.to_string(),
+        "100%".to_string(),
+        format!("{failovers:.0}"),
+        format!("{replica_served:.0}"),
+        format!("{:.2}", s.p99),
+    ]);
+    println!("{}", table.render());
+
+    let served: Vec<(&str, Json)> = res
+        .served_by
+        .iter()
+        .map(|(k, v)| (k.as_str(), Json::num(*v as f64)))
+        .collect();
+    let row = Json::obj_from(vec![
+        ("requests", Json::num(requests as f64)),
+        ("answered", Json::num(res.answered as f64)),
+        ("availability", Json::num(res.answered as f64 / requests as f64)),
+        ("killed_shard", Json::num(0.0)),
+        ("kill_after_requests", Json::num(kill_at as f64)),
+        ("failovers", Json::num(failovers)),
+        ("replica_served", Json::num(replica_served)),
+        ("bypass_served", stats.get("bypass_served")?.clone()),
+        ("traces_finished", Json::num(total)),
+        ("served_by", Json::obj_from(served)),
+        ("p50_ms", Json::num(s.p50)),
+        ("p99_ms", Json::num(s.p99)),
+    ]);
+
+    rstop.signal();
+    let _ = rjoin.join();
+    for p in pairs {
+        let dir = p.dir.clone();
+        p.owner.shutdown();
+        p.replica.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    Ok(row)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let requests = args.usize("requests", 120)?;
+    let threads = args.usize("threads", 8)?;
+
+    println!("== cluster failover drill: {requests} requests, {threads} client threads ==\n");
+    let (scaling, qps) = scaling_tier(requests, threads)?;
+    // The scaling gate: with serial per-shard decode, more owners must
+    // mean more throughput. Thresholds leave room for shard imbalance.
+    assert!(
+        qps[1] > qps[0] * 1.1,
+        "2 nodes must out-serve 1 node (got {:.1} vs {:.1} qps)",
+        qps[1],
+        qps[0]
+    );
+    assert!(
+        qps[2] > qps[0] * 1.5,
+        "4 nodes must reach >= 1.5x single-node QPS (got {:.1} vs {:.1} qps)",
+        qps[2],
+        qps[0]
+    );
+
+    let availability = availability_tier(requests.max(48), threads)?;
+
+    let top = vec![
+        ("bench", Json::s("cluster_failover")),
+        ("requests", Json::num(requests as f64)),
+        ("threads", Json::num(threads as f64)),
+        ("scaling", Json::Arr(scaling)),
+        ("availability", availability),
+    ];
+    std::fs::write("BENCH_cluster_failover.json", Json::obj_from(top).to_string())?;
+    println!("wrote BENCH_cluster_failover.json");
+    Ok(())
+}

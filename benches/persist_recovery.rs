@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         data_dir: dir.to_string_lossy().to_string(),
         wal_fsync: false,
         compact_bytes: u64::MAX, // explicit compaction only: we time it
+        fsync_batch_ms: 0,
     };
 
     println!("\n=== Cache persistence — {n} entries, dim {dim} ===");

@@ -422,8 +422,41 @@ impl SemanticCache {
                 }
                 self.tick = self.tick.max(tick);
             }
+            WalOp::GenBump { .. } => {
+                // Compaction handoff marker — state-free on replay; only a
+                // shipping tailer acts on it (by switching log files).
+            }
         }
         Ok(())
+    }
+
+    /// Install a replicated snapshot (the WAL-shipping bootstrap payload)
+    /// into a freshly-built cache; afterwards keep the replica converged by
+    /// feeding every shipped record to [`Self::apply_replicated_op`].
+    /// Replication is literally recovery applied continuously, so a replica
+    /// never journals: the shipped records already live in the owner's WAL,
+    /// and re-journaling them here would double-write on promotion. To
+    /// re-bootstrap (shipper restarted from a newer generation), build a
+    /// fresh cache and restore into that instead.
+    pub fn restore_replicated(&mut self, state: SnapshotState) -> Result<()> {
+        if !self.entries.is_empty() {
+            bail!("restore_replicated requires a fresh cache (rebuild to re-bootstrap)");
+        }
+        if state.dim != self.index.dim() {
+            bail!(
+                "replicated snapshot dim {} != index dim {}",
+                state.dim,
+                self.index.dim()
+            );
+        }
+        self.restore(state);
+        Ok(())
+    }
+
+    /// Apply one shipped WAL record through the recovery path (see
+    /// [`Self::restore_replicated`]).
+    pub fn apply_replicated_op(&mut self, op: WalOp) -> Result<()> {
+        self.apply_wal_op(op)
     }
 
     pub fn entry(&self, id: usize) -> Option<&CacheEntry> {
@@ -542,6 +575,7 @@ mod tests {
             data_dir: dir.to_string_lossy().to_string(),
             wal_fsync: false,
             compact_bytes: u64::MAX,
+            fsync_batch_ms: 0,
         }
     }
 

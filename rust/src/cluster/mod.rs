@@ -1,0 +1,158 @@
+//! Cluster mode: consistent-hash cache sharding with WAL-shipping replicas.
+//!
+//! Three process roles built from today's single-node engine:
+//!
+//! * **Shard owner** — a normal `serve` process that owns one shard of the
+//!   embedding-keyed cache. With `--ship-to ADDR` it streams every WAL
+//!   record its [`crate::cache::persist`] layer writes to a follower.
+//! * **Replica** — a `serve --replication-listen ADDR` process that applies
+//!   the shipped records continuously through the existing recovery path
+//!   ([`crate::coordinator::ReplicaBatch`]) and acks its applied position,
+//!   so the owner can expose measured replication lag.
+//! * **Router** — `serve --cluster topology.toml`: a thin front end that
+//!   hashes each query onto the shard ring ([`ring::ShardRing`]) and fans
+//!   it to the owner over the TCP line protocol. Owner failures (detected
+//!   by a per-shard [`crate::faults::CircuitBreaker`]) fail over to the
+//!   replica under a bounded-staleness rule: replica hits are served only
+//!   while replication lag ≤ `[cluster] max_staleness_ms`, otherwise the
+//!   request degrades to a cache-bypass miss — stale text is never served.
+//!
+//! The WAL ship protocol lives in [`ship`]; the topology file format in
+//! [`topology`]; the failure drills in `rust/tests/cluster.rs` and
+//! `benches/cluster_failover.rs`. See DESIGN.md, "Cluster mode &
+//! replication".
+
+pub mod ring;
+pub mod router;
+pub mod ship;
+pub mod topology;
+
+pub use ring::ShardRing;
+pub use router::ClusterServer;
+pub use ship::{ReplicaListener, Shipper};
+pub use topology::{ShardSpec, Topology};
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::server::HealthExtra;
+use crate::util::Json;
+
+/// Role + replication position shared between the shipping / applying
+/// threads and the health verb (`{"admin": "health"}`, `GET /healthz`).
+#[derive(Clone, Debug, Default)]
+pub struct HealthSnapshot {
+    /// "standalone", "owner", "replica", or "router".
+    pub role: String,
+    /// Shard-map epoch from the topology file (0 = not clustered).
+    pub shard_epoch: u64,
+    /// Owner side: last WAL position handed to the socket.
+    pub shipped_gen: u64,
+    pub shipped_seq: u64,
+    /// Owner side: last position the replica acked, and how far behind the
+    /// newest shipped record that ack is.
+    pub acked_gen: u64,
+    pub acked_seq: u64,
+    pub ack_lag_ms: u64,
+    /// Owner side: a replica connection is currently attached.
+    pub connected: bool,
+    /// Replica side: last WAL position applied to the local cache.
+    pub applied_gen: u64,
+    pub applied_seq: u64,
+    /// Replica side: shipped records are known to exist past the applied
+    /// position since this instant (None = caught up).
+    pub behind_since: Option<Instant>,
+    /// Replica side: record application is paused (lag-injection drills).
+    pub apply_paused: bool,
+}
+
+impl HealthSnapshot {
+    /// Bounded-staleness input: 0 while caught up, else time spent behind.
+    pub fn staleness_ms(&self) -> u64 {
+        self.behind_since.map(|t| t.elapsed().as_millis() as u64).unwrap_or(0)
+    }
+}
+
+/// Shared, thread-safe [`HealthSnapshot`]. Cloning shares the state.
+#[derive(Clone, Default)]
+pub struct HealthState(Arc<Mutex<HealthSnapshot>>);
+
+impl HealthState {
+    pub fn new(role: &str) -> HealthState {
+        let state = HealthState::default();
+        state.update(|h| h.role = role.to_string());
+        state
+    }
+
+    pub fn update(&self, f: impl FnOnce(&mut HealthSnapshot)) {
+        f(&mut self.0.lock().unwrap());
+    }
+
+    pub fn snapshot(&self) -> HealthSnapshot {
+        self.0.lock().unwrap().clone()
+    }
+
+    /// The `"replication"` object merged into health replies.
+    pub fn to_json(&self) -> Json {
+        let h = self.snapshot();
+        Json::obj_from(vec![
+            ("role", Json::s(h.role.clone())),
+            ("shard_epoch", Json::num(h.shard_epoch as f64)),
+            (
+                "replication",
+                Json::obj_from(vec![
+                    ("connected", Json::Bool(h.connected)),
+                    ("shipped_gen", Json::num(h.shipped_gen as f64)),
+                    ("shipped_seq", Json::num(h.shipped_seq as f64)),
+                    ("acked_gen", Json::num(h.acked_gen as f64)),
+                    ("acked_seq", Json::num(h.acked_seq as f64)),
+                    ("ack_lag_ms", Json::num(h.ack_lag_ms as f64)),
+                    ("applied_gen", Json::num(h.applied_gen as f64)),
+                    ("applied_seq", Json::num(h.applied_seq as f64)),
+                    ("staleness_ms", Json::num(h.staleness_ms() as f64)),
+                    ("apply_paused", Json::Bool(h.apply_paused)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Adapter for [`crate::server::Server::with_health`].
+    pub fn extra(&self) -> HealthExtra {
+        let state = self.clone();
+        Arc::new(move || state.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staleness_zero_when_caught_up() {
+        let h = HealthState::new("replica");
+        assert_eq!(h.snapshot().staleness_ms(), 0);
+        h.update(|s| {
+            s.behind_since = Some(Instant::now() - std::time::Duration::from_millis(250))
+        });
+        assert!(h.snapshot().staleness_ms() >= 250);
+        h.update(|s| s.behind_since = None);
+        assert_eq!(h.snapshot().staleness_ms(), 0);
+    }
+
+    #[test]
+    fn health_json_shape() {
+        let h = HealthState::new("owner");
+        h.update(|s| {
+            s.shard_epoch = 3;
+            s.shipped_gen = 1;
+            s.shipped_seq = 42;
+            s.connected = true;
+        });
+        let j = h.to_json();
+        assert_eq!(j.get("role").unwrap().str().unwrap(), "owner");
+        assert_eq!(j.get("shard_epoch").unwrap().usize().unwrap(), 3);
+        let r = j.get("replication").unwrap();
+        assert_eq!(r.get("shipped_seq").unwrap().usize().unwrap(), 42);
+        assert!(r.get("connected").unwrap().bool().unwrap());
+    }
+}

@@ -1,0 +1,111 @@
+//! Consistent-hash shard ring with virtual nodes.
+//!
+//! Each shard contributes `vnodes` points on a 64-bit ring; a key routes
+//! to the owner of the first point at or after its hash (wrapping). The
+//! point set is a pure function of `(shards, vnodes)` — no RNG, no state —
+//! so routing is stable across process restarts, and growing the ring from
+//! N to N+1 shards only reassigns the keys that fall between the new
+//! shard's points and their predecessors (~1/(N+1) of the key space).
+//!
+//! Ties (two shards hashing a vnode to the same point — vanishingly rare
+//! with 64-bit hashes, but the ring must be deterministic even then) are
+//! broken rendezvous-style: the key is routed to whichever colliding shard
+//! maximizes `hash(key ‖ shard)`, which is still restart-stable.
+
+use crate::util::rng::hash_bytes;
+
+/// Virtual nodes per shard when the topology doesn't override it. Enough
+/// to keep the max/min shard-load ratio near 1 at single-digit shard
+/// counts without making ring construction measurable.
+pub const DEFAULT_VNODES: usize = 128;
+
+pub struct ShardRing {
+    /// `(point, shard)` sorted by point (then shard, for determinism).
+    points: Vec<(u64, usize)>,
+    shards: usize,
+}
+
+impl ShardRing {
+    pub fn new(shards: usize, vnodes: usize) -> ShardRing {
+        assert!(shards >= 1, "ring needs at least one shard");
+        assert!(vnodes >= 1, "ring needs at least one vnode per shard");
+        let mut points = Vec::with_capacity(shards * vnodes);
+        for s in 0..shards {
+            for v in 0..vnodes {
+                points.push((hash_bytes(format!("shard-{s}-vnode-{v}").as_bytes()), s));
+            }
+        }
+        points.sort_unstable();
+        ShardRing { points, shards }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Shard owning `key` (use [`crate::cache::query_key`] for query text,
+    /// so the router and every owner's exact-match path agree on identity).
+    pub fn route(&self, key: u64) -> usize {
+        let n = self.points.len();
+        let mut i = self.points.partition_point(|(p, _)| *p < key);
+        if i == n {
+            i = 0;
+        }
+        let point = self.points[i].0;
+        // Rendezvous tie-break across every shard colliding on this point.
+        let mut best = self.points[i].1;
+        let mut best_weight = Self::weight(key, best);
+        let mut j = i + 1;
+        while j < n && self.points[j].0 == point {
+            let w = Self::weight(key, self.points[j].1);
+            if w > best_weight {
+                best = self.points[j].1;
+                best_weight = w;
+            }
+            j += 1;
+        }
+        best
+    }
+
+    fn weight(key: u64, shard: usize) -> u64 {
+        let mut buf = [0u8; 16];
+        buf[..8].copy_from_slice(&key.to_le_bytes());
+        buf[8..].copy_from_slice(&(shard as u64).to_le_bytes());
+        hash_bytes(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_are_deterministic_across_reconstruction() {
+        let a = ShardRing::new(4, DEFAULT_VNODES);
+        let b = ShardRing::new(4, DEFAULT_VNODES);
+        for k in 0..1000u64 {
+            let key = hash_bytes(&k.to_le_bytes());
+            assert_eq!(a.route(key), b.route(key));
+        }
+    }
+
+    #[test]
+    fn all_shards_receive_load() {
+        let ring = ShardRing::new(4, DEFAULT_VNODES);
+        let mut counts = [0usize; 4];
+        for k in 0..4000u64 {
+            counts[ring.route(hash_bytes(&k.to_le_bytes()))] += 1;
+        }
+        for (s, c) in counts.iter().enumerate() {
+            assert!(*c > 0, "shard {s} got no keys");
+        }
+    }
+
+    #[test]
+    fn single_shard_takes_everything() {
+        let ring = ShardRing::new(1, 8);
+        for k in 0..100u64 {
+            assert_eq!(ring.route(hash_bytes(&k.to_le_bytes())), 0);
+        }
+    }
+}

@@ -1,0 +1,433 @@
+//! The cluster router front end (`serve --cluster topology.toml`).
+//!
+//! Speaks the same line protocol as the single-node [`crate::server`], but
+//! instead of owning an engine it hashes each query onto the shard ring
+//! and forwards it to the owning shard's `serve` process. Failure handling
+//! per shard:
+//!
+//! 1. **Owner healthy** — forward, relay the reply verbatim (plus `shard`
+//!    and `served_by` fields). Structured error replies from a live owner
+//!    (shed, terminal failure) are relayed as-is: the owner's own
+//!    degradation ladder already ran.
+//! 2. **Owner unreachable** (connect/write/read error, or its circuit
+//!    breaker is open) — probe the replica's measured replication lag. If
+//!    `staleness_ms <= max_staleness_ms`, serve the read from the replica
+//!    in `replica_read` mode (hits allowed, no cache mutation). Otherwise
+//!    degrade to a `bypass` read — a fresh uncached generation — so stale
+//!    cache text is never served.
+//! 3. **No replica / replica also down** — structured error reply. The
+//!    request still gets exactly one reply and one finished trace.
+//!
+//! Every request records a [`Stage::ShardRoute`] span (value = shard
+//! index) in the router's own [`TraceHub`], so one-reply-one-trace can be
+//! asserted end-to-end in the kill drills.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cache::query_key;
+use crate::config::Config;
+use crate::faults::CircuitBreaker;
+use crate::server::{
+    accept_loop, error_reply, send_reply, Shutdown, MAX_LINE_BYTES, READ_POLL_INTERVAL,
+    WRITE_TIMEOUT,
+};
+use crate::trace::{Stage, TraceHub, TraceTag};
+use crate::util::Json;
+
+use super::ring::ShardRing;
+use super::topology::Topology;
+use super::HealthState;
+
+/// Bound on one forwarded request (the backend may be mid-generation).
+const BACKEND_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+struct ShardState {
+    owner: String,
+    replica: Option<String>,
+    breaker: Mutex<CircuitBreaker>,
+}
+
+#[derive(Default)]
+struct Counters {
+    requests: AtomicU64,
+    owner_served: AtomicU64,
+    replica_served: AtomicU64,
+    bypass_served: AtomicU64,
+    failovers: AtomicU64,
+    errors: AtomicU64,
+}
+
+struct ClusterInner {
+    topology: Topology,
+    ring: ShardRing,
+    shards: Vec<ShardState>,
+    traces: Mutex<TraceHub>,
+    threshold: f32,
+    counters: Counters,
+    health: HealthState,
+}
+
+pub struct ClusterServer {
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    inner: Arc<ClusterInner>,
+}
+
+impl ClusterServer {
+    /// `cfg` supplies the per-shard breaker thresholds (`[faults]`) and the
+    /// router's trace settings (`[trace]`); the shard list comes from the
+    /// topology file.
+    pub fn bind(addr: &str, topology: Topology, cfg: &Config) -> Result<ClusterServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding cluster {addr}"))?;
+        let ring = ShardRing::new(topology.shards.len(), topology.vnodes);
+        let shards = topology
+            .shards
+            .iter()
+            .map(|s| ShardState {
+                owner: s.owner.clone(),
+                replica: s.replica.clone(),
+                breaker: Mutex::new(CircuitBreaker::from_config(&cfg.faults)),
+            })
+            .collect();
+        let health = HealthState::new("router");
+        health.update(|h| h.shard_epoch = topology.epoch);
+        let inner = Arc::new(ClusterInner {
+            topology,
+            ring,
+            shards,
+            traces: Mutex::new(TraceHub::new(cfg.trace.clone())),
+            threshold: cfg.similarity_threshold,
+            counters: Counters::default(),
+            health,
+        });
+        Ok(ClusterServer { listener, stop: Arc::new(AtomicBool::new(false)), inner })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn shutdown_handle(&self) -> Result<Shutdown> {
+        Ok(Shutdown::new(Arc::clone(&self.stop), self.listener.local_addr()?))
+    }
+
+    /// Serve until [`Shutdown::signal`]. Blocks the calling thread.
+    pub fn serve(&self) -> Result<()> {
+        accept_loop(&self.listener, &self.stop, |stream| {
+            let inner = Arc::clone(&self.inner);
+            let stop = Arc::clone(&self.stop);
+            thread::spawn(move || {
+                let _ = handle_router_connection(stream, inner, stop);
+            });
+        })
+    }
+}
+
+/// Line-protocol connection to one backend process; reconnected lazily by
+/// [`backend_roundtrip`] after any failure.
+struct Backend {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Backend {
+    fn connect(addr: &str) -> Result<Backend> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(BACKEND_READ_TIMEOUT))?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+        Ok(Backend { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    fn roundtrip(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            bail!("backend closed the connection");
+        }
+        Json::parse(&line)
+    }
+}
+
+/// Send one request on a cached backend connection, dialing (or redialing
+/// after a previous failure) on demand. Any error drops the cached
+/// connection so the next attempt starts clean.
+fn backend_roundtrip(
+    conns: &mut HashMap<String, Backend>,
+    addr: &str,
+    req: &Json,
+) -> Result<Json> {
+    if !conns.contains_key(addr) {
+        conns.insert(addr.to_string(), Backend::connect(addr)?);
+    }
+    let result = conns.get_mut(addr).unwrap().roundtrip(req);
+    if result.is_err() {
+        conns.remove(addr);
+    }
+    result
+}
+
+fn handle_router_connection(
+    stream: TcpStream,
+    inner: Arc<ClusterInner>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(READ_POLL_INTERVAL))?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    // Backend connections are per client connection: no shared mutable
+    // state on the forward path, so one slow backend never holds a lock
+    // other clients need.
+    let mut conns: HashMap<String, Backend> = HashMap::new();
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                if line.len() > MAX_LINE_BYTES {
+                    send_reply(
+                        &mut writer,
+                        &error_reply(format!("request line exceeds {MAX_LINE_BYTES} bytes")),
+                    )?;
+                    break;
+                }
+                if !line.trim().is_empty() {
+                    let reply = process_router_line(&line, &inner, &mut conns);
+                    send_reply(&mut writer, &reply)?;
+                }
+                line.clear();
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if line.len() > MAX_LINE_BYTES {
+                    send_reply(
+                        &mut writer,
+                        &error_reply(format!("request line exceeds {MAX_LINE_BYTES} bytes")),
+                    )?;
+                    break;
+                }
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                send_reply(&mut writer, &error_reply("request is not valid UTF-8".into()))?;
+                line.clear();
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+fn process_router_line(
+    line: &str,
+    inner: &ClusterInner,
+    conns: &mut HashMap<String, Backend>,
+) -> Json {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return error_reply(format!("bad json: {e}")),
+    };
+    if req.opt("stats").is_some() {
+        return inner.stats_json();
+    }
+    if let Some(admin) = req.opt("admin") {
+        return match admin.str() {
+            Ok("health") => inner.health_json(),
+            Ok("trace") => {
+                let n = req.opt("n").and_then(|v| v.usize().ok()).unwrap_or(16);
+                let r = inner.traces.lock().unwrap().report(n);
+                Json::obj_from(vec![
+                    ("traces", Json::Arr(r.traces.iter().map(|t| t.to_json()).collect())),
+                    ("slow", Json::Arr(r.slow.iter().map(|t| t.to_json()).collect())),
+                    ("finished", Json::num(r.finished as f64)),
+                    ("dropped", Json::num(r.dropped as f64)),
+                ])
+            }
+            _ => error_reply(
+                "unknown admin command (expected \"health\" or \"trace\")".into(),
+            ),
+        };
+    }
+    let query = match req.opt("query").and_then(|q| q.str().ok()) {
+        Some(q) => q.to_string(),
+        None => {
+            return error_reply("expected {\"query\": ...} or {\"stats\": true}".into())
+        }
+    };
+    inner.handle_query(&query, conns)
+}
+
+impl ClusterInner {
+    fn handle_query(&self, query: &str, conns: &mut HashMap<String, Backend>) -> Json {
+        let t0 = Instant::now();
+        self.counters.requests.fetch_add(1, Ordering::Relaxed);
+        let mut trace = self.traces.lock().unwrap().begin(query, t0);
+        let shard = self.ring.route(query_key(query));
+        let (mut reply, served_by, staleness) = self.dispatch(shard, query, conns);
+        // One span covering pick + forward (+ fallback); value = shard.
+        trace.span_at(Stage::ShardRoute, t0, Instant::now(), shard as f32);
+        let tag = match reply.opt("pathway").and_then(|p| p.str().ok()) {
+            Some("exact_hit") => TraceTag::ExactHit,
+            Some("tweak_hit") => TraceTag::TweakHit,
+            Some("degraded_hit") => TraceTag::DegradedHit,
+            Some("miss") => TraceTag::Miss,
+            _ => TraceTag::Failed,
+        };
+        if tag == TraceTag::Failed {
+            self.counters.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let total_us = t0.elapsed().as_micros() as u64;
+        self.traces.lock().unwrap().finish(&mut trace, tag, total_us, self.threshold);
+        if let Json::Obj(m) = &mut reply {
+            m.insert("shard".into(), Json::num(shard as f64));
+            m.insert("served_by".into(), Json::s(served_by));
+            if let Some(ms) = staleness {
+                m.insert("staleness_ms".into(), Json::num(ms as f64));
+            }
+        }
+        reply
+    }
+
+    /// Owner-first, breaker-gated forward with bounded-staleness fallback.
+    fn dispatch(
+        &self,
+        shard: usize,
+        query: &str,
+        conns: &mut HashMap<String, Backend>,
+    ) -> (Json, &'static str, Option<u64>) {
+        let st = &self.shards[shard];
+        let req = Json::obj_from(vec![("query", Json::s(query))]);
+        if st.breaker.lock().unwrap().allow(Instant::now()) {
+            match backend_roundtrip(conns, &st.owner, &req) {
+                Ok(reply) => {
+                    // The owner responded — even a structured error means
+                    // the process is alive and ran its own ladder.
+                    st.breaker.lock().unwrap().record_success(Instant::now());
+                    self.counters.owner_served.fetch_add(1, Ordering::Relaxed);
+                    return (reply, "owner", None);
+                }
+                Err(_) => {
+                    st.breaker.lock().unwrap().record_failure(Instant::now());
+                }
+            }
+        }
+        self.counters.failovers.fetch_add(1, Ordering::Relaxed);
+        let Some(replica) = &st.replica else {
+            return (
+                error_reply(format!("shard {shard} owner unavailable and has no replica")),
+                "none",
+                None,
+            );
+        };
+        // Bounded staleness: ask the replica how far behind it is. An
+        // unreachable replica reads as infinitely stale.
+        let staleness = backend_roundtrip(
+            conns,
+            replica,
+            &Json::obj_from(vec![("admin", Json::s("health"))]),
+        )
+        .ok()
+        .and_then(|h| {
+            h.opt("replication")?.opt("staleness_ms").and_then(|v| v.usize().ok())
+        })
+        .map(|ms| ms as u64)
+        .unwrap_or(u64::MAX);
+        let (mode, served_by) = if staleness <= self.topology.max_staleness_ms {
+            ("replica_read", "replica")
+        } else {
+            // Too stale for cache hits: a fresh uncached generation keeps
+            // the request available without serving stale text.
+            ("bypass", "replica_bypass")
+        };
+        let req = Json::obj_from(vec![("query", Json::s(query)), ("mode", Json::s(mode))]);
+        match backend_roundtrip(conns, replica, &req) {
+            Ok(reply) => {
+                let ctr = if mode == "bypass" {
+                    &self.counters.bypass_served
+                } else {
+                    &self.counters.replica_served
+                };
+                ctr.fetch_add(1, Ordering::Relaxed);
+                (reply, served_by, Some(staleness))
+            }
+            Err(e) => (
+                error_reply(format!("shard {shard}: owner and replica unavailable: {e:#}")),
+                "none",
+                Some(staleness),
+            ),
+        }
+    }
+
+    fn shard_rows(&self) -> Json {
+        Json::Arr(
+            self.shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let b = s.breaker.lock().unwrap();
+                    Json::obj_from(vec![
+                        ("shard", Json::num(i as f64)),
+                        ("owner", Json::s(s.owner.clone())),
+                        (
+                            "replica",
+                            s.replica
+                                .clone()
+                                .map(Json::s)
+                                .unwrap_or(Json::Null),
+                        ),
+                        ("breaker", Json::s(b.state().name())),
+                        ("trips", Json::num(b.trips() as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    fn stats_json(&self) -> Json {
+        let c = &self.counters;
+        Json::obj_from(vec![
+            ("requests", Json::num(c.requests.load(Ordering::Relaxed) as f64)),
+            ("owner_served", Json::num(c.owner_served.load(Ordering::Relaxed) as f64)),
+            ("replica_served", Json::num(c.replica_served.load(Ordering::Relaxed) as f64)),
+            ("bypass_served", Json::num(c.bypass_served.load(Ordering::Relaxed) as f64)),
+            ("failovers", Json::num(c.failovers.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::num(c.errors.load(Ordering::Relaxed) as f64)),
+            (
+                "traces_finished",
+                Json::num(self.traces.lock().unwrap().finished() as f64),
+            ),
+            ("shards", self.shard_rows()),
+        ])
+    }
+
+    fn health_json(&self) -> Json {
+        let mut j = self.health.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("ok".into(), Json::Bool(true));
+            m.insert(
+                "max_staleness_ms".into(),
+                Json::num(self.topology.max_staleness_ms as f64),
+            );
+            m.insert("shards".into(), self.shard_rows());
+        }
+        j
+    }
+}

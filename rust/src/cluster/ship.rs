@@ -1,0 +1,514 @@
+//! WAL shipping: owner → replica replication over TCP.
+//!
+//! Frame format (all integers little-endian):
+//!
+//! ```text
+//! kind u8 | gen u64 | seq u64 | len u32 | payload[len]
+//! ```
+//!
+//! | kind | dir | meaning |
+//! |------|-----|---------|
+//! | `HELLO`     | replica → owner | applied position; sent once on connect |
+//! | `BOOTSTRAP` | owner → replica | raw snapshot bytes for `gen` (empty = start fresh at `gen`) |
+//! | `RECORD`    | owner → replica | one raw WAL record frame at (`gen`, `seq`) |
+//! | `HEARTBEAT` | owner → replica | owner's WAL end position (staleness signal) |
+//! | `ACK`       | replica → owner | applied position (drives measured lag) |
+//!
+//! The shipper tails the owner's live WAL with [`WalTailer`], which only
+//! surfaces complete checksummed records — exactly the prefix crash
+//! recovery would replay — so replication and recovery can never disagree
+//! about what a generation contains. On resume the replica's HELLO names
+//! its applied position; if the owner can no longer serve it (compaction
+//! moved on, or the tailer loses the log) the shipper falls back to a full
+//! snapshot BOOTSTRAP and re-tails from that generation's start.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cache::persist::{bootstrap_view, decode_snapshot, decode_wal_record, WalTailer};
+use crate::coordinator::{EngineHandle, ReplicaBatch};
+use crate::server::{accept_loop, READ_POLL_INTERVAL};
+
+use super::HealthState;
+
+pub const FRAME_HELLO: u8 = 0;
+pub const FRAME_BOOTSTRAP: u8 = 1;
+pub const FRAME_RECORD: u8 = 2;
+pub const FRAME_HEARTBEAT: u8 = 3;
+pub const FRAME_ACK: u8 = 4;
+
+/// Header = kind + gen + seq + len.
+const FRAME_HEADER_LEN: usize = 1 + 8 + 8 + 4;
+
+/// Sanity bound on one frame payload (a snapshot can be large, garbage on
+/// the wire should not allocate unbounded).
+const MAX_FRAME_PAYLOAD: u32 = 1 << 30;
+
+/// How long the shipper sleeps between WAL polls when idle, and how often
+/// it heartbeats its end position to the replica.
+const POLL_INTERVAL: Duration = Duration::from_millis(15);
+
+/// Backoff between reconnect attempts to an unreachable replica.
+const RECONNECT_BACKOFF: Duration = Duration::from_millis(100);
+
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub kind: u8,
+    pub gen: u64,
+    pub seq: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Encode and send one frame as a single write.
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: u8,
+    gen: u64,
+    seq: u64,
+    payload: &[u8],
+) -> Result<()> {
+    let mut buf = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    buf.push(kind);
+    buf.extend_from_slice(&gen.to_le_bytes());
+    buf.extend_from_slice(&seq.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Fill `buf` completely, treating read timeouts as stop-flag poll points
+/// (partial fills are kept, so a timeout mid-frame never desyncs framing).
+/// `Ok(false)` = clean end: EOF on a frame boundary, or stop requested.
+fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(false);
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                bail!("peer closed mid-frame ({filled}/{} bytes)", buf.len());
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame. The stream must have a read timeout set (the poll
+/// points above observe `stop`). `Ok(None)` = clean end of stream / stop.
+pub fn read_frame(stream: &mut TcpStream, stop: &AtomicBool) -> Result<Option<Frame>> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    if !read_full(stream, &mut header, stop)? {
+        return Ok(None);
+    }
+    let kind = header[0];
+    let gen = u64::from_le_bytes(header[1..9].try_into().unwrap());
+    let seq = u64::from_le_bytes(header[9..17].try_into().unwrap());
+    let len = u32::from_le_bytes(header[17..21].try_into().unwrap());
+    if len > MAX_FRAME_PAYLOAD {
+        bail!("frame payload {len} exceeds {MAX_FRAME_PAYLOAD} bytes");
+    }
+    let mut payload = vec![0u8; len as usize];
+    if !read_full(stream, &mut payload, stop)? {
+        bail!("stream ended mid-payload");
+    }
+    Ok(Some(Frame { kind, gen, seq, payload }))
+}
+
+// ---------------------------------------------------------------------------
+// Owner side: the shipper
+// ---------------------------------------------------------------------------
+
+/// Background thread on a shard owner that streams the data directory's
+/// WAL to one replica, reconnecting (with resume-or-bootstrap negotiation)
+/// whenever the connection drops.
+pub struct Shipper {
+    stop: Arc<AtomicBool>,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
+impl Shipper {
+    pub fn start(data_dir: impl Into<PathBuf>, target: &str, health: HealthState) -> Shipper {
+        let dir = data_dir.into();
+        let target = target.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let thread = thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                if let Ok(stream) = TcpStream::connect(&target) {
+                    health.update(|h| h.connected = true);
+                    if let Err(e) = ship_session(&dir, stream, &health, &stop2) {
+                        eprintln!("[ship] session to {target} ended: {e:#}");
+                    }
+                    health.update(|h| h.connected = false);
+                }
+                if !stop2.load(Ordering::Relaxed) {
+                    thread::sleep(RECONNECT_BACKOFF);
+                }
+            }
+        });
+        Shipper { stop, thread: Some(thread) }
+    }
+
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Shipper {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// One connected replication session: HELLO → (resume | BOOTSTRAP) →
+/// RECORD/HEARTBEAT stream, with an ack-reader thread measuring lag.
+fn ship_session(
+    dir: &Path,
+    mut stream: TcpStream,
+    health: &HealthState,
+    stop: &Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(READ_POLL_INTERVAL))?;
+    let session_stop = Arc::new(AtomicBool::new(false));
+
+    let hello = match read_frame(&mut stream, stop)? {
+        Some(f) if f.kind == FRAME_HELLO => f,
+        Some(f) => bail!("expected HELLO, got frame kind {}", f.kind),
+        None => return Ok(()), // stopped / replica went away before HELLO
+    };
+
+    // In-flight records awaiting ack: (gen, seq, send instant).
+    let sent: Arc<Mutex<VecDeque<(u64, u64, Instant)>>> = Arc::default();
+
+    let mut tailer = match WalTailer::resume(dir, hello.gen, hello.seq) {
+        Ok(t) => t,
+        Err(_) => send_bootstrap(dir, &mut stream, &sent)?,
+    };
+    let (g, s) = tailer.position();
+    health.update(|h| {
+        h.shipped_gen = g;
+        h.shipped_seq = s;
+    });
+
+    // Acks arrive on the same socket; a dedicated reader keeps the ship
+    // loop free to tail the WAL and lets lag be measured off real acks.
+    let ack_thread = {
+        let mut rd = stream.try_clone()?;
+        let sent = Arc::clone(&sent);
+        let health = health.clone();
+        let session_stop = Arc::clone(&session_stop);
+        let outer_stop = Arc::clone(stop);
+        thread::spawn(move || {
+            loop {
+                if outer_stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match read_frame(&mut rd, &session_stop) {
+                    Ok(Some(f)) if f.kind == FRAME_ACK => {
+                        let mut lag_ms = 0;
+                        {
+                            let mut q = sent.lock().unwrap();
+                            while let Some(&(g, s, at)) = q.front() {
+                                if (g, s) > (f.gen, f.seq) {
+                                    break;
+                                }
+                                lag_ms = at.elapsed().as_millis() as u64;
+                                q.pop_front();
+                            }
+                        }
+                        health.update(|h| {
+                            h.acked_gen = f.gen;
+                            h.acked_seq = f.seq;
+                            h.ack_lag_ms = lag_ms;
+                        });
+                    }
+                    Ok(Some(f)) => {
+                        eprintln!("[ship] unexpected frame kind {} from replica", f.kind);
+                        break;
+                    }
+                    Ok(None) | Err(_) => break,
+                }
+            }
+            session_stop.store(true, Ordering::Relaxed);
+        })
+    };
+
+    let result = (|| -> Result<()> {
+        loop {
+            if stop.load(Ordering::Relaxed) || session_stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            let records = match tailer.poll() {
+                Ok(r) => r,
+                // Tailer lost the log (file vanished/shrank): start over
+                // from the newest snapshot.
+                Err(_) => {
+                    tailer = send_bootstrap(dir, &mut stream, &sent)?;
+                    continue;
+                }
+            };
+            if records.is_empty() {
+                // Fall-behind check: compaction can advance the on-disk
+                // generation without this tailer ever seeing a GenBump
+                // record (crash between snapshot rename and bump append).
+                let (disk_gen, _) = bootstrap_view(dir)?;
+                if disk_gen > tailer.position().0 {
+                    tailer = send_bootstrap(dir, &mut stream, &sent)?;
+                    continue;
+                }
+                let (g, s) = tailer.position();
+                write_frame(&mut stream, FRAME_HEARTBEAT, g, s, &[])?;
+                thread::sleep(POLL_INTERVAL);
+                continue;
+            }
+            for r in records {
+                write_frame(&mut stream, FRAME_RECORD, r.generation, r.seq, &r.frame)?;
+                sent.lock().unwrap().push_back((r.generation, r.seq, Instant::now()));
+                health.update(|h| {
+                    h.shipped_gen = r.generation;
+                    h.shipped_seq = r.seq;
+                });
+            }
+        }
+    })();
+    session_stop.store(true, Ordering::Relaxed);
+    stream.shutdown(std::net::Shutdown::Both).ok();
+    let _ = ack_thread.join();
+    result
+}
+
+/// Ship the newest snapshot (or "fresh at generation g" when none exists)
+/// and return a tailer positioned at that generation's WAL start.
+fn send_bootstrap(
+    dir: &Path,
+    stream: &mut TcpStream,
+    sent: &Arc<Mutex<VecDeque<(u64, u64, Instant)>>>,
+) -> Result<WalTailer> {
+    let (gen, snap) = bootstrap_view(dir)?;
+    write_frame(stream, FRAME_BOOTSTRAP, gen, 0, snap.as_deref().unwrap_or(&[]))?;
+    sent.lock().unwrap().clear();
+    Ok(WalTailer::from_generation_start(dir, gen))
+}
+
+// ---------------------------------------------------------------------------
+// Replica side: the listener
+// ---------------------------------------------------------------------------
+
+/// Replication intake on a replica: accepts a shipper connection, applies
+/// BOOTSTRAP/RECORD frames through the engine's replication entry point
+/// (the same code path crash recovery uses), and acks each applied
+/// position. The replica's normal front end keeps serving reads while
+/// this runs — that is the whole point.
+pub struct ReplicaListener {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+    health: HealthState,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
+impl ReplicaListener {
+    pub fn start(addr: &str, engine: EngineHandle, health: HealthState) -> Result<ReplicaListener> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding replication {addr}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::clone(&stop);
+        let session_health = health.clone();
+        let thread = thread::spawn(move || {
+            let result = accept_loop(&listener, &accept_stop, |stream| {
+                let engine = engine.clone();
+                let health = session_health.clone();
+                let stop = Arc::clone(&accept_stop);
+                thread::spawn(move || {
+                    if let Err(e) = replica_session(stream, &engine, &health, &stop) {
+                        eprintln!("[replica] session ended: {e:#}");
+                    }
+                });
+            });
+            if let Err(e) = result {
+                eprintln!("[replica] listener exited: {e:#}");
+            }
+        });
+        Ok(ReplicaListener { stop, addr: local, health, thread: Some(thread) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Lag injection for drills: while paused, shipped records queue
+    /// unapplied and measured staleness grows.
+    pub fn set_apply_paused(&self, paused: bool) {
+        self.health.update(|h| h.apply_paused = paused);
+    }
+
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake the blocking accept (same trick as server::Shutdown).
+        let mut addr = self.addr;
+        if addr.ip().is_unspecified() {
+            match addr {
+                SocketAddr::V4(_) => {
+                    addr.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST))
+                }
+                SocketAddr::V6(_) => {
+                    addr.set_ip(std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST))
+                }
+            }
+        }
+        if let Ok(s) = TcpStream::connect_timeout(&addr, Duration::from_secs(1)) {
+            drop(s);
+        }
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ReplicaListener {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+fn replica_session(
+    mut stream: TcpStream,
+    engine: &EngineHandle,
+    health: &HealthState,
+    stop: &Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(READ_POLL_INTERVAL))?;
+    let h = health.snapshot();
+    write_frame(&mut stream, FRAME_HELLO, h.applied_gen, h.applied_seq, &[])?;
+    while let Some(f) = read_frame(&mut stream, stop)? {
+        match f.kind {
+            FRAME_BOOTSTRAP => {
+                let state = if f.payload.is_empty() {
+                    None
+                } else {
+                    Some(decode_snapshot(&f.payload)?.0)
+                };
+                engine.apply_replicated(ReplicaBatch::Bootstrap(state))?;
+                health.update(|hh| {
+                    hh.applied_gen = f.gen;
+                    hh.applied_seq = 0;
+                    hh.behind_since = None;
+                });
+                write_frame(&mut stream, FRAME_ACK, f.gen, 0, &[])?;
+            }
+            FRAME_RECORD => {
+                // Lag injection: a paused replica keeps records pending, so
+                // staleness (time behind the shipped end) grows until the
+                // router's bounded-staleness rule refuses replica reads.
+                while health.snapshot().apply_paused {
+                    health.update(|hh| {
+                        if hh.behind_since.is_none() {
+                            hh.behind_since = Some(Instant::now());
+                        }
+                    });
+                    if stop.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
+                    thread::sleep(Duration::from_millis(5));
+                }
+                let op = decode_wal_record(&f.payload)?;
+                engine.apply_replicated(ReplicaBatch::Ops(vec![op]))?;
+                health.update(|hh| {
+                    hh.applied_gen = f.gen;
+                    hh.applied_seq = f.seq;
+                    hh.behind_since = None;
+                });
+                write_frame(&mut stream, FRAME_ACK, f.gen, f.seq, &[])?;
+            }
+            FRAME_HEARTBEAT => {
+                health.update(|hh| {
+                    if (f.gen, f.seq) > (hh.applied_gen, hh.applied_seq) {
+                        if hh.behind_since.is_none() {
+                            hh.behind_since = Some(Instant::now());
+                        }
+                    } else {
+                        hh.behind_since = None;
+                    }
+                });
+                let hh = health.snapshot();
+                write_frame(&mut stream, FRAME_ACK, hh.applied_gen, hh.applied_seq, &[])?;
+            }
+            other => bail!("unexpected frame kind {other} from shipper"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_over_tcp() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            write_frame(&mut s, FRAME_RECORD, 3, 17, b"payload").unwrap();
+            write_frame(&mut s, FRAME_HEARTBEAT, 3, 17, &[]).unwrap();
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        conn.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+        let stop = AtomicBool::new(false);
+        let f = read_frame(&mut conn, &stop).unwrap().unwrap();
+        assert_eq!((f.kind, f.gen, f.seq), (FRAME_RECORD, 3, 17));
+        assert_eq!(f.payload, b"payload");
+        let hb = read_frame(&mut conn, &stop).unwrap().unwrap();
+        assert_eq!((hb.kind, hb.gen, hb.seq), (FRAME_HEARTBEAT, 3, 17));
+        assert!(hb.payload.is_empty());
+        writer.join().unwrap();
+        // Writer hung up: next read is a clean end-of-stream.
+        assert!(read_frame(&mut conn, &stop).unwrap().is_none());
+    }
+
+    #[test]
+    fn stop_flag_ends_read() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _idle = TcpStream::connect(addr).unwrap();
+        let (mut conn, _) = listener.accept().unwrap();
+        conn.set_read_timeout(Some(Duration::from_millis(5))).unwrap();
+        let stop = AtomicBool::new(true);
+        assert!(read_frame(&mut conn, &stop).unwrap().is_none());
+    }
+}

@@ -1,0 +1,162 @@
+//! Cluster topology file (`serve --cluster topology.toml`).
+//!
+//! The main config parser handles flat `section.key = value` tables only,
+//! so the shard list gets its own tiny parser here. Format:
+//!
+//! ```toml
+//! [cluster]
+//! max_staleness_ms = 500   # replica hits allowed while lag <= this
+//! epoch = 1                # bump when the shard list changes
+//! vnodes = 128             # virtual nodes per shard on the hash ring
+//!
+//! [[shard]]                # one table per shard, ring position = order
+//! owner = "127.0.0.1:7501"
+//! replica = "127.0.0.1:7502"     # optional; omit for no failover target
+//!
+//! [[shard]]
+//! owner = "127.0.0.1:7511"
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::ring::DEFAULT_VNODES;
+
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// TCP line-protocol address of the shard owner.
+    pub owner: String,
+    /// Line-protocol address of the replica's front end (failover reads).
+    pub replica: Option<String>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Serve replica hits only while replication lag is at or under this;
+    /// beyond it the router degrades to a cache-bypass miss instead.
+    pub max_staleness_ms: u64,
+    /// Shard-map epoch, reported by the health verb on every node.
+    pub epoch: u64,
+    /// Virtual nodes per shard on the consistent-hash ring.
+    pub vnodes: usize,
+    pub shards: Vec<ShardSpec>,
+}
+
+impl Topology {
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Topology> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading topology {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing topology {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Topology> {
+        let mut topo = Topology {
+            max_staleness_ms: 500,
+            epoch: 1,
+            vnodes: DEFAULT_VNODES,
+            shards: Vec::new(),
+        };
+        #[derive(PartialEq)]
+        enum Section {
+            None,
+            Cluster,
+            Shard,
+        }
+        let mut section = Section::None;
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "[[shard]]" {
+                topo.shards.push(ShardSpec::default());
+                section = Section::Shard;
+                continue;
+            }
+            if line == "[cluster]" {
+                section = Section::Cluster;
+                continue;
+            }
+            if line.starts_with('[') {
+                bail!("line {}: unknown section {line}", ln + 1);
+            }
+            let (key, value) = match line.split_once('=') {
+                Some((k, v)) => (k.trim(), v.trim().trim_matches('"')),
+                None => bail!("line {}: expected key = value, got {line:?}", ln + 1),
+            };
+            match (&section, key) {
+                (Section::Cluster, "max_staleness_ms") => {
+                    topo.max_staleness_ms =
+                        value.parse().with_context(|| format!("line {}", ln + 1))?;
+                }
+                (Section::Cluster, "epoch") => {
+                    topo.epoch = value.parse().with_context(|| format!("line {}", ln + 1))?;
+                }
+                (Section::Cluster, "vnodes") => {
+                    topo.vnodes = value.parse().with_context(|| format!("line {}", ln + 1))?;
+                }
+                (Section::Shard, "owner") => {
+                    topo.shards.last_mut().unwrap().owner = value.to_string();
+                }
+                (Section::Shard, "replica") => {
+                    topo.shards.last_mut().unwrap().replica = Some(value.to_string());
+                }
+                _ => bail!("line {}: unknown key {key:?} in this section", ln + 1),
+            }
+        }
+        if topo.shards.is_empty() {
+            bail!("topology has no [[shard]] tables");
+        }
+        if topo.vnodes == 0 {
+            bail!("vnodes must be >= 1");
+        }
+        for (i, s) in topo.shards.iter().enumerate() {
+            if s.owner.is_empty() {
+                bail!("shard {i} has no owner address");
+            }
+        }
+        Ok(topo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_topology() {
+        let t = Topology::parse(
+            r#"
+            [cluster]
+            max_staleness_ms = 250  # half the default
+            epoch = 7
+
+            [[shard]]
+            owner = "127.0.0.1:7501"
+            replica = "127.0.0.1:7502"
+
+            [[shard]]
+            owner = "127.0.0.1:7511"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.max_staleness_ms, 250);
+        assert_eq!(t.epoch, 7);
+        assert_eq!(t.vnodes, DEFAULT_VNODES);
+        assert_eq!(t.shards.len(), 2);
+        assert_eq!(t.shards[0].owner, "127.0.0.1:7501");
+        assert_eq!(t.shards[0].replica.as_deref(), Some("127.0.0.1:7502"));
+        assert_eq!(t.shards[1].replica, None);
+    }
+
+    #[test]
+    fn rejects_empty_and_malformed() {
+        assert!(Topology::parse("[cluster]\nepoch = 1\n").is_err()); // no shards
+        assert!(Topology::parse("[[shard]]\nreplica = \"x\"\n").is_err()); // no owner
+        assert!(Topology::parse("[[shard]]\nowner = \"x\"\nbogus\n").is_err());
+        assert!(Topology::parse("[wrong]\n").is_err());
+        assert!(Topology::parse("[[shard]]\nowner = \"x\"\n[cluster]\nvnodes = 0\n").is_err());
+    }
+}

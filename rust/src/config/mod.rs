@@ -454,6 +454,8 @@ impl Config {
             "persist.data_dir" => self.persist.data_dir = val.to_string(),
             "persist.wal_fsync" => self.persist.wal_fsync = b()?,
             "persist.compact_bytes" => self.persist.compact_bytes = u()? as u64,
+            // 0 = fsync per append; >0 = group-commit window (ms)
+            "persist.fsync_batch_ms" => self.persist.fsync_batch_ms = u()? as u64,
             "runtime.artifact_dir" => self.artifact_dir = val.to_string(),
             "runtime.device_resident" => self.device_resident = b()?,
             // 0 = prefix reuse off (every prefill runs cold)
@@ -484,7 +486,12 @@ impl Config {
             ("Similarity Threshold".into(), self.similarity_threshold.to_string()),
             ("Eviction".into(), format!("{:?} (capacity {})", self.eviction.policy, if self.eviction.capacity == usize::MAX { "unbounded".into() } else { self.eviction.capacity.to_string() })),
             ("Persistence".into(), if self.persist.enabled() {
-                format!("WAL+snapshots in {} (fsync {}, compact at {} MiB)", self.persist.data_dir, self.persist.wal_fsync, self.persist.compact_bytes / (1024 * 1024))
+                let fsync = if self.persist.wal_fsync && self.persist.fsync_batch_ms > 0 {
+                    format!("batched {} ms", self.persist.fsync_batch_ms)
+                } else {
+                    self.persist.wal_fsync.to_string()
+                };
+                format!("WAL+snapshots in {} (fsync {fsync}, compact at {} MiB)", self.persist.data_dir, self.persist.compact_bytes / (1024 * 1024))
             } else {
                 "disabled (ephemeral, as in the paper)".into()
             }),
@@ -620,13 +627,16 @@ mod tests {
         kv.insert("persist.data_dir".to_string(), "/tmp/cache".to_string());
         kv.insert("persist.wal_fsync".to_string(), "true".to_string());
         kv.insert("persist.compact_bytes".to_string(), "1048576".to_string());
+        kv.insert("persist.fsync_batch_ms".to_string(), "25".to_string());
         c.apply(&kv).unwrap();
         assert!(c.persist.enabled());
         assert_eq!(c.persist.data_dir, "/tmp/cache");
         assert!(c.persist.wal_fsync);
         assert_eq!(c.persist.compact_bytes, 1_048_576);
+        assert_eq!(c.persist.fsync_batch_ms, 25);
         let rows = c.table();
         assert!(rows.iter().any(|(k, v)| k == "Persistence" && v.contains("/tmp/cache")));
+        assert!(rows.iter().any(|(k, v)| k == "Persistence" && v.contains("batched 25 ms")));
     }
 
     #[test]

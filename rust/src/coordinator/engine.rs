@@ -30,14 +30,16 @@ use anyhow::{anyhow, Result};
 
 use super::scheduler::{Job, JobKind, Scheduler};
 use super::{
-    deadline_expired, Batcher, ReplySink, RouteDecision, RoutedResponse, Router, StreamEvent,
+    deadline_expired, Batcher, ReadMode, ReplicaBatch, ReplySink, RouteDecision, RoutedResponse,
+    Router, StreamEvent,
 };
 use crate::cache::query_key;
 use crate::trace::{Stage, StageSummary, TraceBuilder, TraceReport};
 
 /// What rides through the batcher per request: the query, the reply sink
-/// (streaming or one-shot), and the request's span-trace arena.
-type BatchItem = (String, ReplySink, TraceBuilder);
+/// (streaming or one-shot), the request's span-trace arena, and how the
+/// request may use the cache (cluster failover modes).
+type BatchItem = (String, ReplySink, TraceBuilder, ReadMode);
 
 enum Msg {
     Request {
@@ -47,6 +49,7 @@ enum Msg {
         /// reported latency includes time spent queued behind whatever the
         /// engine was doing (e.g. a slow Big-LLM generation).
         enqueued: Instant,
+        mode: ReadMode,
     },
     Stats {
         reply: mpsc::Sender<EngineStats>,
@@ -57,6 +60,12 @@ enum Msg {
     },
     Snapshot {
         reply: mpsc::Sender<Result<SnapshotReport>>,
+    },
+    /// Apply replicated state (WAL shipping) on the engine thread, between
+    /// request batches — the replica equivalent of recovery replay.
+    Replicate {
+        batch: ReplicaBatch,
+        reply: mpsc::Sender<Result<()>>,
     },
     Shutdown,
 }
@@ -155,7 +164,13 @@ impl EngineHandle {
     /// suppressed at the source (`ReplySink::buffered`), so this costs one
     /// terminal event exactly like the pre-streaming rendezvous channel.
     pub fn request(&self, query: &str) -> Result<RoutedResponse> {
-        let rx = self.submit(query, false)?;
+        self.request_mode(query, ReadMode::Default)
+    }
+
+    /// [`Self::request`] with an explicit cache [`ReadMode`] — the cluster
+    /// front end's failover lever (replica reads, staleness bypass).
+    pub fn request_mode(&self, query: &str, mode: ReadMode) -> Result<RoutedResponse> {
+        let rx = self.submit(query, false, mode)?;
         for ev in rx.iter() {
             match ev {
                 StreamEvent::Delta(_) => {}
@@ -172,10 +187,15 @@ impl EngineHandle {
     /// bit-identical to the blocking response's text on every pathway.
     /// Dropping the receiver mid-stream cancels the in-flight generation.
     pub fn request_streaming(&self, query: &str) -> Result<mpsc::Receiver<StreamEvent>> {
-        self.submit(query, true)
+        self.submit(query, true, ReadMode::Default)
     }
 
-    fn submit(&self, query: &str, live: bool) -> Result<mpsc::Receiver<StreamEvent>> {
+    fn submit(
+        &self,
+        query: &str,
+        live: bool,
+        mode: ReadMode,
+    ) -> Result<mpsc::Receiver<StreamEvent>> {
         let (tx, rx) = mpsc::channel();
         let reply = if live { ReplySink::stream(tx) } else { ReplySink::buffered(tx) };
         self.tx
@@ -183,9 +203,22 @@ impl EngineHandle {
                 query: query.to_string(),
                 reply,
                 enqueued: Instant::now(),
+                mode,
             })
             .map_err(|_| anyhow!("engine is down"))?;
         Ok(rx)
+    }
+
+    /// Apply replicated cache state (a bootstrap snapshot or shipped WAL
+    /// records) on the engine thread. Blocks until applied, so the caller
+    /// can ack the shipped position truthfully.
+    pub fn apply_replicated(&self, batch: ReplicaBatch) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Replicate { batch, reply })
+            .map_err(|_| anyhow!("engine is down"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("engine dropped the replicate request"))?
     }
 
     pub fn stats(&self) -> Result<EngineStats> {
@@ -331,11 +364,11 @@ impl Engine {
         sched: &Scheduler,
     ) -> bool {
         match msg {
-            Msg::Request { query, reply, enqueued } => {
+            Msg::Request { query, reply, enqueued, mode } => {
                 let mut trace = router.traces.begin(&query, enqueued);
                 // Channel transit: enqueue stamp → engine-thread pickup.
                 trace.span_from(Stage::Ingest, enqueued);
-                batcher.push_at((query, reply, trace), enqueued);
+                batcher.push_at((query, reply, trace, mode), enqueued);
                 false
             }
             Msg::Stats { reply } => {
@@ -348,6 +381,10 @@ impl Engine {
             }
             Msg::Snapshot { reply } => {
                 let _ = reply.send(Self::do_snapshot(router));
+                false
+            }
+            Msg::Replicate { batch, reply } => {
+                let _ = reply.send(router.apply_replicated(batch));
                 false
             }
             Msg::Shutdown => true,
@@ -371,13 +408,13 @@ impl Engine {
         }
         let drained = Instant::now();
         // Exact-match fast path first: those don't need embeddings.
-        let mut to_embed: Vec<(String, ReplySink, Instant, TraceBuilder)> =
+        let mut to_embed: Vec<(String, ReplySink, Instant, TraceBuilder, ReadMode)> =
             Vec::with_capacity(batch.len());
         let faults = router.config.faults;
         for pending in batch {
             let enqueued = pending.enqueued;
             let arrived = pending.arrived;
-            let (query, reply, mut trace) = pending.payload;
+            let (query, reply, mut trace, mode) = pending.payload;
             trace.span_at(Stage::BatcherWait, arrived, drained, f32::NAN);
             // Deadline shedding at the first stage boundary: a request that
             // aged out in the batcher never pays for embed/route/decode.
@@ -389,17 +426,38 @@ impl Engine {
                 ));
                 continue;
             }
+            // Bounded-staleness bypass (the cluster router rejected the
+            // replica's lag): no cache access at all, straight to the miss
+            // path — the same rung the embed-down ladder uses.
+            if mode == ReadMode::Bypass {
+                let job = router.miss_bypass_job(&query);
+                match &mut sched {
+                    Some(s) => {
+                        let key = query_key(&job.query);
+                        let kind = JobKind::Miss { job, key };
+                        s.submit(Job::with_sink(kind, reply, enqueued, trace), router);
+                    }
+                    None => {
+                        let mut reply = reply;
+                        match router.run_miss_blocking(job, enqueued, &mut reply, &mut trace) {
+                            Ok(resp) => reply.done(resp),
+                            Err(e) => reply.fail(&format!("{e:#}")),
+                        }
+                    }
+                }
+                continue;
+            }
             if let Some(resp) = router.try_exact(&query, enqueued, &mut trace) {
                 reply.done(resp);
             } else {
-                to_embed.push((query, reply, enqueued, trace));
+                to_embed.push((query, reply, enqueued, trace, mode));
             }
         }
         if to_embed.is_empty() {
             return;
         }
         // Borrowed views only — embedding a batch must not copy every query.
-        let queries: Vec<&str> = to_embed.iter().map(|(q, _, _, _)| q.as_str()).collect();
+        let queries: Vec<&str> = to_embed.iter().map(|(q, _, _, _, _)| q.as_str()).collect();
         // Embed rung of the degradation ladder: an open breaker skips the
         // backend call entirely; a failed call records breaker evidence.
         // Either way every batch-mate falls through to the miss path below
@@ -423,7 +481,7 @@ impl Engine {
                         None
                     } else {
                         let msg = format!("batched embed failed: {e}");
-                        for (_, reply, _, _) in to_embed {
+                        for (_, reply, _, _, _) in to_embed {
                             reply.fail(&msg);
                         }
                         return;
@@ -436,10 +494,10 @@ impl Engine {
                 // One embed interval shared by the whole micro-batch: stamp
                 // it on every trace before any request starts routing, so a
                 // batch-mate's route time never bleeds into an embed span.
-                for (_, _, _, trace) in to_embed.iter_mut() {
+                for (_, _, _, trace, _) in to_embed.iter_mut() {
                     trace.span_at(Stage::Embed, t_embed, embedded, f32::NAN);
                 }
-                for ((query, mut reply, enqueued, mut trace), emb) in
+                for ((query, mut reply, enqueued, mut trace, mode), emb) in
                     to_embed.into_iter().zip(embeddings)
                 {
                     match &mut sched {
@@ -451,16 +509,32 @@ impl Engine {
                                 let kind = JobKind::Tweak(t);
                                 s.submit(Job::with_sink(kind, reply, enqueued, trace), router);
                             }
-                            RouteDecision::Miss(m) => {
+                            RouteDecision::Miss(mut m) => {
+                                // A replica serving during an owner outage
+                                // generates the miss but never inserts: the
+                                // entry space belongs to the owner's WAL.
+                                if mode == ReadMode::ReplicaRead {
+                                    m.insert = false;
+                                }
                                 let key = query_key(&m.query);
                                 let kind = JobKind::Miss { job: m, key };
                                 s.submit(Job::with_sink(kind, reply, enqueued, trace), router);
                             }
                         },
                         None => {
-                            match router.handle_embedded_streaming(
-                                &query, emb, enqueued, &mut reply, &mut trace,
-                            ) {
+                            let result = match router.route(&query, emb, enqueued, &mut trace) {
+                                RouteDecision::Exact(resp) => Ok(resp),
+                                RouteDecision::Tweak(t) => {
+                                    router.run_tweak_blocking(t, enqueued, &mut reply, &mut trace)
+                                }
+                                RouteDecision::Miss(mut m) => {
+                                    if mode == ReadMode::ReplicaRead {
+                                        m.insert = false;
+                                    }
+                                    router.run_miss_blocking(m, enqueued, &mut reply, &mut trace)
+                                }
+                            };
+                            match result {
                                 Ok(resp) => reply.done(resp),
                                 Err(e) => reply.fail(&format!("{e:#}")),
                             }
@@ -471,7 +545,7 @@ impl Engine {
             None => {
                 // Embedder unavailable: bypass the cache for every
                 // batch-mate rather than failing them.
-                for (query, mut reply, enqueued, mut trace) in to_embed {
+                for (query, mut reply, enqueued, mut trace, _) in to_embed {
                     let job = router.miss_bypass_job(&query);
                     match &mut sched {
                         Some(s) => {

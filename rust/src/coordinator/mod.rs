@@ -20,8 +20,8 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::cache::persist::RecoveryReport;
-use crate::cache::SemanticCache;
+use crate::cache::persist::{RecoveryReport, SnapshotState};
+use crate::cache::{SemanticCache, WalOp};
 use crate::config::{Config, FaultsConfig};
 use crate::cost::{CostLedger, ModelRole, TokenUsage};
 use crate::faults::CircuitBreaker;
@@ -262,6 +262,33 @@ pub struct RoutedResponse {
     pub trace_id: u64,
 }
 
+/// How a request may use the cache. `Default` is the normal owner path;
+/// the cluster front end (`cluster::ClusterServer`) selects the other two
+/// when routing around a dead shard owner.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReadMode {
+    /// Full pathway: hits served, misses generated and inserted.
+    #[default]
+    Default,
+    /// Serve cache hits but never mutate entry state (a replica serving
+    /// reads during an owner outage: the entry id space belongs to the
+    /// owner's WAL, and a local insert would diverge from the stream).
+    ReplicaRead,
+    /// Skip the cache entirely — the bounded-staleness rule rejected the
+    /// replica, so the request degrades to a fresh generation.
+    Bypass,
+}
+
+/// A unit of replicated cache state applied on the engine thread: the
+/// replica side of WAL shipping (see `cluster::ship`).
+pub enum ReplicaBatch {
+    /// Rebuild the cache, optionally restoring a shipped snapshot
+    /// (`None`: the owner is still at generation 0, start empty).
+    Bootstrap(Option<SnapshotState>),
+    /// Shipped WAL records, in log order.
+    Ops(Vec<WalOp>),
+}
+
 /// Per-backend circuit breakers (embedder, Small/tweak LLM, Big LLM).
 /// Consulted only when `[faults] enabled`; an open breaker moves requests
 /// down the degradation ladder without paying the backend's failure mode.
@@ -485,6 +512,41 @@ impl Router {
     /// Returns the new persistence generation; `None` when ephemeral.
     pub fn snapshot(&mut self) -> Result<Option<u64>> {
         self.cache.compact_now()
+    }
+
+    /// Replica side of WAL shipping: install a bootstrap snapshot or apply
+    /// a batch of shipped records through the recovery path. A bootstrap
+    /// rebuilds the cache wholesale (same construction as `with_models`),
+    /// so a re-bootstrap after the shipper fell behind starts clean. The
+    /// replica cache stays ephemeral — every applied record already lives
+    /// in the owner's WAL, and journaling it again here would double-write
+    /// the log on promotion.
+    pub fn apply_replicated(&mut self, batch: ReplicaBatch) -> Result<()> {
+        match batch {
+            ReplicaBatch::Bootstrap(state) => {
+                let mut cache = SemanticCache::with_opts(
+                    self.embedder.out_dim(),
+                    self.config.index_kind(),
+                    self.config.index_opts(),
+                )
+                .with_eviction(self.config.eviction.policy, self.config.eviction.capacity)
+                .with_exact_match(self.config.exact_match_fast_path);
+                if let Some(pool) = &self.scan_pool {
+                    cache.set_pool(Arc::clone(pool), self.config.index.shards);
+                }
+                if let Some(state) = state {
+                    cache.restore_replicated(state)?;
+                }
+                self.cache = cache;
+                Ok(())
+            }
+            ReplicaBatch::Ops(ops) => {
+                for op in ops {
+                    self.cache.apply_replicated_op(op)?;
+                }
+                Ok(())
+            }
+        }
     }
 
     pub fn cache(&self) -> &SemanticCache {

@@ -20,6 +20,7 @@
 pub mod baselines;
 pub mod bench;
 pub mod cache;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod cost;

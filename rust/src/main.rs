@@ -16,10 +16,12 @@ use std::thread;
 
 use anyhow::Result;
 
+use tweakllm::baselines::MockLlm;
+use tweakllm::cluster::{ClusterServer, HealthState, ReplicaListener, Shipper, Topology};
 use tweakllm::config::Config;
 use tweakllm::coordinator::{Engine, Router};
 use tweakllm::datasets::{ChatTrace, TraceProfile};
-use tweakllm::runtime::Runtime;
+use tweakllm::runtime::{NativeBowEmbedder, Runtime, TextEmbedder};
 use tweakllm::server::{pathway_str, Client, HttpServer, Server};
 use tweakllm::util::{Args, Json};
 
@@ -42,6 +44,16 @@ fn usage() -> &'static str {
                                      JSONL to DIR/traces.jsonl\n\
             [--http-port PORT]       also serve OpenAI-compatible\n\
                                      /v1/chat/completions (SSE streaming)\n\
+            [--mock=true]            mock models + native embedder (no\n\
+                                     artifacts; cluster drills and CI)\n\
+            [--ship-to ADDR]         shard owner: stream WAL records to a\n\
+                                     replica's --replication-listen ADDR\n\
+                                     (requires --data-dir)\n\
+            [--replication-listen ADDR]  replica: apply a shipped WAL while\n\
+                                     serving replica reads on --addr\n\
+            [--cluster FILE]         router: fan requests to shard owners\n\
+                                     per FILE (topology.toml), with\n\
+                                     breaker-gated replica failover\n\
      query  [--addr HOST:PORT] TEXT  send one query to a running server\n\
      snapshot [--addr HOST:PORT]     force a cache snapshot + WAL rotation\n\
      demo   [--n N] [--threshold T]  route a small synthetic trace and report\n"
@@ -89,13 +101,50 @@ fn run() -> Result<()> {
         "serve" => {
             let cfg = load_config(&args)?;
             let addr = args.str("addr", "127.0.0.1:7411");
+            if let Some(topology_file) = args.opt_str("cluster") {
+                // Router role: no engine of its own — shard the key space
+                // across the topology's owners and fail over to replicas
+                // under the bounded-staleness rule.
+                let topology = Topology::from_file(topology_file)?;
+                let cluster = ClusterServer::bind(&addr, topology, &cfg)?;
+                eprintln!("[tweakllm] cluster router on {}", cluster.local_addr()?);
+                return cluster.serve();
+            }
             // Captured before cfg moves into the engine factory closure.
             let http_port = cfg.server.http_port;
-            eprintln!("[tweakllm] loading artifacts from {} ...", cfg.artifact_dir);
+            let data_dir = cfg.persist.data_dir.clone();
+            let mock = args.bool("mock", false)?;
+            let ship_to = args.opt_str("ship-to").map(str::to_string);
+            let replication_listen = args.opt_str("replication-listen").map(str::to_string);
+            if ship_to.is_some() && data_dir.is_empty() {
+                anyhow::bail!("--ship-to requires --data-dir (the WAL is what ships)");
+            }
+            let role = if replication_listen.is_some() {
+                "replica"
+            } else if ship_to.is_some() {
+                "owner"
+            } else {
+                "standalone"
+            };
+            let health = HealthState::new(role);
             let (_engine, handle) = Engine::start(move || {
-                let rt = Runtime::load(&cfg.artifact_dir, &[])?;
-                eprintln!("[tweakllm] platform: {}", rt.platform());
-                let router = Router::from_runtime(&rt, cfg)?;
+                let mut router = if mock {
+                    let embedder: Box<dyn TextEmbedder> =
+                        Box::new(NativeBowEmbedder::new(128, 7));
+                    let mut r = Router::with_models(
+                        embedder,
+                        Box::new(MockLlm::new("big")),
+                        Box::new(MockLlm::new("small")),
+                        cfg,
+                    );
+                    r.enable_persistence()?;
+                    r
+                } else {
+                    eprintln!("[tweakllm] loading artifacts from {} ...", cfg.artifact_dir);
+                    let rt = Runtime::load(&cfg.artifact_dir, &[])?;
+                    eprintln!("[tweakllm] platform: {}", rt.platform());
+                    Router::from_runtime(&rt, cfg)?
+                };
                 if let Some(r) = &router.recovery {
                     eprintln!(
                         "[tweakllm] recovered {} cache entries (generation {}, {} WAL ops replayed{})",
@@ -107,11 +156,24 @@ fn run() -> Result<()> {
                 }
                 Ok(router)
             })?;
-            let server = Server::bind(&addr, handle.clone())?;
-            eprintln!("[tweakllm] serving on {}", server.local_addr()?);
+            let _replication = match &replication_listen {
+                Some(listen) => {
+                    let l = ReplicaListener::start(listen, handle.clone(), health.clone())?;
+                    eprintln!("[tweakllm] replication intake on {}", l.local_addr());
+                    Some(l)
+                }
+                None => None,
+            };
+            let _shipper = ship_to.as_ref().map(|target| {
+                eprintln!("[tweakllm] shipping WAL from {data_dir} to {target}");
+                Shipper::start(data_dir.clone(), target, health.clone())
+            });
+            let server = Server::bind(&addr, handle.clone())?.with_health(health.extra());
+            eprintln!("[tweakllm] serving on {} ({role})", server.local_addr()?);
             if http_port != 0 {
                 let host = addr.rsplit_once(':').map(|(h, _)| h).unwrap_or("127.0.0.1");
-                let http = HttpServer::bind(&format!("{host}:{http_port}"), handle)?;
+                let http = HttpServer::bind(&format!("{host}:{http_port}"), handle)?
+                    .with_health(health.extra());
                 eprintln!(
                     "[tweakllm] OpenAI-compatible endpoint on http://{}/v1/chat/completions",
                     http.local_addr()?

@@ -42,9 +42,15 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{EngineHandle, Pathway, RoutedResponse, StreamEvent};
+use crate::coordinator::{EngineHandle, Pathway, ReadMode, RoutedResponse, StreamEvent};
 use crate::trace::StageSummary;
 use crate::util::Json;
+
+/// Extra fields merged into the `{"admin": "health"}` / `GET /healthz`
+/// reply. Cluster roles (owner shipping a WAL, replica applying one, the
+/// router itself) attach one to report replication lag, shard-map epoch,
+/// and role alongside the engine's breaker states.
+pub type HealthExtra = Arc<dyn Fn() -> Json + Send + Sync>;
 
 pub fn pathway_str(p: Pathway) -> &'static str {
     match p {
@@ -59,6 +65,7 @@ pub struct Server {
     listener: TcpListener,
     handle: EngineHandle,
     stop: Arc<AtomicBool>,
+    health: Option<HealthExtra>,
 }
 
 /// Stop handle for a serving [`Server`]: raises the stop flag AND wakes the
@@ -71,6 +78,10 @@ pub struct Shutdown {
 }
 
 impl Shutdown {
+    pub(crate) fn new(stop: Arc<AtomicBool>, addr: std::net::SocketAddr) -> Shutdown {
+        Shutdown { stop, addr }
+    }
+
     /// Ask the server to stop serving. Idempotent; returns once the wake
     /// connection has been issued (the serve loop exits on observing it).
     pub fn signal(&self) {
@@ -100,7 +111,13 @@ impl Server {
     pub fn bind(addr: &str, handle: EngineHandle) -> Result<Server> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        Ok(Server { listener, handle, stop: Arc::new(AtomicBool::new(false)) })
+        Ok(Server { listener, handle, stop: Arc::new(AtomicBool::new(false)), health: None })
+    }
+
+    /// Attach extra fields to the health verb (cluster role, replication lag).
+    pub fn with_health(mut self, extra: HealthExtra) -> Server {
+        self.health = Some(extra);
+        self
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
@@ -119,8 +136,9 @@ impl Server {
         accept_loop(&self.listener, &self.stop, |stream| {
             let handle = self.handle.clone();
             let stop = Arc::clone(&self.stop);
+            let health = self.health.clone();
             thread::spawn(move || {
-                let _ = handle_connection(stream, handle, stop);
+                let _ = handle_connection(stream, handle, stop, health);
             });
         })
     }
@@ -129,7 +147,7 @@ impl Server {
 /// Shared blocking accept loop (TCP line protocol + HTTP front end).
 /// Checks the stop flag AFTER accept too: the shutdown wake arrives as a
 /// connection; it (and any connect racing it) is dropped.
-fn accept_loop(
+pub(crate) fn accept_loop(
     listener: &TcpListener,
     stop: &Arc<AtomicBool>,
     spawn: impl Fn(TcpStream),
@@ -153,7 +171,8 @@ fn accept_loop(
 }
 
 /// How often an idle connection wakes up to poll the stop flag.
-const READ_POLL_INTERVAL: std::time::Duration = std::time::Duration::from_millis(100);
+pub(crate) const READ_POLL_INTERVAL: std::time::Duration =
+    std::time::Duration::from_millis(100);
 
 /// Hard cap on one request line. Anything larger gets a structured error
 /// reply (and the connection closed) instead of growing the line buffer
@@ -162,16 +181,16 @@ pub const MAX_LINE_BYTES: usize = 64 * 1024;
 
 /// Bound on each reply write: a stalled client (full socket buffer, dead
 /// peer) errors out of the connection thread instead of pinning it forever.
-const WRITE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(5);
+pub(crate) const WRITE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(5);
 
-fn send_reply(writer: &mut TcpStream, reply: &Json) -> Result<()> {
+pub(crate) fn send_reply(writer: &mut TcpStream, reply: &Json) -> Result<()> {
     writer.write_all(reply.to_string().as_bytes())?;
     writer.write_all(b"\n")?;
     writer.flush()?;
     Ok(())
 }
 
-fn error_reply(msg: String) -> Json {
+pub(crate) fn error_reply(msg: String) -> Json {
     Json::obj_from(vec![("error", Json::s(msg))])
 }
 
@@ -179,6 +198,7 @@ fn handle_connection(
     stream: TcpStream,
     handle: EngineHandle,
     stop: Arc<AtomicBool>,
+    health: Option<HealthExtra>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     // A blocking `read_line` on an idle connection would never observe the
@@ -206,7 +226,7 @@ fn handle_connection(
                     break;
                 }
                 if !line.trim().is_empty() {
-                    let reply = process_line(&line, &handle);
+                    let reply = process_line(&line, &handle, health.as_ref());
                     send_reply(&mut writer, &reply)?;
                 }
                 line.clear();
@@ -240,7 +260,33 @@ fn handle_connection(
     Ok(())
 }
 
-fn process_line(line: &str, handle: &EngineHandle) -> Json {
+/// Readiness view: engine breaker states + persistence generation, plus
+/// whatever the attached [`HealthExtra`] reports (cluster role, replication
+/// lag, shard-map epoch). Served on both fronts so drills can probe any
+/// process the same way.
+fn health_json(handle: &EngineHandle, extra: Option<&HealthExtra>) -> Json {
+    let fields = match handle.stats() {
+        Ok(s) => vec![
+            ("ok", Json::Bool(true)),
+            ("breaker_embed", Json::s(s.breaker_embed)),
+            ("breaker_small", Json::s(s.breaker_small)),
+            ("breaker_big", Json::s(s.breaker_big)),
+            ("breaker_trips", Json::num(s.breaker_trips as f64)),
+            ("persist_generation", Json::num(s.persist_generation as f64)),
+            ("cache_size", Json::num(s.cache_size as f64)),
+        ],
+        Err(e) => vec![("ok", Json::Bool(false)), ("error", Json::s(format!("{e}")))],
+    };
+    let mut out = Json::obj_from(fields);
+    if let Some(f) = extra {
+        if let (Json::Obj(base), Json::Obj(add)) = (&mut out, f()) {
+            base.extend(add);
+        }
+    }
+    out
+}
+
+fn process_line(line: &str, handle: &EngineHandle, health: Option<&HealthExtra>) -> Json {
     let req = match Json::parse(line) {
         Ok(j) => j,
         Err(e) => {
@@ -325,9 +371,12 @@ fn process_line(line: &str, handle: &EngineHandle) -> Json {
                     Err(e) => Json::obj_from(vec![("error", Json::s(format!("{e}")))]),
                 }
             }
+            Ok("health") => health_json(handle, health),
             _ => Json::obj_from(vec![(
                 "error",
-                Json::s("unknown admin command (expected \"snapshot\" or \"trace\")"),
+                Json::s(
+                    "unknown admin command (expected \"snapshot\", \"trace\", or \"health\")",
+                ),
             )]),
         };
     }
@@ -340,7 +389,20 @@ fn process_line(line: &str, handle: &EngineHandle) -> Json {
             )])
         }
     };
-    match handle.request(&query) {
+    // Read-mode override, used by the cluster router: "replica_read" serves
+    // cache hits without mutating the cache (the entry space belongs to the
+    // shard owner's WAL); "bypass" skips the cache entirely.
+    let mode = match req.opt("mode").and_then(|m| m.str().ok()) {
+        None => ReadMode::Default,
+        Some("replica_read") => ReadMode::ReplicaRead,
+        Some("bypass") => ReadMode::Bypass,
+        Some(other) => {
+            return error_reply(format!(
+                "unknown mode {other:?} (expected \"replica_read\" or \"bypass\")"
+            ))
+        }
+    };
+    match handle.request_mode(&query, mode) {
         Ok(r) => Json::obj_from(vec![
             ("text", Json::s(r.text)),
             ("pathway", Json::s(pathway_str(r.pathway))),
@@ -384,13 +446,25 @@ pub struct HttpServer {
     listener: TcpListener,
     handle: EngineHandle,
     stop: Arc<AtomicBool>,
+    health: Option<HealthExtra>,
 }
 
 impl HttpServer {
     pub fn bind(addr: &str, handle: EngineHandle) -> Result<HttpServer> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding http {addr}"))?;
-        Ok(HttpServer { listener, handle, stop: Arc::new(AtomicBool::new(false)) })
+        Ok(HttpServer {
+            listener,
+            handle,
+            stop: Arc::new(AtomicBool::new(false)),
+            health: None,
+        })
+    }
+
+    /// Attach extra fields to `GET /healthz` (cluster role, replication lag).
+    pub fn with_health(mut self, extra: HealthExtra) -> HttpServer {
+        self.health = Some(extra);
+        self
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
@@ -407,8 +481,9 @@ impl HttpServer {
         accept_loop(&self.listener, &self.stop, |stream| {
             let handle = self.handle.clone();
             let stop = Arc::clone(&self.stop);
+            let health = self.health.clone();
             thread::spawn(move || {
-                let _ = handle_http_connection(stream, handle, stop);
+                let _ = handle_http_connection(stream, handle, stop, health);
             });
         })
     }
@@ -582,6 +657,7 @@ fn handle_http_connection(
     stream: TcpStream,
     handle: EngineHandle,
     stop: Arc<AtomicBool>,
+    health: Option<HealthExtra>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(READ_POLL_INTERVAL))?;
@@ -608,8 +684,19 @@ fn handle_http_connection(
             content_length = v.trim().parse().unwrap_or(0);
         }
     }
+    if method == "GET" && path == "/healthz" {
+        let body = health_json(&handle, health.as_ref()).to_string();
+        write!(
+            &mut writer,
+            "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )?;
+        writer.flush()?;
+        return Ok(());
+    }
     if path != "/v1/chat/completions" {
-        let msg = "unknown path (expected POST /v1/chat/completions)";
+        let msg = "unknown path (expected POST /v1/chat/completions or GET /healthz)";
         return http_error(&mut writer, "404 Not Found", msg);
     }
     if method != "POST" {
@@ -772,6 +859,19 @@ impl Client {
 
     pub fn query(&mut self, text: &str) -> Result<Json> {
         self.roundtrip(&Json::obj_from(vec![("query", Json::s(text))]))
+    }
+
+    /// Query with a read-mode override (`"replica_read"` / `"bypass"`).
+    pub fn query_mode(&mut self, text: &str, mode: &str) -> Result<Json> {
+        self.roundtrip(&Json::obj_from(vec![
+            ("query", Json::s(text)),
+            ("mode", Json::s(mode)),
+        ]))
+    }
+
+    /// Readiness probe (`{"admin": "health"}`).
+    pub fn health(&mut self) -> Result<Json> {
+        self.roundtrip(&Json::obj_from(vec![("admin", Json::s("health"))]))
     }
 
     pub fn stats(&mut self) -> Result<Json> {

@@ -74,10 +74,15 @@ pub enum Stage {
     /// micros). Depth 2 — it overlays the depth-1 stage timeline rather
     /// than partitioning it.
     FirstToken,
+    /// Cluster router: pick the shard owner, forward the request, and (on
+    /// owner failure) fall back to the replica or the degradation ladder.
+    /// `value` = shard index the request hashed to. Only present on traces
+    /// recorded by the cluster front end.
+    ShardRoute,
 }
 
 impl Stage {
-    pub const ALL: [Stage; 12] = [
+    pub const ALL: [Stage; 13] = [
         Stage::Ingest,
         Stage::BatcherWait,
         Stage::Embed,
@@ -90,6 +95,7 @@ impl Stage {
         Stage::CacheInsert,
         Stage::Reply,
         Stage::FirstToken,
+        Stage::ShardRoute,
     ];
 
     pub fn name(self) -> &'static str {
@@ -106,6 +112,7 @@ impl Stage {
             Stage::CacheInsert => "cache_insert",
             Stage::Reply => "reply",
             Stage::FirstToken => "first_token",
+            Stage::ShardRoute => "shard_route",
         }
     }
 

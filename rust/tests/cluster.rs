@@ -1,0 +1,675 @@
+//! Cluster-mode drills: shard-ring properties, WAL-shipping replication,
+//! and the kill-a-shard failover ladder (owner → bounded-staleness replica
+//! read → cache-bypass miss), in-process and across real processes.
+//!
+//! Backends in these drills are never "restarted" on the same port — std
+//! offers no SO_REUSEADDR, so a rebound listener would collide with its own
+//! TIME_WAIT sockets. Instead the topology names a tiny test-local TCP
+//! proxy whose listener outlives the kill; rejoin re-points the proxy at
+//! the reborn owner's fresh port.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use tweakllm::baselines::MockLlm;
+use tweakllm::cache::query_key;
+use tweakllm::cluster::ring::DEFAULT_VNODES;
+use tweakllm::cluster::{
+    ClusterServer, HealthState, ReplicaListener, ShardRing, ShardSpec, Shipper, Topology,
+};
+use tweakllm::config::{Config, IndexKindConfig};
+use tweakllm::coordinator::{Engine, EngineHandle, Pathway, ReadMode, Router};
+use tweakllm::runtime::{NativeBowEmbedder, TextEmbedder};
+use tweakllm::server::{Client, HttpServer, Server, Shutdown};
+use tweakllm::util::rng::hash_bytes;
+
+const WAIT: Duration = Duration::from_secs(10);
+
+fn wait_for(what: &str, mut ok: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    loop {
+        if ok() {
+            return;
+        }
+        assert!(t0.elapsed() < WAIT, "timed out waiting for {what}");
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tweakllm-cluster-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Prime query: six disjoint synthetic words (same scheme as the fault
+/// drills) — guaranteed misses against each other with the bow embedder.
+fn prime(topic: usize) -> String {
+    format!("q{topic}a q{topic}b q{topic}c q{topic}d q{topic}e q{topic}f")
+}
+
+fn free_addr() -> String {
+    TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Shard-ring properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resharding_moves_a_bounded_fraction_of_keys_onto_the_new_shard() {
+    let keys: Vec<u64> = (0..10_000u64).map(|k| hash_bytes(&k.to_le_bytes())).collect();
+    for n in 1..=5 {
+        let before = ShardRing::new(n, DEFAULT_VNODES);
+        let after = ShardRing::new(n + 1, DEFAULT_VNODES);
+        let mut moved = 0usize;
+        for &k in &keys {
+            let (a, b) = (before.route(k), after.route(k));
+            if a != b {
+                moved += 1;
+                // Consistent hashing: keys only ever move TO the new shard.
+                assert_eq!(b, n, "key moved shard {a} -> {b}, not to the new shard {n}");
+            }
+        }
+        let expected = keys.len() / (n + 1);
+        assert!(moved > 0, "growing {n} -> {} must move some keys", n + 1);
+        assert!(
+            moved <= expected * 3 / 2,
+            "growing {n} -> {}: moved {moved} keys, expected ~{expected} (1/{})",
+            n + 1,
+            n + 1
+        );
+    }
+}
+
+#[test]
+fn ring_is_restart_stable_and_roughly_balanced_on_query_keys() {
+    let ring = ShardRing::new(4, DEFAULT_VNODES);
+    let rebuilt = ShardRing::new(4, DEFAULT_VNODES);
+    let mut counts = [0usize; 4];
+    for t in 0..4000 {
+        let key = query_key(&format!("synthetic question {t} about topic {}", t % 97));
+        assert_eq!(ring.route(key), rebuilt.route(key), "routing must survive a restart");
+        counts[ring.route(key)] += 1;
+    }
+    // query_key canonicalizes text, so the router and every owner's exact
+    // path agree on identity regardless of case/whitespace.
+    assert_eq!(
+        ring.route(query_key("What IS a shard ring")),
+        ring.route(query_key("  what is a   SHARD ring "))
+    );
+    let min = *counts.iter().min().unwrap();
+    let max = *counts.iter().max().unwrap();
+    assert!(min > 0, "a shard got no load: {counts:?}");
+    assert!(max < min * 3, "virtual nodes should keep load roughly even: {counts:?}");
+}
+
+// ---------------------------------------------------------------------------
+// In-process node harness
+// ---------------------------------------------------------------------------
+
+struct Node {
+    _engine: Engine,
+    handle: EngineHandle,
+    health: HealthState,
+    addr: String,
+    stop: Shutdown,
+    join: Option<thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+fn mock_router(data_dir: Option<PathBuf>) -> anyhow::Result<Router> {
+    let mut cfg = Config::paper();
+    cfg.index.kind = IndexKindConfig::Flat;
+    cfg.exact_match_fast_path = true;
+    if let Some(d) = &data_dir {
+        cfg.persist.data_dir = d.to_string_lossy().to_string();
+        cfg.persist.wal_fsync = false;
+    }
+    let embedder: Box<dyn TextEmbedder> = Box::new(NativeBowEmbedder::new(128, 7));
+    let mut r = Router::with_models(
+        embedder,
+        Box::new(MockLlm::new("big")),
+        Box::new(MockLlm::new("small")),
+        cfg,
+    );
+    r.enable_persistence()?;
+    Ok(r)
+}
+
+fn start_node(role: &str, data_dir: Option<PathBuf>) -> Node {
+    let health = HealthState::new(role);
+    let (engine, handle) =
+        Engine::start(move || mock_router(data_dir)).expect("engine start");
+    let server = Server::bind("127.0.0.1:0", handle.clone())
+        .expect("bind")
+        .with_health(health.extra());
+    let addr = server.local_addr().unwrap().to_string();
+    let stop = server.shutdown_handle().unwrap();
+    let join = thread::spawn(move || server.serve());
+    Node { _engine: engine, handle, health, addr, stop, join: Some(join) }
+}
+
+impl Node {
+    /// Kill the TCP front end (the engine stays up, as a replica's would).
+    /// Sleeps past the connection threads' poll tick so every accepted
+    /// socket is really gone before the drill continues.
+    fn kill_front_end(&mut self) {
+        self.stop.signal();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        thread::sleep(Duration::from_millis(400));
+    }
+}
+
+/// Minimal TCP forwarder standing in front of a backend so drills can kill
+/// and later resurrect it on a fresh port while the topology keeps one
+/// stable address (see module docs for why rebinding is off the table).
+struct Proxy {
+    addr: String,
+    target: Arc<Mutex<String>>,
+    stop: Arc<AtomicBool>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl Proxy {
+    fn start(target: &str) -> Proxy {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let target = Arc::new(Mutex::new(target.to_string()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (t2, s2) = (Arc::clone(&target), Arc::clone(&stop));
+        let join = thread::spawn(move || {
+            for conn in listener.incoming() {
+                if s2.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(client) = conn else { continue };
+                let upstream_addr = t2.lock().unwrap().clone();
+                // Dead target: drop the client (EOF), the router's breaker
+                // sees a connection-level failure and fails over.
+                let Ok(upstream) = TcpStream::connect(&upstream_addr) else { continue };
+                let (c2, u2) = (client.try_clone().unwrap(), upstream.try_clone().unwrap());
+                thread::spawn(move || pipe(client, upstream));
+                thread::spawn(move || pipe(u2, c2));
+            }
+        });
+        Proxy { addr, target, stop, join: Some(join) }
+    }
+
+    fn retarget(&self, target: &str) {
+        *self.target.lock().unwrap() = target.to_string();
+    }
+}
+
+impl Drop for Proxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn pipe(mut from: TcpStream, mut to: TcpStream) {
+    let _ = std::io::copy(&mut from, &mut to);
+    let _ = to.shutdown(std::net::Shutdown::Both);
+    let _ = from.shutdown(std::net::Shutdown::Both);
+}
+
+struct ClusterUnderTest {
+    owner: Node,
+    replica: Node,
+    listener: ReplicaListener,
+    _shipper: Shipper,
+    proxy: Proxy,
+    router_addr: String,
+    router_stop: Shutdown,
+    _router_join: thread::JoinHandle<anyhow::Result<()>>,
+}
+
+/// One-shard cluster: owner (durable, shipping its WAL), replica (applying
+/// it), and a router fronting both through the bounded-staleness ladder.
+fn start_cluster(tag: &str, max_staleness_ms: u64) -> (ClusterUnderTest, PathBuf) {
+    let dir = tmp_dir(tag);
+    let owner = start_node("owner", Some(dir.clone()));
+    let replica = start_node("replica", None);
+    let listener =
+        ReplicaListener::start("127.0.0.1:0", replica.handle.clone(), replica.health.clone())
+            .expect("replication listener");
+    let shipper =
+        Shipper::start(dir.clone(), &listener.local_addr().to_string(), owner.health.clone());
+    let proxy = Proxy::start(&owner.addr);
+    let topology = Topology {
+        max_staleness_ms,
+        epoch: 1,
+        vnodes: 32,
+        shards: vec![ShardSpec {
+            owner: proxy.addr.clone(),
+            replica: Some(replica.addr.clone()),
+        }],
+    };
+    let cluster =
+        ClusterServer::bind("127.0.0.1:0", topology, &Config::paper()).expect("router bind");
+    let router_addr = cluster.local_addr().unwrap().to_string();
+    let router_stop = cluster.shutdown_handle().unwrap();
+    let join = thread::spawn(move || cluster.serve());
+    (
+        ClusterUnderTest {
+            owner,
+            replica,
+            listener,
+            _shipper: shipper,
+            proxy,
+            router_addr,
+            router_stop,
+            _router_join: join,
+        },
+        dir,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Read modes and the health verb
+// ---------------------------------------------------------------------------
+
+#[test]
+fn replica_read_and_bypass_modes_never_mutate_the_cache() {
+    let node = start_node("standalone", None);
+    let mut c = Client::connect(&node.addr).unwrap();
+    let r = c.query_mode(&prime(1), "replica_read").unwrap();
+    assert_eq!(r.get("pathway").unwrap().str().unwrap(), "miss");
+    let r = c.query_mode(&prime(2), "bypass").unwrap();
+    assert_eq!(r.get("pathway").unwrap().str().unwrap(), "miss");
+    assert_eq!(node.handle.stats().unwrap().cache_size, 0, "read modes must not insert");
+
+    let r = c.query(&prime(3)).unwrap();
+    assert_eq!(r.get("pathway").unwrap().str().unwrap(), "miss");
+    assert_eq!(node.handle.stats().unwrap().cache_size, 1);
+    // replica_read still serves hits — it only refuses to mutate.
+    let r = c.query_mode(&prime(3), "replica_read").unwrap();
+    assert_eq!(r.get("pathway").unwrap().str().unwrap(), "exact_hit");
+    // ...and bypass skips even a present entry: fresh generation.
+    let r = c.query_mode(&prime(3), "bypass").unwrap();
+    assert_eq!(r.get("pathway").unwrap().str().unwrap(), "miss");
+
+    let r = c.query_mode("anything", "warp").unwrap();
+    assert!(r.opt("error").is_some(), "unknown modes must be refused");
+    node.stop.signal();
+}
+
+#[test]
+fn health_verb_reports_role_and_replication_position() {
+    let node = start_node("owner", None);
+    node.health.update(|h| {
+        h.shipped_gen = 2;
+        h.shipped_seq = 9;
+        h.connected = true;
+    });
+    let mut c = Client::connect(&node.addr).unwrap();
+    let h = c.health().unwrap();
+    assert!(h.get("ok").unwrap().bool().unwrap());
+    assert_eq!(h.get("role").unwrap().str().unwrap(), "owner");
+    let r = h.get("replication").unwrap();
+    assert_eq!(r.get("shipped_gen").unwrap().usize().unwrap(), 2);
+    assert_eq!(r.get("shipped_seq").unwrap().usize().unwrap(), 9);
+    assert!(r.get("connected").unwrap().bool().unwrap());
+    assert_eq!(r.get("staleness_ms").unwrap().usize().unwrap(), 0);
+    // Engine-side fields ride along in the same reply.
+    assert!(h.opt("breaker_big").is_some());
+    assert!(h.opt("cache_size").is_some());
+    node.stop.signal();
+}
+
+#[test]
+fn http_healthz_answers_with_role_and_ok() {
+    let node = start_node("replica", None);
+    let http = HttpServer::bind("127.0.0.1:0", node.handle.clone())
+        .unwrap()
+        .with_health(node.health.extra());
+    let addr = http.local_addr().unwrap().to_string();
+    let stop = http.shutdown_handle().unwrap();
+    let join = thread::spawn(move || http.serve());
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(b"GET /healthz HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n").unwrap();
+    let mut got = String::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        match s.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => got.push_str(&String::from_utf8_lossy(&buf[..n])),
+        }
+    }
+    assert!(got.starts_with("HTTP/1.1 200"), "{got}");
+    assert!(got.contains("\"role\""), "{got}");
+    assert!(got.contains("replica"), "{got}");
+    stop.signal();
+    node.stop.signal();
+    let _ = join.join();
+}
+
+// ---------------------------------------------------------------------------
+// WAL shipping
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wal_shipping_converges_and_resumes_without_duplication() {
+    let dir = tmp_dir("ship-converge");
+    let owner = start_node("owner", Some(dir.clone()));
+    let replica = start_node("replica", None);
+    let listener =
+        ReplicaListener::start("127.0.0.1:0", replica.handle.clone(), replica.health.clone())
+            .unwrap();
+    let target = listener.local_addr().to_string();
+    let shipper = Shipper::start(dir.clone(), &target, owner.health.clone());
+
+    for t in 0..4 {
+        assert_eq!(owner.handle.request(&prime(t)).unwrap().pathway, Pathway::Miss);
+    }
+    wait_for("replica to apply 4 shipped inserts", || {
+        replica.handle.stats().unwrap().cache_size == 4
+    });
+    // Acks drain: the owner's measured position catches its shipped one.
+    wait_for("acks to drain", || {
+        let h = owner.health.snapshot();
+        h.connected && (h.acked_gen, h.acked_seq) == (h.shipped_gen, h.shipped_seq)
+    });
+    assert_eq!(replica.health.snapshot().staleness_ms(), 0);
+
+    // The replicated entry serves as an exact hit under replica_read, and
+    // the answer is byte-identical to what the owner cached.
+    let owned = owner.handle.request(&prime(0)).unwrap();
+    assert_eq!(owned.pathway, Pathway::ExactHit);
+    let r = replica.handle.request_mode(&prime(0), ReadMode::ReplicaRead).unwrap();
+    assert_eq!(r.pathway, Pathway::ExactHit);
+    assert_eq!(r.text, owned.text);
+
+    // Drop the session mid-stream; a new shipper must resume from the
+    // replica's acked position (HELLO), not re-apply history.
+    shipper.stop();
+    for t in 4..6 {
+        owner.handle.request(&prime(t)).unwrap();
+    }
+    let _shipper2 = Shipper::start(dir.clone(), &target, owner.health.clone());
+    wait_for("resumed session to ship the 2 new inserts", || {
+        replica.handle.stats().unwrap().cache_size == 6
+    });
+    thread::sleep(Duration::from_millis(200)); // give duplicates a chance to surface
+    assert_eq!(replica.handle.stats().unwrap().cache_size, 6, "resume must not re-apply");
+
+    owner.stop.signal();
+    replica.stop.signal();
+    drop(listener);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Failover drills
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kill_the_shard_owner_mid_traffic_and_every_request_still_answers() {
+    let (mut cluster, dir) = start_cluster("kill-drill", 10_000);
+    let mut c = Client::connect(&cluster.router_addr).unwrap();
+
+    for t in 0..5 {
+        let r = c.query(&prime(t)).unwrap();
+        assert_eq!(r.get("pathway").unwrap().str().unwrap(), "miss");
+        assert_eq!(r.get("served_by").unwrap().str().unwrap(), "owner");
+        assert_eq!(r.get("shard").unwrap().usize().unwrap(), 0);
+    }
+    wait_for("replication to converge before the kill", || {
+        cluster.replica.handle.stats().unwrap().cache_size == 5
+    });
+
+    cluster.owner.kill_front_end();
+
+    // Cached repeats survive the owner's death as replica exact hits.
+    for t in 0..5 {
+        let r = c.query(&prime(t)).unwrap();
+        assert!(r.opt("error").is_none(), "{}", r.to_string());
+        assert_eq!(r.get("pathway").unwrap().str().unwrap(), "exact_hit");
+        assert_eq!(r.get("served_by").unwrap().str().unwrap(), "replica");
+        assert!(r.opt("staleness_ms").is_some());
+    }
+    // A novel query during the outage is generated fresh on the replica
+    // and NOT inserted: the entry id space belongs to the owner's WAL.
+    let r = c.query(&prime(9)).unwrap();
+    assert_eq!(r.get("pathway").unwrap().str().unwrap(), "miss");
+    assert_eq!(r.get("served_by").unwrap().str().unwrap(), "replica");
+    assert_eq!(cluster.replica.handle.stats().unwrap().cache_size, 5);
+
+    // 100% availability, one reply one trace, zero router-level errors.
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("requests").unwrap().usize().unwrap(), 11);
+    assert_eq!(stats.get("traces_finished").unwrap().usize().unwrap(), 11);
+    assert_eq!(stats.get("errors").unwrap().usize().unwrap(), 0);
+    assert_eq!(stats.get("owner_served").unwrap().usize().unwrap(), 5);
+    assert_eq!(stats.get("replica_served").unwrap().usize().unwrap(), 6);
+    assert!(stats.get("failovers").unwrap().usize().unwrap() >= 6);
+
+    // Rejoin on a fresh port behind the stable proxy address: the breaker
+    // half-opens after its cool-down and traffic returns to the owner.
+    let reborn = Server::bind("127.0.0.1:0", cluster.owner.handle.clone())
+        .unwrap()
+        .with_health(cluster.owner.health.extra());
+    let reborn_addr = reborn.local_addr().unwrap().to_string();
+    let reborn_stop = reborn.shutdown_handle().unwrap();
+    let reborn_join = thread::spawn(move || reborn.serve());
+    cluster.proxy.retarget(&reborn_addr);
+    wait_for("traffic to return to the rejoined owner", || {
+        let r = c.query(&prime(0)).unwrap();
+        r.get("served_by").unwrap().str().unwrap() == "owner"
+    });
+    // No duplication anywhere after the rejoin.
+    assert_eq!(cluster.owner.handle.stats().unwrap().cache_size, 5);
+    assert_eq!(cluster.replica.handle.stats().unwrap().cache_size, 5);
+
+    reborn_stop.signal();
+    let _ = reborn_join.join();
+    cluster.router_stop.signal();
+    cluster.replica.stop.signal();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_replica_degrades_to_bypass_until_it_catches_up() {
+    let (mut cluster, dir) = start_cluster("stale-drill", 150);
+    let mut c = Client::connect(&cluster.router_addr).unwrap();
+
+    for t in 0..2 {
+        c.query(&prime(t)).unwrap();
+    }
+    wait_for("replication to converge", || {
+        cluster.replica.handle.stats().unwrap().cache_size == 2
+    });
+
+    // Freeze the apply loop, then write through the owner: the record
+    // ships but cannot apply, so measured staleness starts growing.
+    cluster.listener.set_apply_paused(true);
+    let r = c.query(&prime(2)).unwrap();
+    assert_eq!(r.get("served_by").unwrap().str().unwrap(), "owner");
+    wait_for("the replica to notice it is behind", || {
+        cluster.replica.health.snapshot().staleness_ms() > 0
+    });
+    thread::sleep(Duration::from_millis(300)); // grow past max_staleness_ms=150
+
+    cluster.owner.kill_front_end();
+
+    // Too stale for cache hits: the cached prime(0) must NOT be served
+    // from the replica's cache — the request degrades to a fresh bypass
+    // generation instead. Stale text is never served.
+    let r = c.query(&prime(0)).unwrap();
+    assert_eq!(r.get("pathway").unwrap().str().unwrap(), "miss");
+    assert_eq!(r.get("served_by").unwrap().str().unwrap(), "replica_bypass");
+    assert!(r.get("staleness_ms").unwrap().usize().unwrap() > 150);
+
+    // Unfreeze: the backlog applies, staleness collapses to zero, and the
+    // same query is once again a replica exact hit.
+    cluster.listener.set_apply_paused(false);
+    wait_for("the replica to catch up", || {
+        let h = cluster.replica.health.snapshot();
+        cluster.replica.handle.stats().unwrap().cache_size == 3 && h.staleness_ms() == 0
+    });
+    wait_for("replica reads to resume", || {
+        let r = c.query(&prime(0)).unwrap();
+        r.get("served_by").unwrap().str().unwrap() == "replica"
+            && r.get("pathway").unwrap().str().unwrap() == "exact_hit"
+    });
+
+    cluster.router_stop.signal();
+    cluster.replica.stop.signal();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Real-process kill drill
+// ---------------------------------------------------------------------------
+
+struct ChildGuard(std::process::Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn spawn_serve(args: &[&str]) -> ChildGuard {
+    ChildGuard(
+        Command::new(env!("CARGO_BIN_EXE_tweakllm"))
+            .arg("serve")
+            .args(args)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn tweakllm serve"),
+    )
+}
+
+fn wait_healthy(addr: &str) {
+    wait_for(&format!("{addr} to answer its health verb"), || {
+        Client::connect(addr)
+            .and_then(|mut c| c.health())
+            .map(|h| h.opt("ok").is_some())
+            .unwrap_or(false)
+    })
+}
+
+fn remote_cache_size(addr: &str) -> usize {
+    Client::connect(addr)
+        .and_then(|mut c| c.stats())
+        .ok()
+        .and_then(|s| s.opt("cache_size").and_then(|v| v.usize().ok()))
+        .unwrap_or(usize::MAX)
+}
+
+/// The tentpole drill against real processes: SIGKILL the shard owner
+/// mid-traffic, assert the router keeps answering (replica reads), then
+/// rejoin the owner from its surviving data directory and assert nothing
+/// was lost or duplicated.
+#[test]
+fn process_kill_drill_full_availability_and_clean_rejoin() {
+    let dir = tmp_dir("proc-drill");
+    std::fs::create_dir_all(&dir).unwrap();
+    let data = dir.join("data");
+    let data_str = data.to_string_lossy().to_string();
+
+    let owner_addr = free_addr();
+    let replica_addr = free_addr();
+    let repl_listen = free_addr();
+    let router_addr = free_addr();
+    let proxy = Proxy::start(&owner_addr);
+
+    let topo_path = dir.join("topology.toml");
+    std::fs::write(
+        &topo_path,
+        format!(
+            "[cluster]\nmax_staleness_ms = 10000\nepoch = 1\nvnodes = 32\n\n\
+             [[shard]]\nowner = \"{}\"\nreplica = \"{replica_addr}\"\n",
+            proxy.addr
+        ),
+    )
+    .unwrap();
+
+    let _replica = spawn_serve(&[
+        "--mock=true",
+        "--addr",
+        &replica_addr,
+        "--replication-listen",
+        &repl_listen,
+    ]);
+    let owner = spawn_serve(&[
+        "--mock=true",
+        "--addr",
+        &owner_addr,
+        "--data-dir",
+        &data_str,
+        "--ship-to",
+        &repl_listen,
+    ]);
+    let _router =
+        spawn_serve(&["--cluster", &topo_path.to_string_lossy(), "--addr", &router_addr]);
+    wait_healthy(&owner_addr);
+    wait_healthy(&replica_addr);
+    wait_healthy(&router_addr);
+
+    let mut c = Client::connect(&router_addr).unwrap();
+    for t in 0..6 {
+        let r = c.query(&prime(t)).unwrap();
+        assert_eq!(r.get("pathway").unwrap().str().unwrap(), "miss", "{}", r.to_string());
+        assert_eq!(r.get("served_by").unwrap().str().unwrap(), "owner");
+    }
+    wait_for("the replica process to converge", || remote_cache_size(&replica_addr) == 6);
+
+    drop(owner); // SIGKILL mid-traffic
+
+    for t in 0..6 {
+        let r = c.query(&prime(t)).unwrap();
+        assert!(r.opt("error").is_none(), "{}", r.to_string());
+        assert_eq!(r.get("pathway").unwrap().str().unwrap(), "exact_hit");
+        assert_eq!(r.get("served_by").unwrap().str().unwrap(), "replica");
+    }
+    let r = c.query(&prime(9)).unwrap();
+    assert_eq!(r.get("pathway").unwrap().str().unwrap(), "miss");
+    assert_eq!(r.get("served_by").unwrap().str().unwrap(), "replica");
+
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("requests").unwrap().usize().unwrap(), 13);
+    assert_eq!(stats.get("traces_finished").unwrap().usize().unwrap(), 13);
+    assert_eq!(stats.get("errors").unwrap().usize().unwrap(), 0);
+
+    // Rejoin: a new owner process on a fresh port recovers the WAL, the
+    // shipper resumes from the replica's acked position, and the router's
+    // breaker heals back to owner-served traffic.
+    let owner2_addr = free_addr();
+    let _owner2 = spawn_serve(&[
+        "--mock=true",
+        "--addr",
+        &owner2_addr,
+        "--data-dir",
+        &data_str,
+        "--ship-to",
+        &repl_listen,
+    ]);
+    wait_healthy(&owner2_addr);
+    assert_eq!(remote_cache_size(&owner2_addr), 6, "recovery must restore every entry once");
+    proxy.retarget(&owner2_addr);
+    wait_for("traffic to return to the rejoined owner", || {
+        let r = c.query(&prime(0)).unwrap();
+        r.get("served_by").unwrap().str().unwrap() == "owner"
+    });
+    thread::sleep(Duration::from_millis(300)); // let the resumed shipper settle
+    assert_eq!(remote_cache_size(&replica_addr), 6, "rejoin must not duplicate entries");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -128,6 +128,7 @@ fn compaction_and_persist_keep_stable_ids() {
         data_dir: dir.to_string_lossy().to_string(),
         wal_fsync: false,
         compact_bytes: u64::MAX,
+        fsync_batch_ms: 0,
     };
     let opts = IndexOpts {
         quantization: Quantization::Sq8,
@@ -212,6 +213,7 @@ fn quantized_eviction_roundtrip() {
         data_dir: dir.to_string_lossy().to_string(),
         wal_fsync: false,
         compact_bytes: u64::MAX,
+        fsync_batch_ms: 0,
     };
     let opts = IndexOpts {
         quantization: Quantization::Sq8,

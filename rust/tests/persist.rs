@@ -166,6 +166,7 @@ fn eviction_tombstones_roundtrip_through_persistence() {
             data_dir: dir.to_string_lossy().to_string(),
             wal_fsync: false,
             compact_bytes: u64::MAX,
+            fsync_batch_ms: 0,
         };
         let dim = 16;
         let vs: Vec<Vec<f32>> = (0..6).map(|i| unit_vec(100 + i as u64, dim)).collect();
@@ -242,6 +243,7 @@ fn torn_wal_tail_is_dropped_not_fatal() {
         data_dir: dir.to_string_lossy().to_string(),
         wal_fsync: false,
         compact_bytes: u64::MAX,
+        fsync_batch_ms: 0,
     };
     let dim = 8;
     {
@@ -285,6 +287,93 @@ fn torn_wal_tail_is_dropped_not_fatal() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Satellite: compaction hands the WAL off crash-safely under an attached
+/// shipper. The generation-bump record is appended to the old WAL only
+/// after the new snapshot is durable, the previous generation's file is
+/// retained so a live tailer can follow the handoff, and a torn tail on
+/// the new WAL right after the handoff costs only the torn record — for
+/// recovery AND for a tailer resuming at the replica's acked position.
+#[test]
+fn torn_tail_during_compaction_handoff_recovers() {
+    use tweakllm::cache::persist::WalTailer;
+    use tweakllm::cache::WalOp;
+
+    let dir = tmp_dir("torn-compact");
+    let pcfg = PersistConfig {
+        data_dir: dir.to_string_lossy().to_string(),
+        wal_fsync: false,
+        compact_bytes: u64::MAX,
+        fsync_batch_ms: 0,
+    };
+    let dim = 8;
+    {
+        let (mut c, _) = SemanticCache::open_persistent(
+            dim,
+            IndexKind::Flat,
+            EvictionPolicy::None,
+            usize::MAX,
+            false,
+            &pcfg,
+        )
+        .unwrap();
+        for i in 0..3 {
+            c.insert(&format!("q{i}"), "r", unit_vec(400 + i as u64, dim));
+        }
+        // A shipper is mid-stream on generation 0 when compaction runs.
+        let mut tailer = WalTailer::from_generation_start(&dir, 0);
+        assert_eq!(tailer.poll().unwrap().len(), 3);
+        assert_eq!(tailer.position(), (0, 3));
+
+        c.compact_now().unwrap(); // generation 0 -> 1
+        c.insert("q3", "r", unit_vec(403, dim));
+        c.insert("q4", "r", unit_vec(404, dim));
+
+        // The tailer follows the bump into generation 1 without rewinding.
+        let recs = tailer.poll().unwrap();
+        assert_eq!(recs.len(), 3, "bump + 2 post-compaction inserts");
+        assert!(
+            matches!(recs[0].op, WalOp::GenBump { next_gen: 1 }),
+            "handoff must be announced in the old WAL: {:?}",
+            recs[0].op
+        );
+        assert_eq!(tailer.position(), (1, 2));
+    }
+    // The pre-handoff WAL stays on disk for tailers that haven't crossed.
+    assert!(dir.join("wal-00000000.log").exists(), "old-generation WAL was GC'd");
+
+    // Crash mid-append right after the handoff: garbage tail on the NEW WAL.
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .open(dir.join("wal-00000001.log"))
+        .unwrap();
+    f.write_all(&[1, 255, 0, 0, 42, 42]).unwrap();
+    drop(f);
+
+    // A tailer resuming from the replica's acked position surfaces exactly
+    // the complete records and leaves the torn tail alone.
+    let mut resumed = WalTailer::resume(&dir, 1, 1).unwrap();
+    let recs = resumed.poll().unwrap();
+    assert_eq!(recs.len(), 1, "only the complete post-ack record");
+    assert_eq!(resumed.position(), (1, 2));
+
+    // Recovery agrees: snapshot + both generation-1 ops, torn tail dropped.
+    let (c, report) = SemanticCache::open_persistent(
+        dim,
+        IndexKind::Flat,
+        EvictionPolicy::None,
+        usize::MAX,
+        false,
+        &pcfg,
+    )
+    .unwrap();
+    assert!(report.torn_tail);
+    assert_eq!(report.generation, 1);
+    assert_eq!(report.replayed_ops, 2);
+    assert_eq!(c.len(), 5);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Recovery refuses a cache whose embedder dimension changed: silently
 /// serving mis-sized vectors would corrupt every similarity score.
 #[test]
@@ -294,6 +383,7 @@ fn dim_mismatch_is_an_error() {
         data_dir: dir.to_string_lossy().to_string(),
         wal_fsync: false,
         compact_bytes: u64::MAX,
+        fsync_batch_ms: 0,
     };
     {
         let (mut c, _) = SemanticCache::open_persistent(
